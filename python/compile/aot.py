@@ -1,0 +1,102 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the rust runtime.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never runs on the training path.
+
+Outputs (artifacts/):
+    fwd_loss.hlo.txt    (params..., x, y) -> (loss,)
+    grad_step.hlo.txt   (params..., x, y) -> (loss, grads...)
+    manifest.json       parameter ABI: ordered names/shapes, model config
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, cfg, n_outputs_hint=None):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in model.param_specs(cfg)]
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    y = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+    def flat_fn(*args):
+        ps = list(args[: len(specs)])
+        out = fn(cfg, ps, args[-2], args[-1])
+        return out if isinstance(out, tuple) else (out,)
+
+    return jax.jit(flat_fn).lower(*specs, x, y)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = model.Config(
+        vocab=args.vocab,
+        hidden=args.hidden,
+        layers=args.layers,
+        heads=args.heads,
+        seq=args.seq,
+        batch=args.batch,
+    )
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, fn in [("fwd_loss", model.fwd_loss), ("grad_step", model.grad_step)]:
+        lowered = lower_entry(fn, cfg)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path}: {len(text)} chars")
+
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+        },
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in model.param_specs(cfg)
+        ],
+        "entries": {
+            "fwd_loss": {"outputs": 1},
+            "grad_step": {"outputs": 1 + len(model.param_specs(cfg))},
+        },
+        "n_params": int(model.Config.n_params(cfg)),
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({manifest['n_params']} parameters)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernel: fused multi-head self-attention (causal).
+
+One (batch, head) grid cell computes softmax(q k^T / sqrt(d) + causal) v for
+its head entirely in VMEM — the flash-attention insight (never materialize
+the s x s score matrix in HBM) mapped to the TPU model: for the sequence
+lengths this repo trains (<= 512), a whole head's q/k/v tiles fit VMEM
+(3 * s * d * 4B ~ 0.4 MB at s=512, d=64), so the kernel holds them resident
+and lets the MXU chew the two matmuls back-to-back. Longer sequences would
+add a kv-block grid axis with the running-max/denominator recurrence; the
+co-shard plan instead splits heads, which this grid already expresses
+(the head axis IS the co-shard axis).
+
+interpret=True as everywhere (see matmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool):
+    q = q_ref[0]  # [s, d]
+    k = k_ref[0]
+    v = v_ref[0]
+    s, d = q.shape
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if causal:
+        pos = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(kpos <= pos, scores, jnp.float32(-1e30))
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    z = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot((p / z).astype(v.dtype), v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q, k, v, causal: bool = True):
+    """Fused attention. `q,k,v: [b, a, s, d]` -> `[b, a, s, d]`."""
+    b, a, s, d = q.shape
+    grid = (b * a,)
+    flat = lambda t: t.reshape(b * a, s, d)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, causal=causal),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))] * 3,
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * a, s, d), q.dtype),
+        interpret=True,
+    )(flat(q), flat(k), flat(v))
+    return out.reshape(b, a, s, d)
+
+
+# ---- autodiff: forward runs the fused kernel; backward uses the algebraic
+# softmax-attention gradient in plain jnp (a flash-style backward kernel is
+# the natural extension; the interchange and numerics are identical).
+@jax.custom_vjp
+def attention_ad(q, k, v):
+    return attention(q, k, v, causal=True)
+
+
+def _attn_fwd(q, k, v):
+    return attention(q, k, v, causal=True), (q, k, v)
+
+
+def _attn_bwd(res, do):
+    q, k, v = res
+    d = q.shape[-1]
+    s = q.shape[2]
+    scores = jnp.einsum("basd,batd->bast", q, k) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    dv = jnp.einsum("bast,basd->batd", p, do)
+    dp = jnp.einsum("basd,batd->bast", do, v)
+    dsoft = p * (dp - jnp.sum(p * dp, axis=-1, keepdims=True))
+    dsoft = jnp.where(mask, dsoft, 0.0) / jnp.sqrt(jnp.float32(d))
+    dq = jnp.einsum("bast,batd->basd", dsoft, k)
+    dk = jnp.einsum("bast,basd->batd", dsoft, q)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention_ad.defvjp(_attn_fwd, _attn_bwd)

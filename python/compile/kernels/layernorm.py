@@ -1,0 +1,78 @@
+"""Layer-1 Pallas kernel: LayerNorm over the last axis.
+
+Row-tiled: each grid cell normalizes a block of rows held in VMEM. The
+reduction axis is never split (matching the rust IR, where layernorm's
+hidden dim is annotated `_` = not partitionable).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BR = 256  # rows per block
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """`x[..., h]` normalized over the last axis, scaled by gamma/beta."""
+    orig_shape = x.shape
+    h = orig_shape[-1]
+    rows = int(x.size // h)
+    xf = x.reshape(rows, h)
+    br = min(BR, rows)
+    pad = (-rows) % br
+    xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=((rows + pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, h), x.dtype),
+        interpret=True,
+    )(xf, gamma, beta)
+    return out[:rows].reshape(orig_shape)
+
+
+# ---- autodiff: fused forward kernel + algebraic backward.
+@jax.custom_vjp
+def layernorm_ad(x, gamma, beta):
+    return layernorm(x, gamma, beta)
+
+
+def _ln_fwd(x, gamma, beta):
+    return layernorm(x, gamma, beta), (x, gamma, beta)
+
+
+def _ln_bwd(res, dy):
+    x, gamma, beta = res
+    eps = 1e-5
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mu) * inv
+    dyf = dy.astype(jnp.float32)
+    dgamma = (dyf * xhat).sum(axis=tuple(range(x.ndim - 1)))
+    dbeta = dyf.sum(axis=tuple(range(x.ndim - 1)))
+    h = x.shape[-1]
+    dxhat = dyf * gamma
+    dx = inv * (dxhat - dxhat.mean(-1, keepdims=True) - xhat * (dxhat * xhat).mean(-1, keepdims=True))
+    del h
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype), dbeta.astype(beta.dtype)
+
+
+layernorm_ad.defvjp(_ln_fwd, _ln_bwd)

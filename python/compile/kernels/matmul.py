@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernel: tiled matmul.
+
+The compute hot-spot of every linear layer. Re-thought for TPU rather than
+ported from CUDA (see DESIGN.md §Hardware-Adaptation):
+
+* blocks are sized for VMEM (the ~16 MB scratchpad), not CUDA shared memory:
+  default 128x512x128 tiles keep (bm*bk + bk*bn + bm*bn)*4B ~ 0.6 MB, far
+  under budget, leaving headroom for double buffering;
+* the inner tile is a multiple of the 128x128 MXU systolic array shape;
+* the HBM<->VMEM schedule that CUDA expresses with threadblock tiling is the
+  BlockSpec index maps: grid (m/bm, n/bn, k/bk) with the k axis marked
+  "arbitrary" (sequential accumulation), m/n parallel.
+
+`interpret=True` always: the CPU PJRT plugin cannot run Mosaic custom-calls;
+lowering in interpret mode emits plain HLO that any backend (including the
+rust PJRT CPU client) executes. Real-TPU performance is *estimated* from the
+BlockSpec footprint in DESIGN.md, never from interpret-mode wall clock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes.
+BM, BK, BN = 128, 512, 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; the k grid axis accumulates in-place.
+
+    The output BlockSpec index map ignores `k`, so Pallas keeps the (i, j)
+    tile resident in VMEM across the whole k sweep — the accumulator lives
+    on-chip and HBM sees exactly one write per tile.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x, w, bm: int = BM, bk: int = BK, bn: int = BN):
+    """`x[m,k] @ w[k,n]` via the Pallas kernel (interpret mode).
+
+    Shapes need not be tile-aligned: inputs are zero-padded up to the tile
+    grid and the result sliced back (padding rows/cols contribute zeros).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    pad_m, pad_k, pad_n = (-m) % bm_, (-k) % bk_, (-n) % bn_
+    xp = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    wp = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+    mp, kp, np_ = m + pad_m, k + pad_k, n + pad_n
+    n_k = kp // bk_
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm_, np_ // bn_, n_k),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def matmul_3d(x, w):
+    """Batched wrapper `x[b,s,k] @ w[k,n]` flattening the leading dims."""
+    b, s, k = x.shape
+    return matmul(x.reshape(b * s, k), w).reshape(b, s, -1)
+
+
+# ---- autodiff: backward passes are the same kernel on transposed operands.
+@jax.custom_vjp
+def matmul_ad(x, w):
+    """Differentiable matmul: fwd and both bwd matmuls run the Pallas kernel."""
+    return matmul(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    return dx, dw
+
+
+matmul_ad.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_3d_ad(x, w):
+    """Differentiable batched wrapper."""
+    b, s, k = x.shape
+    return matmul_ad(x.reshape(b * s, k), w).reshape(b, s, -1)

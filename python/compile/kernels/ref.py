@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package is checked against these references by
+python/tests (same math, no Pallas, no tiling), including hypothesis sweeps
+over shapes and dtypes. This is the CORE correctness signal of the L1
+layer: if kernel == ref and ref is obviously right, the AOT artifacts built
+from the kernels are right too.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_3d_ref(x, w):
+    return jnp.einsum("bsk,kn->bsn", x, w).astype(x.dtype)
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q,k,v: [b, a, s, d]."""
+    d = q.shape[-1]
+    scores = jnp.einsum("basd,batd->bast", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bast,batd->basd", p, v).astype(q.dtype)
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)

@@ -1,0 +1,126 @@
+"""Layer-2: the JAX training model (decoder-only transformer) built on the
+Layer-1 Pallas kernels. Build-time only — `aot.py` lowers the entry points
+to HLO text once; the rust coordinator loads and executes the artifacts and
+Python never appears on the training path.
+
+Entry points exported:
+* ``fwd_loss(params..., x, y) -> loss``                (eval / quickstart)
+* ``grad_step(params..., x, y) -> (loss, grads...)``   (the DP hot path:
+  the rust executor all-reduces the grads across simulated devices and
+  applies Adam itself — L3 owns the optimizer state, matching the engine's
+  weight-home model)
+
+Parameters travel as a flat, deterministically-ordered list (see
+``param_specs``); ``aot.py`` writes the ordering into
+``artifacts/manifest.json`` for the rust side.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import attention_ad
+from compile.kernels.layernorm import layernorm_ad
+from compile.kernels.matmul import matmul_ad
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 8192
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    seq: int = 128
+    batch: int = 8  # per-device micro-batch
+
+    @property
+    def head_dim(self):
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    def n_params(self):
+        return sum(
+            int(jnp.prod(jnp.array(shape))) for _, shape in param_specs(self)
+        )
+
+
+def param_specs(cfg: Config):
+    """Ordered (name, shape) list — the flat parameter ABI."""
+    specs = [("embed", (cfg.vocab, cfg.hidden))]
+    for l in range(cfg.layers):
+        specs += [
+            (f"h{l}.ln1g", (cfg.hidden,)),
+            (f"h{l}.ln1b", (cfg.hidden,)),
+            (f"h{l}.wqkv", (cfg.hidden, 3 * cfg.hidden)),
+            (f"h{l}.wo", (cfg.hidden, cfg.hidden)),
+            (f"h{l}.ln2g", (cfg.hidden,)),
+            (f"h{l}.ln2b", (cfg.hidden,)),
+            (f"h{l}.fc1", (cfg.hidden, 4 * cfg.hidden)),
+            (f"h{l}.fc2", (4 * cfg.hidden, cfg.hidden)),
+        ]
+    specs += [("lnf_g", (cfg.hidden,)), ("lnf_b", (cfg.hidden,))]
+    return specs
+
+
+def init_params(cfg: Config, key):
+    """Scaled-normal init matching the spec order."""
+    out = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1g", "ln2g", "lnf_g")):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("ln1b", "ln2b", "lnf_b")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            scale = 0.02 if name == "embed" else 1.0 / float(shape[0]) ** 0.5
+            out.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def _unflatten(cfg: Config, flat):
+    return {name: t for (name, _), t in zip(param_specs(cfg), flat)}
+
+
+def forward(cfg: Config, flat_params, x):
+    """Token logits for `x[b, s]` (int32)."""
+    p = _unflatten(cfg, flat_params)
+    b, s = x.shape
+    h = p["embed"][x]  # [b, s, hidden] gather
+    for l in range(cfg.layers):
+        n1 = layernorm_ad(h, p[f"h{l}.ln1g"], p[f"h{l}.ln1b"])
+        qkv = matmul_ad(n1.reshape(b * s, cfg.hidden), p[f"h{l}.wqkv"]).reshape(
+            b, s, 3, cfg.heads, cfg.head_dim
+        )
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3)
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+        att = attention_ad(q, k, v)  # [b, a, s, d]
+        att = att.transpose(0, 2, 1, 3).reshape(b, s, cfg.hidden)
+        h = h + matmul_ad(att.reshape(b * s, cfg.hidden), p[f"h{l}.wo"]).reshape(
+            b, s, cfg.hidden
+        )
+        n2 = layernorm_ad(h, p[f"h{l}.ln2g"], p[f"h{l}.ln2b"])
+        f1 = matmul_ad(n2.reshape(b * s, cfg.hidden), p[f"h{l}.fc1"])
+        f1 = jax.nn.gelu(f1)
+        h = h + matmul_ad(f1, p[f"h{l}.fc2"]).reshape(b, s, cfg.hidden)
+    hf = layernorm_ad(h, p["lnf_g"], p["lnf_b"])
+    # Tied LM head.
+    logits = matmul_ad(hf.reshape(b * s, cfg.hidden), p["embed"].T)
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def fwd_loss(cfg: Config, flat_params, x, y):
+    """Mean next-token cross-entropy of `x` against labels `y`."""
+    logits = forward(cfg, flat_params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def grad_step(cfg: Config, flat_params, x, y):
+    """(loss, grads...) — the exported training hot path."""
+    loss, grads = jax.value_and_grad(lambda ps: fwd_loss(cfg, ps, x, y))(
+        list(flat_params)
+    )
+    return (loss, *grads)

@@ -1,0 +1,155 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+including hypothesis sweeps over shapes (and the f32/bf16 dtypes the rust
+IR supports). This is the core correctness signal for the AOT artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention, attention_ad
+from compile.kernels.layernorm import layernorm, layernorm_ad
+from compile.kernels.matmul import matmul, matmul_3d, matmul_ad
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype=jnp.float32, key=KEY):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------- matmul ----------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 1, 1), (8, 16, 8), (128, 512, 128), (100, 300, 70), (129, 513, 127)],
+)
+def test_matmul_matches_ref(m, k, n):
+    x, w = rand((m, k)), rand((k, n), key=jax.random.PRNGKey(1))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 300),
+    n=st.integers(1, 150),
+    bm=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([64, 128, 512]),
+    bn=st.sampled_from([32, 128]),
+)
+def test_matmul_hypothesis_shapes_and_tiles(m, k, n, bm, bk, bn):
+    """Any shape against any tile config — padding/slicing must be exact."""
+    x = rand((m, k))
+    w = rand((k, n), key=jax.random.PRNGKey(2))
+    got = matmul(x, w, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=3e-5, atol=3e-5)
+
+
+def test_matmul_bf16():
+    x = rand((64, 64), jnp.bfloat16)
+    w = rand((64, 32), jnp.bfloat16, key=jax.random.PRNGKey(3))
+    got = matmul(x, w).astype(jnp.float32)
+    want = ref.matmul_ref(x, w).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_3d():
+    x = rand((2, 17, 48))
+    w = rand((48, 24), key=jax.random.PRNGKey(4))
+    np.testing.assert_allclose(
+        matmul_3d(x, w), ref.matmul_3d_ref(x, w), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_matmul_grad_matches_ref_grad():
+    x = rand((16, 32))
+    w = rand((32, 8), key=jax.random.PRNGKey(5))
+    g1 = jax.grad(lambda a, b: matmul_ad(a, b).sum(), argnums=(0, 1))(x, w)
+    g2 = jax.grad(lambda a, b: ref.matmul_ref(a, b).sum(), argnums=(0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ---------- attention ----------
+
+
+@pytest.mark.parametrize("b,a,s,d", [(1, 1, 4, 8), (2, 4, 64, 16), (1, 8, 128, 32)])
+def test_attention_matches_ref(b, a, s, d):
+    q, k, v = (rand((b, a, s, d), key=jax.random.PRNGKey(i)) for i in range(3))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), rtol=2e-5, atol=2e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    a=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([2, 8, 32, 96]),
+    d=st.sampled_from([4, 16, 64]),
+)
+def test_attention_hypothesis(b, a, s, d):
+    q, k, v = (rand((b, a, s, d), key=jax.random.PRNGKey(i + 7)) for i in range(3))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_attention_is_causal():
+    """Perturbing a future token must not change earlier outputs."""
+    q, k, v = (rand((1, 1, 16, 8), key=jax.random.PRNGKey(i)) for i in range(3))
+    base = attention(q, k, v)
+    k2 = k.at[:, :, -1].add(100.0)
+    v2 = v.at[:, :, -1].add(100.0)
+    pert = attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :-1], pert[:, :, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[:, :, -1], pert[:, :, -1])
+
+
+def test_attention_grads():
+    q, k, v = (rand((1, 2, 16, 8), key=jax.random.PRNGKey(i)) for i in range(3))
+    g1 = jax.grad(lambda q, k, v: attention_ad(q, k, v).sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda q, k, v: ref.attention_ref(q, k, v).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# ---------- layernorm ----------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    h=st.sampled_from([8, 48, 256]),
+)
+def test_layernorm_hypothesis(rows, h):
+    x = rand((rows, h))
+    g = rand((h,), key=jax.random.PRNGKey(11)) + 1.0
+    b = rand((h,), key=jax.random.PRNGKey(12))
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_layernorm_3d_and_grads():
+    x = rand((3, 5, 32))
+    g = jnp.ones(32) * 1.5
+    b = jnp.zeros(32) + 0.2
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=2e-5, atol=2e-5
+    )
+    d1 = jax.grad(lambda x: layernorm_ad(x, g, b).sum())(x)
+    d2 = jax.grad(lambda x: ref.layernorm_ref(x, g, b).sum())(x)
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4)
+
+
+def test_layernorm_output_stats():
+    """Unit gamma, zero beta -> per-row mean ~0, var ~1."""
+    x = rand((64, 128)) * 7.0 + 3.0
+    y = layernorm(x, jnp.ones(128), jnp.zeros(128))
+    np.testing.assert_allclose(np.asarray(y.mean(-1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y.var(-1)), 1.0, atol=1e-3)

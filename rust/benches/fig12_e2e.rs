@@ -1,0 +1,177 @@
+//! Fig. 12 (a–d): end-to-end weak-scaling evaluation — all four models,
+//! SuperScaler's new plans vs the empirical baselines, aggregate TFLOPS.
+//!
+//! Weak scaling follows Table 2: the model grows with the GPU count
+//! {4, 8, 16, 32}. Global batch 512 (128 for AlphaFold2), as in §6.2.
+//! OOM configurations print `x` like the paper's figures.
+//!
+//! ```text
+//! cargo bench --bench fig12_e2e                # all four subfigures
+//! cargo bench --bench fig12_e2e -- --model swin --quick
+//! ```
+
+use superscaler::materialize::CommMode;
+use superscaler::models;
+use superscaler::plans::*;
+use superscaler::util::cli::Args;
+use superscaler::util::table::Table;
+use superscaler::{cost::Cluster, sim};
+
+fn tflops(out: &PlanOutput, gpus: usize) -> String {
+    let cluster = Cluster::v100(gpus);
+    match sim::run(&out.graph, &out.schedule, &cluster, CommMode::InterRvd) {
+        Ok(r) if r.oom => "x (OOM)".to_string(),
+        Ok(r) => format!("{:.0}", r.aggregate_tflops),
+        Err(_) => "x (deadlock)".to_string(),
+    }
+}
+
+fn fail(e: impl std::fmt::Display) -> String {
+    format!("x ({e})")
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let only = args.get("model").map(|s| s.to_string());
+    // Default sweep stops at 16 GPUs to keep `make bench` wall time
+    // bounded; pass --full for the paper's 32-GPU points, --quick for CI.
+    let quick = args.bool("quick", false);
+    let full = args.bool("full", false);
+    let gpus_list: Vec<usize> = if quick {
+        vec![4, 8]
+    } else if full {
+        vec![4, 8, 16, 32]
+    } else {
+        vec![4, 8, 16]
+    };
+    let k = args.usize("micro", 4);
+    std::fs::create_dir_all("bench_results").ok();
+
+    // ---------- (a) Swin-Transformer ----------
+    if only.as_deref().map(|m| m == "swin").unwrap_or(true) {
+        let mut t = Table::new(
+            "Fig 12(a): Swin-Transformer weak scaling (aggregate TFLOPS, micro-batch 1, 512x512)",
+            &["gpus", "params", "superscaler(coshard)", "megatron(tp)", "deepspeed(zero3)"],
+        );
+        for (i, &gpus) in gpus_list.iter().enumerate() {
+            // Per-device micro-batch 1 (the paper's Fig. 13 setting; the
+            // global batch is reached by gradient accumulation outside the
+            // simulated iteration).
+            let batch = gpus;
+            // Resolution 512 (not the paper's 1536): our IR replicates
+            // layernorm/residual activations under TP (no sequence
+            // parallelism), so the full-resolution point OOMs for every
+            // system; at 512 the relative ordering emerges. See
+            // EXPERIMENTS.md Fig. 12(a).
+            let mk = || models::swin_transformer(i, batch, 512);
+            let params = format!("{:.1}B", mk().num_params() as f64 / 1e9);
+            // SuperScaler: co-shard heads + sharded optimizer state (DP across all).
+            let ss = coshard_opt(mk(), gpus, 8, None, true).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            // Megatron: tensor parallelism wide enough to fit (paper: 16/32-way at scale).
+            let tp = gpus.min(8 * (i + 1));
+            let mg = megatron(mk(), gpus / tp, 1, tp, k, PipeOrder::OneFOneB)
+                .map(|o| tflops(&o, gpus))
+                .unwrap_or_else(fail);
+            let zr = zero3(mk(), gpus, i >= 2).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            t.row([gpus.to_string(), params, ss, mg, zr]);
+        }
+        t.print();
+        t.write_csv("bench_results/fig12a_swin.csv").ok();
+    }
+
+    // ---------- (b) GPT-3 ----------
+    if only.as_deref().map(|m| m == "gpt3").unwrap_or(true) {
+        let mut t = Table::new(
+            "Fig 12(b): GPT-3 weak scaling (aggregate TFLOPS, batch 512, seq 16384)",
+            &["gpus", "params", "superscaler(coshard)", "megatron", "alpa-like", "deepspeed(zero3)"],
+        );
+        for (i, &gpus) in gpus_list.iter().enumerate() {
+            // Micro-batch 1 per device (grad-accumulated to the paper's
+            // global 512); at seq 16384 anything larger OOMs every system.
+            let batch = gpus;
+            let seq = 16384;
+            let mk = || models::gpt3(i, batch, seq);
+            let params = format!("{:.1}B", mk().num_params() as f64 / 1e9);
+            let ss = coshard_opt(mk(), gpus, 8, None, true).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let tp = gpus.min(16);
+            let mg = megatron(mk(), (gpus / tp).max(1), 1, tp, k, PipeOrder::OneFOneB)
+                .map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            // Alpa-like: stage-wise search approximated by the best of a few
+            // (dp, pp, tp) grids.
+            let alpa = ["a", "b", "c"]
+                .iter()
+                .enumerate()
+                .filter_map(|(j, _)| {
+                    let (dp, pp, tp) = match j {
+                        0 => (1, gpus.min(4), gpus / gpus.min(4)),
+                        1 => ((gpus / 8).max(1), 1, gpus.min(8)),
+                        _ => (1, 1, gpus),
+                    };
+                    if dp * pp * tp != gpus {
+                        return None;
+                    }
+                    megatron(mk(), dp, pp, tp, k, PipeOrder::OneFOneB).ok().map(|o| {
+                        let c = Cluster::v100(gpus);
+                        sim::run(&o.graph, &o.schedule, &c, CommMode::InterRvd)
+                            .ok()
+                            .filter(|r| !r.oom)
+                            .map(|r| r.aggregate_tflops)
+                            .unwrap_or(0.0)
+                    })
+                })
+                .fold(0.0f64, f64::max);
+            let alpa = if alpa > 0.0 { format!("{alpa:.0}") } else { "x (OOM)".into() };
+            let zr = zero3(mk(), gpus, i >= 3).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            t.row([gpus.to_string(), params, ss, mg, alpa, zr]);
+        }
+        t.print();
+        t.write_csv("bench_results/fig12b_gpt3.csv").ok();
+    }
+
+    // ---------- (c) mBART ----------
+    if only.as_deref().map(|m| m == "mbart").unwrap_or(true) {
+        let mut t = Table::new(
+            "Fig 12(c): mBART weak scaling (aggregate TFLOPS, batch 512, seq 1024, 500k vocab)",
+            &["gpus", "params", "superscaler(interlaced)", "megatron(tp)", "deepspeed(zero3-offload)"],
+        );
+        for (i, &gpus) in gpus_list.iter().enumerate() {
+            let batch = 2 * gpus; // micro-batch 2/device, grad-accumulated
+            let mk = || models::mbart(i, batch, 1024);
+            let params = format!("{:.1}B", mk().num_params() as f64 / 1e9);
+            let ss = interlaced_pipeline(mk(), gpus, k, true, false)
+                .map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let tp = gpus.min(16);
+            let mg = megatron(mk(), (gpus / tp).max(1), 1, tp, k, PipeOrder::OneFOneB)
+                .map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let zr = zero3(mk(), gpus, true).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            t.row([gpus.to_string(), params, ss, mg, zr]);
+        }
+        t.print();
+        t.write_csv("bench_results/fig12c_mbart.csv").ok();
+    }
+
+    // ---------- (d) AlphaFold2 ----------
+    if only.as_deref().map(|m| m == "alphafold2").unwrap_or(true) {
+        let mut t = Table::new(
+            "Fig 12(d): AlphaFold2 weak scaling (aggregate TFLOPS, batch 128, 3F+1B recycling)",
+            &["gpus", "params", "superscaler(3f1b)", "dap+dp", "deepspeed(zero3)"],
+        );
+        for (i, &gpus) in gpus_list.iter().enumerate() {
+            // Paper trains batch 128 on 128-GPU-scale clusters; per-GPU
+            // load ~1 sample. Keep that ratio here.
+            let batch = gpus; // per-device micro-batch 1, grad-accumulated
+            let mk = || models::alphafold2(i, batch);
+            let params = format!("{:.2}B", mk().num_params() as f64 / 1e9);
+            let ss = pipeline_3f1b(mk(), gpus, k)
+                .map(|o| tflops(&o, gpus))
+                .unwrap_or_else(fail);
+            let dap_ways = gpus.min(4 << i.min(3));
+            let dp_ways = (gpus / dap_ways).max(1);
+            let dap = dap_dp(mk(), dap_ways, dp_ways).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let zr = zero3(mk(), gpus, false).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            t.row([gpus.to_string(), params, ss, dap, zr]);
+        }
+        t.print();
+        t.write_csv("bench_results/fig12d_alphafold.csv").ok();
+    }
+}

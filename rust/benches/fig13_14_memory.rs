@@ -1,0 +1,67 @@
+//! Fig. 13 + Fig. 14: single-GPU memory & latency — co-shard vs recompute
+//! vs ZeRO3-Offload. Fig. 13 grows the Swin model size; Fig. 14 grows the
+//! GPT-3 1.3B sequence length. Micro-batch fixed to 1 (paper setting).
+
+use superscaler::materialize::CommMode;
+use superscaler::models;
+use superscaler::plans::*;
+use superscaler::util::table::Table;
+use superscaler::util::{fmt_bytes, fmt_secs};
+use superscaler::{cost::Cluster, sim};
+
+fn probe(out: PlanResult, cluster: &Cluster) -> (String, String) {
+    match out {
+        Err(e) => (format!("x ({e})"), "-".into()),
+        Ok(o) => match sim::run(&o.graph, &o.schedule, cluster, CommMode::InterRvd) {
+            Err(_) => ("x (deadlock)".into(), "-".into()),
+            Ok(r) => {
+                let mem = if r.oom {
+                    format!("OOM ({})", fmt_bytes(r.max_peak_mem()))
+                } else {
+                    fmt_bytes(r.max_peak_mem())
+                };
+                (mem, fmt_secs(r.makespan))
+            }
+        },
+    }
+}
+
+fn main() {
+    std::fs::create_dir_all("bench_results").ok();
+    let cluster = Cluster::v100(8);
+
+    // ---- Fig. 13: Swin, growing model size, single GPU ----
+    let mut t = Table::new(
+        "Fig 13: Swin single-GPU peak memory / latency vs model size (micro-batch 1)",
+        &["hidden", "params", "coshard mem", "coshard lat", "recompute mem", "recompute lat", "zero3-offload mem", "zero3-offload lat"],
+    );
+    // Paper Fig. 13 sweeps 115M -> 1.3B Swin variants (below Table 2's
+    // smallest column); micro-batch 1, resolution 1536.
+    for (layers, hidden, heads) in [(16usize, 128usize, 4usize), (24, 192, 6), (24, 256, 8), (32, 320, 10), (32, 384, 12)] {
+        let mk = || models::swin_custom(layers, hidden, heads, 1, 1536);
+        let params = format!("{:.0}M", mk().num_params() as f64 / 1e6);
+        // co-shard: heads split sequentially + recompute.
+        let (m1, l1) = probe(coshard(mk(), 1, 4, None), &cluster);
+        // recompute baseline = same plan without co-sharding (shards=1).
+        let (m2, l2) = probe(coshard(mk(), 1, 1, None), &cluster);
+        let (m3, l3) = probe(zero3(mk(), 1, true), &cluster);
+        t.row([hidden.to_string(), params, m1, l1, m2, l2, m3, l3]);
+    }
+    t.print();
+    t.write_csv("bench_results/fig13_swin_memory.csv").ok();
+
+    // ---- Fig. 14: GPT-3 1.3B, growing sequence length ----
+    let mut t = Table::new(
+        "Fig 14: GPT-3 1.3B single-GPU peak memory / latency vs sequence length (micro-batch 1)",
+        &["seq", "coshard mem", "coshard lat", "recompute mem", "recompute lat", "zero3-offload mem", "zero3-offload lat"],
+    );
+    for seq in [2048usize, 4096, 6144, 8192, 10240] {
+        let mk = || models::gpt3(0, 1, seq);
+        let (m1, l1) = probe(coshard(mk(), 1, 8, None), &cluster);
+        let (m2, l2) = probe(coshard(mk(), 1, 1, None), &cluster);
+        let (m3, l3) = probe(zero3(mk(), 1, true), &cluster);
+        t.row([seq.to_string(), m1, l1, m2, l2, m3, l3]);
+    }
+    t.print();
+    t.write_csv("bench_results/fig14_gpt3_memory.csv").ok();
+}

@@ -1,0 +1,49 @@
+//! Fig. 15: mBART end-to-end time breakdown (compute / communication /
+//! bubble) — Megatron vs IL-block (interlaced + coarse recompute barrier)
+//! vs SuperScaler (interlaced + fine-grained recompute dependencies).
+
+use superscaler::materialize::CommMode;
+use superscaler::models::mbart;
+use superscaler::plans::*;
+use superscaler::util::fmt_secs;
+use superscaler::util::table::Table;
+use superscaler::{cost::Cluster, sim};
+
+fn main() {
+    std::fs::create_dir_all("bench_results").ok();
+    let mut t = Table::new(
+        "Fig 15: mBART time breakdown per iteration (avg per device)",
+        &["gpus", "system", "total", "compute", "comm", "bubble"],
+    );
+    for (scale, gpus) in [(2usize, 16usize), (3, 32)] {
+        let batch = 128;
+        // Micro-batches must be comparable to the stage count for the pipe
+        // to fill (bubble fraction ~ (S-1)/(S-1+K)); capped to bound the
+        // bench wall time.
+        let k = gpus.min(16);
+        let cluster = Cluster::v100(gpus);
+        let cases: Vec<(&str, PlanResult)> = vec![
+            ("megatron", megatron(mbart(scale, batch, 1024), (gpus / 16).max(1), 1, gpus.min(16), k, PipeOrder::OneFOneB)),
+            ("IL-block", interlaced_pipeline(mbart(scale, batch, 1024), gpus, k, true, true)),
+            ("superscaler", interlaced_pipeline(mbart(scale, batch, 1024), gpus, k, true, false)),
+        ];
+        for (name, out) in cases {
+            match out.map(|o| sim::run(&o.graph, &o.schedule, &cluster, CommMode::InterRvd)) {
+                Ok(Ok(r)) => {
+                    let (c, m, b) = r.breakdown();
+                    t.row([
+                        gpus.to_string(),
+                        name.to_string(),
+                        fmt_secs(r.makespan),
+                        fmt_secs(c),
+                        fmt_secs(m),
+                        fmt_secs(b),
+                    ]);
+                }
+                _ => t.row([gpus.to_string(), name.to_string(), "x".into(), "-".into(), "-".into(), "-".into()]),
+            }
+        }
+    }
+    t.print();
+    t.write_csv("bench_results/fig15_mbart_breakdown.csv").ok();
+}

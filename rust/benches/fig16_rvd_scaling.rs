@@ -1,0 +1,56 @@
+//! Fig. 16: GPT-3 1.3B strong scaling under the three communication tiers
+//! (P2P send/recv, intra-RVD, inter-RVD). Left: growing pipeline
+//! parallelism; right: growing tensor parallelism.
+
+use superscaler::materialize::CommMode;
+use superscaler::models::gpt3;
+use superscaler::plans::*;
+use superscaler::util::table::Table;
+use superscaler::{cost::Cluster, sim};
+
+fn tput(out: &PlanOutput, gpus: usize, mode: CommMode) -> String {
+    let c = Cluster::v100(gpus);
+    match sim::run(&out.graph, &out.schedule, &c, mode) {
+        Ok(r) => format!("{:.2}", 1.0 / r.makespan), // iterations/sec
+        Err(_) => "x".into(),
+    }
+}
+
+fn main() {
+    std::fs::create_dir_all("bench_results").ok();
+    let batch = 64;
+    let seq = 2048;
+    let k = 4;
+
+    let mut t = Table::new(
+        "Fig 16 (left): GPT-3 1.3B throughput (iter/s) vs pipeline size",
+        &["gpus(pp)", "p2p", "intra-rvd", "inter-rvd"],
+    );
+    for gpus in [2usize, 4, 8, 16] {
+        let mk = || megatron(gpt3(0, batch, seq), 1, gpus, 1, k, PipeOrder::OneFOneB).unwrap();
+        t.row([
+            gpus.to_string(),
+            tput(&mk(), gpus, CommMode::P2POnly),
+            tput(&mk(), gpus, CommMode::IntraRvd),
+            tput(&mk(), gpus, CommMode::InterRvd),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_results/fig16_pp.csv").ok();
+
+    let mut t = Table::new(
+        "Fig 16 (right): GPT-3 1.3B throughput (iter/s) vs tensor-parallel size",
+        &["gpus(tp)", "p2p", "intra-rvd", "inter-rvd"],
+    );
+    for gpus in [2usize, 4, 8, 16] {
+        let mk = || megatron(gpt3(0, batch, seq), 1, 1, gpus, 1, PipeOrder::OneFOneB).unwrap();
+        t.row([
+            gpus.to_string(),
+            tput(&mk(), gpus, CommMode::P2POnly),
+            tput(&mk(), gpus, CommMode::IntraRvd),
+            tput(&mk(), gpus, CommMode::InterRvd),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_results/fig16_tp.csv").ok();
+}

@@ -1,0 +1,38 @@
+//! Fig. 18: the two searched-communication case studies, printed as RVD
+//! transition paths (compare with the paper's diagrams).
+
+use superscaler::cost::Cluster;
+use superscaler::rvd::{p2p_baseline_time, search_inter, Rvd};
+use superscaler::util::fmt_secs;
+
+fn main() {
+    let cluster = Cluster::v100(32);
+    let bytes = 128u64 << 20;
+    let src: Vec<usize> = (0..4).collect(); // server 0
+    let dst: Vec<usize> = (8..16).collect(); // server 1
+
+    println!("== Fig 18(a): 4 replicated tensors (server1) -> 8 replicated (server2) ==");
+    let from = Rvd::new(4, 1, &[1]);
+    let to = Rvd::new(8, 1, &[1]);
+    let p = search_inter(&cluster, &src, &dst, bytes, &from, &to).expect("path");
+    println!("searched: {}", p.describe(&from));
+    println!(
+        "time {} vs p2p {} ({:.1}x)",
+        fmt_secs(p.time),
+        fmt_secs(p2p_baseline_time(&cluster, &src, &dst, bytes, &to)),
+        p2p_baseline_time(&cluster, &src, &dst, bytes, &to) / p.time
+    );
+    println!("(paper's plan: schunk -> RD-scatter -> all-gather)\n");
+
+    println!("== Fig 18(b): 4 value-partials (server1) -> 8 dim-shards (server2) ==");
+    let from = Rvd::new(1, 4, &[1]);
+    let to = Rvd::new(1, 1, &[8]);
+    let p = search_inter(&cluster, &src, &dst, bytes, &from, &to).expect("path");
+    println!("searched: {}", p.describe(&from));
+    println!(
+        "time {} vs p2p {}",
+        fmt_secs(p.time),
+        fmt_secs(p2p_baseline_time(&cluster, &src, &dst, bytes, &to)),
+    );
+    println!("(paper's plan: reduce-scatter -> RD-scatter)");
+}

@@ -1,0 +1,304 @@
+//! Cost model: devices, cluster topology, collective communication costs.
+//!
+//! This substitutes for the paper's testbed (32× V100-32GB, 8 GPUs/server
+//! on NVLink, servers on 100 Gbps InfiniBand — §6.1). All evaluation
+//! numbers in the benches are produced against this model; the *shape* of
+//! the paper's results (who wins, crossover points, OOM boundaries) depends
+//! on the ratios encoded here — compute throughput vs. NVLink vs. IB — not
+//! on absolute silicon speed.
+//!
+//! Collective costs use the standard ring α–β model; `α` (latency) comes
+//! from the slowest link in the group, `β` (inverse bandwidth) from the
+//! bottleneck link. Compute costs use a saturation-efficiency curve: small
+//! kernels run far from peak (this is what makes co-shard's smaller
+//! operators slightly slower — Fig. 13's latency panel — while still
+//! winning on memory).
+
+use crate::graph::CollKind;
+use crate::schedule::{DeviceId, CPU_DEVICE};
+
+/// Per-device compute/memory characteristics (defaults: V100-ish).
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    /// Peak matmul throughput, FLOP/s (V100 tensor cores ~ 112e12 on fp16;
+    /// the paper reports aggregate TFLOPS against this kind of peak).
+    pub peak_flops: f64,
+    /// Device memory capacity, bytes (V100: 32 GiB).
+    pub mem_bytes: u64,
+    /// Per-kernel launch/framework overhead, seconds.
+    pub kernel_overhead: f64,
+    /// FLOPs at which a kernel reaches half of peak efficiency — the
+    /// saturation knee. Small ops ⇒ low utilization.
+    pub sat_knee_flops: f64,
+    /// Maximum achievable fraction of peak (real kernels don't hit 1.0).
+    pub max_util: f64,
+}
+
+impl Default for DeviceSpec {
+    fn default() -> Self {
+        DeviceSpec {
+            peak_flops: 112e12,
+            mem_bytes: 32 * (1 << 30) as u64,
+            kernel_overhead: 8e-6,
+            sat_knee_flops: 2e9,
+            max_util: 0.62,
+        }
+    }
+}
+
+impl DeviceSpec {
+    /// Wall-clock seconds to execute a kernel of `flops` FLOPs.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        if flops <= 0.0 {
+            return self.kernel_overhead;
+        }
+        let eff = self.max_util * flops / (flops + self.sat_knee_flops);
+        self.kernel_overhead + flops / (self.peak_flops * eff.max(1e-6))
+    }
+}
+
+/// Cluster topology: `n_servers × gpus_per_server` homogeneous devices,
+/// NVLink within a server, InfiniBand across.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub n_servers: usize,
+    pub gpus_per_server: usize,
+    pub spec: DeviceSpec,
+    /// Host CPU characteristics (ZeRO-Offload's optimizer target).
+    pub cpu_spec: DeviceSpec,
+    /// Intra-server (NVLink) bandwidth per link, bytes/s.
+    pub nvlink_bw: f64,
+    /// Inter-server (IB) bandwidth per server NIC, bytes/s (100 Gbps).
+    pub ib_bw: f64,
+    /// Link latencies (α), seconds.
+    pub nvlink_lat: f64,
+    pub ib_lat: f64,
+    /// Host<->device (PCIe) bandwidth for swap/offload, bytes/s.
+    pub pcie_bw: f64,
+}
+
+impl Cluster {
+    /// The paper's testbed shape: 8×V100 per server, NVLink 150 GB/s,
+    /// 100 Gbps IB (12.5 GB/s), PCIe3 x16 ~ 12 GB/s.
+    pub fn v100(n_gpus: usize) -> Cluster {
+        let gpus_per_server = n_gpus.min(8);
+        assert!(n_gpus % gpus_per_server == 0, "gpu count must tile servers");
+        Cluster {
+            n_servers: n_gpus / gpus_per_server,
+            gpus_per_server,
+            spec: DeviceSpec::default(),
+            cpu_spec: DeviceSpec {
+                peak_flops: 2e12,
+                mem_bytes: 512 * (1 << 30) as u64,
+                kernel_overhead: 2e-6,
+                sat_knee_flops: 1e8,
+                max_util: 0.5,
+            },
+            nvlink_bw: 150e9,
+            ib_bw: 12.5e9,
+            nvlink_lat: 3e-6,
+            ib_lat: 12e-6,
+            pcie_bw: 12e9,
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.n_servers * self.gpus_per_server
+    }
+
+    /// Server index of a device. The host CPU counts as its own "server"
+    /// (one hop over PCIe from everything).
+    pub fn server_of(&self, d: DeviceId) -> usize {
+        if d == CPU_DEVICE {
+            return usize::MAX;
+        }
+        assert!(d < self.num_gpus(), "bad device {d}");
+        d / self.gpus_per_server
+    }
+
+    pub fn same_server(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.server_of(a) == self.server_of(b)
+    }
+
+    /// (bandwidth, latency) of the path between two devices.
+    pub fn link(&self, a: DeviceId, b: DeviceId) -> (f64, f64) {
+        if a == CPU_DEVICE || b == CPU_DEVICE {
+            (self.pcie_bw, 10e-6)
+        } else if a == b {
+            (f64::INFINITY, 0.0)
+        } else if self.same_server(a, b) {
+            (self.nvlink_bw, self.nvlink_lat)
+        } else {
+            (self.ib_bw, self.ib_lat)
+        }
+    }
+
+    /// Point-to-point transfer time for `bytes`.
+    pub fn p2p_time(&self, from: DeviceId, to: DeviceId, bytes: u64) -> f64 {
+        let (bw, lat) = self.link(from, to);
+        if bw.is_infinite() {
+            0.0
+        } else {
+            lat + bytes as f64 / bw
+        }
+    }
+
+    /// Bottleneck (bandwidth, latency) within a device group: IB if the
+    /// group spans servers, NVLink otherwise. Inter-server collectives are
+    /// additionally constrained by the per-server NIC being shared by the
+    /// group members on that server.
+    pub fn group_link(&self, group: &[DeviceId]) -> (f64, f64) {
+        assert!(!group.is_empty());
+        if group.contains(&CPU_DEVICE) {
+            return (self.pcie_bw, 10e-6);
+        }
+        let s0 = self.server_of(group[0]);
+        if group.iter().all(|&d| self.server_of(d) == s0) {
+            (self.nvlink_bw, self.nvlink_lat)
+        } else {
+            // Members per server share the NIC.
+            let mut per_server = std::collections::HashMap::new();
+            for &d in group {
+                *per_server.entry(self.server_of(d)).or_insert(0usize) += 1;
+            }
+            let max_share = *per_server.values().max().unwrap() as f64;
+            (self.ib_bw / max_share, self.ib_lat)
+        }
+    }
+
+    /// Ring-collective time over `group` where each participant holds
+    /// `bytes` of payload (the conventional "per-rank buffer size").
+    ///
+    /// Formulas (n = group size, S = bytes, β = 1/bw):
+    /// * all-reduce:      2·(n−1)/n · S·β  + 2(n−1)·α
+    /// * all-gather:        (n−1)/n · n·S·β = (n−1)·S·β   (ranks hold shards
+    ///   of S each; output is n·S)… we take S as the *shard* size.
+    /// * reduce-scatter:  (n−1)·S_shard·β
+    /// * all-to-all:      (n−1)/n · S·β
+    /// * broadcast:       S·β (pipelined chain)
+    /// * RD-scatter/gather: cross-group traffic of S bytes per member over
+    ///   the inter-group bottleneck.
+    pub fn collective_time(&self, kind: CollKind, group: &[DeviceId], bytes: u64) -> f64 {
+        let n = group.len() as f64;
+        if group.len() <= 1 {
+            return 0.0;
+        }
+        let (bw, lat) = self.group_link(group);
+        let s = bytes as f64;
+        let beta = 1.0 / bw;
+        match kind {
+            CollKind::AllReduce => 2.0 * (n - 1.0) / n * s * beta + 2.0 * (n - 1.0) * lat,
+            // `bytes` is the per-rank shard size for both: each rank ships
+            // its shard around the ring (n−1) hops.
+            CollKind::AllGather | CollKind::ReduceScatter => {
+                (n - 1.0) * s * beta + (n - 1.0) * lat
+            }
+            CollKind::AllToAll => (n - 1.0) / n * s * beta + (n - 1.0) * lat,
+            CollKind::Broadcast => s * beta + (n - 1.0) * lat,
+            CollKind::RdScatter | CollKind::RdGather => {
+                // Every member ships its payload across the group boundary.
+                s * beta + lat
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_time_monotone_and_saturating() {
+        let d = DeviceSpec::default();
+        let t1 = d.compute_time(1e9);
+        let t2 = d.compute_time(1e12);
+        assert!(t2 > t1);
+        // Efficiency at 1 TFLOP-kernel should beat efficiency at 1 GFLOP.
+        let eff = |f: f64, t: f64| f / t / d.peak_flops;
+        assert!(eff(1e12, t2) > eff(1e9, t1) * 2.0);
+        // Never exceeds max_util.
+        assert!(eff(1e14, d.compute_time(1e14)) <= d.max_util);
+    }
+
+    #[test]
+    fn topology_classification() {
+        let c = Cluster::v100(16); // 2 servers x 8
+        assert_eq!(c.n_servers, 2);
+        assert!(c.same_server(0, 7));
+        assert!(!c.same_server(7, 8));
+        assert_eq!(c.server_of(15), 1);
+        let (bw_in, _) = c.link(0, 1);
+        let (bw_out, _) = c.link(0, 8);
+        assert!(bw_in > bw_out * 5.0, "NVLink must dwarf IB");
+    }
+
+    #[test]
+    fn allreduce_cost_scales_with_group_span() {
+        let c = Cluster::v100(16);
+        let intra: Vec<usize> = (0..8).collect();
+        let inter: Vec<usize> = (0..16).collect();
+        let t_intra = c.collective_time(CollKind::AllReduce, &intra, 1 << 30);
+        let t_inter = c.collective_time(CollKind::AllReduce, &inter, 1 << 30);
+        assert!(
+            t_inter > t_intra * 4.0,
+            "cross-server all-reduce must be much slower ({t_intra} vs {t_inter})"
+        );
+    }
+
+    #[test]
+    fn nic_sharing_penalizes_wide_groups() {
+        let c = Cluster::v100(16);
+        let two: Vec<usize> = vec![0, 8]; // one per server
+        let sixteen: Vec<usize> = (0..16).collect(); // 8 share each NIC
+        let (bw2, _) = c.group_link(&two);
+        let (bw16, _) = c.group_link(&sixteen);
+        assert!((bw2 / bw16 - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p2p_time_zero_on_same_device() {
+        let c = Cluster::v100(8);
+        assert_eq!(c.p2p_time(3, 3, 1 << 20), 0.0);
+        assert!(c.p2p_time(0, 1, 1 << 20) > 0.0);
+    }
+
+    #[test]
+    fn singleton_collective_is_free() {
+        let c = Cluster::v100(8);
+        assert_eq!(c.collective_time(CollKind::AllReduce, &[2], 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn cpu_link_uses_pcie() {
+        let c = Cluster::v100(8);
+        let (bw, _) = c.link(0, CPU_DEVICE);
+        assert_eq!(bw, c.pcie_bw);
+    }
+
+    #[test]
+    fn prop_collective_costs_positive_and_monotone_in_bytes() {
+        crate::util::prop::check("collective-cost", 200, |g| {
+            let c = Cluster::v100(*g.rng.choose(&[8usize, 16, 32]));
+            let n = g.int(2, c.num_gpus() + 1);
+            let group: Vec<usize> = (0..n).collect();
+            let kind = *g.rng.choose(&[
+                CollKind::AllReduce,
+                CollKind::AllGather,
+                CollKind::ReduceScatter,
+                CollKind::AllToAll,
+                CollKind::Broadcast,
+            ]);
+            let b1 = g.int(1, 1 << 20) as u64;
+            let b2 = b1 * 2;
+            let t1 = c.collective_time(kind, &group, b1);
+            let t2 = c.collective_time(kind, &group, b2);
+            if t1 <= 0.0 {
+                return Err(format!("{kind:?} non-positive time {t1}"));
+            }
+            if t2 < t1 {
+                return Err(format!("{kind:?} not monotone in bytes"));
+            }
+            Ok(())
+        });
+    }
+}

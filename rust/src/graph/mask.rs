@@ -1,0 +1,450 @@
+//! Mask algebra for vTensors (paper §3.1, Figs. 6–7).
+//!
+//! A [`Mask`] records which portion of a pTensor a vTensor covers:
+//! * a per-dimension half-open rational interval `[start, end)` expressed as
+//!   exact fractions of the dimension (so repeated `op-trans` splits compose
+//!   without floating-point error), and
+//! * a *value split* `(index, parts)`: `parts > 1` means this vTensor holds
+//!   one additive partial of the pTensor's values (e.g. a partial matmul sum
+//!   over a contracted dimension) — spatially full, numerically 1/parts.
+//!
+//! Dependency detection (Fig. 7) is mask intersection: two vTensors linked
+//! to the same pTensor depend on each other iff their spatial boxes overlap
+//! with non-zero volume. Value splits never *satisfy* a full-value consumer
+//! by themselves — materialization must insert a reduce — but they still
+//! constitute a data dependency.
+
+use crate::util::gcd;
+use std::fmt;
+
+/// An exact non-negative rational, always kept normalized (gcd = 1, den > 0).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Frac {
+    pub num: u64,
+    pub den: u64,
+}
+
+impl Frac {
+    pub fn new(num: u64, den: u64) -> Frac {
+        assert!(den != 0, "zero denominator");
+        let g = gcd(num, den).max(1);
+        Frac { num: num / g, den: den / g }
+    }
+
+    pub const ZERO: Frac = Frac { num: 0, den: 1 };
+    pub const ONE: Frac = Frac { num: 1, den: 1 };
+
+    pub fn mul(self, o: Frac) -> Frac {
+        Frac::new(self.num * o.num, self.den * o.den)
+    }
+
+    pub fn add(self, o: Frac) -> Frac {
+        Frac::new(self.num * o.den + o.num * self.den, self.den * o.den)
+    }
+
+    pub fn sub(self, o: Frac) -> Frac {
+        let (a, b) = (self.num * o.den, o.num * self.den);
+        assert!(a >= b, "negative fraction");
+        Frac::new(a - b, self.den * o.den)
+    }
+
+    pub fn cmp_frac(self, o: Frac) -> std::cmp::Ordering {
+        (self.num * o.den).cmp(&(o.num * self.den))
+    }
+
+    pub fn min(self, o: Frac) -> Frac {
+        if self.cmp_frac(o).is_le() { self } else { o }
+    }
+
+    pub fn max(self, o: Frac) -> Frac {
+        if self.cmp_frac(o).is_ge() { self } else { o }
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    /// `self * n` rounded to an integer; panics if not exact. Used to turn a
+    /// fractional interval into concrete element indices of a dim of size n.
+    pub fn scale_exact(self, n: usize) -> usize {
+        let v = self.num as u128 * n as u128;
+        assert!(
+            v % self.den as u128 == 0,
+            "mask {}/{} does not divide dim {} evenly",
+            self.num,
+            self.den,
+            n
+        );
+        (v / self.den as u128) as usize
+    }
+}
+
+impl fmt::Debug for Frac {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.num, self.den)
+    }
+}
+
+/// Half-open interval `[lo, hi)` over a unit-normalized dimension.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Interval {
+    pub lo: Frac,
+    pub hi: Frac,
+}
+
+impl Interval {
+    pub const FULL: Interval = Interval { lo: Frac::ZERO, hi: Frac::ONE };
+
+    pub fn new(lo: Frac, hi: Frac) -> Interval {
+        assert!(lo.cmp_frac(hi).is_le(), "inverted interval");
+        Interval { lo, hi }
+    }
+
+    pub fn len(&self) -> Frac {
+        self.hi.sub(self.lo)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    /// Intersection; `None` if empty (touching endpoints count as empty).
+    pub fn intersect(&self, o: &Interval) -> Option<Interval> {
+        let lo = self.lo.max(o.lo);
+        let hi = self.hi.min(o.hi);
+        if lo.cmp_frac(hi).is_lt() {
+            Some(Interval { lo, hi })
+        } else {
+            None
+        }
+    }
+
+    pub fn contains(&self, o: &Interval) -> bool {
+        self.lo.cmp_frac(o.lo).is_le() && self.hi.cmp_frac(o.hi).is_ge()
+    }
+
+    /// The `i`-th of `n` equal sub-intervals.
+    pub fn split(&self, i: usize, n: usize) -> Interval {
+        assert!(n > 0 && i < n);
+        let w = self.len().mul(Frac::new(1, n as u64));
+        let lo = self.lo.add(w.mul(Frac::new(i as u64, 1)));
+        Interval { lo, hi: lo.add(w) }
+    }
+
+    /// Express `o` (which must be contained in `self`) in coordinates
+    /// relative to `self` — the inverse of viewing `self` as the whole.
+    pub fn relative(&self, o: &Interval) -> Interval {
+        assert!(self.contains(o), "relative() needs containment");
+        let w = self.len();
+        assert!(w.num > 0, "relative() on empty interval");
+        let inv = Frac::new(w.den, w.num);
+        Interval {
+            lo: o.lo.sub(self.lo).mul(inv),
+            hi: o.hi.sub(self.lo).mul(inv),
+        }
+    }
+}
+
+/// Value-split annotation: this vTensor holds partial `index` of `parts`
+/// additive partials of the pTensor values. `parts == 1` means full values.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct VSplit {
+    pub index: u32,
+    pub parts: u32,
+}
+
+impl VSplit {
+    pub const FULL: VSplit = VSplit { index: 0, parts: 1 };
+
+    pub fn is_full(&self) -> bool {
+        self.parts == 1
+    }
+
+    /// Refine: this partial is further split into `n` partials, taking the
+    /// `i`-th. Partial (i of n) of partial (index of parts) is partial
+    /// (index*n + i of parts*n).
+    pub fn refine(&self, i: u32, n: u32) -> VSplit {
+        VSplit { index: self.index * n + i, parts: self.parts * n }
+    }
+}
+
+/// The full mask of a vTensor over its pTensor.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Mask {
+    pub dims: Vec<Interval>,
+    pub vsplit: VSplit,
+}
+
+impl Mask {
+    /// Full coverage of a rank-`rank` pTensor.
+    pub fn full(rank: usize) -> Mask {
+        Mask { dims: vec![Interval::FULL; rank], vsplit: VSplit::FULL }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Fraction of the pTensor's elements this mask covers spatially.
+    pub fn volume(&self) -> Frac {
+        self.dims
+            .iter()
+            .fold(Frac::ONE, |acc, iv| acc.mul(iv.len()))
+    }
+
+    /// Spatial intersection (ignoring value split); `None` when disjoint.
+    pub fn intersect(&self, o: &Mask) -> Option<Mask> {
+        assert_eq!(self.rank(), o.rank(), "rank mismatch in mask intersect");
+        let mut dims = Vec::with_capacity(self.dims.len());
+        for (a, b) in self.dims.iter().zip(&o.dims) {
+            dims.push(a.intersect(b)?);
+        }
+        Some(Mask { dims, vsplit: self.vsplit })
+    }
+
+    /// Data dependency per Fig. 7: non-empty spatial overlap. (Value splits
+    /// overlap on values by construction — every partial contributes.)
+    pub fn depends_on(&self, producer: &Mask) -> bool {
+        self.intersect(producer).is_some()
+    }
+
+    /// Take the `i`-th of `n` equal spatial slices along `axis`.
+    pub fn split_dim(&self, axis: usize, i: usize, n: usize) -> Mask {
+        assert!(axis < self.rank(), "axis {axis} out of rank {}", self.rank());
+        let mut m = self.clone();
+        m.dims[axis] = m.dims[axis].split(i, n);
+        m
+    }
+
+    /// Take the `i`-th of `n` value partials (spatially unchanged).
+    pub fn split_value(&self, i: usize, n: usize) -> Mask {
+        let mut m = self.clone();
+        m.vsplit = m.vsplit.refine(i as u32, n as u32);
+        m
+    }
+
+    /// Does `self` spatially cover all of `o`?
+    pub fn covers(&self, o: &Mask) -> bool {
+        self.dims
+            .iter()
+            .zip(&o.dims)
+            .all(|(a, b)| a.contains(b))
+    }
+
+    /// Concrete element-index ranges of this mask over a pTensor with the
+    /// given shape: `(start, end)` per dim. Panics if the mask does not fall
+    /// on element boundaries (transform algorithms only create even splits,
+    /// so this is a program invariant, not a user-facing error).
+    pub fn concrete(&self, shape: &[usize]) -> Vec<(usize, usize)> {
+        assert_eq!(shape.len(), self.rank(), "shape rank mismatch");
+        self.dims
+            .iter()
+            .zip(shape)
+            .map(|(iv, &n)| (iv.lo.scale_exact(n), iv.hi.scale_exact(n)))
+            .collect()
+    }
+
+    /// Number of elements selected from a pTensor of `shape`.
+    pub fn num_elements(&self, shape: &[usize]) -> usize {
+        self.concrete(shape).iter().map(|(a, b)| b - a).product()
+    }
+
+    /// Do `self` and `o` cover *identical* regions (including value split)?
+    pub fn same_region(&self, o: &Mask) -> bool {
+        self == o
+    }
+}
+
+/// Check that a set of masks exactly tiles the full tensor: spatial volumes
+/// (weighted 1/parts for value splits) sum to 1 and the pieces are pairwise
+/// non-overlapping unless they are distinct value-partials or replicas of
+/// different ranges. Used by transform-algorithm validation.
+pub fn tiles_full(masks: &[Mask]) -> bool {
+    if masks.is_empty() {
+        return false;
+    }
+    // Sum of volume/parts must equal 1 for an exact tiling (each value split
+    // contributes a 1/parts "share" of its spatial region).
+    let mut num: u128 = 0;
+    let mut den: u128 = 1;
+    for m in masks {
+        let v = m.volume();
+        let share_num = v.num as u128;
+        let share_den = v.den as u128 * m.vsplit.parts as u128;
+        num = num * share_den + share_num * den;
+        den *= share_den;
+        let g = crate::util::gcd(num.min(u64::MAX as u128) as u64, den.min(u64::MAX as u128) as u64)
+            .max(1) as u128;
+        if num % g == 0 && den % g == 0 {
+            num /= g;
+            den /= g;
+        }
+    }
+    num == den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(n: u64, d: u64) -> Frac {
+        Frac::new(n, d)
+    }
+
+    #[test]
+    fn frac_normalizes() {
+        assert_eq!(f(2, 4), f(1, 2));
+        assert_eq!(f(0, 5), Frac::ZERO);
+        assert_eq!(f(6, 3), f(2, 1));
+    }
+
+    #[test]
+    fn frac_arith() {
+        assert_eq!(f(1, 2).add(f(1, 3)), f(5, 6));
+        assert_eq!(f(1, 2).mul(f(2, 3)), f(1, 3));
+        assert_eq!(f(3, 4).sub(f(1, 4)), f(1, 2));
+        assert!(f(1, 3).cmp_frac(f(1, 2)).is_lt());
+    }
+
+    #[test]
+    fn scale_exact_works_and_panics() {
+        assert_eq!(f(1, 2).scale_exact(8), 4);
+        assert_eq!(f(3, 4).scale_exact(16), 12);
+        let r = std::panic::catch_unwind(|| f(1, 3).scale_exact(8));
+        assert!(r.is_err(), "1/3 of 8 is not exact");
+    }
+
+    #[test]
+    fn interval_split_tiles() {
+        let full = Interval::FULL;
+        let parts: Vec<Interval> = (0..4).map(|i| full.split(i, 4)).collect();
+        assert_eq!(parts[0].lo, Frac::ZERO);
+        assert_eq!(parts[3].hi, Frac::ONE);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+            assert!(w[0].intersect(&w[1]).is_none(), "touching != overlapping");
+        }
+    }
+
+    #[test]
+    fn interval_relative_roundtrip() {
+        let outer = Interval::new(f(1, 4), f(3, 4));
+        let inner = Interval::new(f(1, 4), f(1, 2));
+        let rel = outer.relative(&inner);
+        assert_eq!(rel, Interval::new(Frac::ZERO, f(1, 2)));
+    }
+
+    #[test]
+    fn fig6_two_step_split() {
+        // Paper Fig. 6: split horizontally (top half), then vertically (left
+        // half) -> top-left quarter of the pTensor.
+        let v1 = Mask::full(2);
+        let v2 = v1.split_dim(0, 0, 2); // top half
+        let v3 = v2.split_dim(1, 0, 2); // left half of that
+        assert_eq!(v3.dims[0], Interval::new(Frac::ZERO, f(1, 2)));
+        assert_eq!(v3.dims[1], Interval::new(Frac::ZERO, f(1, 2)));
+        assert_eq!(v3.volume(), f(1, 4));
+    }
+
+    #[test]
+    fn fig7_dependency_check() {
+        // Producers hold left/right halves; consumer needs the top half.
+        let a1 = Mask::full(2).split_dim(1, 0, 2); // left
+        let a2 = Mask::full(2).split_dim(1, 1, 2); // right
+        let b1 = Mask::full(2).split_dim(0, 0, 2); // top
+        assert!(b1.depends_on(&a1));
+        assert!(b1.depends_on(&a2));
+        let i1 = b1.intersect(&a1).unwrap();
+        assert_eq!(i1.volume(), f(1, 4)); // top-left quarter
+        // Disjoint: left vs right.
+        assert!(!a1.depends_on(&a2));
+    }
+
+    #[test]
+    fn vsplit_refinement() {
+        let v = VSplit::FULL.refine(1, 2); // partial 1 of 2
+        assert_eq!(v, VSplit { index: 1, parts: 2 });
+        let v2 = v.refine(0, 3); // further split -> partial 3 of 6
+        assert_eq!(v2, VSplit { index: 3, parts: 6 });
+    }
+
+    #[test]
+    fn concrete_indices() {
+        let m = Mask::full(2).split_dim(0, 1, 2).split_dim(1, 0, 4);
+        let c = m.concrete(&[8, 16]);
+        assert_eq!(c, vec![(4, 8), (0, 4)]);
+        assert_eq!(m.num_elements(&[8, 16]), 16);
+    }
+
+    #[test]
+    fn tiling_checks() {
+        let quads: Vec<Mask> = (0..2)
+            .flat_map(|i| {
+                (0..2).map(move |j| Mask::full(2).split_dim(0, i, 2).split_dim(1, j, 2))
+            })
+            .collect();
+        assert!(tiles_full(&quads));
+        assert!(!tiles_full(&quads[..3]));
+        // Two value-partials of the full region also tile it.
+        let vs = vec![
+            Mask::full(2).split_value(0, 2),
+            Mask::full(2).split_value(1, 2),
+        ];
+        assert!(tiles_full(&vs));
+        assert!(!tiles_full(&vs[..1]));
+    }
+
+    #[test]
+    fn prop_split_dim_tiles_and_is_disjoint() {
+        crate::util::prop::check("mask-split-tiles", 200, |g| {
+            let rank = g.int(1, 4);
+            let axis = g.int(0, rank);
+            let n = g.int(1, 9);
+            let base = Mask::full(rank);
+            let parts: Vec<Mask> = (0..n).map(|i| base.split_dim(axis, i, n)).collect();
+            if !tiles_full(&parts) {
+                return Err(format!("rank={rank} axis={axis} n={n} does not tile"));
+            }
+            for i in 0..n {
+                for j in i + 1..n {
+                    if parts[i].intersect(&parts[j]).is_some() {
+                        return Err(format!("parts {i},{j} overlap"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_intersection_commutes_and_shrinks() {
+        crate::util::prop::check("mask-intersect", 300, |g| {
+            let rank = g.int(1, 4);
+            let mk = |g: &mut crate::util::prop::Gen| {
+                let mut m = Mask::full(rank);
+                for _ in 0..g.int(0, 3) {
+                    let axis = g.int(0, rank);
+                    let n = g.int(1, 5);
+                    let i = g.int(0, n);
+                    m = m.split_dim(axis, i, n);
+                }
+                m
+            };
+            let a = mk(g);
+            let b = mk(g);
+            match (a.intersect(&b), b.intersect(&a)) {
+                (None, None) => Ok(()),
+                (Some(x), Some(y)) => {
+                    if x.dims != y.dims {
+                        return Err("intersection not commutative".into());
+                    }
+                    if !a.covers(&x) || !b.covers(&x) {
+                        return Err("intersection not contained".into());
+                    }
+                    Ok(())
+                }
+                _ => Err("asymmetric intersection".into()),
+            }
+        });
+    }
+}

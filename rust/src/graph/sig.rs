@@ -1,0 +1,234 @@
+//! Einops-style operator signatures (paper §5, "Op-trans assistant").
+//!
+//! A signature annotates every input/output axis of an operator with a dim
+//! name, and marks which names are *reduction* dims (contracted — splitting
+//! them value-splits the outputs) and which name is the *batch* dim (what
+//! data parallelism splits; the paper's `GetBatchDim`).
+//!
+//! Example — a batched matmul:
+//! ```text
+//! b m k, k n -> b m n | reduce k | batch b
+//! ```
+//! Splitting `n` slices the second input and the output; splitting `k`
+//! slices both inputs and makes each new operator produce a value-partial of
+//! the output (requiring a reduce at materialization); splitting `b` slices
+//! the first input and the output and replicates the second input.
+
+use std::collections::BTreeSet;
+
+/// Parsed operator signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpSignature {
+    /// Dim names per input tensor, in axis order. An axis named `_` is
+    /// anonymous (never partitionable).
+    pub inputs: Vec<Vec<String>>,
+    /// Dim names per output tensor.
+    pub outputs: Vec<Vec<String>>,
+    /// Contracted dims.
+    pub reduce: BTreeSet<String>,
+    /// The batched dim, if the op has one.
+    pub batch: Option<String>,
+}
+
+impl OpSignature {
+    /// Parse `"b m k, k n -> b m n | reduce k | batch b"`. The `| reduce`
+    /// and `| batch` sections are optional.
+    pub fn parse(s: &str) -> OpSignature {
+        let mut sections = s.split('|').map(str::trim);
+        let main = sections.next().expect("empty signature");
+        let (ins, outs) = main
+            .split_once("->")
+            .unwrap_or_else(|| panic!("signature '{s}' missing '->'"));
+        let parse_side = |side: &str| -> Vec<Vec<String>> {
+            side.split(',')
+                .map(|t| {
+                    t.split_whitespace()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                })
+                .filter(|v| !v.is_empty())
+                .collect()
+        };
+        let mut sig = OpSignature {
+            inputs: parse_side(ins),
+            outputs: parse_side(outs),
+            reduce: BTreeSet::new(),
+            batch: None,
+        };
+        for sec in sections {
+            if let Some(rest) = sec.strip_prefix("reduce") {
+                sig.reduce = rest.split_whitespace().map(|d| d.to_string()).collect();
+            } else if let Some(rest) = sec.strip_prefix("batch") {
+                sig.batch = rest.split_whitespace().next().map(|d| d.to_string());
+            } else {
+                panic!("unknown signature section '{sec}'");
+            }
+        }
+        sig.validate();
+        sig
+    }
+
+    fn validate(&self) {
+        for r in &self.reduce {
+            assert!(
+                self.inputs.iter().any(|t| t.contains(r)),
+                "reduce dim '{r}' not present in any input"
+            );
+            assert!(
+                !self.outputs.iter().any(|t| t.contains(r)),
+                "reduce dim '{r}' must not appear in outputs"
+            );
+        }
+        if let Some(b) = &self.batch {
+            assert!(
+                self.inputs.iter().any(|t| t.contains(b)),
+                "batch dim '{b}' not in inputs"
+            );
+        }
+    }
+
+    /// All named (partitionable) dims.
+    pub fn dims(&self) -> BTreeSet<String> {
+        self.inputs
+            .iter()
+            .chain(&self.outputs)
+            .flatten()
+            .filter(|d| *d != "_")
+            .cloned()
+            .collect()
+    }
+
+    /// Axis of `dim` in input tensor `i`, if present.
+    pub fn input_axis(&self, i: usize, dim: &str) -> Option<usize> {
+        self.inputs[i].iter().position(|d| d == dim)
+    }
+
+    /// Axis of `dim` in output tensor `i`, if present.
+    pub fn output_axis(&self, i: usize, dim: &str) -> Option<usize> {
+        self.outputs[i].iter().position(|d| d == dim)
+    }
+
+    pub fn is_reduce(&self, dim: &str) -> bool {
+        self.reduce.contains(dim)
+    }
+
+    /// Can this op be split along `dim`? (It must be a named dim somewhere.)
+    pub fn can_split(&self, dim: &str) -> bool {
+        self.dims().contains(dim)
+    }
+
+    /// Axis index of the batch dim in input 0 (the paper's `GetBatchDim`).
+    pub fn batch_axis(&self) -> Option<usize> {
+        self.batch.as_ref().and_then(|b| self.input_axis(0, b))
+    }
+}
+
+/// Convenience constructors for common operator signatures used by the
+/// model zoo.
+pub mod sigs {
+    use super::OpSignature;
+
+    /// `x[b,m,k] @ w[k,n] -> y[b,m,n]` (the transformer linear layer).
+    pub fn linear() -> OpSignature {
+        OpSignature::parse("b m k, k n -> b m n | reduce k | batch b")
+    }
+
+    /// Batched matmul `x[b,m,k] @ y[b,k,n] -> z[b,m,n]`.
+    pub fn bmm() -> OpSignature {
+        OpSignature::parse("b m k, b k n -> b m n | reduce k | batch b")
+    }
+
+    /// Elementwise over `[b, s, h]`.
+    pub fn eltwise3() -> OpSignature {
+        OpSignature::parse("b s h -> b s h | batch b")
+    }
+
+    /// Binary elementwise over `[b, s, h]`.
+    pub fn eltwise3_bin() -> OpSignature {
+        OpSignature::parse("b s h, b s h -> b s h | batch b")
+    }
+
+    /// LayerNorm: normalizes over `h`, so `h` is *not* partitionable — we
+    /// name it `_` to forbid splits there.
+    pub fn layernorm() -> OpSignature {
+        OpSignature::parse("b s _ -> b s _ | batch b")
+    }
+
+    /// Multi-head attention composite over `[b, s, a, d]` (a = heads).
+    /// Heads are embarrassingly parallel — `a` is the co-shard dim.
+    pub fn attention() -> OpSignature {
+        OpSignature::parse("b s a d, b s a d, b s a d -> b s a d | batch b")
+    }
+
+    /// Embedding lookup: `ids[b, s], table[v, h] -> out[b, s, h]`; the vocab
+    /// dim `v` is partitionable (Megatron-style vocab-parallel embedding →
+    /// value-split output, since each shard contributes rows it owns).
+    pub fn embed() -> OpSignature {
+        OpSignature::parse("b s, v h -> b s h | reduce v | batch b")
+    }
+
+    /// Adam step: grad + weight + 2 moments -> weight (elementwise over a
+    /// flattened weight dim `p`).
+    pub fn optimizer() -> OpSignature {
+        OpSignature::parse("p, p, p, p -> p")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_signature() {
+        let s = OpSignature::parse("b m k, k n -> b m n | reduce k | batch b");
+        assert_eq!(s.inputs, vec![vec!["b", "m", "k"], vec!["k", "n"]]);
+        assert_eq!(s.outputs, vec![vec!["b", "m", "n"]]);
+        assert!(s.is_reduce("k"));
+        assert_eq!(s.batch.as_deref(), Some("b"));
+        assert_eq!(s.batch_axis(), Some(0));
+    }
+
+    #[test]
+    fn axis_lookup() {
+        let s = sigs::linear();
+        assert_eq!(s.input_axis(0, "k"), Some(2));
+        assert_eq!(s.input_axis(1, "k"), Some(0));
+        assert_eq!(s.input_axis(1, "b"), None);
+        assert_eq!(s.output_axis(0, "n"), Some(2));
+    }
+
+    #[test]
+    fn anonymous_dims_not_partitionable() {
+        let s = sigs::layernorm();
+        assert!(!s.can_split("_"));
+        assert!(s.can_split("b"));
+        assert!(s.can_split("s"));
+    }
+
+    #[test]
+    #[should_panic(expected = "missing '->'")]
+    fn rejects_malformed() {
+        OpSignature::parse("a b c");
+    }
+
+    #[test]
+    #[should_panic(expected = "must not appear in outputs")]
+    fn rejects_reduce_in_output() {
+        OpSignature::parse("k -> k | reduce k");
+    }
+
+    #[test]
+    fn no_batch_section_ok() {
+        let s = OpSignature::parse("p, p -> p");
+        assert!(s.batch.is_none());
+        assert!(s.reduce.is_empty());
+    }
+
+    #[test]
+    fn dims_collects_all_names() {
+        let s = sigs::linear();
+        let d = s.dims();
+        assert!(d.contains("b") && d.contains("m") && d.contains("k") && d.contains("n"));
+        assert_eq!(d.len(), 4);
+    }
+}

@@ -1,0 +1,42 @@
+//! SuperScaler — a parallelization-plan engine for distributed DNN training.
+//!
+//! Reproduction of *"SuperScaler: Supporting Flexible DNN Parallelization via
+//! a Unified Abstraction"* (Lin et al., 2023) as a three-layer Rust + JAX +
+//! Pallas stack. The engine decouples parallelization into three phases:
+//!
+//! 1. **Operator transformation** ([`trans`]) — `op-trans` partitions each
+//!    operator (and its input/output [`graph::VTensor`]s) into functionally
+//!    equivalent pieces, tracking data relations through pTensor masks.
+//! 2. **Space-time scheduling** ([`schedule`]) — `op-assign` maps operators
+//!    to devices, `op-order` adds happen-before edges; validation detects
+//!    deadlocks and completes ambiguous orders with a topological sort.
+//! 3. **Dependency materialization** ([`materialize`]) — mask intersections
+//!    between producer and consumer vTensors are turned into split / concat /
+//!    reduce / send-recv operators, then optimized into collectives via the
+//!    [`rvd`] representation and Dijkstra search.
+//!
+//! The materialized plan can then be:
+//! * **simulated** ([`sim`]) on a modeled GPU cluster (V100-like, NVLink +
+//!   InfiniBand hierarchy) to reproduce the paper's evaluation, or
+//! * **executed** ([`exec`]) with real numerics: each simulated device is a
+//!   thread running AOT-compiled JAX/Pallas artifacts through the PJRT CPU
+//!   client ([`runtime`]), with collectives implemented in Rust.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! measured results.
+
+pub mod cost;
+pub mod exec;
+pub mod graph;
+pub mod materialize;
+pub mod models;
+pub mod plans;
+pub mod runtime;
+pub mod rvd;
+pub mod schedule;
+pub mod sim;
+pub mod trans;
+pub mod util;
+
+pub use graph::{Graph, Op, OpId, OpKind, PTensor, VTensor};
+pub use schedule::Schedule;

@@ -1,0 +1,203 @@
+//! SuperScaler CLI — the leader entrypoint.
+//!
+//! ```text
+//! superscaler simulate --model gpt3 --plan coshard --gpus 16 [--scale 2 ...]
+//! superscaler rvd --from "R(1)V(2)D(1,2)" --to "R(2)V(1)D(2,1)" --gpus 4
+//! superscaler train --devices 4 --steps 100 [--artifacts artifacts]
+//! superscaler plans                      # list available sPrograms
+//! ```
+
+use superscaler::materialize::CommMode;
+use superscaler::models;
+use superscaler::plans::{self, PipeOrder};
+use superscaler::rvd::Rvd;
+use superscaler::util::cli::Args;
+use superscaler::util::{fmt_bytes, fmt_secs};
+use superscaler::{cost::Cluster, sim};
+
+fn main() {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "simulate" => simulate(&args),
+        "rvd" => rvd_query(&args),
+        "train" => train(&args),
+        "plans" => list_plans(),
+        _ => usage(),
+    }
+}
+
+fn usage() {
+    println!(
+        "superscaler — flexible DNN parallelization via a unified abstraction\n\
+         \n\
+         USAGE:\n\
+           superscaler simulate --model <gpt3|swin|mbart|alphafold2> --plan <name>\n\
+                                [--gpus N] [--scale 0..3] [--batch B] [--seq S]\n\
+                                [--tp T] [--pp P] [--dp D] [--micro K] [--shards C]\n\
+                                [--comm p2p|intra|inter]\n\
+           superscaler rvd      --from 'R(r)V(v)D(k1,k2)' --to '...' [--gpus N]\n\
+                                [--src-gpus N] [--dst-gpus N] [--mb MB]\n\
+           superscaler train    [--devices N] [--steps N] [--lr F] [--artifacts DIR]\n\
+           superscaler plans"
+    );
+}
+
+fn list_plans() {
+    println!("available sPrograms (rust/src/plans/):");
+    for (name, desc) in [
+        ("dp", "Algorithm 1 data parallelism"),
+        ("tp", "Megatron tensor parallelism (megatron with pp=1)"),
+        ("megatron", "dp x pp x tp grid, 1F1B ordering"),
+        ("gpipe", "megatron grid with GPipe ordering"),
+        ("zero3", "DeepSpeed ZeRO-3 sharded optimizer"),
+        ("zero3-offload", "ZeRO-3 with CPU-offloaded optimizer"),
+        ("coshard", "NEW: co-located shards + recompute (paper Fig. 3)"),
+        ("interlaced", "NEW: interlaced pipeline for mBART (Algorithm 2)"),
+        ("3f1b", "NEW: 3F1B recycling pipeline for AlphaFold2 (Fig. 2)"),
+        ("dap", "Dynamic Axial Parallelism + DP (AlphaFold2 baseline)"),
+    ] {
+        println!("  {name:<15} {desc}");
+    }
+}
+
+fn build_model(args: &Args) -> models::Model {
+    let name = args.str("model", "gpt3");
+    let scale = args.usize("scale", 0);
+    let batch = args.usize("batch", 8);
+    match name {
+        "gpt3" => models::gpt3(scale, batch, args.usize("seq", 2048)),
+        "swin" => models::swin_transformer(scale, batch, args.usize("resolution", 1536)),
+        "mbart" => models::mbart(scale, batch, args.usize("seq", 1024)),
+        "alphafold2" => models::alphafold2(scale, batch),
+        other => {
+            eprintln!("unknown model '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn comm_mode(args: &Args) -> CommMode {
+    match args.str("comm", "inter") {
+        "p2p" => CommMode::P2POnly,
+        "intra" => CommMode::IntraRvd,
+        _ => CommMode::InterRvd,
+    }
+}
+
+fn simulate(args: &Args) {
+    let gpus = args.usize("gpus", 4);
+    let model = build_model(args);
+    let plan_name = args.str("plan", "dp").to_string();
+    let k = args.usize("micro", 4);
+    let out = match plan_name.as_str() {
+        "dp" => plans::data_parallel(model, gpus),
+        "tp" => plans::megatron(model, 1, 1, gpus, 1, PipeOrder::OneFOneB),
+        "megatron" => plans::megatron(
+            model,
+            args.usize("dp", 1),
+            args.usize("pp", gpus),
+            args.usize("tp", 1),
+            k,
+            PipeOrder::OneFOneB,
+        ),
+        "gpipe" => plans::megatron(
+            model,
+            args.usize("dp", 1),
+            args.usize("pp", gpus),
+            args.usize("tp", 1),
+            k,
+            PipeOrder::GPipe,
+        ),
+        "zero3" => plans::zero3(model, gpus, false),
+        "zero3-offload" => plans::zero3(model, gpus, true),
+        "coshard" => plans::coshard(model, gpus, args.usize("shards", 4), None),
+        "interlaced" => plans::interlaced_pipeline(model, gpus, k, true, false),
+        "3f1b" => plans::pipeline_3f1b(model, gpus, k),
+        "dap" => plans::dap_dp(model, gpus / args.usize("dp", 1).max(1), args.usize("dp", 1)),
+        other => {
+            eprintln!("unknown plan '{other}' (see `superscaler plans`)");
+            std::process::exit(2);
+        }
+    }
+    .unwrap_or_else(|e| {
+        eprintln!("plan construction failed: {e}");
+        std::process::exit(1);
+    });
+    let cluster = Cluster::v100(gpus);
+    match sim::run(&out.graph, &out.schedule, &cluster, comm_mode(args)) {
+        Ok(r) => {
+            let (comp, comm, bub) = r.breakdown();
+            println!("plan       {}", out.name);
+            println!("iteration  {}", fmt_secs(r.makespan));
+            println!("aggregate  {:.1} TFLOPS ({:.1}/GPU)", r.aggregate_tflops, r.tflops_per_gpu);
+            println!("breakdown  compute {} | comm {} | bubble {}", fmt_secs(comp), fmt_secs(comm), fmt_secs(bub));
+            println!("comm       {}", fmt_bytes(r.comm_bytes));
+            println!("peak mem   {}{}", fmt_bytes(r.max_peak_mem()), if r.oom { "  ** OOM **" } else { "" });
+        }
+        Err(e) => {
+            eprintln!("schedule invalid: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn parse_rvd(s: &str) -> Rvd {
+    // "R(2)V(1)D(2,1)"
+    let nums: Vec<usize> = s
+        .split(|c: char| !c.is_ascii_digit())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse().unwrap())
+        .collect();
+    assert!(nums.len() >= 3, "bad RVD '{s}'");
+    Rvd::new(nums[0], nums[1], &nums[2..])
+}
+
+fn rvd_query(args: &Args) {
+    let from = parse_rvd(args.str("from", "R(4)V(1)D(1)"));
+    let to = parse_rvd(args.str("to", "R(8)V(1)D(1)"));
+    let mb = args.usize("mb", 64) as u64 * (1 << 20);
+    let src_n = args.usize("src-gpus", from.num_devices());
+    let dst_n = args.usize("dst-gpus", to.num_devices());
+    let cluster = Cluster::v100(32);
+    let src: Vec<usize> = (0..src_n).collect();
+    let dst: Vec<usize> = (8..8 + dst_n).collect();
+    println!("searching {from} ({src_n} gpus, server 0) -> {to} ({dst_n} gpus, server 1), {}", fmt_bytes(mb));
+    match superscaler::rvd::search_inter(&cluster, &src, &dst, mb, &from, &to) {
+        Some(p) => {
+            println!("plan: {}", p.describe(&from));
+            println!("time: {}", fmt_secs(p.time));
+            let p2p = superscaler::rvd::p2p_baseline_time(&cluster, &src, &dst, mb, &to);
+            println!("p2p baseline: {} ({:.1}x slower)", fmt_secs(p2p), p2p / p.time.max(1e-12));
+        }
+        None => println!("no path found"),
+    }
+}
+
+fn train(args: &Args) {
+    let devices = args.usize("devices", 2);
+    let steps = args.usize("steps", 50) as u64;
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let adam = superscaler::exec::Adam {
+        lr: args.f64("lr", 1e-2) as f32,
+        ..Default::default()
+    };
+    println!("training data-parallel over {devices} thread-devices, {steps} steps");
+    match superscaler::exec::train_dp(&dir, devices, steps, adam, 42, 10) {
+        Ok(curve) => {
+            let first = curve.first().unwrap();
+            let last = curve.last().unwrap();
+            println!(
+                "loss {:.4} -> {:.4} over {} steps ({:.2} s/step)",
+                first.loss,
+                last.loss,
+                curve.len(),
+                curve.iter().map(|s| s.step_time).sum::<f64>() / curve.len() as f64
+            );
+        }
+        Err(e) => {
+            eprintln!("training failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

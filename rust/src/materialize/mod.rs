@@ -1,0 +1,821 @@
+//! Phase 3 — data dependency materialization (paper §3.3, Fig. 8; §4).
+//!
+//! After transformation and scheduling, producer vTensors may mismatch
+//! consumer vTensors (different masks) or live on different devices.
+//! [`materialize`] turns the *logical* dependencies tracked through masks
+//! into an executable [`Plan`]: compute tasks (one per live op) plus
+//! communication tasks connecting them.
+//!
+//! Communication synthesis has three tiers:
+//! 1. **aligned & co-located** — producer covers the consumer's region with
+//!    full values on the same device: a plain dependency edge, no traffic;
+//! 2. **RVD collectives** (§4) — when producer and consumer views form
+//!    *even* partitions, their RVD states are inferred and a Dijkstra
+//!    search composes collectives ([`crate::rvd`]); this is the paper's
+//!    "aligning with efficient communication collectives";
+//! 3. **generic P2P** (Fig. 8) — irregular overlaps fall back to
+//!    split → send/recv → concat-or-reduce, exactly the paper's four-step
+//!    construction.
+//!
+//! Weights/optimizer state are produced by the *previous* iteration's
+//! optimizer: their redistribution tasks (e.g. ZeRO's weight all-gather)
+//! carry cost but no intra-iteration producer dependency.
+
+use crate::cost::Cluster;
+use crate::graph::{mask::Mask, CollKind, Graph, OpId, PTensorId, TensorKind};
+use crate::rvd::{self, Rvd};
+use crate::schedule::{DeviceId, ValidatedSchedule};
+use std::collections::HashMap;
+
+pub type TaskId = usize;
+
+/// One schedulable unit of the materialized plan.
+#[derive(Clone, Debug)]
+pub enum TaskKind {
+    /// Execute graph op `op` on `device`.
+    Compute { op: OpId, device: DeviceId },
+    /// Point-to-point transfer.
+    P2P { from: DeviceId, to: DeviceId, bytes: u64, ptensor: PTensorId },
+    /// Collective over `group`; `bytes` is the per-rank payload.
+    Collective {
+        kind: CollKind,
+        group: Vec<DeviceId>,
+        bytes: u64,
+        ptensor: PTensorId,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    /// Tasks that must complete before this one starts.
+    pub deps: Vec<TaskId>,
+    /// Modeled duration, seconds (cost model applied at materialization).
+    pub duration: f64,
+    /// Human-readable label for traces.
+    pub label: String,
+}
+
+impl Task {
+    /// Devices this task occupies while running (deduplicated — inferred
+    /// collective groups may list a device once per value-partial slot).
+    pub fn devices(&self) -> Vec<DeviceId> {
+        let mut v = match &self.kind {
+            TaskKind::Compute { device, .. } => vec![*device],
+            TaskKind::P2P { from, to, .. } => vec![*from, *to],
+            TaskKind::Collective { group, .. } => group.clone(),
+        };
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn is_comm(&self) -> bool {
+        !matches!(self.kind, TaskKind::Compute { .. })
+    }
+
+    /// Bytes moved (0 for compute).
+    pub fn comm_bytes(&self) -> u64 {
+        match &self.kind {
+            TaskKind::Compute { .. } => 0,
+            TaskKind::P2P { bytes, .. } => *bytes,
+            TaskKind::Collective { bytes, group, .. } => *bytes * group.len() as u64,
+        }
+    }
+}
+
+/// The materialized, executable plan.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub tasks: Vec<Task>,
+    /// op -> its compute task.
+    pub task_of_op: HashMap<OpId, TaskId>,
+    /// Static per-device memory (weights + gradients + optimizer state
+    /// shards resident for the whole iteration), bytes.
+    pub static_mem: HashMap<DeviceId, u64>,
+    /// Total communication volume, bytes (for §6.5-style reporting).
+    pub comm_bytes: u64,
+    /// Count of dependency edges materialized through each tier.
+    pub n_direct: usize,
+    pub n_rvd: usize,
+    pub n_p2p: usize,
+}
+
+impl Plan {
+    fn push(&mut self, kind: TaskKind, deps: Vec<TaskId>, duration: f64, label: String) -> TaskId {
+        let id = self.tasks.len();
+        self.comm_bytes += match &kind {
+            TaskKind::Compute { .. } => 0,
+            _ => 0, // updated below via comm_bytes()
+        };
+        let t = Task { id, kind, deps, duration, label };
+        self.comm_bytes += t.comm_bytes();
+        self.tasks.push(t);
+        id
+    }
+}
+
+/// Strategy knob for §6.5's ablation (Fig. 16): force the naive P2P tier,
+/// allow intra-group RVD only, or full inter-RVD.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CommMode {
+    P2POnly,
+    IntraRvd,
+    InterRvd,
+}
+
+/// A producer or consumer view of a pTensor during materialization.
+#[derive(Clone, Debug)]
+struct View {
+    op: OpId,
+    mask: Mask,
+    device: DeviceId,
+}
+
+/// Materialize `g` + `vs` into an executable [`Plan`] against `cluster`.
+pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: CommMode) -> Plan {
+    let mut plan = Plan::default();
+    // op -> device lookup table (device_order scan per op would be O(n^2)).
+    let dev_of: HashMap<OpId, DeviceId> = vs
+        .device_order
+        .iter()
+        .flat_map(|(&d, ops)| ops.iter().map(move |&o| (o, d)))
+        .collect();
+
+    // ---- compute tasks, in global topo order ----
+    for &op in &vs.topo {
+        let device = dev_of[&op];
+        let flops = g.op(op).flops;
+        let spec = if device == crate::schedule::CPU_DEVICE {
+            &cluster.cpu_spec
+        } else {
+            &cluster.spec
+        };
+        let dur = spec.compute_time(flops);
+        let id = plan.push(
+            TaskKind::Compute { op, device },
+            Vec::new(),
+            dur,
+            g.op(op).name.clone(),
+        );
+        plan.task_of_op.insert(op, id);
+    }
+
+    // ---- group dependencies per (ptensor, consumer-mask-pattern) ----
+    // deps: (producer, consumer, ptensor) chosen by scheduling validation.
+    let mut by_pt: HashMap<PTensorId, (Vec<View>, Vec<View>)> = HashMap::new();
+    let mut seen: std::collections::HashSet<(OpId, PTensorId, bool)> = Default::default();
+    for &(p, c, pt) in &vs.deps {
+        if seen.insert((p, pt, true)) {
+            for &ov in &g.op(p).outputs {
+                let vt = g.vtensor(ov);
+                if vt.ptensor == pt {
+                    by_pt.entry(pt).or_default().0.push(View {
+                        op: p,
+                        mask: vt.mask.clone(),
+                        device: dev_of[&p],
+                    });
+                }
+            }
+        }
+        if seen.insert((c, pt, false)) {
+            for &iv in &g.op(c).inputs {
+                let vt = g.vtensor(iv);
+                if vt.ptensor == pt {
+                    by_pt.entry(pt).or_default().1.push(View {
+                        op: c,
+                        mask: vt.mask.clone(),
+                        device: dev_of[&c],
+                    });
+                }
+            }
+        }
+    }
+    // Weight/OptState pTensors consumed by ops but *produced* by the
+    // previous iteration's optimizer: producers = optimizer output views,
+    // cross-iteration (no dep edges into this iteration's tasks).
+    let access = g.ptensor_access();
+    for (&pt, (prods, cons)) in &access {
+        let kind = g.ptensor(pt).kind;
+        if !matches!(kind, TensorKind::Weight | TensorKind::OptState) {
+            continue;
+        }
+        let entry = by_pt.entry(pt).or_default();
+        if entry.1.is_empty() {
+            for &c in cons {
+                if g.op(c).kind == crate::graph::OpKind::Optimizer {
+                    continue; // optimizer reads its own shard in place
+                }
+                for &iv in &g.op(c).inputs {
+                    let vt = g.vtensor(iv);
+                    if vt.ptensor == pt {
+                        entry.1.push(View {
+                            op: c,
+                            mask: vt.mask.clone(),
+                            device: dev_of[&c],
+                        });
+                    }
+                }
+            }
+        }
+        if entry.0.is_empty() {
+            for &p in prods {
+                if !g.is_cross_iteration(p, pt) {
+                    continue;
+                }
+                for &ov in &g.op(p).outputs {
+                    let vt = g.vtensor(ov);
+                    if vt.ptensor == pt {
+                        entry.0.push(View {
+                            op: p,
+                            mask: vt.mask.clone(),
+                            device: dev_of[&p],
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- materialize each pTensor's redistribution ----
+    let mut pts: Vec<PTensorId> = by_pt.keys().copied().collect();
+    pts.sort_unstable();
+    for pt in pts {
+        let (producers, consumers) = &by_pt[&pt];
+        if producers.is_empty() || consumers.is_empty() {
+            continue;
+        }
+        let cross_iter = matches!(
+            g.ptensor(pt).kind,
+            TensorKind::Weight | TensorKind::OptState
+        );
+        materialize_ptensor(g, cluster, mode, &mut plan, pt, producers, consumers, cross_iter);
+    }
+    // ---- per-device serial-order dependencies are the simulator's job ----
+
+    // ---- static memory ----
+    plan.static_mem = static_memory(g, vs);
+    plan
+}
+
+
+
+#[allow(clippy::too_many_arguments)]
+fn materialize_ptensor(
+    g: &Graph,
+    cluster: &Cluster,
+    mode: CommMode,
+    plan: &mut Plan,
+    pt: PTensorId,
+    producers: &[View],
+    consumers: &[View],
+    cross_iter: bool,
+) {
+    let total_bytes = g.ptensor(pt).bytes();
+    // Fast path per consumer: an aligned co-located producer.
+    let mut unresolved: Vec<&View> = Vec::new();
+    for c in consumers {
+        let aligned = producers.iter().find(|p| {
+            p.device == c.device && p.mask.covers(&c.mask) && p.mask.vsplit.is_full()
+        });
+        match aligned {
+            Some(p) => {
+                plan.n_direct += 1;
+                if !cross_iter {
+                    let pt_task = plan.task_of_op[&p.op];
+                    let ct = plan.task_of_op[&c.op];
+                    if !plan.tasks[ct].deps.contains(&pt_task) {
+                        plan.tasks[ct].deps.push(pt_task);
+                    }
+                }
+            }
+            None => unresolved.push(c),
+        }
+    }
+    if unresolved.is_empty() {
+        return;
+    }
+
+    // Group the remaining traffic into connected components of the
+    // producer/consumer overlap graph: e.g. K pipeline micro-batches of one
+    // activation are K independent transfers (merging them would create
+    // false dependencies — and deadlocks against 1F1B ordering), while the
+    // value-partials of a data-parallel gradient all connect into one
+    // component (one all-reduce).
+    let comps = overlap_components(producers, &unresolved);
+    for (comp_prods, comp_cons) in comps {
+        synthesize_component(
+            g, cluster, mode, plan, pt, total_bytes, &comp_prods, &comp_cons, cross_iter,
+        );
+    }
+}
+
+/// Connected components over the bipartite overlap graph. Returns
+/// `(producers, consumers)` per component (producers may repeat across
+/// components if they feed several).
+fn overlap_components(producers: &[View], consumers: &[&View]) -> Vec<(Vec<View>, Vec<View>)> {
+    let np = producers.len();
+    let n = np + consumers.len();
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(p: &mut Vec<usize>, i: usize) -> usize {
+        if p[i] != i {
+            let r = find(p, p[i]);
+            p[i] = r;
+        }
+        p[i]
+    }
+    for (ci, c) in consumers.iter().enumerate() {
+        for (pi, p) in producers.iter().enumerate() {
+            if c.mask.depends_on(&p.mask) {
+                let (a, b) = (find(&mut parent, pi), find(&mut parent, np + ci));
+                parent[a] = b;
+            }
+        }
+    }
+    let mut comps: HashMap<usize, (Vec<View>, Vec<View>)> = HashMap::new();
+    for (ci, c) in consumers.iter().enumerate() {
+        let root = find(&mut parent, np + ci);
+        comps.entry(root).or_default().1.push((*c).clone());
+    }
+    for (pi, p) in producers.iter().enumerate() {
+        let root = find(&mut parent, pi);
+        if let Some(e) = comps.get_mut(&root) {
+            e.0.push(p.clone());
+        }
+    }
+    comps.into_values().filter(|(p, c)| !p.is_empty() && !c.is_empty()).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn synthesize_component(
+    g: &Graph,
+    cluster: &Cluster,
+    mode: CommMode,
+    plan: &mut Plan,
+    pt: PTensorId,
+    _total_bytes: u64,
+    producers: &[View],
+    unresolved: &[View],
+    cross_iter: bool,
+) {
+    // Same-device component: a purely local reduce/concat (e.g. the value
+    // partials of co-shard's sequential head shards) — dependency edges
+    // only, no communication.
+    let first_dev = producers[0].device;
+    if producers.iter().all(|p| p.device == first_dev)
+        && unresolved.iter().all(|c| c.device == first_dev)
+    {
+        plan.n_direct += unresolved.len();
+        if !cross_iter {
+            for c in unresolved {
+                let ct = plan.task_of_op[&c.op];
+                for p in producers {
+                    if c.mask.depends_on(&p.mask) {
+                        let pt_task = plan.task_of_op[&p.op];
+                        if !plan.tasks[ct].deps.contains(&pt_task) {
+                            plan.tasks[ct].deps.push(pt_task);
+                        }
+                    }
+                }
+            }
+        }
+        return;
+    }
+
+    // Try RVD synthesis over the component. Inference runs on *deduplicated*
+    // views — K micro-batch ops reading the same weight region on one device
+    // are a single logical consumer slot — normalized to the component's
+    // bounding box (a TP weight shard's gradient lives in a quarter of the
+    // pTensor; its all-reduce is over that region, not the whole tensor).
+    if mode != CommMode::P2POnly {
+        let cons_views: Vec<View> = unresolved.to_vec();
+        // Bounding box across all views.
+        let rank = producers[0].mask.rank();
+        let mut bbox = producers[0].mask.clone();
+        bbox.vsplit = crate::graph::mask::VSplit::FULL;
+        for v in producers.iter().chain(unresolved.iter()) {
+            for a in 0..rank {
+                bbox.dims[a] = crate::graph::mask::Interval::new(
+                    bbox.dims[a].lo.min(v.mask.dims[a].lo),
+                    bbox.dims[a].hi.max(v.mask.dims[a].hi),
+                );
+            }
+        }
+        let normalize = |v: &View| -> View {
+            let mut m = v.mask.clone();
+            for a in 0..rank {
+                m.dims[a] = bbox.dims[a].relative(&m.dims[a]);
+            }
+            View { op: v.op, mask: m, device: v.device }
+        };
+        let region_bytes = bbox.num_elements(&g.ptensor(pt).shape) as u64
+            * g.ptensor(pt).dtype.size_bytes() as u64;
+        let mut uniq: Vec<View> = Vec::new();
+        for v in &cons_views {
+            let v = normalize(v);
+            if !uniq.iter().any(|u| u.device == v.device && u.mask == v.mask) {
+                uniq.push(v);
+            }
+        }
+        let mut uniq_prods: Vec<View> = Vec::new();
+        for v in producers {
+            let v = normalize(v);
+            if !uniq_prods
+                .iter()
+                .any(|u| u.device == v.device && u.mask == v.mask)
+            {
+                uniq_prods.push(v);
+            }
+        }
+        let total_bytes = region_bytes;
+        if let (Some((prvd, pgroup)), Some((crvd, cgroup))) =
+            (infer_rvd(&uniq_prods), infer_rvd(&uniq))
+        {
+            let same_group = {
+                let mut a = pgroup.clone();
+                let mut b = cgroup.clone();
+                a.sort_unstable();
+                b.sort_unstable();
+                a == b
+            };
+            let path = if same_group {
+                rvd::search_intra(cluster, &pgroup, total_bytes, &prvd, &crvd)
+            } else if mode == CommMode::InterRvd {
+                rvd::search_inter(cluster, &pgroup, &cgroup, total_bytes, &prvd, &crvd)
+            } else {
+                None
+            };
+            if let Some(path) = path {
+                plan.n_rvd += 1;
+                emit_rvd_path(g, plan, pt, total_bytes, producers, &cons_views, &path, cross_iter, &pgroup, &cgroup);
+                return;
+            }
+        }
+    }
+
+    // Generic Fig. 8 fallback: per consumer, fetch every overlapping
+    // producer piece; reduces/concats are local (free).
+    for c in unresolved {
+        plan.n_p2p += 1;
+        let mut fetched = Vec::new();
+        for p in producers {
+            if let Some(ov) = c.mask.intersect(&p.mask) {
+                let bytes = ov.num_elements(&g.ptensor(pt).shape) as u64
+                    * g.ptensor(pt).dtype.size_bytes() as u64;
+                if p.device == c.device {
+                    // Local slice: free, only a dependency.
+                    if !cross_iter {
+                        fetched.push(plan.task_of_op[&p.op]);
+                    }
+                    continue;
+                }
+                let deps = if cross_iter { vec![] } else { vec![plan.task_of_op[&p.op]] };
+                let dur = cluster.p2p_time(p.device, c.device, bytes);
+                let t = plan.push(
+                    TaskKind::P2P { from: p.device, to: c.device, bytes, ptensor: pt },
+                    deps,
+                    dur,
+                    format!("p2p:{}", g.ptensor(pt).name),
+                );
+                fetched.push(t);
+            }
+        }
+        let ct = plan.task_of_op[&c.op];
+        for t in fetched {
+            if !plan.tasks[ct].deps.contains(&t) {
+                plan.tasks[ct].deps.push(t);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_rvd_path(
+    g: &Graph,
+    plan: &mut Plan,
+    pt: PTensorId,
+    region_bytes: u64,
+    producers: &[View],
+    consumers: &[View],
+    path: &rvd::Path,
+    cross_iter: bool,
+    pgroup: &[DeviceId],
+    cgroup: &[DeviceId],
+) {
+    // Chain: producers -> step1 -> ... -> stepN -> consumers.
+    let mut frontier: Vec<TaskId> = if cross_iter {
+        Vec::new()
+    } else {
+        producers.iter().map(|p| plan.task_of_op[&p.op]).collect()
+    };
+    for (trans, state, dt) in &path.steps {
+        let Some(kind) = trans.collective() else { continue }; // local = free
+        // Participating devices: the union of the groups this step touches.
+        let group: Vec<DeviceId> = match trans {
+            rvd::Transition::RdScatter { .. } | rvd::Transition::RdGather { .. } => {
+                pgroup.iter().chain(cgroup.iter()).copied().collect()
+            }
+            _ => {
+                // Whichever side the state lives on.
+                if state.num_devices() == pgroup.len() && !matches!(kind, CollKind::RdScatter) {
+                    pgroup.to_vec()
+                } else {
+                    cgroup.to_vec()
+                }
+            }
+        };
+        let bytes = state.shard_bytes(region_bytes);
+        let t = plan.push(
+            TaskKind::Collective { kind, group, bytes, ptensor: pt },
+            frontier.clone(),
+            *dt,
+            format!("{}:{}", trans, g.ptensor(pt).name),
+        );
+        frontier = vec![t];
+    }
+    for c in consumers {
+        let ct = plan.task_of_op[&c.op];
+        for &t in &frontier {
+            if !plan.tasks[ct].deps.contains(&t) {
+                plan.tasks[ct].deps.push(t);
+            }
+        }
+    }
+}
+
+/// Infer the RVD state of a set of views, if they form an even partition.
+/// Returns the state and the device group in RVD layout order
+/// (`rank = (ri·v + vi)·∏d + d_linear`).
+fn infer_rvd(views: &[View]) -> Option<(Rvd, Vec<DeviceId>)> {
+    if views.is_empty() {
+        return None;
+    }
+    let rank = views[0].mask.rank();
+    let v = views[0].mask.vsplit.parts as usize;
+    if views.iter().any(|w| w.mask.rank() != rank || w.mask.vsplit.parts as usize != v) {
+        return None;
+    }
+    // Per-dim distinct intervals must uniformly tile [0,1).
+    let mut d = Vec::with_capacity(rank);
+    for axis in 0..rank {
+        let mut ivs: Vec<_> = views.iter().map(|w| w.mask.dims[axis]).collect();
+        ivs.sort_by(|a, b| a.lo.cmp_frac(b.lo));
+        ivs.dedup();
+        let k = ivs.len();
+        for (i, iv) in ivs.iter().enumerate() {
+            let want = crate::graph::mask::Interval::FULL.split(i, k);
+            if *iv != want {
+                return None;
+            }
+        }
+        d.push(k);
+    }
+    let dprod: usize = d.iter().product();
+    let n = views.len();
+    if n % (dprod * v) != 0 {
+        return None;
+    }
+    let r = n / (dprod * v);
+    let state = Rvd::new(r, v, &d);
+    // Build the group in layout order: bucket views by (d_linear, vsplit).
+    let mut buckets: HashMap<(usize, usize), Vec<DeviceId>> = HashMap::new();
+    for w in views {
+        let mut lin = 0usize;
+        for axis in 0..rank {
+            let k = d[axis];
+            let pos = (0..k)
+                .find(|&i| crate::graph::mask::Interval::FULL.split(i, k) == w.mask.dims[axis])?;
+            lin = lin * k + pos;
+        }
+        buckets
+            .entry((lin, w.mask.vsplit.index as usize))
+            .or_default()
+            .push(w.device);
+    }
+    // Every bucket must have exactly r members.
+    let mut group = vec![0; n];
+    for ((lin, vi), mut devs) in buckets {
+        if devs.len() != r {
+            return None;
+        }
+        devs.sort_unstable();
+        for (ri, dev) in devs.into_iter().enumerate() {
+            group[(ri * v + vi) * dprod + lin] = dev;
+        }
+    }
+    Some((state, group))
+}
+
+/// Static (iteration-long) per-device memory: distinct weight, gradient and
+/// optimizer-state regions touched by the ops on each device.
+fn static_memory(g: &Graph, vs: &ValidatedSchedule) -> HashMap<DeviceId, u64> {
+    let mut mem: HashMap<DeviceId, HashMap<(PTensorId, u64), u64>> = HashMap::new();
+    for (&dev, ops) in &vs.device_order {
+        let slot = mem.entry(dev).or_default();
+        for &op in ops {
+            for &vref in g.op(op).inputs.iter().chain(&g.op(op).outputs) {
+                let vt = g.vtensor(vref);
+                let p = g.ptensor(vt.ptensor);
+                if matches!(
+                    p.kind,
+                    TensorKind::Weight | TensorKind::Gradient | TensorKind::OptState
+                ) {
+                    // Key by (ptensor, region hash): identical regions on the
+                    // same device are one allocation.
+                    let key = (vt.ptensor, region_hash(&vt.mask));
+                    let bytes = vt.mask.num_elements(&p.shape) as u64
+                        * p.dtype.size_bytes() as u64;
+                    slot.insert(key, bytes);
+                }
+            }
+        }
+    }
+    mem.into_iter()
+        .map(|(d, m)| (d, m.values().sum()))
+        .collect()
+}
+
+fn region_hash(m: &Mask) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    for iv in &m.dims {
+        iv.lo.num.hash(&mut h);
+        iv.lo.den.hash(&mut h);
+        iv.hi.num.hash(&mut h);
+        iv.hi.den.hash(&mut h);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sig::sigs;
+    use crate::graph::{DType, Graph, OpKind, TensorKind};
+    use crate::schedule::{validate, Schedule};
+    use crate::trans::{autograd, op_trans, TransformAlgo};
+
+    /// One linear layer + loss + optimizer, data-parallel over `n` devices.
+    fn dp_model(n: usize) -> (Graph, Schedule) {
+        let mut g = Graph::new();
+        let x = g.add_ptensor("x", &[8, 4, 16], DType::F32, TensorKind::Input);
+        let w = g.add_ptensor("w", &[16, 16], DType::F32, TensorKind::Weight);
+        let wg = g.add_ptensor("w.grad", &[16, 16], DType::F32, TensorKind::Gradient);
+        let m1 = g.add_ptensor("w.m", &[16, 16], DType::F32, TensorKind::OptState);
+        let y = g.add_ptensor("y", &[8, 4, 16], DType::F32, TensorKind::Activation);
+        let (xv, wv, yv) = (g.full_view(x), g.full_view(w), g.full_view(y));
+        let lin = g.add_op("lin", OpKind::Matmul, vec![xv, wv], vec![yv], 1e9, Some(sigs::linear()), true, 0);
+        let (gv, wv2, mv, wv3) = (g.full_view(wg), g.full_view(w), g.full_view(m1), g.full_view(w));
+        let opt = g.add_op("opt", OpKind::Optimizer, vec![gv, wv2, mv], vec![wv3], 256.0, Some(sigs::optimizer()), false, 0);
+
+        let fwd = op_trans(&mut g, lin, &TransformAlgo::split("b", n)).unwrap();
+        let opts = op_trans(&mut g, opt, &TransformAlgo::replicate(n)).unwrap();
+        let ag = autograd::complete(&mut g);
+        let mut s = Schedule::new();
+        for (i, &f) in fwd.iter().enumerate() {
+            s.assign(f, i);
+            s.assign(ag.bwd_of[&f], i);
+            s.assign(opts[i], i);
+        }
+        (g, s)
+    }
+
+    #[test]
+    fn dp_materializes_gradient_allreduce() {
+        let (g, s) = dp_model(4);
+        let vs = validate(&g, &s).unwrap();
+        let cluster = Cluster::v100(4);
+        let plan = materialize(&g, &vs, &cluster, CommMode::InterRvd);
+        // The 4 grad partials -> 4 replicated optimizer reads must become a
+        // single all-reduce (possibly + free local steps).
+        let colls: Vec<&Task> = plan.tasks.iter().filter(|t| t.is_comm()).collect();
+        assert!(
+            colls.iter().any(|t| matches!(
+                t.kind,
+                TaskKind::Collective { kind: CollKind::AllReduce, .. }
+            )),
+            "expected an all-reduce, got {:?}",
+            colls.iter().map(|t| &t.label).collect::<Vec<_>>()
+        );
+        assert!(plan.n_rvd >= 1);
+        // Weight reads are aligned & co-located -> direct.
+        assert!(plan.n_direct > 0);
+    }
+
+    #[test]
+    fn p2p_mode_uses_no_collectives() {
+        let (g, s) = dp_model(4);
+        let vs = validate(&g, &s).unwrap();
+        let cluster = Cluster::v100(4);
+        let plan = materialize(&g, &vs, &cluster, CommMode::P2POnly);
+        assert!(plan
+            .tasks
+            .iter()
+            .all(|t| !matches!(t.kind, TaskKind::Collective { .. })));
+        assert!(plan.n_p2p > 0);
+        // P2P must move at least as many bytes as the collective plan.
+        let plan_rvd = materialize(&g, &vs, &cluster, CommMode::InterRvd);
+        assert!(plan.comm_bytes >= plan_rvd.comm_bytes);
+    }
+
+    #[test]
+    fn single_device_plan_has_no_comm() {
+        let (g, s) = dp_model(1);
+        let vs = validate(&g, &s).unwrap();
+        let cluster = Cluster::v100(8);
+        let plan = materialize(&g, &vs, &cluster, CommMode::InterRvd);
+        assert_eq!(plan.comm_bytes, 0, "{:#?}", plan.tasks.iter().map(|t| &t.label).collect::<Vec<_>>());
+        assert!(plan.tasks.iter().all(|t| !t.is_comm()));
+    }
+
+    #[test]
+    fn static_memory_counts_shards_once() {
+        let (g, s) = dp_model(2);
+        let vs = validate(&g, &s).unwrap();
+        let cluster = Cluster::v100(2);
+        let plan = materialize(&g, &vs, &cluster, CommMode::InterRvd);
+        // Each device: full w (16*16*4) + full w.grad + full w.m = 3 KiB.
+        for d in 0..2 {
+            assert_eq!(plan.static_mem[&d], 3 * 16 * 16 * 4, "device {d}");
+        }
+    }
+
+    #[test]
+    fn infer_rvd_recognizes_even_partitions() {
+        let full = Mask::full(2);
+        let views: Vec<View> = (0..4)
+            .map(|i| View { op: i, mask: full.split_dim(1, i, 4), device: i })
+            .collect();
+        let (state, group) = infer_rvd(&views).unwrap();
+        assert_eq!(state, Rvd::new(1, 1, &[1, 4]));
+        assert_eq!(group, vec![0, 1, 2, 3]);
+        // Value splits.
+        let vviews: Vec<View> = (0..3)
+            .map(|i| View { op: i, mask: full.split_value(i, 3), device: i })
+            .collect();
+        let (state, _) = infer_rvd(&vviews).unwrap();
+        assert_eq!(state, Rvd::new(1, 3, &[1, 1]));
+        // Replicas.
+        let rviews: Vec<View> = (0..2)
+            .map(|i| View { op: i, mask: full.clone(), device: i })
+            .collect();
+        let (state, _) = infer_rvd(&rviews).unwrap();
+        assert_eq!(state, Rvd::new(2, 1, &[1, 1]));
+    }
+
+    #[test]
+    fn infer_rvd_rejects_irregular() {
+        let full = Mask::full(1);
+        // 1/3 + 2/3 split is uneven.
+        let views = vec![
+            View { op: 0, mask: full.split_dim(0, 0, 3), device: 0 },
+            View {
+                op: 1,
+                mask: Mask {
+                    dims: vec![crate::graph::mask::Interval::new(
+                        crate::graph::mask::Frac::new(1, 3),
+                        crate::graph::mask::Frac::ONE,
+                    )],
+                    vsplit: crate::graph::mask::VSplit::FULL,
+                },
+                device: 1,
+            },
+        ];
+        assert!(infer_rvd(&views).is_none());
+    }
+
+    #[test]
+    fn plan_dependencies_are_acyclic_and_point_backwards_or_forwards_consistently() {
+        let (g, s) = dp_model(4);
+        let vs = validate(&g, &s).unwrap();
+        let cluster = Cluster::v100(4);
+        let plan = materialize(&g, &vs, &cluster, CommMode::InterRvd);
+        // Kahn over tasks must consume everything (acyclic).
+        let n = plan.tasks.len();
+        let mut indeg = vec![0usize; n];
+        for t in &plan.tasks {
+            for &_d in &t.deps {
+                indeg[t.id] += 1;
+            }
+        }
+        let mut q: Vec<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        let mut consumers: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for t in &plan.tasks {
+            for &d in &t.deps {
+                consumers[d].push(t.id);
+            }
+        }
+        while let Some(u) = q.pop() {
+            seen += 1;
+            for &v in &consumers[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    q.push(v);
+                }
+            }
+        }
+        assert_eq!(seen, n, "cyclic task plan");
+    }
+}

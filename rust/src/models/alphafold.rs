@@ -1,0 +1,233 @@
+//! AlphaFold2 Evoformer (§6.1): 128 sequences × 256 residues, Table 2
+//! layer/hidden/head configs. Trained with *recycling*: three forward passes
+//! feed each other and only the last one backpropagates — the 3F1B pipeline
+//! pattern of Fig. 2. The first two passes are built with `no_grad` so
+//! autograd completion skips them.
+//!
+//! Each Evoformer layer = row attention (over residues) + column attention
+//! (over sequences) + transition FFN, sharing one weight set across all
+//! three passes (recycling reuses the same network).
+
+use super::{table2, Model};
+use crate::graph::sig::OpSignature;
+use crate::graph::{DType, Graph, OpId, OpKind, PTensorId, TensorKind};
+use crate::models::builder::ModelBuilder;
+
+pub const N_SEQS: usize = 128;
+pub const N_RES: usize = 256;
+pub const N_PASSES: usize = 3;
+
+/// Per-layer shared weight handles.
+struct LayerWeights {
+    wqkv_row: PTensorId,
+    wo_row: PTensorId,
+    wqkv_col: PTensorId,
+    wo_col: PTensorId,
+    fc1: PTensorId,
+    fc2: PTensorId,
+}
+
+/// Build AlphaFold2 at Table-2 `scale` with the given global batch
+/// (paper: 128).
+pub fn alphafold2(scale: usize, batch: usize) -> Model {
+    let cfg = table2("alphafold2", scale);
+    let (l, c, a) = (cfg.layers, cfg.hidden, cfg.heads);
+    let d = c / a;
+    let (s, r) = (N_SEQS, N_RES);
+    let tokens = s * r; // MSA activation is [b, s*r, c] flattened
+    let ff = 6 * c; // transition + pair-stack compute folded in
+
+    let mut mb = ModelBuilder::new();
+    // Weights created once per layer, reused by all three passes.
+    let weights: Vec<LayerWeights> = (0..l)
+        .map(|li| LayerWeights {
+            wqkv_row: mb.weight(&format!("e{li}.row.wqkv"), &[c, a, 3 * d]),
+            wo_row: mb.weight(&format!("e{li}.row.wo"), &[a, d, c]),
+            wqkv_col: mb.weight(&format!("e{li}.col.wqkv"), &[c, a, 3 * d]),
+            wo_col: mb.weight(&format!("e{li}.col.wo"), &[a, d, c]),
+            fc1: mb.weight(&format!("e{li}.fc1"), &[c, ff]),
+            fc2: mb.weight(&format!("e{li}.fc2"), &[ff, c]),
+        })
+        .collect();
+
+    let msa_in = mb.input("msa", &[batch, tokens, c]);
+    let mut layers: Vec<Vec<OpId>> = vec![Vec::new(); l];
+    let mut x = msa_in;
+    for pass in 0..N_PASSES {
+        let no_grad = pass + 1 < N_PASSES;
+        for (li, w) in weights.iter().enumerate() {
+            let ops = evoformer_layer(
+                &mut mb.g,
+                &format!("p{pass}e{li}"),
+                x,
+                w,
+                li,
+                batch,
+                s,
+                r,
+                c,
+                a,
+                ff,
+                no_grad,
+            );
+            // Returns (output, ops); re-borrow output from graph.
+            x = mb
+                .g
+                .vtensor(mb.g.op(*ops.last().unwrap()).outputs[0])
+                .ptensor;
+            for &op in &ops {
+                mb.tp_dim.insert(op, tp_dim_for(&mb.g, op));
+            }
+            layers[li].extend(ops);
+        }
+    }
+    let (_, loss_op) = mb.loss("head", x, l, &[batch, tokens, c]);
+    layers.last_mut().unwrap().push(loss_op);
+
+    Model {
+        graph: mb.g,
+        name: format!("alphafold2-{scale}"),
+        layers,
+        emb_ops: Vec::new(),
+        tp_dim: mb.tp_dim,
+        coshard_dim: mb.coshard_dim,
+        global_batch: batch,
+    }
+}
+
+fn tp_dim_for(g: &Graph, op: OpId) -> &'static str {
+    match g.op(op).kind {
+        OpKind::Attention => "a",
+        OpKind::Matmul => "a",
+        _ => "s",
+    }
+}
+
+/// One Evoformer layer for one pass, reusing the given weights.
+#[allow(clippy::too_many_arguments)]
+fn evoformer_layer(
+    g: &mut Graph,
+    name: &str,
+    x: PTensorId,
+    w: &LayerWeights,
+    layer: usize,
+    b: usize,
+    s: usize,
+    r: usize,
+    c: usize,
+    a: usize,
+    ff: usize,
+    no_grad: bool,
+) -> Vec<OpId> {
+    let d = c / a;
+    let tokens = s * r;
+    let mut ops = Vec::new();
+    let mut add = |g: &mut Graph,
+                   nm: &str,
+                   kind: OpKind,
+                   ins: Vec<PTensorId>,
+                   out_shape: &[usize],
+                   flops: f64,
+                   sig: &str|
+     -> PTensorId {
+        let out = g.add_ptensor(
+            &format!("{name}.{nm}.out"),
+            out_shape,
+            DType::F32,
+            TensorKind::Activation,
+        );
+        let ivs: Vec<_> = ins.iter().map(|&p| g.full_view(p)).collect();
+        let ov = g.full_view(out);
+        let id = g.add_op(
+            &format!("{name}.{nm}"),
+            kind,
+            ivs,
+            vec![ov],
+            flops,
+            Some(OpSignature::parse(sig)),
+            true,
+            layer,
+        );
+        g.op_mut(id).no_grad = no_grad;
+        ops.push(id);
+        out
+    };
+
+    // Row attention: tokens attend within their row (r-long windows).
+    let q1 = add(
+        g,
+        "row.qkv",
+        OpKind::Matmul,
+        vec![x, w.wqkv_row],
+        &[b, tokens, a, 3 * d],
+        2.0 * (b * tokens * c * 3 * c) as f64,
+        "b s h, h a n -> b s a n | reduce h | batch b",
+    );
+    let at1 = add(
+        g,
+        "row.attn",
+        OpKind::Attention,
+        vec![q1],
+        &[b, tokens, a, d],
+        4.0 * (b * s * r * r * c) as f64,
+        "b s a _ -> b s a _ | batch b",
+    );
+    let o1 = add(
+        g,
+        "row.proj",
+        OpKind::Matmul,
+        vec![at1, w.wo_row],
+        &[b, tokens, c],
+        2.0 * (b * tokens * c * c) as f64,
+        "b s a d, a d h -> b s h | reduce a d | batch b",
+    );
+    // Column attention.
+    let q2 = add(
+        g,
+        "col.qkv",
+        OpKind::Matmul,
+        vec![o1, w.wqkv_col],
+        &[b, tokens, a, 3 * d],
+        2.0 * (b * tokens * c * 3 * c) as f64,
+        "b s h, h a n -> b s a n | reduce h | batch b",
+    );
+    let at2 = add(
+        g,
+        "col.attn",
+        OpKind::Attention,
+        vec![q2],
+        &[b, tokens, a, d],
+        4.0 * (b * r * s * s * c) as f64,
+        "b s a _ -> b s a _ | batch b",
+    );
+    let o2 = add(
+        g,
+        "col.proj",
+        OpKind::Matmul,
+        vec![at2, w.wo_col],
+        &[b, tokens, c],
+        2.0 * (b * tokens * c * c) as f64,
+        "b s a d, a d h -> b s h | reduce a d | batch b",
+    );
+    // Transition FFN.
+    let f1 = add(
+        g,
+        "fc1",
+        OpKind::Matmul,
+        vec![o2, w.fc1],
+        &[b, tokens, ff],
+        2.0 * (b * tokens * c * ff) as f64,
+        "b s k, k n -> b s n | reduce k | batch b",
+    );
+    let f2 = add(
+        g,
+        "fc2",
+        OpKind::Matmul,
+        vec![f1, w.fc2],
+        &[b, tokens, c],
+        2.0 * (b * tokens * ff * c) as f64,
+        "b s k, k n -> b s n | reduce k | batch b",
+    );
+    let _ = f2;
+    ops
+}

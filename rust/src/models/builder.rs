@@ -1,0 +1,439 @@
+//! Shared model-building vocabulary: weights (with eagerly-created gradient
+//! and optimizer-state pTensors plus an Adam op per weight, so sPrograms can
+//! transform optimizer ops — paper Algorithm 1 line 6-7), linear layers,
+//! attention blocks, layernorms and embeddings.
+
+use crate::graph::sig::{sigs, OpSignature};
+use crate::graph::{DType, Graph, OpId, OpKind, PTensorId, TensorKind, VTensorId};
+use std::collections::HashMap;
+
+/// Incrementally builds a model graph. Tracks the per-op tensor-parallel /
+/// co-shard dims that the plan library consumes.
+pub struct ModelBuilder {
+    pub g: Graph,
+    pub tp_dim: HashMap<OpId, &'static str>,
+    pub coshard_dim: HashMap<OpId, &'static str>,
+    /// Adam FLOPs per weight element (mul/add chains of the update rule).
+    pub opt_flops_per_elem: f64,
+}
+
+impl Default for ModelBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelBuilder {
+    pub fn new() -> ModelBuilder {
+        ModelBuilder {
+            g: Graph::new(),
+            tp_dim: HashMap::new(),
+            coshard_dim: HashMap::new(),
+            opt_flops_per_elem: 10.0,
+        }
+    }
+
+    /// Declare a trainable weight: creates the weight pTensor, its gradient,
+    /// two Adam moment tensors, and the optimizer op
+    /// `adam(w.grad, w, m, v) -> w`.
+    pub fn weight(&mut self, name: &str, shape: &[usize]) -> PTensorId {
+        let w = self.g.add_ptensor(name, shape, DType::F32, TensorKind::Weight);
+        let wg = self.g.add_ptensor(
+            &crate::trans::autograd::grad_name(name),
+            shape,
+            DType::F32,
+            TensorKind::Gradient,
+        );
+        let m1 = self
+            .g
+            .add_ptensor(&format!("{name}.m"), shape, DType::F32, TensorKind::OptState);
+        let m2 = self
+            .g
+            .add_ptensor(&format!("{name}.v"), shape, DType::F32, TensorKind::OptState);
+        let numel: usize = shape.iter().product();
+        let (gv, wv, m1v, m2v, wo) = (
+            self.g.full_view(wg),
+            self.g.full_view(w),
+            self.g.full_view(m1),
+            self.g.full_view(m2),
+            self.g.full_view(w),
+        );
+        self.g.add_op(
+            &format!("adam.{name}"),
+            OpKind::Optimizer,
+            vec![gv, wv, m1v, m2v],
+            vec![wo],
+            self.opt_flops_per_elem * numel as f64,
+            Some(OpSignature::parse("p, p, p, p -> p")),
+            false,
+            0,
+        );
+        w
+    }
+
+    pub fn activation(&mut self, name: &str, shape: &[usize]) -> PTensorId {
+        self.g
+            .add_ptensor(name, shape, DType::F32, TensorKind::Activation)
+    }
+
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> PTensorId {
+        self.g.add_ptensor(name, shape, DType::F32, TensorKind::Input)
+    }
+
+    fn views(&mut self, pts: &[PTensorId]) -> Vec<VTensorId> {
+        pts.iter().map(|&p| self.g.full_view(p)).collect()
+    }
+
+    /// `x[b,s,h] @ w[h,n] -> y[b,s,n]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn linear(
+        &mut self,
+        name: &str,
+        x: PTensorId,
+        layer: usize,
+        batch: usize,
+        seq: usize,
+        h_in: usize,
+        h_out: usize,
+    ) -> (PTensorId, OpId) {
+        let w = self.weight(&format!("{name}.w"), &[h_in, h_out]);
+        let y = self.activation(&format!("{name}.out"), &[batch, seq, h_out]);
+        let vs = self.views(&[x, w, y]);
+        let flops = 2.0 * batch as f64 * seq as f64 * h_in as f64 * h_out as f64;
+        let op = self.g.add_op(
+            name,
+            OpKind::Matmul,
+            vec![vs[0], vs[1]],
+            vec![vs[2]],
+            flops,
+            Some(sigs::linear()),
+            true,
+            layer,
+        );
+        (y, op)
+    }
+
+    /// Elementwise op over `[b,s,h]` (gelu / residual / dropout...). `tag`
+    /// distinguishes *linear* elementwise ops ("add": backward needs no
+    /// stashed input) from nonlinear ones ("gelu": stashes its input).
+    pub fn eltwise(
+        &mut self,
+        name: &str,
+        tag: &'static str,
+        xs: &[PTensorId],
+        layer: usize,
+        shape: &[usize],
+    ) -> (PTensorId, OpId) {
+        let y = self.activation(&format!("{name}.out"), shape);
+        let mut vs = self.views(xs);
+        let yv = self.g.full_view(y);
+        vs.push(yv);
+        let numel: usize = shape.iter().product();
+        let sig = if xs.len() == 1 { sigs::eltwise3() } else { sigs::eltwise3_bin() };
+        let op = self.g.add_op(
+            name,
+            OpKind::Elementwise(tag),
+            vs[..xs.len()].to_vec(),
+            vec![vs[xs.len()]],
+            2.0 * numel as f64,
+            Some(sig),
+            true,
+            layer,
+        );
+        (y, op)
+    }
+
+    /// LayerNorm over the last dim of `[b,s,h]` (not partitionable on h).
+    pub fn layernorm(
+        &mut self,
+        name: &str,
+        x: PTensorId,
+        layer: usize,
+        shape: &[usize],
+    ) -> (PTensorId, OpId) {
+        let y = self.activation(&format!("{name}.out"), shape);
+        let vs = self.views(&[x, y]);
+        let numel: usize = shape.iter().product();
+        let op = self.g.add_op(
+            name,
+            OpKind::LayerNorm,
+            vec![vs[0]],
+            vec![vs[1]],
+            5.0 * numel as f64,
+            Some(sigs::layernorm()),
+            true,
+            layer,
+        );
+        (y, op)
+    }
+
+    /// A full multi-head self-attention block over `x[b,s,h]` with `a`
+    /// heads: qkv projection (weights `[h,a,3d]`), attention composite
+    /// (`[b,s,a,3d] -> [b,s,a,d]`), output projection (`[a,d,h]`, reduced
+    /// over `a d` — Megatron row parallelism falls out of the signature).
+    ///
+    /// `attn_flops` lets callers override the attention-composite cost
+    /// (windowed attention in Swin, row/col attention in AlphaFold2).
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_block(
+        &mut self,
+        name: &str,
+        x: PTensorId,
+        layer: usize,
+        batch: usize,
+        seq: usize,
+        hidden: usize,
+        heads: usize,
+        attn_flops: Option<f64>,
+    ) -> (PTensorId, Vec<OpId>) {
+        let d = hidden / heads;
+        let (b, s, h, a) = (batch, seq, hidden, heads);
+        let mut ops = Vec::new();
+
+        // qkv: x[b,s,h] @ wqkv[h,a,3d] -> q3[b,s,a,3d]
+        let wqkv = self.weight(&format!("{name}.wqkv"), &[h, a, 3 * d]);
+        let q3 = self.activation(&format!("{name}.qkv"), &[b, s, a, 3 * d]);
+        let vs = self.views(&[x, wqkv, q3]);
+        let qkv_op = self.g.add_op(
+            &format!("{name}.qkv"),
+            OpKind::Matmul,
+            vec![vs[0], vs[1]],
+            vec![vs[2]],
+            2.0 * b as f64 * s as f64 * h as f64 * (3 * h) as f64,
+            Some(OpSignature::parse("b s h, h a n -> b s a n | reduce h | batch b")),
+            true,
+            layer,
+        );
+        self.tp_dim.insert(qkv_op, "a");
+        self.coshard_dim.insert(qkv_op, "a");
+        ops.push(qkv_op);
+
+        // attention composite: q3[b,s,a,3d] -> att[b,s,a,d]
+        let att = self.activation(&format!("{name}.att"), &[b, s, a, d]);
+        let vs = self.views(&[q3, att]);
+        let flops = attn_flops
+            .unwrap_or(4.0 * b as f64 * s as f64 * s as f64 * h as f64);
+        let att_op = self.g.add_op(
+            &format!("{name}.attn"),
+            OpKind::Attention,
+            vec![vs[0]],
+            vec![vs[1]],
+            flops,
+            Some(OpSignature::parse("b s a _ -> b s a _ | batch b")),
+            true,
+            layer,
+        );
+        self.tp_dim.insert(att_op, "a");
+        self.coshard_dim.insert(att_op, "a");
+        ops.push(att_op);
+
+        // output projection: att[b,s,a,d] @ wo[a,d,h] -> y[b,s,h]
+        let wo = self.weight(&format!("{name}.wo"), &[a, d, h]);
+        let y = self.activation(&format!("{name}.proj"), &[b, s, h]);
+        let vs = self.views(&[att, wo, y]);
+        let proj_op = self.g.add_op(
+            &format!("{name}.proj"),
+            OpKind::Matmul,
+            vec![vs[0], vs[1]],
+            vec![vs[2]],
+            2.0 * b as f64 * s as f64 * h as f64 * h as f64,
+            Some(OpSignature::parse("b s a d, a d h -> b s h | reduce a d | batch b")),
+            true,
+            layer,
+        );
+        self.tp_dim.insert(proj_op, "a");
+        self.coshard_dim.insert(proj_op, "a");
+        ops.push(proj_op);
+
+        (y, ops)
+    }
+
+    /// FFN block: `lin1 (h->f, column-parallel "n") -> gelu -> lin2 (f->h,
+    /// row-parallel "k" with value-split output)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ffn_block(
+        &mut self,
+        name: &str,
+        x: PTensorId,
+        layer: usize,
+        batch: usize,
+        seq: usize,
+        hidden: usize,
+        ff: usize,
+    ) -> (PTensorId, Vec<OpId>) {
+        let mut ops = Vec::new();
+        let (y1, op1) = self.linear(&format!("{name}.fc1"), x, layer, batch, seq, hidden, ff);
+        self.tp_dim.insert(op1, "n");
+        self.coshard_dim.insert(op1, "n");
+        ops.push(op1);
+        let (y2, op2) = self.eltwise(&format!("{name}.gelu"), "gelu", &[y1], layer, &[batch, seq, ff]);
+        self.tp_dim.insert(op2, "h"); // eltwise3 names the last dim "h"
+        self.coshard_dim.insert(op2, "h");
+        ops.push(op2);
+        let (y3, op3) = self.linear(&format!("{name}.fc2"), y2, layer, batch, seq, ff, hidden);
+        self.tp_dim.insert(op3, "k");
+        self.coshard_dim.insert(op3, "k");
+        ops.push(op3);
+        (y3, ops)
+    }
+
+    /// A standard pre-LN transformer layer. Returns (output pTensor, fwd ops).
+    #[allow(clippy::too_many_arguments)]
+    pub fn transformer_layer(
+        &mut self,
+        name: &str,
+        x: PTensorId,
+        layer: usize,
+        batch: usize,
+        seq: usize,
+        hidden: usize,
+        heads: usize,
+        ff: usize,
+        attn_flops: Option<f64>,
+    ) -> (PTensorId, Vec<OpId>) {
+        let mut ops = Vec::new();
+        let (n1, op) = self.layernorm(&format!("{name}.ln1"), x, layer, &[batch, seq, hidden]);
+        ops.push(op);
+        let (att, mut a_ops) =
+            self.attention_block(&format!("{name}.at"), n1, layer, batch, seq, hidden, heads, attn_flops);
+        ops.append(&mut a_ops);
+        let (r1, op) = self.eltwise(&format!("{name}.res1"), "add", &[x, att], layer, &[batch, seq, hidden]);
+        ops.push(op);
+        let (n2, op) = self.layernorm(&format!("{name}.ln2"), r1, layer, &[batch, seq, hidden]);
+        ops.push(op);
+        let (ffn, mut f_ops) =
+            self.ffn_block(&format!("{name}.ff"), n2, layer, batch, seq, hidden, ff);
+        ops.append(&mut f_ops);
+        let (out, op) = self.eltwise(&format!("{name}.res2"), "add", &[r1, ffn], layer, &[batch, seq, hidden]);
+        ops.push(op);
+        (out, ops)
+    }
+
+    /// Vocab embedding lookup: `ids[b,s] , table[v,h] -> y[b,s,h]`, vocab
+    /// dim "v" partitionable (vocab-parallel embedding ⇒ value-split output).
+    #[allow(clippy::too_many_arguments)]
+    pub fn embedding(
+        &mut self,
+        name: &str,
+        ids: PTensorId,
+        layer: usize,
+        batch: usize,
+        seq: usize,
+        vocab: usize,
+        hidden: usize,
+    ) -> (PTensorId, OpId) {
+        let table = self.weight(&format!("{name}.table"), &[vocab, hidden]);
+        let y = self.activation(&format!("{name}.out"), &[batch, seq, hidden]);
+        let vs = self.views(&[ids, table, y]);
+        let op = self.g.add_op(
+            name,
+            OpKind::Embed,
+            vec![vs[0], vs[1]],
+            vec![vs[2]],
+            // Lookup is bandwidth-bound; charge ~2 flops/output elem.
+            2.0 * batch as f64 * seq as f64 * hidden as f64,
+            Some(sigs::embed()),
+            true,
+            layer,
+        );
+        self.tp_dim.insert(op, "v");
+        (y, op)
+    }
+
+    /// Cross-entropy head producing the scalar-ish loss.
+    pub fn loss(
+        &mut self,
+        name: &str,
+        x: PTensorId,
+        layer: usize,
+        shape: &[usize],
+    ) -> (PTensorId, OpId) {
+        let l = self.activation(&format!("{name}.loss"), &[shape[0]]);
+        let xv = self.g.full_view(x);
+        let lv = self.g.full_view(l);
+        let numel: usize = shape.iter().product();
+        let op = self.g.add_op(
+            name,
+            OpKind::CrossEntropy,
+            vec![xv],
+            vec![lv],
+            5.0 * numel as f64,
+            Some(OpSignature::parse("b s h -> b | batch b")),
+            true,
+            layer,
+        );
+        (l, op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_creates_optimizer_and_state() {
+        let mut mb = ModelBuilder::new();
+        mb.weight("w", &[64, 64]);
+        let names: Vec<_> = mb.g.ptensors.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["w", "w.grad", "w.m", "w.v"]);
+        let opt: Vec<_> = mb
+            .g
+            .live_ops()
+            .filter(|o| o.kind == OpKind::Optimizer)
+            .collect();
+        assert_eq!(opt.len(), 1);
+        assert_eq!(opt[0].inputs.len(), 4);
+    }
+
+    #[test]
+    fn transformer_layer_flops_match_6nd() {
+        // A transformer layer's fwd FLOPs ≈ 2 * params * tokens (plus
+        // attention quadratic term).
+        let mut mb = ModelBuilder::new();
+        let (b, s, h) = (4, 128, 256);
+        let x = mb.input("x", &[b, s, h]);
+        let (_, ops) = mb.transformer_layer("l0", x, 0, b, s, h, 8, 4 * h, None);
+        assert_eq!(ops.len(), 10); // 2 ln, 3 attn, 2 residual, 3 ffn
+        let flops: f64 = ops.iter().map(|&o| mb.g.op(o).flops).sum();
+        let params = mb.g.num_params() as f64;
+        let tokens = (b * s) as f64;
+        let expect = 2.0 * params * tokens + 4.0 * tokens * s as f64 * h as f64;
+        assert!(
+            (flops - expect).abs() < 0.15 * expect,
+            "flops {flops:.3e} vs {expect:.3e}"
+        );
+    }
+
+    #[test]
+    fn attention_block_exposes_head_dim() {
+        let mut mb = ModelBuilder::new();
+        let x = mb.input("x", &[2, 16, 64]);
+        let (_, ops) = mb.attention_block("at", x, 0, 2, 16, 64, 4, None);
+        for &op in &ops {
+            assert_eq!(mb.tp_dim[&op], "a");
+            // All three ops can split along the head dim.
+            assert!(mb.g.op(op).signature.as_ref().unwrap().can_split("a"));
+        }
+    }
+
+    #[test]
+    fn tp_split_on_heads_keeps_shapes_consistent() {
+        use crate::trans::{op_trans, TransformAlgo};
+        let mut mb = ModelBuilder::new();
+        let x = mb.input("x", &[2, 16, 64]);
+        let (_, ops) = mb.attention_block("at", x, 0, 2, 16, 64, 4, None);
+        // Split each op 2-way on heads; qkv output shard [2,16,2,48]
+        // feeds attention shard input exactly.
+        let mut g = mb.g;
+        for &op in &ops {
+            op_trans(&mut g, op, &TransformAlgo::split("a", 2)).unwrap();
+        }
+        // proj outputs become value partials (reduce over a).
+        let parts: Vec<_> = g
+            .live_ops()
+            .filter(|o| o.name.starts_with("at.proj/"))
+            .map(|o| g.vtensor(o.outputs[0]).mask.vsplit.parts)
+            .collect();
+        assert_eq!(parts, vec![2, 2]);
+    }
+}

@@ -1,0 +1,69 @@
+//! GPT-3 (§6.1): homogeneous decoder-only transformer, evaluated by the
+//! paper at sequence length 16384 (LongFormer-style long-document setting).
+//! Table 2: {1.3B, 2.6B, 6.7B, 15B} over {24, 32, 32, 48} layers.
+
+use super::{table2, Model, ModelBuilder};
+
+/// GPT-2/3 BPE vocab (50257) padded to a multiple of 128 for even
+/// vocab-parallel splits — the same padding Megatron-LM applies.
+pub const GPT3_VOCAB: usize = 50_304;
+
+/// Build GPT-3 at Table-2 `scale` (0..4) with the given global batch and
+/// sequence length.
+pub fn gpt3(scale: usize, batch: usize, seq: usize) -> Model {
+    let cfg = table2("gpt3", scale);
+    let (l, h, a) = (cfg.layers, cfg.hidden, cfg.heads);
+    let mut mb = ModelBuilder::new();
+    let ids = mb.input("ids", &[batch, seq]);
+    let mut layers: Vec<Vec<crate::graph::OpId>> = Vec::new();
+
+    let (mut x, emb_op) = mb.embedding("embed", ids, 0, batch, seq, GPT3_VOCAB, h);
+    layers.push(vec![emb_op]);
+
+    for li in 0..l {
+        let (y, ops) = mb.transformer_layer(
+            &format!("h{li}"),
+            x,
+            li + 1,
+            batch,
+            seq,
+            h,
+            a,
+            4 * h,
+            None,
+        );
+        layers.push(ops);
+        x = y;
+    }
+
+    // LM head fused with the loss (avoids materializing [b,s,vocab]).
+    let head_w = mb.weight("lm_head.w", &[GPT3_VOCAB, h]);
+    let lossv = mb.activation("loss", &[batch]);
+    let xv = mb.g.full_view(x);
+    let wv = mb.g.full_view(head_w);
+    let lv = mb.g.full_view(lossv);
+    let head = mb.g.add_op(
+        "lm_head",
+        crate::graph::OpKind::CrossEntropy,
+        vec![xv, wv],
+        vec![lv],
+        2.0 * batch as f64 * seq as f64 * h as f64 * GPT3_VOCAB as f64,
+        Some(crate::graph::sig::OpSignature::parse(
+            "b s h, v h -> b | reduce v h | batch b",
+        )),
+        true,
+        l + 1,
+    );
+    mb.tp_dim.insert(head, "v");
+    layers.push(vec![head]);
+
+    Model {
+        graph: mb.g,
+        name: format!("gpt3-{scale}"),
+        layers,
+        emb_ops: Vec::new(),
+        tp_dim: mb.tp_dim,
+        coshard_dim: mb.coshard_dim,
+        global_batch: batch,
+    }
+}

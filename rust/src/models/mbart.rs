@@ -1,0 +1,81 @@
+//! mBART (§6.1): multilingual encoder-decoder with a 500k-entry vocabulary
+//! (Zheng et al.'s large-vocab setting). The embedding table + tied LM head
+//! hold gigabytes of weight but almost no compute, while the transformer
+//! layers are the opposite — the imbalance that motivates the interlaced
+//! pipeline (§3.4.2, Fig. 9).
+
+use super::{table2, Model, ModelBuilder};
+
+pub const MBART_VOCAB: usize = 500_000;
+
+/// Build mBART at Table-2 `scale` with the given global batch and sequence
+/// length (paper default: 1024).
+pub fn mbart(scale: usize, batch: usize, seq: usize) -> Model {
+    let cfg = table2("mbart", scale);
+    let (l, h, a) = (cfg.layers, cfg.hidden, cfg.heads);
+    let mut mb = ModelBuilder::new();
+    let mut layers: Vec<Vec<crate::graph::OpId>> = Vec::new();
+    let mut emb_ops = Vec::new();
+
+    let ids = mb.input("ids", &[batch, seq]);
+    let (mut x, emb) = mb.embedding("embed", ids, 0, batch, seq, MBART_VOCAB, h);
+    emb_ops.push(emb);
+    layers.push(vec![emb]);
+
+    // Encoder-decoder stack modeled as `l` uniform transformer layers (the
+    // decoder's cross-attention cost folds into the attention composite).
+    for li in 0..l {
+        let (y, ops) = mb.transformer_layer(
+            &format!("h{li}"),
+            x,
+            li + 1,
+            batch,
+            seq,
+            h,
+            a,
+            4 * h,
+            None,
+        );
+        layers.push(ops);
+        x = y;
+    }
+
+    // Tied LM head: reuses the embedding table (two readers of one weight —
+    // autograd value-splits its gradient; the paper's §5 example).
+    let table = mb
+        .g
+        .ptensors
+        .iter()
+        .find(|p| p.name == "embed.table")
+        .unwrap()
+        .id;
+    let lossv = mb.activation("loss", &[batch]);
+    let xv = mb.g.full_view(x);
+    let wv = mb.g.full_view(table);
+    let lv = mb.g.full_view(lossv);
+    let head = mb.g.add_op(
+        "lm_head",
+        crate::graph::OpKind::CrossEntropy,
+        vec![xv, wv],
+        vec![lv],
+        2.0 * batch as f64 * seq as f64 * h as f64 * MBART_VOCAB as f64,
+        Some(crate::graph::sig::OpSignature::parse(
+            "b s h, v h -> b | reduce v h | batch b",
+        )),
+        true,
+        l + 1,
+    );
+    mb.tp_dim.insert(head, "v");
+    emb_ops.push(head);
+    layers.push(vec![head]);
+
+    Model {
+        graph: mb.g,
+        name: format!("mbart-{scale}"),
+        layers,
+        emb_ops,
+        tp_dim: mb.tp_dim,
+        coshard_dim: mb.coshard_dim,
+        global_batch: batch,
+    }
+}

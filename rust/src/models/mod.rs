@@ -1,0 +1,175 @@
+//! Model zoo: the four evaluation models of the paper (§6.1, Table 2) as
+//! SuperScaler graphs, plus the builder vocabulary they share.
+//!
+//! Graphs are at *layer-operator* granularity: each transformer layer is a
+//! handful of composite ops (qkv projection, attention, output projection,
+//! two FFN linears, layernorms/residuals) — the granularity the paper's
+//! sPrograms actually transform. Attention activations are shaped
+//! `[b, s, a, d]` with the head dim `a` first-class, so co-shard and
+//! Megatron tensor parallelism are plain `op-trans` splits (no reshapes).
+
+pub mod builder;
+
+pub mod alphafold;
+mod gpt3;
+mod mbart;
+mod swin;
+
+pub use alphafold::alphafold2;
+pub use builder::ModelBuilder;
+pub use gpt3::gpt3;
+pub use mbart::mbart;
+pub use swin::{swin_custom, swin_transformer};
+
+use crate::graph::{Graph, OpId};
+use std::collections::HashMap;
+
+/// A built model: the forward graph + metadata plans need.
+pub struct Model {
+    pub graph: Graph,
+    pub name: String,
+    /// Forward ops grouped by layer, in execution order. Pipeline plans
+    /// partition this list into stages.
+    pub layers: Vec<Vec<OpId>>,
+    /// Embedding-layer ops (mBART's imbalanced layers; empty otherwise).
+    pub emb_ops: Vec<OpId>,
+    /// Preferred tensor-parallel split dim per op (Megatron-style): "a" for
+    /// attention pipelines, "n"/"k" for FFN column/row parallel, "v" for
+    /// vocab-parallel embedding. Ops absent from the map are replicated
+    /// under TP.
+    pub tp_dim: HashMap<OpId, &'static str>,
+    /// Dims that co-shard partitions (attention heads / FFN hidden), per op.
+    pub coshard_dim: HashMap<OpId, &'static str>,
+    pub global_batch: usize,
+}
+
+impl Model {
+    pub fn num_params(&self) -> u64 {
+        self.graph.num_params()
+    }
+
+    /// All forward op ids in layer order.
+    pub fn fwd_ops(&self) -> Vec<OpId> {
+        self.layers.iter().flatten().copied().collect()
+    }
+}
+
+/// Table 2 of the paper: model architecture for each weak-scaling point.
+/// `scale` indexes the GPU count {4 or fewer, 8, 16, 32}.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleConfig {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+}
+
+/// Table 2 rows. `scale` in 0..4 picks the column.
+pub fn table2(model: &str, scale: usize) -> ScaleConfig {
+    let (l, h, a) = match model {
+        "swin" => (
+            [32, 48, 56, 64][scale],
+            [512, 768, 1024, 1536][scale],
+            [16, 24, 32, 32][scale],
+        ),
+        "gpt3" => (
+            [24, 32, 32, 48][scale],
+            [2048, 2560, 4096, 5120][scale],
+            [32, 32, 32, 32][scale],
+        ),
+        "mbart" => (
+            [24, 32, 48, 56][scale],
+            [3072, 4096, 5120, 6144][scale],
+            [16, 32, 32, 32][scale],
+        ),
+        "alphafold2" => (
+            [48, 64, 96, 128][scale],
+            [256, 512, 1024, 1024][scale],
+            [8, 16, 32, 32][scale],
+        ),
+        other => panic!("unknown model '{other}'"),
+    };
+    ScaleConfig { layers: l, hidden: h, heads: a }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        let c = table2("gpt3", 2);
+        assert_eq!((c.layers, c.hidden, c.heads), (32, 4096, 32));
+        let c = table2("swin", 3);
+        assert_eq!((c.layers, c.hidden, c.heads), (64, 1536, 32));
+        let c = table2("alphafold2", 0);
+        assert_eq!((c.layers, c.hidden, c.heads), (48, 256, 8));
+    }
+
+    #[test]
+    fn gpt3_param_counts_are_in_band() {
+        // Paper Table 2: GPT-3 {1.3B, 2.6B, 6.7B, 15B}.
+        let want = [1.3e9, 2.6e9, 6.7e9, 15e9];
+        for (scale, &w) in want.iter().enumerate() {
+            let m = gpt3(scale, 8, 2048);
+            let p = m.num_params() as f64;
+            assert!(
+                p > w * 0.75 && p < w * 1.35,
+                "gpt3 scale {scale}: {p:.3e} params, want ~{w:.1e}"
+            );
+        }
+    }
+
+    #[test]
+    fn alphafold_has_three_forward_passes() {
+        let m = alphafold2(0, 4);
+        let fwd: Vec<_> = m.graph.live_ops().filter(|o| o.is_forward).collect();
+        let no_grad = fwd.iter().filter(|o| o.no_grad).count();
+        let with_grad = fwd.len() - no_grad;
+        // Two recycled passes have no_grad, the third (plus the loss head)
+        // drives backward.
+        assert!(no_grad > 0 && with_grad > 0);
+        assert_eq!(no_grad, (with_grad - 1) * 2);
+    }
+
+    #[test]
+    fn mbart_embedding_is_huge_and_tagged() {
+        let m = mbart(1, 8, 1024);
+        assert!(!m.emb_ops.is_empty());
+        // 500k vocab x 4096 hidden x 4B >= 8 GB of embedding weight.
+        let emb_w: u64 = m
+            .graph
+            .ptensors
+            .iter()
+            .filter(|p| p.name.contains("embed"))
+            .map(|p| p.bytes())
+            .sum();
+        assert!(emb_w > 8_000_000_000, "embed bytes {emb_w}");
+    }
+
+    #[test]
+    fn swin_layers_structured_in_stages() {
+        let m = swin_transformer(0, 16, 1536);
+        assert_eq!(m.layers.len(), 32);
+        assert!(m.num_params() > 1.0e9 as u64 && m.num_params() < 3.0e9 as u64);
+    }
+
+    #[test]
+    fn models_validate_on_one_device() {
+        // Every zoo model, smallest scale, must pass scheduling validation
+        // serially on one device after autograd.
+        for name in ["gpt3", "swin", "mbart", "alphafold2"] {
+            let mut m = match name {
+                "gpt3" => gpt3(0, 2, 1024),
+                "swin" => swin_transformer(0, 2, 512),
+                "mbart" => mbart(0, 2, 512),
+                _ => alphafold2(0, 2),
+            };
+            crate::trans::autograd::complete(&mut m.graph);
+            let mut s = crate::schedule::Schedule::new();
+            let ids = m.graph.live_op_ids();
+            s.assign_all(&ids, 0);
+            let v = crate::schedule::validate(&m.graph, &s);
+            assert!(v.is_ok(), "{name}: {:?}", v.err().map(|e| e.to_string()));
+        }
+    }
+}

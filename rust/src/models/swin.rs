@@ -1,0 +1,118 @@
+//! Swin-Transformer V2 (§6.1): hierarchical vision transformer at input
+//! resolution 1536×1536 (the paper's highest setting). Activation-heavy:
+//! early stages hold ~150k patch tokens, which is what makes co-shard's
+//! activation partitioning win over ZeRO-style weight sharding (Fig. 13).
+//!
+//! Structure: 4 stages; patch merging between stages quarters the sequence
+//! and doubles the hidden size (base C from Table 2). Attention is windowed
+//! (W×W tokens), so its FLOPs are linear in sequence length.
+
+use super::{table2, Model, ModelBuilder};
+
+/// Window size (tokens per side). Swin-V2 large-resolution setting.
+pub const WINDOW: usize = 16;
+
+/// Stage depths: Swin puts almost all layers in stage 3 (cf. Swin-L
+/// [2,2,18,2] — scaled here so the depths sum to Table 2's layer count).
+fn depths(total_layers: usize) -> [usize; 4] {
+    assert!(total_layers >= 12);
+    [2, 2, total_layers - 10, 6]
+}
+
+/// Build Swin at Table-2 `scale` with the given global batch and input
+/// resolution (paper: 1536).
+pub fn swin_transformer(scale: usize, batch: usize, resolution: usize) -> Model {
+    let cfg = table2("swin", scale);
+    swin_custom(cfg.layers, cfg.hidden, cfg.heads, batch, resolution)
+}
+
+/// Swin with explicit (layers, hidden, heads) — used by the Fig. 13 memory
+/// sweep, whose model sizes (115M–1.3B) sit below Table 2's smallest column.
+pub fn swin_custom(
+    layers: usize,
+    hidden: usize,
+    heads: usize,
+    batch: usize,
+    resolution: usize,
+) -> Model {
+    let (l, c0, a0) = (layers, hidden, heads);
+    let mut mb = ModelBuilder::new();
+    let mut layers: Vec<Vec<crate::graph::OpId>> = Vec::new();
+
+    // Patch embedding: 4x4 patches, 3 channels -> C.
+    let seq0 = (resolution / 4) * (resolution / 4);
+    let patches = mb.input("patches", &[batch, seq0, 48]);
+    let (mut x, emb) = mb.linear("patch_embed", patches, 0, batch, seq0, 48, c0);
+    let mut li = 0usize;
+    layers.push(vec![emb]);
+
+    let d = depths(l);
+    let mut seq = seq0;
+    let mut hidden = c0;
+    // Heads double with hidden each stage, ending at Table 2's head count.
+    let mut heads = (a0 / 8).max(1);
+    for (stage, &depth) in d.iter().enumerate() {
+        if stage > 0 {
+            // Patch merging: seq /= 4, hidden *= 2 (linear 4C_prev -> 2C_prev).
+            let merged_seq = seq / 4;
+            let (y, op) = mb.linear(
+                &format!("merge{stage}"),
+                x,
+                li + 1,
+                batch,
+                merged_seq,
+                hidden * 4,
+                hidden * 2,
+            );
+            layers.push(vec![op]);
+            li += 1;
+            x = y;
+            seq = merged_seq;
+            hidden *= 2;
+            heads *= 2;
+        }
+        for bl in 0..depth {
+            // Windowed attention: each token attends within a W^2 window.
+            let win = WINDOW * WINDOW;
+            let attn_flops =
+                4.0 * batch as f64 * seq as f64 * win as f64 * hidden as f64;
+            let (y, ops) = mb.transformer_layer(
+                &format!("s{stage}b{bl}"),
+                x,
+                li + 1,
+                batch,
+                seq,
+                hidden,
+                heads.max(1),
+                4 * hidden,
+                Some(attn_flops),
+            );
+            layers.push(ops);
+            li += 1;
+            x = y;
+        }
+    }
+    let (_, loss_op) = mb.loss("head", x, li + 1, &[batch, seq, hidden]);
+    layers.push(vec![loss_op]);
+
+    // Keep `layers` to exactly Table-2's layer count groups for stage math:
+    // merge/embed/loss ops ride along with the nearest block.
+    let mut grouped: Vec<Vec<crate::graph::OpId>> = Vec::new();
+    for ops in layers {
+        if grouped.is_empty() || grouped.len() < l && ops.len() > 1 {
+            grouped.push(ops);
+        } else if let Some(last) = grouped.last_mut() {
+            last.extend(ops);
+        }
+    }
+
+    Model {
+        graph: mb.g,
+        name: format!("swin-{l}l{c0}h"),
+        layers: grouped,
+        emb_ops: Vec::new(),
+        tp_dim: mb.tp_dim,
+        coshard_dim: mb.coshard_dim,
+        global_batch: batch,
+    }
+}

@@ -1,0 +1,92 @@
+//! DAP — Dynamic Axial Parallelism (FastFold), the paper's AlphaFold2
+//! baseline (§6.1): partition *activations* along a non-batch axis across
+//! devices while replicating every weight. Attention needs the full axis,
+//! so the layout flips between token-sharded (elementwise/FFN) and
+//! head-sharded (attention) — the all-to-alls materialization inserts are
+//! exactly DAP's communication. Combined with data parallelism (DAP+DP).
+
+use super::*;
+use crate::graph::OpKind;
+use crate::trans::autograd;
+
+/// `dap_dp(model, dap, dp)`: `dap × dp` devices; activations split `dap`
+/// ways along the token axis inside each DP replica.
+pub fn dap_dp(mut model: Model, dap: usize, dp: usize) -> PlanResult {
+    let g = &mut model.graph;
+    let mut sched = Schedule::new();
+    let device = |dpg: usize, a: usize| dpg * dap + a;
+
+    let fwd_ops: Vec<OpId> = g.live_ops().filter(|o| o.is_forward).map(|o| o.id).collect();
+    for op in fwd_ops {
+        let kind = g.op(op).kind.clone();
+        let dim = g
+            .op(op)
+            .signature
+            .as_ref()
+            .and_then(|s| s.batch.clone())
+            .expect("fwd op without batch");
+        let dp_parts = op_trans(g, op, &TransformAlgo::split(&dim, dp))?;
+        for (dpg, p) in dp_parts.into_iter().enumerate() {
+            // Attention shards by heads; everything else by tokens.
+            let axis = if kind == OpKind::Attention { "a" } else { "s" };
+            let parts = op_trans(g, p, &TransformAlgo::split(axis, dap))
+                .or_else(|_| op_trans(g, p, &TransformAlgo::replicate(dap)))?;
+            for (a, shard) in parts.into_iter().enumerate() {
+                sched.assign(shard, device(dpg, a));
+            }
+        }
+    }
+
+    let ag = autograd::complete(g);
+    for (f, b) in &ag.bwd_of {
+        if let Some(d) = sched.device_of(*f) {
+            sched.assign(*b, d);
+        }
+    }
+    align_optimizers(g);
+    assign_optimizers(g, &mut sched);
+
+    Ok(PlanOutput {
+        graph: model.graph,
+        schedule: sched,
+        name: format!("dap{dap}dp{dp}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::materialize::CommMode;
+    use crate::models::alphafold2;
+    use crate::plans::pipeline_3f1b;
+
+    #[test]
+    fn dap_replicates_weights_and_pays_alltoall() {
+        let out = dap_dp(alphafold2(0, 8), 4, 1).unwrap();
+        let c = crate::cost::Cluster::v100(4);
+        let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
+        assert!(r.comm_bytes > 0, "DAP must communicate around attention");
+        // Weights fully replicated on every device.
+        let wb = out.graph.weight_bytes();
+        for d in &r.per_device {
+            assert!(d.peak_mem as u64 >= wb, "device {} lacks full weights", d.device);
+        }
+    }
+
+    #[test]
+    fn f3b1_beats_dap_on_larger_models() {
+        // Fig. 12d's crossover: at bigger scales 3F1B's boundary-only comm
+        // beats DAP's per-layer all-to-alls.
+        let c = crate::cost::Cluster::v100(4);
+        let dap = dap_dp(alphafold2(1, 8), 4, 1).unwrap();
+        let f31 = pipeline_3f1b(alphafold2(1, 8), 4, 4).unwrap();
+        let rd = crate::sim::run(&dap.graph, &dap.schedule, &c, CommMode::InterRvd).unwrap();
+        let rf = crate::sim::run(&f31.graph, &f31.schedule, &c, CommMode::InterRvd).unwrap();
+        assert!(
+            rf.comm_bytes < rd.comm_bytes,
+            "3f1b comm {} vs dap {}",
+            rf.comm_bytes,
+            rd.comm_bytes
+        );
+    }
+}

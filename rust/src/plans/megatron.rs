@@ -1,0 +1,188 @@
+//! Megatron-LM-style hierarchical parallelism: `dp × pp × tp` with GPipe or
+//! 1F1B micro-batch ordering — the paper's main empirical baseline (§6.1).
+//! Layers are grouped into FLOP-balanced pipeline stages; within a stage,
+//! every op splits along its model-declared tensor-parallel dim; the whole
+//! grid replicates `dp` ways with gradient all-reduce.
+//!
+//! With `pp == 1, tp == 1` this degenerates to Algorithm 1's data
+//! parallelism; with `pp == 1` it is pure (Shoeybi-style) tensor
+//! parallelism — the same sProgram covers the whole empirical family, which
+//! is the point of the unified abstraction.
+
+use super::*;
+use crate::trans::autograd;
+
+/// Micro-batch ordering discipline for the pipeline.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PipeOrder {
+    GPipe,
+    OneFOneB,
+}
+
+/// Build the Megatron plan. Requires `dp * pp * tp` devices; `k` is the
+/// micro-batch count per dp replica.
+pub fn megatron(
+    mut model: Model,
+    dp: usize,
+    pp: usize,
+    tp: usize,
+    k: usize,
+    order: PipeOrder,
+) -> PlanResult {
+    let tp_dim = model.tp_dim.clone();
+    let g = &mut model.graph;
+    let mut sched = Schedule::new();
+    let stages = balance_stages(g, &model.layers, pp);
+    let stage_of_layer: HashMap<usize, usize> = stages
+        .iter()
+        .enumerate()
+        .flat_map(|(s, ls)| ls.iter().map(move |&l| (l, s)))
+        .collect();
+    let device = |dpg: usize, s: usize, t: usize| (dpg * pp + s) * tp + t;
+
+    // ---- transformation: dp split -> K micro-batches -> tp shards ----
+    // pieces[(layer_idx, dpg, mb)] = Vec<OpId> (tp shards of every op).
+    let mut pieces: HashMap<(usize, usize, usize), Vec<OpId>> = HashMap::new();
+    for (li, ops) in model.layers.iter().enumerate() {
+        for &op in ops {
+            let batch_dim = g
+                .op(op)
+                .signature
+                .as_ref()
+                .and_then(|s| s.batch.clone())
+                .expect("fwd op without batch");
+            let dp_parts = op_trans(g, op, &TransformAlgo::split(&batch_dim, dp))?;
+            for (dpg, p) in dp_parts.into_iter().enumerate() {
+                let mbs = op_trans(g, p, &TransformAlgo::split(&batch_dim, k))?;
+                for (mi, m) in mbs.into_iter().enumerate() {
+                    let shards = match tp_dim.get(&op) {
+                        Some(dim) if tp > 1 => {
+                            // Cap the split by the dim's actual size (early
+                            // Swin stages have fewer heads than tp), filling
+                            // the rest of the group with replicas.
+                            let eff = dim_size(g, m, dim)
+                                .map(|sz| feasible_split(sz, tp))
+                                .unwrap_or(1);
+                            let mut out = Vec::with_capacity(tp);
+                            for piece in op_trans(g, m, &TransformAlgo::split(dim, eff))? {
+                                if tp / eff > 1 {
+                                    out.extend(op_trans(
+                                        g,
+                                        piece,
+                                        &TransformAlgo::replicate(tp / eff),
+                                    )?);
+                                } else {
+                                    out.push(piece);
+                                }
+                            }
+                            out
+                        }
+                        _ if tp > 1 => op_trans(g, m, &TransformAlgo::replicate(tp))?,
+                        _ => vec![m],
+                    };
+                    pieces.entry((li, dpg, mi)).or_default().extend(shards);
+                }
+            }
+        }
+    }
+
+    let ag = autograd::complete(g);
+
+    // ---- spatial assignment ----
+    for (&(li, dpg, _mi), ops) in &pieces {
+        let s = stage_of_layer[&li];
+        for (idx, &op) in ops.iter().enumerate() {
+            // Shards of one op are laid out across the tp group; successive
+            // ops reuse the same group.
+            let t = idx % tp;
+            sched.assign(op, device(dpg, s, t));
+            if let Some(&b) = ag.bwd_of.get(&op) {
+                sched.assign(b, device(dpg, s, t));
+            }
+        }
+    }
+    align_optimizers(g);
+    assign_optimizers(g, &mut sched);
+
+    // ---- temporal ordering ----
+    for dpg in 0..dp {
+        for (s, ls) in stages.iter().enumerate() {
+            let mut fwd_spans = Vec::with_capacity(k);
+            let mut bwd_spans = Vec::with_capacity(k);
+            for m in 0..k {
+                let fops: Vec<OpId> = ls
+                    .iter()
+                    .flat_map(|&li| pieces[&(li, dpg, m)].iter().copied())
+                    .collect();
+                let bops: Vec<OpId> = fops
+                    .iter()
+                    .filter_map(|op| ag.bwd_of.get(op).copied())
+                    .collect();
+                if fops.is_empty() || bops.is_empty() {
+                    continue;
+                }
+                fwd_spans.push(span(&fops));
+                bwd_spans.push(span(&bops));
+            }
+            if fwd_spans.len() == k {
+                match order {
+                    PipeOrder::OneFOneB => order_1f1b(&mut sched, s, pp, k, &fwd_spans, &bwd_spans),
+                    PipeOrder::GPipe => order_gpipe(&mut sched, &fwd_spans, &bwd_spans),
+                }
+            }
+        }
+    }
+
+    Ok(PlanOutput {
+        graph: model.graph,
+        schedule: sched,
+        name: format!("megatron-dp{dp}pp{pp}tp{tp}k{k}-{order:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::materialize::CommMode;
+    use crate::models::gpt3;
+
+    #[test]
+    fn tensor_parallel_only_runs_and_communicates() {
+        let model = gpt3(0, 4, 256);
+        let out = megatron(model, 1, 1, 4, 1, PipeOrder::OneFOneB).unwrap();
+        let c = crate::cost::Cluster::v100(4);
+        let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
+        assert!(r.comm_bytes > 0, "TP must communicate activations");
+        assert!(!r.oom);
+        assert_eq!(r.per_device.len(), 4);
+    }
+
+    #[test]
+    fn pipeline_1f1b_beats_gpipe_memory() {
+        // 1F1B's early backwards free activations sooner; with several
+        // micro-batches its peak must be <= GPipe's.
+        let c = crate::cost::Cluster::v100(4);
+        let a = megatron(gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::OneFOneB).unwrap();
+        let b = megatron(gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::GPipe).unwrap();
+        let ra = crate::sim::run(&a.graph, &a.schedule, &c, CommMode::InterRvd).unwrap();
+        let rb = crate::sim::run(&b.graph, &b.schedule, &c, CommMode::InterRvd).unwrap();
+        assert!(
+            ra.max_peak_mem() <= rb.max_peak_mem(),
+            "1f1b {} vs gpipe {}",
+            ra.max_peak_mem(),
+            rb.max_peak_mem()
+        );
+    }
+
+    #[test]
+    fn pipeline_has_bubbles_dp_does_not() {
+        let c = crate::cost::Cluster::v100(4);
+        let pp = megatron(gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::OneFOneB).unwrap();
+        let dp = megatron(gpt3(0, 8, 256), 4, 1, 1, 1, PipeOrder::OneFOneB).unwrap();
+        let rp = crate::sim::run(&pp.graph, &pp.schedule, &c, CommMode::InterRvd).unwrap();
+        let rd = crate::sim::run(&dp.graph, &dp.schedule, &c, CommMode::InterRvd).unwrap();
+        let (_, _, bub_p) = rp.breakdown();
+        let (_, _, bub_d) = rd.breakdown();
+        assert!(bub_p > bub_d, "pipeline bubble {bub_p} vs dp {bub_d}");
+    }
+}

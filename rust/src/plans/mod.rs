@@ -1,0 +1,309 @@
+//! The sProgram library (paper §3.4): parallelization plans written against
+//! the three primitives `op-trans` / `op-assign` / `op-order`.
+//!
+//! Every plan is a function `Model -> PlanOutput { graph, schedule }`; the
+//! caller then runs `sim::run` (or the real executor) on the result. Plans
+//! include the empirical baselines the paper compares against — data
+//! parallelism (Algorithm 1), Megatron-style TP/PP with 1F1B, GPipe,
+//! ZeRO-3 (±offload), DAP — and the paper's new plans: **co-shard**,
+//! **interlaced pipeline** (Algorithm 2) and **3F1B**.
+
+mod coshard;
+mod dap;
+mod dp;
+mod interlaced;
+mod megatron;
+mod pipe3f1b;
+mod zero;
+
+pub use coshard::{coshard, coshard_opt};
+pub use dap::dap_dp;
+pub use dp::data_parallel;
+pub use interlaced::interlaced_pipeline;
+pub use megatron::{megatron, PipeOrder};
+pub use pipe3f1b::pipeline_3f1b;
+pub use zero::zero3;
+
+use crate::graph::{Graph, OpId, OpKind, PTensorId, TensorKind};
+use crate::models::Model;
+use crate::schedule::{DeviceId, Schedule};
+use crate::trans::{op_trans, TransformAlgo};
+use std::collections::HashMap;
+
+/// Result of running an sProgram.
+pub struct PlanOutput {
+    pub graph: Graph,
+    pub schedule: Schedule,
+    pub name: String,
+}
+
+/// Plan-construction errors (transformation + scheduling phases).
+pub type PlanResult = Result<PlanOutput, crate::trans::TransError>;
+
+/// Split every op in `ops` along its batch dim into `k` pieces, returning
+/// `pieces[orig_index][microbatch]`.
+pub fn split_batch(g: &mut Graph, ops: &[OpId], k: usize) -> Vec<Vec<OpId>> {
+    ops.iter()
+        .map(|&op| {
+            let dim = g
+                .op(op)
+                .signature
+                .as_ref()
+                .and_then(|s| s.batch.clone())
+                .expect("op has no batch dim");
+            op_trans(g, op, &TransformAlgo::split(&dim, k)).expect("batch split")
+        })
+        .collect()
+}
+
+/// Apply tensor-parallel splitting: each op splits `t` ways along its
+/// model-declared TP dim, or replicates if it has none (layernorm etc).
+/// Returns `shards[orig_index][t]`.
+pub fn split_tp(
+    g: &mut Graph,
+    ops: &[OpId],
+    tp_dim: &HashMap<OpId, &'static str>,
+    origin_of: impl Fn(OpId) -> OpId,
+    t: usize,
+) -> Vec<Vec<OpId>> {
+    ops.iter()
+        .map(|&op| {
+            let orig = origin_of(op);
+            match tp_dim.get(&orig) {
+                Some(dim) if t > 1 => op_trans(g, op, &TransformAlgo::split(dim, t))
+                    .or_else(|_| op_trans(g, op, &TransformAlgo::replicate(t)))
+                    .unwrap(),
+                _ if t > 1 => op_trans(g, op, &TransformAlgo::replicate(t)).unwrap(),
+                _ => vec![op],
+            }
+        })
+        .collect()
+}
+
+/// Resolve an op's original (pre-transformation) id for map lookups.
+pub fn origin(g: &Graph, op: OpId) -> OpId {
+    g.op(op).origin.unwrap_or(op)
+}
+
+/// Re-shape optimizer ops to match the gradient shards autograd produced
+/// (paper §5: optimizer ops adapt to the forward transformation). For each
+/// weight, the original full-weight Adam op is replaced by one op per
+/// distinct gradient *region*; value-split partials of the same region map
+/// to a single op (the all-reduce happens at materialization).
+///
+/// Returns `weight pTensor -> (region ops, producer devices hint)`.
+pub fn align_optimizers(g: &mut Graph) -> HashMap<PTensorId, Vec<OpId>> {
+    let opt_ops: Vec<OpId> = g
+        .live_ops()
+        .filter(|o| o.kind == OpKind::Optimizer)
+        .map(|o| o.id)
+        .collect();
+    // Distinct grad regions per gradient pTensor.
+    let mut regions: HashMap<PTensorId, Vec<crate::graph::mask::Mask>> = HashMap::new();
+    for o in g.live_ops() {
+        for &ov in &o.outputs {
+            let vt = g.vtensor(ov);
+            if g.ptensor(vt.ptensor).kind == TensorKind::Gradient {
+                let mut spatial = vt.mask.clone();
+                spatial.vsplit = crate::graph::mask::VSplit::FULL;
+                let rs = regions.entry(vt.ptensor).or_default();
+                if !rs.iter().any(|m| m.same_region(&spatial)) {
+                    rs.push(spatial);
+                }
+            }
+        }
+    }
+    let mut out: HashMap<PTensorId, Vec<OpId>> = HashMap::new();
+    for op_id in opt_ops {
+        let old = g.op(op_id).clone();
+        let grad_pt = g.vtensor(old.inputs[0]).ptensor;
+        let w_pt = g.vtensor(old.outputs[0]).ptensor;
+        let Some(regs) = regions.get(&grad_pt).cloned() else {
+            // Weight received no gradient (e.g. no_grad passes only) —
+            // keep the op as-is.
+            out.entry(w_pt).or_default().push(op_id);
+            continue;
+        };
+        if regs.len() == 1 && regs[0] == crate::graph::mask::Mask::full(regs[0].rank()) {
+            out.entry(w_pt).or_default().push(op_id);
+            continue; // already aligned
+        }
+        let old = g.remove_op(op_id);
+        for (ri, reg) in regs.iter().enumerate() {
+            let vol = reg.volume().to_f64();
+            let mk = |g: &mut Graph, v: crate::graph::VTensorId| {
+                let vt = g.vtensor(v).clone();
+                g.add_vtensor(vt.ptensor, reg.clone())
+            };
+            let inputs: Vec<_> = old.inputs.iter().map(|&v| mk(g, v)).collect();
+            let outputs: Vec<_> = old.outputs.iter().map(|&v| mk(g, v)).collect();
+            let mut op = old.clone();
+            op.id = 0;
+            op.name = format!("{}#{ri}", old.name);
+            op.inputs = inputs;
+            op.outputs = outputs;
+            op.flops = old.flops * vol;
+            op.origin = Some(old.origin.unwrap_or(op_id));
+            let id = g.insert_op(op);
+            out.entry(w_pt).or_default().push(id);
+        }
+    }
+    out
+}
+
+/// Assign every optimizer op to the device where (one of) its gradient
+/// region's producers lives; if the grad partials come from several devices
+/// (data-parallel replicas), the op is replicated across those devices so
+/// each replica updates its local copy after the all-reduce — the standard
+/// DP/Megatron optimizer placement.
+pub fn assign_optimizers(g: &mut Graph, sched: &mut Schedule) {
+    let opt_ops: Vec<OpId> = g
+        .live_ops()
+        .filter(|o| o.kind == OpKind::Optimizer && sched.device_of(o.id).is_none())
+        .map(|o| o.id)
+        .collect();
+    // grad region -> producer devices.
+    let mut producers: HashMap<(PTensorId, u64), Vec<DeviceId>> = HashMap::new();
+    for o in g.live_ops() {
+        if let Some(dev) = sched.device_of(o.id) {
+            for &ov in &o.outputs {
+                let vt = g.vtensor(ov);
+                if g.ptensor(vt.ptensor).kind == TensorKind::Gradient {
+                    producers
+                        .entry((vt.ptensor, spatial_key(&vt.mask)))
+                        .or_default()
+                        .push(dev);
+                }
+            }
+        }
+    }
+    for op_id in opt_ops {
+        let gv = g.op(op_id).inputs[0];
+        let vt = g.vtensor(gv).clone();
+        let devs = producers
+            .get(&(vt.ptensor, spatial_key(&vt.mask)))
+            .cloned()
+            .unwrap_or_default();
+        let mut devs: Vec<DeviceId> = devs.into_iter().collect::<std::collections::HashSet<_>>().into_iter().collect();
+        devs.sort_unstable();
+        match devs.len() {
+            0 => sched.assign(op_id, 0),
+            1 => sched.assign(op_id, devs[0]),
+            n => {
+                let copies = op_trans(g, op_id, &TransformAlgo::replicate(n)).unwrap();
+                for (c, d) in copies.into_iter().zip(devs) {
+                    sched.assign(c, d);
+                }
+            }
+        }
+    }
+}
+
+fn spatial_key(m: &crate::graph::mask::Mask) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    for iv in &m.dims {
+        (iv.lo.num, iv.lo.den, iv.hi.num, iv.hi.den).hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Partition `layers` into `s` contiguous stages balanced by FLOPs.
+pub fn balance_stages(g: &Graph, layers: &[Vec<OpId>], s: usize) -> Vec<Vec<usize>> {
+    let costs: Vec<f64> = layers
+        .iter()
+        .map(|ops| ops.iter().map(|&o| g.op(o).flops).sum())
+        .collect();
+    let total: f64 = costs.iter().sum();
+    let target = total / s as f64;
+    let mut stages: Vec<Vec<usize>> = vec![Vec::new(); s];
+    let mut acc = 0.0;
+    let mut cur = 0usize;
+    for (li, &c) in costs.iter().enumerate() {
+        if acc + c / 2.0 > target * (cur + 1) as f64 && cur + 1 < s {
+            cur += 1;
+        }
+        stages[cur].push(li);
+        acc += c;
+    }
+    // No empty stages: steal from the left neighbour.
+    for i in 1..s {
+        if stages[i].is_empty() {
+            let steal = stages[i - 1].pop().expect("layer starvation");
+            stages[i].push(steal);
+        }
+    }
+    stages
+}
+
+/// Chain tasks in 1F1B order for one stage (paper Fig. 1 bottom): with `s`
+/// the stage index (0-based), `n_stages` total and `k` micro-batches, the
+/// stage runs `warmup = n_stages - s` forwards, then alternates 1B1F, then
+/// drains. Emits `op-order` edges between consecutive tasks via their
+/// representative ops. `fwd[m]` / `bwd[m]` are the (first, last) ops of
+/// micro-batch `m`'s forward / backward work on this stage.
+pub fn order_1f1b(
+    sched: &mut Schedule,
+    s: usize,
+    n_stages: usize,
+    k: usize,
+    fwd: &[(OpId, OpId)],
+    bwd: &[(OpId, OpId)],
+) {
+    let warmup = (n_stages - s).min(k);
+    let mut seq: Vec<(OpId, OpId)> = Vec::new();
+    for m in 0..warmup {
+        seq.push(fwd[m]);
+    }
+    let mut next_f = warmup;
+    for m in 0..k {
+        seq.push(bwd[m]);
+        if next_f < k {
+            seq.push(fwd[next_f]);
+            next_f += 1;
+        }
+    }
+    for w in seq.windows(2) {
+        sched.order(w[0].1, w[1].0);
+    }
+}
+
+/// GPipe order (paper Fig. 1 middle): all forwards, then all backwards.
+pub fn order_gpipe(sched: &mut Schedule, fwd: &[(OpId, OpId)], bwd: &[(OpId, OpId)]) {
+    let mut seq: Vec<(OpId, OpId)> = fwd.to_vec();
+    seq.extend_from_slice(bwd);
+    for w in seq.windows(2) {
+        sched.order(w[0].1, w[1].0);
+    }
+}
+
+/// Concrete size of a signature dim on an op (looked up through its
+/// input/output vTensor shapes). `None` if the dim is absent.
+pub fn dim_size(g: &Graph, op: OpId, dim: &str) -> Option<usize> {
+    let o = g.op(op);
+    let sig = o.signature.as_ref()?;
+    for (i, &v) in o.inputs.iter().enumerate() {
+        if let Some(axis) = sig.input_axis(i, dim) {
+            return Some(g.vtensor_shape(v)[axis]);
+        }
+    }
+    for (i, &v) in o.outputs.iter().enumerate() {
+        if let Some(axis) = sig.output_axis(i, dim) {
+            return Some(g.vtensor_shape(v)[axis]);
+        }
+    }
+    None
+}
+
+/// Largest divisor of `size` that is <= `want` (the feasible split factor).
+pub fn feasible_split(size: usize, want: usize) -> usize {
+    (1..=want.min(size)).rev().find(|&c| size % c == 0).unwrap_or(1)
+}
+
+/// First/last ops of a set in graph-id order (the data-flow order within a
+/// micro-batch's stage work).
+pub fn span(ops: &[OpId]) -> (OpId, OpId) {
+    let mut v = ops.to_vec();
+    v.sort_unstable();
+    (*v.first().unwrap(), *v.last().unwrap())
+}

@@ -1,0 +1,235 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `make artifacts` and execute them on the
+//! PJRT CPU client via the `xla` crate. This is the only place the rust
+//! side touches XLA; everything above works with plain `Vec<f32>` host
+//! buffers.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use crate::util::json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parameter ABI entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub params: Vec<ParamSpec>,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub n_params: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json -- run `make artifacts`", dir.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let cfg = v.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let geti = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("manifest config missing {k}"))
+        };
+        let params = v
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            params,
+            vocab: geti("vocab")?,
+            hidden: geti("hidden")?,
+            layers: geti("layers")?,
+            heads: geti("heads")?,
+            seq: geti("seq")?,
+            batch: geti("batch")?,
+            n_params: v.get("n_params").and_then(|x| x.as_usize()).unwrap_or(0),
+        })
+    }
+}
+
+/// A compiled entry point on the PJRT CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// One simulated device's runtime: its own PJRT client + compiled entries
+/// (clients are cheap on CPU; per-thread clients sidestep any `Sync`
+/// questions in the C API bindings).
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+}
+
+impl Engine {
+    pub fn cpu(artifacts_dir: &Path) -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?,
+            dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    /// Load + compile `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?} -- run `make artifacts`", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs (+ trailing i32 tensors), returning
+    /// every output flattened to `Vec<f32>`.
+    ///
+    /// The jax entry points are lowered with `return_tuple=True`, so the
+    /// single result is a tuple we unpack.
+    pub fn run(
+        &self,
+        f32_inputs: &[(&[f32], &[usize])],
+        i32_inputs: &[(&[i32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(f32_inputs.len() + i32_inputs.len());
+        for (data, shape) in f32_inputs {
+            let l = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lits.push(l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?);
+        }
+        for (data, shape) in i32_inputs {
+            let l = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lits.push(l.reshape(&dims).map_err(|e| anyhow!("reshape i32: {e:?}"))?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.hidden > 0 && m.layers > 0 && !m.params.is_empty());
+        assert_eq!(m.params[0].name, "embed");
+        let total: usize = m.params.iter().map(|p| p.numel()).sum();
+        assert_eq!(total, m.n_params);
+    }
+
+    #[test]
+    fn fwd_loss_executes_and_is_near_uniform() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let eng = Engine::cpu(&artifacts_dir()).unwrap();
+        let exe = eng.load("fwd_loss").unwrap();
+        // Small random params, random tokens: loss ~ ln(vocab).
+        let mut rng = crate::util::rng::Rng::new(0);
+        let params: Vec<Vec<f32>> = m
+            .params
+            .iter()
+            .map(|p| {
+                (0..p.numel())
+                    .map(|_| {
+                        if p.shape.len() == 1 {
+                            1.0
+                        } else {
+                            0.02 * rng.normal() as f32
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let x: Vec<i32> = (0..m.batch * m.seq)
+            .map(|_| rng.below(m.vocab as u64) as i32)
+            .collect();
+        let y: Vec<i32> = x.iter().map(|&t| (t + 1) % m.vocab as i32).collect();
+        let f32_ins: Vec<(&[f32], &[usize])> = m
+            .params
+            .iter()
+            .zip(&params)
+            .map(|(spec, data)| (data.as_slice(), spec.shape.as_slice()))
+            .collect();
+        let shape_xy = [m.batch, m.seq];
+        let outs = exe
+            .run(&f32_ins, &[(&x, &shape_xy), (&y, &shape_xy)])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let loss = outs[0][0];
+        let uniform = (m.vocab as f32).ln();
+        assert!(
+            (loss - uniform).abs() < 2.0,
+            "loss {loss} vs ln(vocab) {uniform}"
+        );
+    }
+}

@@ -1,0 +1,514 @@
+//! Phase 2 — space-time scheduling (`op-assign` / `op-order`, paper §3.2).
+//!
+//! [`Schedule`] records the spatial mapping (op → device) and the temporal
+//! happen-before constraints. [`validate`] rebuilds the *full dependency
+//! graph* — derived data dependencies (mask intersections, Fig. 7) plus the
+//! user's order edges — and:
+//!
+//! 1. detects cycles (deadlocks) and reports one offending cycle;
+//! 2. resolves *replicated producers*: when several producers expose an
+//!    identical region of a pTensor, the consumer may read **any one** of
+//!    them — the validator searches producer choices that keep the graph
+//!    acyclic (preferring a same-device producer, which also minimizes
+//!    communication);
+//! 3. completes ambiguous per-device orders with a deterministic topological
+//!    sort (Kahn, smallest-op-id first) and returns the per-device serial
+//!    execution order used by the simulator and the real executor.
+
+use crate::graph::{Graph, OpId, PTensorId};
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// Device index. GPUs are `0..cluster.num_gpus()`; [`CPU_DEVICE`] is the
+/// host (used by swap).
+pub type DeviceId = usize;
+
+/// Sentinel device id for the host CPU (swap target).
+pub const CPU_DEVICE: DeviceId = usize::MAX;
+
+/// The space-time schedule of a transformed graph.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    assign: HashMap<OpId, DeviceId>,
+    order: Vec<(OpId, OpId)>,
+}
+
+impl Schedule {
+    pub fn new() -> Schedule {
+        Schedule::default()
+    }
+
+    /// `op-assign(op, device)`.
+    pub fn assign(&mut self, op: OpId, device: DeviceId) {
+        self.assign.insert(op, device);
+    }
+
+    /// Assign a batch of ops to one device.
+    pub fn assign_all(&mut self, ops: &[OpId], device: DeviceId) {
+        for &o in ops {
+            self.assign(o, device);
+        }
+    }
+
+    /// `op-order(a, b)`: `a` happens before `b`.
+    pub fn order(&mut self, a: OpId, b: OpId) {
+        self.order.push((a, b));
+    }
+
+    /// Order every op in `a` before every op in `b` (the paper's
+    /// `op-order(previous_tasks, stage_tasks)` over task sets).
+    pub fn order_sets(&mut self, a: &[OpId], b: &[OpId]) {
+        for &x in a {
+            for &y in b {
+                self.order.push((x, y));
+            }
+        }
+    }
+
+    pub fn device_of(&self, op: OpId) -> Option<DeviceId> {
+        self.assign.get(&op).copied()
+    }
+
+    pub fn order_edges(&self) -> &[(OpId, OpId)] {
+        &self.order
+    }
+
+    pub fn assignments(&self) -> &HashMap<OpId, DeviceId> {
+        &self.assign
+    }
+
+    /// Devices in use.
+    pub fn devices(&self) -> Vec<DeviceId> {
+        let mut d: Vec<DeviceId> = self.assign.values().copied().collect::<HashSet<_>>().into_iter().collect();
+        d.sort_unstable();
+        d
+    }
+}
+
+/// Validation failure modes surfaced to the sProgram author.
+#[derive(Debug)]
+pub enum ScheduleError {
+    /// An op is not assigned to any device.
+    Unassigned(OpId),
+    /// The dependency + order graph has a cycle (deadlock). Contains one
+    /// cycle as op-id path for diagnosis.
+    Deadlock(Vec<OpId>),
+    /// A consumer needs a pTensor region no producer (or initial tensor)
+    /// covers.
+    MissingProducer { consumer: OpId, ptensor: PTensorId },
+}
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::Unassigned(op) => write!(f, "op {op} has no device assignment"),
+            ScheduleError::Deadlock(path) => write!(f, "deadlock cycle through ops {path:?}"),
+            ScheduleError::MissingProducer { consumer, ptensor } => {
+                write!(f, "op {consumer} consumes ptensor {ptensor} that nothing produces")
+            }
+        }
+    }
+}
+impl std::error::Error for ScheduleError {}
+
+/// The validated, completed schedule.
+#[derive(Clone, Debug)]
+pub struct ValidatedSchedule {
+    /// Global topological order over all ops.
+    pub topo: Vec<OpId>,
+    /// Serial execution order per device (the "completion" of §3.2).
+    pub device_order: HashMap<DeviceId, Vec<OpId>>,
+    /// The dependency edges actually used (after replicated-producer
+    /// resolution): `(producer, consumer, ptensor)`.
+    pub deps: Vec<(OpId, OpId, PTensorId)>,
+}
+
+/// Validate `sched` against `g` (paper §3.2 "Scheduling validation and
+/// completion").
+pub fn validate(g: &Graph, sched: &Schedule) -> Result<ValidatedSchedule, ScheduleError> {
+    let live = g.live_op_ids();
+    for &op in &live {
+        if sched.device_of(op).is_none() {
+            return Err(ScheduleError::Unassigned(op));
+        }
+    }
+
+    // ---- 1. derive data dependencies, grouping replicated producers ----
+    // For each (consumer input vTensor): collect producers whose output
+    // masks overlap it. If several producers expose the *same region*
+    // (identical mask incl. value split), they are replicas and the
+    // consumer needs any ONE. Distinct-region producers are all required.
+    let access = g.ptensor_access();
+    let mut and_deps: Vec<(OpId, OpId, PTensorId)> = Vec::new();
+    let mut or_groups: Vec<(Vec<OpId>, OpId, PTensorId)> = Vec::new();
+    for &c in &live {
+        for &iv in &g.op(c).inputs {
+            let vt = g.vtensor(iv);
+            let Some((prods, _)) = access.get(&vt.ptensor) else { continue };
+            // Group overlapping producers by identical output region.
+            let mut groups: Vec<(crate::graph::mask::Mask, Vec<OpId>)> = Vec::new();
+            for &p in prods {
+                if p == c || g.is_cross_iteration(p, vt.ptensor) {
+                    continue;
+                }
+                for &ov in &g.op(p).outputs {
+                    let ovt = g.vtensor(ov);
+                    if ovt.ptensor == vt.ptensor && vt.mask.depends_on(&ovt.mask) {
+                        match groups.iter_mut().find(|(m, _)| m.same_region(&ovt.mask)) {
+                            Some((_, v)) => {
+                                if !v.contains(&p) {
+                                    v.push(p)
+                                }
+                            }
+                            None => groups.push((ovt.mask.clone(), vec![p])),
+                        }
+                    }
+                }
+            }
+            for (_, ps) in groups {
+                if ps.len() == 1 {
+                    and_deps.push((ps[0], c, vt.ptensor));
+                } else {
+                    or_groups.push((ps, c, vt.ptensor));
+                }
+            }
+        }
+    }
+
+    // ---- 2. cycle detection over AND edges + order edges ----
+    let n = g.ops_len();
+    let alive: HashSet<OpId> = live.iter().copied().collect();
+    let mut adj: Vec<Vec<OpId>> = vec![Vec::new(); n];
+    let mut push_edge = |adj: &mut Vec<Vec<OpId>>, a: OpId, b: OpId| {
+        if alive.contains(&a) && alive.contains(&b) && a != b {
+            adj[a].push(b);
+        }
+    };
+    for &(p, c, _) in &and_deps {
+        push_edge(&mut adj, p, c);
+    }
+    for &(a, b) in sched.order_edges() {
+        push_edge(&mut adj, a, b);
+    }
+    if let Some(cycle) = find_cycle(&adj, &live) {
+        return Err(ScheduleError::Deadlock(cycle));
+    }
+
+    // ---- 3. replicated-producer resolution ----
+    // Choose, for every OR group, one producer that keeps the graph acyclic.
+    // Preference order: same device as consumer, then lowest op id. Fast
+    // path: commit every group's preferred candidate and run ONE cycle
+    // check — on real plans this almost always succeeds. Slow path (a cycle
+    // appeared): retract everything and re-add greedily with a per-candidate
+    // check, which is complete because an extra edge only adds constraints.
+    let mut chosen: Vec<(OpId, OpId, PTensorId)> = and_deps.clone();
+    let mut ordered_groups: Vec<(Vec<OpId>, OpId, PTensorId)> = Vec::with_capacity(or_groups.len());
+    for (cands, c, pt) in or_groups {
+        let cdev = sched.device_of(c);
+        let mut ordered = cands;
+        ordered.sort_by_key(|&p| (sched.device_of(p) != cdev, p));
+        ordered_groups.push((ordered, c, pt));
+    }
+    for (ordered, c, _) in &ordered_groups {
+        adj[ordered[0]].push(*c);
+    }
+    if find_cycle(&adj, &live).is_none() {
+        for (ordered, c, pt) in &ordered_groups {
+            chosen.push((ordered[0], *c, *pt));
+        }
+    } else {
+        // Retract and re-resolve one group at a time.
+        for (ordered, c, _) in &ordered_groups {
+            let pos = adj[ordered[0]].iter().rposition(|&x| x == *c).unwrap();
+            adj[ordered[0]].remove(pos);
+        }
+        for (ordered, c, pt) in &ordered_groups {
+            let mut ok = false;
+            for &p in ordered {
+                adj[p].push(*c);
+                if find_cycle(&adj, &live).is_none() {
+                    chosen.push((p, *c, *pt));
+                    ok = true;
+                    break;
+                }
+                adj[p].pop();
+            }
+            if !ok {
+                // Every replica choice deadlocks -> report through one.
+                adj[ordered[0]].push(*c);
+                let cycle = find_cycle(&adj, &live).unwrap_or_default();
+                return Err(ScheduleError::Deadlock(cycle));
+            }
+        }
+    }
+
+    // ---- 4. completion: deterministic topo sort + per-device serialization ----
+    // Same-device ops are implicitly serialized; interleave by adding the
+    // device-serial edges emerging from the global topo order itself.
+    let topo = topo_sort(&adj, &live).expect("acyclic by construction");
+    let mut device_order: HashMap<DeviceId, Vec<OpId>> = HashMap::new();
+    for &op in &topo {
+        device_order
+            .entry(sched.device_of(op).unwrap())
+            .or_default()
+            .push(op);
+    }
+    Ok(ValidatedSchedule { topo, device_order, deps: chosen })
+}
+
+/// DFS cycle finder; returns one cycle as a path of op ids.
+fn find_cycle(adj: &[Vec<OpId>], live: &[OpId]) -> Option<Vec<OpId>> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        White,
+        Grey,
+        Black,
+    }
+    let mut st = vec![St::White; adj.len()];
+    let mut parent: Vec<Option<OpId>> = vec![None; adj.len()];
+    for &root in live {
+        if st[root] != St::White {
+            continue;
+        }
+        // Iterative DFS to avoid recursion limits on big graphs.
+        let mut stack: Vec<(OpId, usize)> = vec![(root, 0)];
+        st[root] = St::Grey;
+        while let Some(&mut (u, ref mut i)) = stack.last_mut() {
+            if *i < adj[u].len() {
+                let v = adj[u][*i];
+                *i += 1;
+                match st[v] {
+                    St::White => {
+                        st[v] = St::Grey;
+                        parent[v] = Some(u);
+                        stack.push((v, 0));
+                    }
+                    St::Grey => {
+                        // Found a cycle v -> ... -> u -> v.
+                        let mut path = vec![v];
+                        let mut cur = u;
+                        while cur != v {
+                            path.push(cur);
+                            cur = parent[cur].expect("cycle path broken");
+                        }
+                        path.reverse();
+                        return Some(path);
+                    }
+                    St::Black => {}
+                }
+            } else {
+                st[u] = St::Black;
+                stack.pop();
+            }
+        }
+    }
+    None
+}
+
+/// Kahn topological sort with a min-heap for deterministic output.
+fn topo_sort(adj: &[Vec<OpId>], live: &[OpId]) -> Option<Vec<OpId>> {
+    let mut indeg: HashMap<OpId, usize> = live.iter().map(|&o| (o, 0)).collect();
+    for &u in live {
+        for &v in &adj[u] {
+            *indeg.get_mut(&v).unwrap() += 1;
+        }
+    }
+    let mut heap: BinaryHeap<std::cmp::Reverse<OpId>> = indeg
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(&o, _)| std::cmp::Reverse(o))
+        .collect();
+    let mut out = Vec::with_capacity(live.len());
+    while let Some(std::cmp::Reverse(u)) = heap.pop() {
+        out.push(u);
+        for &v in &adj[u] {
+            let d = indeg.get_mut(&v).unwrap();
+            *d -= 1;
+            if *d == 0 {
+                heap.push(std::cmp::Reverse(v));
+            }
+        }
+    }
+    (out.len() == live.len()).then_some(out)
+}
+
+impl Graph {
+    /// Upper bound of op-id space (for adjacency arrays).
+    pub fn ops_len(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Graph, OpKind, TensorKind};
+
+    /// Chain A -> B -> C through activations.
+    fn chain3() -> (Graph, [OpId; 3]) {
+        let mut g = Graph::new();
+        let t0 = g.add_ptensor("t0", &[4], DType::F32, TensorKind::Input);
+        let t1 = g.add_ptensor("t1", &[4], DType::F32, TensorKind::Activation);
+        let t2 = g.add_ptensor("t2", &[4], DType::F32, TensorKind::Activation);
+        let t3 = g.add_ptensor("t3", &[4], DType::F32, TensorKind::Activation);
+        let mk = |g: &mut Graph, name: &str, i, o| {
+            let iv = g.full_view(i);
+            let ov = g.full_view(o);
+            g.add_op(name, OpKind::Identity, vec![iv], vec![ov], 1.0, None, true, 0)
+        };
+        let a = mk(&mut g, "A", t0, t1);
+        let b = mk(&mut g, "B", t1, t2);
+        let c = mk(&mut g, "C", t2, t3);
+        (g, [a, b, c])
+    }
+
+    #[test]
+    fn unassigned_op_rejected() {
+        let (g, [a, b, _c]) = chain3();
+        let mut s = Schedule::new();
+        s.assign(a, 0);
+        s.assign(b, 0);
+        match validate(&g, &s) {
+            Err(ScheduleError::Unassigned(_)) => {}
+            other => panic!("expected Unassigned, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn valid_chain_topo_and_device_order() {
+        let (g, [a, b, c]) = chain3();
+        let mut s = Schedule::new();
+        s.assign_all(&[a, b, c], 0);
+        let v = validate(&g, &s).unwrap();
+        assert_eq!(v.topo, vec![a, b, c]);
+        assert_eq!(v.device_order[&0], vec![a, b, c]);
+        assert_eq!(v.deps.len(), 2);
+    }
+
+    #[test]
+    fn order_against_dataflow_is_deadlock() {
+        // op-order(C, A) contradicts A -> B -> C.
+        let (g, [a, b, c]) = chain3();
+        let mut s = Schedule::new();
+        s.assign_all(&[a, b, c], 0);
+        s.order(c, a);
+        match validate(&g, &s) {
+            Err(ScheduleError::Deadlock(path)) => {
+                assert!(path.len() >= 3, "cycle path {path:?}");
+            }
+            other => panic!("expected Deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn order_edges_shape_the_topo() {
+        // Two independent chains interleaved by op-order (pipeline-style).
+        let mut g = Graph::new();
+        let mk_chain = |g: &mut Graph, tag: &str| {
+            let i = g.add_ptensor(&format!("{tag}.in"), &[2], DType::F32, TensorKind::Input);
+            let o = g.add_ptensor(&format!("{tag}.out"), &[2], DType::F32, TensorKind::Activation);
+            let iv = g.full_view(i);
+            let ov = g.full_view(o);
+            g.add_op(tag, OpKind::Identity, vec![iv], vec![ov], 1.0, None, true, 0)
+        };
+        let p = mk_chain(&mut g, "P");
+        let q = mk_chain(&mut g, "Q");
+        let mut s = Schedule::new();
+        s.assign_all(&[p, q], 0);
+        s.order(q, p); // force Q before P despite id order
+        let v = validate(&g, &s).unwrap();
+        assert_eq!(v.device_order[&0], vec![q, p]);
+    }
+
+    #[test]
+    fn replicated_producers_need_only_one() {
+        // Two replica producers (identical masks) of t; consumer C.
+        // op-order(C, P1) forces choosing P0 — still feasible.
+        let mut g = Graph::new();
+        let x = g.add_ptensor("x", &[2], DType::F32, TensorKind::Input);
+        let t = g.add_ptensor("t", &[2], DType::F32, TensorKind::Activation);
+        let y = g.add_ptensor("y", &[2], DType::F32, TensorKind::Activation);
+        let mut mk_prod = |g: &mut Graph, name: &str| {
+            let iv = g.full_view(x);
+            let ov = g.full_view(t);
+            g.add_op(name, OpKind::Identity, vec![iv], vec![ov], 1.0, None, true, 0)
+        };
+        let p0 = mk_prod(&mut g, "P0");
+        let p1 = mk_prod(&mut g, "P1");
+        let tv = g.full_view(t);
+        let yv = g.full_view(y);
+        let c = g.add_op("C", OpKind::Identity, vec![tv], vec![yv], 1.0, None, true, 0);
+        let mut s = Schedule::new();
+        s.assign(p0, 0);
+        s.assign(p1, 1);
+        s.assign(c, 0);
+        s.order(c, p1); // C must run before P1 -> C can only read P0's copy
+        let v = validate(&g, &s).unwrap();
+        let chosen: Vec<_> = v.deps.iter().filter(|(_, cc, _)| *cc == c).collect();
+        assert_eq!(chosen.len(), 1);
+        assert_eq!(chosen[0].0, p0, "validator must pick the non-deadlocking replica");
+    }
+
+    #[test]
+    fn replicated_producers_all_cyclic_is_deadlock() {
+        let mut g = Graph::new();
+        let x = g.add_ptensor("x", &[2], DType::F32, TensorKind::Input);
+        let t = g.add_ptensor("t", &[2], DType::F32, TensorKind::Activation);
+        let y = g.add_ptensor("y", &[2], DType::F32, TensorKind::Activation);
+        let mut mk_prod = |g: &mut Graph, name: &str| {
+            let iv = g.full_view(x);
+            let ov = g.full_view(t);
+            g.add_op(name, OpKind::Identity, vec![iv], vec![ov], 1.0, None, true, 0)
+        };
+        let p0 = mk_prod(&mut g, "P0");
+        let p1 = mk_prod(&mut g, "P1");
+        let tv = g.full_view(t);
+        let yv = g.full_view(y);
+        let c = g.add_op("C", OpKind::Identity, vec![tv], vec![yv], 1.0, None, true, 0);
+        let mut s = Schedule::new();
+        s.assign_all(&[p0, p1, c], 0);
+        s.order(c, p0);
+        s.order(c, p1); // C before both producers: impossible
+        assert!(matches!(validate(&g, &s), Err(ScheduleError::Deadlock(_))));
+    }
+
+    #[test]
+    fn prop_random_order_edges_never_panic_and_topo_is_consistent() {
+        crate::util::prop::check("schedule-validate", 100, |gen| {
+            let (g, ops) = {
+                let (g, o) = chain3();
+                (g, o.to_vec())
+            };
+            let mut s = Schedule::new();
+            for &o in &ops {
+                s.assign(o, gen.int(0, 3));
+            }
+            for _ in 0..gen.int(0, 4) {
+                let a = ops[gen.int(0, 3)];
+                let b = ops[gen.int(0, 3)];
+                if a != b {
+                    s.order(a, b);
+                }
+            }
+            match validate(&g, &s) {
+                Err(ScheduleError::Deadlock(_)) => Ok(()), // fine: detected
+                Err(e) => Err(format!("unexpected error {e}")),
+                Ok(v) => {
+                    // topo must respect every chosen dep and order edge.
+                    let pos: HashMap<OpId, usize> =
+                        v.topo.iter().enumerate().map(|(i, &o)| (o, i)).collect();
+                    for &(p, c, _) in &v.deps {
+                        if pos[&p] > pos[&c] {
+                            return Err(format!("dep {p}->{c} violated"));
+                        }
+                    }
+                    for &(a, b) in s.order_edges() {
+                        if pos[&a] > pos[&b] {
+                            return Err(format!("order {a}->{b} violated"));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        });
+    }
+}

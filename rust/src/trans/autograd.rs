@@ -1,0 +1,305 @@
+//! Autograd completion (paper §5, "Autograd for forward operator
+//! transformation").
+//!
+//! Model builders describe only the forward pass (plus optimizer ops);
+//! plans transform the forward ops; then [`complete`] derives the backward
+//! ops *from the transformed forward graph*, so backward parallelism always
+//! mirrors forward parallelism — exactly the paper's "SuperScaler will adapt
+//! them to their forward operators automatically".
+//!
+//! Chain-rule mask inference:
+//! * grad-of-output inputs mirror the forward op's output masks (on the
+//!   gradient pTensor of the activation);
+//! * stashed-activation inputs mirror the forward inputs (this pins
+//!   activation lifetimes for the memory model);
+//! * grad outputs mirror the forward input masks — and when several forward
+//!   ops read overlapping regions of the same pTensor, each backward op
+//!   yields a *value partial* of that gradient (paper: "different operators
+//!   consuming the same vTensor leads to the value-partition of its
+//!   gradient, which will incur all-reduce").
+
+use crate::graph::{DType, Graph, Op, OpId, OpKind, PTensorId, TensorKind, VTensorId};
+use std::collections::HashMap;
+
+/// Result of autograd completion.
+pub struct Autograd {
+    /// forward op -> its backward op.
+    pub bwd_of: HashMap<OpId, OpId>,
+    /// activation/input pTensor -> gradient pTensor (weights' gradient
+    /// pTensors are expected to pre-exist; see [`grad_name`]).
+    pub grad_of: HashMap<PTensorId, PTensorId>,
+}
+
+/// Naming convention linking a tensor to its gradient. Model builders create
+/// `w.grad` pTensors for weights eagerly (so optimizer ops can reference
+/// them before autograd runs); autograd reuses them by name.
+pub fn grad_name(name: &str) -> String {
+    format!("{name}.grad")
+}
+
+/// Ratio of backward to forward FLOPs. Standard for matmul-dominated nets:
+/// backward computes grads w.r.t. both inputs -> 2x the forward work.
+pub const BWD_FLOP_RATIO: f64 = 2.0;
+
+/// Generate backward ops for every live forward op in `g`.
+///
+/// Backward ops are created in reverse forward order, named `<fwd>.bw`,
+/// with `is_forward = false`, the forward op's layer/microbatch tags, and
+/// `origin` pointing at the forward op. Ops whose outputs are only consumed
+/// by `Optimizer` ops (or nothing) still get a backward twin — the graph is
+/// one training iteration, so every forward op participates in the loss.
+pub fn complete(g: &mut Graph) -> Autograd {
+    // Pre-existing gradient pTensors by name (weights).
+    let mut grad_of: HashMap<PTensorId, PTensorId> = HashMap::new();
+    let by_name: HashMap<String, PTensorId> = g
+        .ptensors
+        .iter()
+        .map(|p| (p.name.clone(), p.id))
+        .collect();
+    for p in 0..g.ptensors.len() {
+        if let Some(&gid) = by_name.get(&grad_name(&g.ptensors[p].name.clone())) {
+            grad_of.insert(p, gid);
+        }
+    }
+
+    // Forward readers per pTensor, with their input masks. A gradient is
+    // value-split only among readers whose masks *overlap*: e.g. in data
+    // parallelism every replica reads the whole weight (k overlapping
+    // readers ⇒ k grad partials ⇒ all-reduce at materialization), while in
+    // tensor parallelism each shard reads a disjoint weight column (no
+    // overlap ⇒ spatially disjoint grads ⇒ no reduce).
+    let mut readers: HashMap<PTensorId, Vec<(OpId, crate::graph::mask::Mask)>> = HashMap::new();
+    let fwd_ids: Vec<OpId> = g
+        .live_ops()
+        .filter(|o| o.is_forward && !o.no_grad)
+        .map(|o| o.id)
+        .collect();
+    for &f in &fwd_ids {
+        for &v in &g.op(f).inputs {
+            let vt = g.vtensor(v);
+            readers.entry(vt.ptensor).or_default().push((f, vt.mask.clone()));
+        }
+    }
+
+    let mut bwd_of = HashMap::new();
+    // Reverse order: gradients flow opposite to data.
+    for &f in fwd_ids.iter().rev() {
+        let fwd = g.op(f).clone();
+        // Inputs of the backward op: grad of each fwd output + stashed fwd
+        // inputs (activations/weights needed by the chain rule).
+        let mut inputs: Vec<VTensorId> = Vec::new();
+        for &ov in &fwd.outputs {
+            let vt = g.vtensor(ov).clone();
+            let gpt = ensure_grad(g, &mut grad_of, vt.ptensor);
+            inputs.push(g.add_vtensor(gpt, vt.mask));
+        }
+        // Linear ops (residual adds) need no stashed inputs — their grad is
+        // identity. Everything else stashes its forward inputs (this pins
+        // activation lifetimes for the memory model).
+        if fwd.kind != OpKind::Elementwise("add") {
+            for &iv in &fwd.inputs {
+                let vt = g.vtensor(iv).clone();
+                inputs.push(g.add_vtensor(vt.ptensor, vt.mask));
+            }
+        }
+        // Outputs: grad of each fwd input. Value-split by reader multiplicity.
+        let mut outputs: Vec<VTensorId> = Vec::new();
+        for &iv in &fwd.inputs {
+            let vt = g.vtensor(iv).clone();
+            let pt_kind = g.ptensor(vt.ptensor).kind;
+            if pt_kind == TensorKind::Input {
+                continue; // no gradient for raw data inputs
+            }
+            let gpt = ensure_grad(g, &mut grad_of, vt.ptensor);
+            // Readers whose input masks overlap this one (incl. f itself).
+            let overlapping: Vec<OpId> = readers[&vt.ptensor]
+                .iter()
+                .filter(|(_, m)| vt.mask.depends_on(m))
+                .map(|(r, _)| *r)
+                .collect();
+            let k = overlapping.len();
+            let j = overlapping.iter().position(|&r| r == f).unwrap();
+            let mask = if k > 1 { vt.mask.split_value(j, k) } else { vt.mask };
+            outputs.push(g.add_vtensor(gpt, mask));
+        }
+        let bop = Op {
+            id: 0,
+            name: format!("{}.bw", fwd.name),
+            kind: fwd.kind.clone(),
+            inputs,
+            outputs,
+            flops: fwd.flops * BWD_FLOP_RATIO,
+            signature: None, // backward ops are never op-trans'ed directly
+            is_forward: false,
+            layer: fwd.layer,
+            microbatch: fwd.microbatch,
+            origin: Some(f),
+            recompute: false,
+            no_grad: false,
+        };
+        let bid = g.insert_op(bop);
+        bwd_of.insert(f, bid);
+    }
+    Autograd { bwd_of, grad_of }
+}
+
+fn ensure_grad(
+    g: &mut Graph,
+    grad_of: &mut HashMap<PTensorId, PTensorId>,
+    pt: PTensorId,
+) -> PTensorId {
+    if let Some(&gid) = grad_of.get(&pt) {
+        return gid;
+    }
+    let p = g.ptensor(pt).clone();
+    // Weight gradients persist until the optimizer step (TensorKind::
+    // Gradient, counted as static memory); activation gradients are
+    // transient like activations themselves.
+    let kind = if p.kind == TensorKind::Weight {
+        TensorKind::Gradient
+    } else {
+        TensorKind::Activation
+    };
+    let gid = g.add_ptensor(
+        &grad_name(&p.name),
+        &p.shape,
+        // Gradients accumulate in the activation dtype.
+        if p.dtype == DType::I32 { DType::F32 } else { p.dtype },
+        kind,
+    );
+    grad_of.insert(pt, gid);
+    gid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sig::sigs;
+    use crate::graph::{DType, Graph, OpKind, TensorKind};
+    use crate::trans::{op_trans, TransformAlgo};
+
+    /// x -> lin(w) -> y, plus an eagerly-created w.grad + optimizer op,
+    /// mirroring what the model builders do.
+    fn tiny_model() -> (Graph, OpId, PTensorId) {
+        let mut g = Graph::new();
+        let x = g.add_ptensor("x", &[4, 8, 16], DType::F32, TensorKind::Input);
+        let w = g.add_ptensor("w", &[16, 32], DType::F32, TensorKind::Weight);
+        let wg = g.add_ptensor("w.grad", &[16, 32], DType::F32, TensorKind::Gradient);
+        let y = g.add_ptensor("y", &[4, 8, 32], DType::F32, TensorKind::Activation);
+        let (xv, wv, yv) = (g.full_view(x), g.full_view(w), g.full_view(y));
+        let lin = g.add_op(
+            "lin",
+            OpKind::Matmul,
+            vec![xv, wv],
+            vec![yv],
+            1000.0,
+            Some(sigs::linear()),
+            true,
+            0,
+        );
+        // Optimizer consumes w.grad and updates w.
+        let (gv, wv2, wv3) = (g.full_view(wg), g.full_view(w), g.full_view(w));
+        g.add_op(
+            "opt.w",
+            OpKind::Optimizer,
+            vec![gv, wv2],
+            vec![wv3],
+            64.0,
+            Some(sigs::optimizer()),
+            false,
+            0,
+        );
+        (g, lin, wg)
+    }
+
+    #[test]
+    fn backward_mirrors_forward() {
+        let (mut g, lin, wg) = tiny_model();
+        let ag = complete(&mut g);
+        let b = ag.bwd_of[&lin];
+        let bop = g.op(b);
+        assert!(!bop.is_forward);
+        assert!((bop.flops - 2000.0).abs() < 1e-9);
+        // Outputs: grad x (skipped: Input has no grad? x is Input -> skipped)
+        // and grad w, which must target the *pre-existing* w.grad pTensor.
+        let out_pts: Vec<_> = bop.outputs.iter().map(|&v| g.vtensor(v).ptensor).collect();
+        assert_eq!(out_pts, vec![wg]);
+    }
+
+    #[test]
+    fn dp_transform_then_autograd_value_splits_weight_grad() {
+        // Data parallelism: split batch 4 ways, then autograd. The 4
+        // backward ops must each produce a value-partial of w.grad — this is
+        // what materialization later turns into an all-reduce.
+        let (mut g, lin, wg) = tiny_model();
+        let ids = op_trans(&mut g, lin, &TransformAlgo::split("b", 4)).unwrap();
+        let ag = complete(&mut g);
+        let mut parts = Vec::new();
+        for &f in &ids {
+            let b = ag.bwd_of[&f];
+            let gout = g
+                .op(b)
+                .outputs
+                .iter()
+                .map(|&v| g.vtensor(v).clone())
+                .find(|vt| vt.ptensor == wg)
+                .expect("w.grad output");
+            assert_eq!(gout.mask.vsplit.parts, 4, "grad must be a 4-way value split");
+            parts.push(gout.mask);
+        }
+        assert!(crate::graph::mask::tiles_full(&parts));
+    }
+
+    #[test]
+    fn tensor_parallel_grad_masks_mirror_weight_shards() {
+        // Split n (column parallel): each backward produces the grad of its
+        // own w column shard — spatially split, NOT value split.
+        let (mut g, lin, wg) = tiny_model();
+        let ids = op_trans(&mut g, lin, &TransformAlgo::split("n", 2)).unwrap();
+        let ag = complete(&mut g);
+        for (i, &f) in ids.iter().enumerate() {
+            let b = ag.bwd_of[&f];
+            let gout = g
+                .op(b)
+                .outputs
+                .iter()
+                .map(|&v| g.vtensor(v).clone())
+                .find(|vt| vt.ptensor == wg)
+                .unwrap();
+            assert!(gout.mask.vsplit.is_full());
+            assert_eq!(gout.mask.concrete(&[16, 32]), vec![(0, 16), (16 * i, 16 * (i + 1))]);
+        }
+    }
+
+    #[test]
+    fn activation_grads_created_on_demand() {
+        let (mut g, _lin, _) = tiny_model();
+        let n_pt = g.ptensors.len();
+        let ag = complete(&mut g);
+        // y.grad was created (x is Input -> no grad).
+        assert!(g.ptensors.len() > n_pt);
+        let y = g.ptensors.iter().find(|p| p.name == "y").unwrap().id;
+        let ygrad = ag.grad_of[&y];
+        assert_eq!(g.ptensor(ygrad).name, "y.grad");
+        // Activation gradient: transient like an activation.
+        assert_eq!(g.ptensor(ygrad).kind, TensorKind::Activation);
+    }
+
+    #[test]
+    fn backward_stashes_forward_inputs() {
+        // The backward op must read the fwd activations (chain rule), which
+        // is what keeps them alive in the memory model.
+        let (mut g, lin, _) = tiny_model();
+        let ag = complete(&mut g);
+        let b = ag.bwd_of[&lin];
+        let in_pts: Vec<String> = g
+            .op(b)
+            .inputs
+            .iter()
+            .map(|&v| g.ptensor_of(v).name.clone())
+            .collect();
+        assert!(in_pts.contains(&"y.grad".to_string()));
+        assert!(in_pts.contains(&"x".to_string()));
+        assert!(in_pts.contains(&"w".to_string()));
+    }
+}

@@ -1,0 +1,436 @@
+//! Phase 1 — operator transformation (`op-trans`, paper §3.1).
+//!
+//! `op_trans(graph, op, algo)` replaces one operator with a set of
+//! functionally equivalent operators, partitioning its *own* input/output
+//! vTensors (masks over the unchanged pTensors) and leaving every other
+//! operator untouched. Alignment between mismatched producer/consumer views
+//! is deferred to dependency materialization (phase 3).
+//!
+//! Transformation algorithms mirror the paper's sProgram vocabulary:
+//! * [`TransformAlgo::Split`] — `SplitAlgo(dim, n)`: partition along a named
+//!   dim of the op's signature. Splitting a *reduction* dim value-splits the
+//!   outputs (each new op produces an additive partial).
+//! * [`TransformAlgo::Replicate`] — `ReplicaAlgo(n)`: n identical copies.
+//!   Each copy's *outputs* are marked as value-partials scaled by 1/n where
+//!   the output is a gradient-like accumulation, or identical replicas for
+//!   pure reads; for simplicity replicas keep identical masks (replica
+//!   disambiguation happens in scheduling validation, paper §3.2).
+//!
+//! [`recompute`] implements the paper's recompute support (§5, Table 1):
+//! forward ops are duplicated (marked `recompute`) onto fresh "recomputed
+//! activation" pTensors and the backward consumers are rewired, so the
+//! original activations can be freed after the forward pass.
+
+pub mod autograd;
+
+use crate::graph::{mask::Mask, Graph, Op, OpId, OpKind, PTensorId, TensorKind, VTensorId};
+use std::collections::HashMap;
+
+/// A transformation algorithm for `op-trans` (the paper's `algo` argument).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransformAlgo {
+    /// Partition along the named signature dim into `parts` pieces.
+    Split { dim: String, parts: usize },
+    /// Replicate the operator `copies` times.
+    Replicate { copies: usize },
+}
+
+impl TransformAlgo {
+    pub fn split(dim: &str, parts: usize) -> TransformAlgo {
+        TransformAlgo::Split { dim: dim.to_string(), parts }
+    }
+    pub fn replicate(copies: usize) -> TransformAlgo {
+        TransformAlgo::Replicate { copies }
+    }
+}
+
+/// Errors surfaced to the sProgram author.
+#[derive(Debug, PartialEq)]
+pub enum TransError {
+    /// Op has no signature (structural/comm ops cannot be transformed).
+    NoSignature(OpId),
+    /// The signature has no such dim.
+    NoSuchDim { op: OpId, dim: String },
+    /// parts/copies must be >= 1.
+    BadFactor(usize),
+}
+
+impl std::fmt::Display for TransError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransError::NoSignature(op) => write!(f, "op {op} has no signature"),
+            TransError::NoSuchDim { op, dim } => {
+                write!(f, "op {op} has no dim '{dim}'")
+            }
+            TransError::BadFactor(n) => write!(f, "bad split factor {n}"),
+        }
+    }
+}
+impl std::error::Error for TransError {}
+
+/// Apply `algo` to `op`, returning the new op ids (paper's
+/// `op-trans(op, algo)`). The original op is tombstoned.
+pub fn op_trans(g: &mut Graph, op: OpId, algo: &TransformAlgo) -> Result<Vec<OpId>, TransError> {
+    match algo {
+        TransformAlgo::Split { dim, parts } => split_op(g, op, dim, *parts),
+        TransformAlgo::Replicate { copies } => replicate_op(g, op, *copies),
+    }
+}
+
+fn split_op(g: &mut Graph, op_id: OpId, dim: &str, parts: usize) -> Result<Vec<OpId>, TransError> {
+    if parts == 0 {
+        return Err(TransError::BadFactor(parts));
+    }
+    {
+        let op = g.op(op_id);
+        let sig = op.signature.as_ref().ok_or(TransError::NoSignature(op_id))?;
+        if !sig.can_split(dim) && !sig.is_reduce(dim) {
+            return Err(TransError::NoSuchDim { op: op_id, dim: dim.to_string() });
+        }
+    }
+    if parts == 1 {
+        return Ok(vec![op_id]); // trivial split
+    }
+    let old = g.remove_op(op_id);
+    let sig = old.signature.clone().unwrap();
+    let is_reduce = sig.is_reduce(dim);
+    let is_batch = sig.batch.as_deref() == Some(dim);
+    let mut new_ids = Vec::with_capacity(parts);
+    for i in 0..parts {
+        // Inputs: slice where the dim appears, replicate (same mask) where not.
+        let inputs: Vec<VTensorId> = old
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(t, &v)| {
+                let vt = g.vtensor(v).clone();
+                let mask = match sig.input_axis(t, dim) {
+                    Some(axis) => vt.mask.split_dim(axis, i, parts),
+                    None => vt.mask.clone(),
+                };
+                g.add_vtensor(vt.ptensor, mask)
+            })
+            .collect();
+        // Outputs: slice where the dim appears; value-split if contracted.
+        let outputs: Vec<VTensorId> = old
+            .outputs
+            .iter()
+            .enumerate()
+            .map(|(t, &v)| {
+                let vt = g.vtensor(v).clone();
+                let mask = match sig.output_axis(t, dim) {
+                    Some(axis) => vt.mask.split_dim(axis, i, parts),
+                    None if is_reduce => vt.mask.split_value(i, parts),
+                    None => vt.mask.clone(),
+                };
+                g.add_vtensor(vt.ptensor, mask)
+            })
+            .collect();
+        let mut op = Op {
+            id: 0,
+            name: format!("{}/{dim}{i}", old.name),
+            kind: old.kind.clone(),
+            inputs,
+            outputs,
+            flops: old.flops / parts as f64,
+            signature: old.signature.clone(),
+            is_forward: old.is_forward,
+            layer: old.layer,
+            microbatch: old.microbatch,
+            origin: Some(old.origin.unwrap_or(old.id)),
+            recompute: old.recompute,
+            no_grad: old.no_grad,
+        };
+        if is_batch {
+            // Track micro-batch identity through (possibly nested) batch
+            // splits: piece i of a previously-tagged micro-batch m becomes
+            // micro-batch m*parts + i.
+            op.microbatch = Some(old.microbatch.unwrap_or(0) * parts + i);
+        }
+        new_ids.push(g.insert_op(op));
+    }
+    Ok(new_ids)
+}
+
+fn replicate_op(g: &mut Graph, op_id: OpId, copies: usize) -> Result<Vec<OpId>, TransError> {
+    if copies == 0 {
+        return Err(TransError::BadFactor(copies));
+    }
+    if copies == 1 {
+        return Ok(vec![op_id]);
+    }
+    let old = g.remove_op(op_id);
+    let mut new_ids = Vec::with_capacity(copies);
+    for i in 0..copies {
+        let inputs: Vec<VTensorId> = old
+            .inputs
+            .iter()
+            .map(|&v| {
+                let vt = g.vtensor(v).clone();
+                g.add_vtensor(vt.ptensor, vt.mask)
+            })
+            .collect();
+        let outputs: Vec<VTensorId> = old
+            .outputs
+            .iter()
+            .map(|&v| {
+                let vt = g.vtensor(v).clone();
+                g.add_vtensor(vt.ptensor, vt.mask)
+            })
+            .collect();
+        let mut op = old.clone();
+        op.id = 0;
+        op.name = format!("{}@r{i}", old.name);
+        op.inputs = inputs;
+        op.outputs = outputs;
+        op.origin = Some(old.origin.unwrap_or(old.id));
+        new_ids.push(g.insert_op(op));
+    }
+    Ok(new_ids)
+}
+
+/// Recompute (paper §5, Table 1 "Recompute"): duplicate the given forward
+/// ops as recompute twins writing to fresh recomputed-activation pTensors,
+/// and rewire backward ops to read the recomputed copies. Returns the new
+/// recompute op ids. `bwd_ops` is the set of backward ops whose inputs
+/// should be rewired (typically all ops with `!is_forward`).
+pub fn recompute(g: &mut Graph, fwd_ops: &[OpId], bwd_ops: &[OpId]) -> Vec<OpId> {
+    // Map each activation pTensor produced by a recomputed fwd op to its
+    // recomputed twin pTensor.
+    let mut twin: HashMap<PTensorId, PTensorId> = HashMap::new();
+    let mut new_ids = Vec::new();
+    for &f in fwd_ops {
+        let old = g.op(f).clone();
+        assert!(old.is_forward, "recompute() takes forward ops");
+        // Duplicate outputs onto twin pTensors.
+        let outputs: Vec<VTensorId> = old
+            .outputs
+            .iter()
+            .map(|&v| {
+                let vt = g.vtensor(v).clone();
+                let pt = g.ptensor(vt.ptensor).clone();
+                let tid = *twin.entry(vt.ptensor).or_insert_with(|| {
+                    g.add_ptensor(
+                        &format!("{}.rc", pt.name),
+                        &pt.shape,
+                        pt.dtype,
+                        TensorKind::Activation,
+                    )
+                });
+                g.add_vtensor(tid, vt.mask)
+            })
+            .collect();
+        // Inputs: read recomputed twins where available (chained recompute),
+        // otherwise the original pTensor (e.g. the layer boundary input,
+        // which *is* stashed).
+        let inputs: Vec<VTensorId> = old
+            .inputs
+            .iter()
+            .map(|&v| {
+                let vt = g.vtensor(v).clone();
+                let pt = twin.get(&vt.ptensor).copied().unwrap_or(vt.ptensor);
+                g.add_vtensor(pt, vt.mask)
+            })
+            .collect();
+        let mut op = old.clone();
+        op.id = 0;
+        op.name = format!("{}.rc", old.name);
+        op.inputs = inputs;
+        op.outputs = outputs;
+        op.recompute = true;
+        op.origin = Some(old.origin.unwrap_or(old.id));
+        new_ids.push(g.insert_op(op));
+    }
+    // Rewire backward readers of recomputed activations to the twins.
+    for &b in bwd_ops {
+        let op_inputs = g.op(b).inputs.clone();
+        for (slot, v) in op_inputs.into_iter().enumerate() {
+            let vt = g.vtensor(v).clone();
+            if let Some(&tid) = twin.get(&vt.ptensor) {
+                let nv = g.add_vtensor(tid, vt.mask);
+                g.op_mut(b).inputs[slot] = nv;
+            }
+        }
+    }
+    new_ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sig::sigs;
+    use crate::graph::{DType, Graph, OpKind, TensorKind};
+
+    /// x[4,8,16] @ w[16,32] -> y[4,8,32]
+    fn linear_graph() -> (Graph, OpId) {
+        let mut g = Graph::new();
+        let x = g.add_ptensor("x", &[4, 8, 16], DType::F32, TensorKind::Input);
+        let w = g.add_ptensor("w", &[16, 32], DType::F32, TensorKind::Weight);
+        let y = g.add_ptensor("y", &[4, 8, 32], DType::F32, TensorKind::Activation);
+        let xv = g.full_view(x);
+        let wv = g.full_view(w);
+        let yv = g.full_view(y);
+        let op = g.add_op(
+            "lin",
+            OpKind::Matmul,
+            vec![xv, wv],
+            vec![yv],
+            2.0 * 4.0 * 8.0 * 16.0 * 32.0,
+            Some(sigs::linear()),
+            true,
+            0,
+        );
+        (g, op)
+    }
+
+    #[test]
+    fn split_batch_dim_slices_x_and_y_replicates_w() {
+        let (mut g, op) = linear_graph();
+        let ids = op_trans(&mut g, op, &TransformAlgo::split("b", 4)).unwrap();
+        assert_eq!(ids.len(), 4);
+        for (i, &id) in ids.iter().enumerate() {
+            let o = g.op(id);
+            assert_eq!(g.vtensor_shape(o.inputs[0]), vec![1, 8, 16]); // x sliced
+            assert_eq!(g.vtensor_shape(o.inputs[1]), vec![16, 32]); // w replicated
+            assert_eq!(g.vtensor_shape(o.outputs[0]), vec![1, 8, 32]); // y sliced
+            assert_eq!(o.microbatch, Some(i));
+            assert!(g.vtensor(o.outputs[0]).mask.vsplit.is_full());
+        }
+        // FLOPs conserved.
+        assert!((g.total_flops() - 2.0 * 4.0 * 8.0 * 16.0 * 32.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn split_reduce_dim_value_splits_output() {
+        let (mut g, op) = linear_graph();
+        let ids = op_trans(&mut g, op, &TransformAlgo::split("k", 2)).unwrap();
+        for (i, &id) in ids.iter().enumerate() {
+            let o = g.op(id);
+            assert_eq!(g.vtensor_shape(o.inputs[0]), vec![4, 8, 8]); // x k-sliced
+            assert_eq!(g.vtensor_shape(o.inputs[1]), vec![8, 32]); // w k-sliced
+            let om = &g.vtensor(o.outputs[0]).mask;
+            assert_eq!(g.vtensor_shape(o.outputs[0]), vec![4, 8, 32]); // full spatial
+            assert_eq!(om.vsplit.parts, 2); // but a value partial
+            assert_eq!(om.vsplit.index, i as u32);
+        }
+    }
+
+    #[test]
+    fn split_output_dim_tensor_parallel_style() {
+        // Megatron column parallelism: split n.
+        let (mut g, op) = linear_graph();
+        let ids = op_trans(&mut g, op, &TransformAlgo::split("n", 2)).unwrap();
+        for &id in &ids {
+            let o = g.op(id);
+            assert_eq!(g.vtensor_shape(o.inputs[0]), vec![4, 8, 16]); // x replicated
+            assert_eq!(g.vtensor_shape(o.inputs[1]), vec![16, 16]); // w col-sliced
+            assert_eq!(g.vtensor_shape(o.outputs[0]), vec![4, 8, 16]); // y col-sliced
+        }
+    }
+
+    #[test]
+    fn nested_splits_compose() {
+        // Fig. 6: split twice; masks compose exactly.
+        let (mut g, op) = linear_graph();
+        let ids = op_trans(&mut g, op, &TransformAlgo::split("b", 2)).unwrap();
+        let ids2 = op_trans(&mut g, ids[0], &TransformAlgo::split("n", 2)).unwrap();
+        let o = g.op(ids2[1]);
+        assert_eq!(g.vtensor_shape(o.outputs[0]), vec![2, 8, 16]);
+        let c = g
+            .vtensor(o.outputs[0])
+            .mask
+            .concrete(&[4, 8, 32]);
+        assert_eq!(c, vec![(0, 2), (0, 8), (16, 32)]);
+    }
+
+    #[test]
+    fn replicate_makes_identical_views() {
+        let (mut g, op) = linear_graph();
+        let ids = op_trans(&mut g, op, &TransformAlgo::replicate(3)).unwrap();
+        assert_eq!(ids.len(), 3);
+        let m0 = g.vtensor(g.op(ids[0]).outputs[0]).mask.clone();
+        for &id in &ids[1..] {
+            assert_eq!(g.vtensor(g.op(id).outputs[0]).mask, m0);
+        }
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        let (mut g, op) = linear_graph();
+        assert_eq!(
+            op_trans(&mut g, op, &TransformAlgo::split("zz", 2)),
+            Err(TransError::NoSuchDim { op, dim: "zz".into() })
+        );
+        assert_eq!(
+            op_trans(&mut g, op, &TransformAlgo::split("b", 0)),
+            Err(TransError::BadFactor(0))
+        );
+        // op still alive after failed trans
+        assert!(g.contains_op(op));
+    }
+
+    #[test]
+    fn trivial_split_is_identity() {
+        let (mut g, op) = linear_graph();
+        let ids = op_trans(&mut g, op, &TransformAlgo::split("b", 1)).unwrap();
+        assert_eq!(ids, vec![op]);
+        assert!(g.contains_op(op));
+    }
+
+    #[test]
+    fn prop_split_preserves_flops_and_tiles_output() {
+        crate::util::prop::check("op-trans-conservation", 100, |gen| {
+            let (mut g, op) = linear_graph();
+            let dims = ["b", "m", "k", "n"];
+            let dim = dims[gen.int(0, 4)];
+            let parts = gen.int(2, 5);
+            let total = g.total_flops();
+            let ids = op_trans(&mut g, op, &TransformAlgo::split(dim, parts)).unwrap();
+            if (g.total_flops() - total).abs() > 1e-6 * total {
+                return Err(format!("flops changed for dim {dim} x{parts}"));
+            }
+            let masks: Vec<_> = ids
+                .iter()
+                .map(|&i| g.vtensor(g.op(i).outputs[0]).mask.clone())
+                .collect();
+            if !crate::graph::mask::tiles_full(&masks) {
+                return Err(format!("outputs of split {dim} x{parts} don't tile"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recompute_duplicates_and_rewires() {
+        // fwd: x -> A -> t -> B -> y ; bwd consumes t.
+        let mut g = Graph::new();
+        let x = g.add_ptensor("x", &[4], DType::F32, TensorKind::Input);
+        let t = g.add_ptensor("t", &[4], DType::F32, TensorKind::Activation);
+        let y = g.add_ptensor("y", &[4], DType::F32, TensorKind::Activation);
+        let gy = g.add_ptensor("gy", &[4], DType::F32, TensorKind::Gradient);
+        let gx = g.add_ptensor("gx", &[4], DType::F32, TensorKind::Gradient);
+        let (xv, t_o) = (g.full_view(x), g.full_view(t));
+        let a = g.add_op("A", OpKind::Identity, vec![xv], vec![t_o], 4.0, None, true, 0);
+        let (t_i, yv) = (g.full_view(t), g.full_view(y));
+        let b = g.add_op("B", OpKind::Identity, vec![t_i], vec![yv], 4.0, None, true, 0);
+        let (gyv, t_i2, gxv) = (g.full_view(gy), g.full_view(t), g.full_view(gx));
+        let bw = g.add_op("B.bw", OpKind::Identity, vec![gyv, t_i2], vec![gxv], 8.0, None, false, 0);
+        let _ = b;
+        let rc = recompute(&mut g, &[a], &[bw]);
+        assert_eq!(rc.len(), 1);
+        let rc_op = g.op(rc[0]);
+        assert!(rc_op.recompute);
+        // Recompute writes a twin pTensor named t.rc…
+        let twin_pt = g.vtensor(rc_op.outputs[0]).ptensor;
+        assert_eq!(g.ptensor(twin_pt).name, "t.rc");
+        // …and backward now reads the twin, not the original t.
+        let bw_in_pts: Vec<_> = g
+            .op(bw)
+            .inputs
+            .iter()
+            .map(|&v| g.vtensor(v).ptensor)
+            .collect();
+        assert!(bw_in_pts.contains(&twin_pt));
+        assert!(!bw_in_pts.contains(&t));
+    }
+}

@@ -1,0 +1,121 @@
+//! Flag-style CLI parsing (`--key value`, `--flag`, positional args).
+//! Shared by the main binary, examples, and every bench harness.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]). `--key value` and
+    /// `--key=value` both work; a `--key` followed by another `--...` or
+    /// end-of-args is a boolean flag stored as `"true"`.
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        out.flags.insert(body.to_string(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(body.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = args(&["--devices", "8", "--plan", "coshard"]);
+        assert_eq!(a.usize("devices", 1), 8);
+        assert_eq!(a.str("plan", "dp"), "coshard");
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = args(&["--devices=16"]);
+        assert_eq!(a.usize("devices", 1), 16);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = args(&["--verbose", "--out", "x.csv"]);
+        assert!(a.bool("verbose", false));
+        assert!(!a.bool("quiet", false));
+        assert_eq!(a.str("out", ""), "x.csv");
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = args(&["run", "--n", "3", "extra"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.usize("n", 0), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.usize("x", 7), 7);
+        assert_eq!(a.f64("y", 2.5), 2.5);
+        assert!(a.bool("z", true));
+    }
+}

@@ -1,0 +1,99 @@
+//! Self-contained utilities: the offline vendor set has no tokio / clap /
+//! serde / criterion / proptest, so the pieces of those we need are
+//! implemented here and exercised across the stack.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+/// Greatest common divisor (Euclid). `gcd(0, n) == n`.
+pub fn gcd(a: u64, b: u64) -> u64 {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Least common multiple; panics on overflow in debug builds.
+pub fn lcm(a: u64, b: u64) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    a / gcd(a, b) * b
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+/// Human-readable byte count (GiB/MiB/KiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const G: f64 = (1u64 << 30) as f64;
+    const M: f64 = (1u64 << 20) as f64;
+    const K: f64 = (1u64 << 10) as f64;
+    let b = b as f64;
+    if b >= G {
+        format!("{:.2} GiB", b / G)
+    } else if b >= M {
+        format!("{:.2} MiB", b / M)
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Human-readable duration from seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_lcm_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(0, 7), 7);
+        assert_eq!(gcd(7, 0), 7);
+        assert_eq!(gcd(1, 1), 1);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(0, 5), 0);
+    }
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 8), 1);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+        assert_eq!(fmt_bytes(5 << 30), "5.00 GiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0021), "2.100 ms");
+        assert_eq!(fmt_secs(0.0000021), "2.1 us");
+    }
+}

@@ -1,0 +1,118 @@
+//! Tiny scoped thread pool. The real executor ([`crate::exec`]) runs one
+//! worker per simulated device; benches use `par_map` to sweep
+//! configurations. Built on `std::thread::scope` — no external async
+//! runtime is available offline, and a blocking pool is the right shape for
+//! a BSP-style training loop anyway.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Run `f(i)` for `i in 0..n` on up to `workers` OS threads, collecting
+/// results in order. Panics in a task propagate to the caller.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, workers: usize, f: F) -> Vec<T> {
+    assert!(workers > 0);
+    let workers = workers.min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    for (i, slot) in slots.into_iter().enumerate() {
+        out[i] = slot.into_inner().unwrap();
+    }
+    out.into_iter().map(|o| o.expect("task did not run")).collect()
+}
+
+/// A reusable barrier for N participants (std::sync::Barrier exists, but we
+/// also need a *sense-reversing* variant that returns a monotonically
+/// increasing generation, used by the executor's collective engine to match
+/// concurrent collective calls to the right round).
+pub struct GenBarrier {
+    n: usize,
+    state: Mutex<(usize, u64)>, // (arrived, generation)
+    cv: Condvar,
+}
+
+impl GenBarrier {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(GenBarrier {
+            n,
+            state: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Block until all `n` participants arrive. Returns the generation index
+    /// of the completed round; exactly one caller per round gets
+    /// `leader = true`.
+    pub fn wait(&self) -> (u64, bool) {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.1;
+        st.0 += 1;
+        if st.0 == self.n {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+            (gen, true)
+        } else {
+            while st.1 == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+            (gen, false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_results_in_order() {
+        let v = par_map(100, 8, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_worker() {
+        assert_eq!(par_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let v: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn barrier_rounds_have_one_leader() {
+        let b = GenBarrier::new(4);
+        let leaders = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let b = b.clone();
+                let leaders = leaders.clone();
+                s.spawn(move || {
+                    for round in 0..50u64 {
+                        let (gen, lead) = b.wait();
+                        assert_eq!(gen, round);
+                        if lead {
+                            leaders.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(Ordering::Relaxed), 50);
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal property-testing harness (proptest is not in the offline vendor
+//! set). A property is a closure over a [`crate::util::rng::Rng`]-driven
+//! `Gen`; `check` runs it many times with distinct seeds and, on failure,
+//! reports the failing seed so the case can be replayed deterministically.
+//!
+//! Used by the coordinator invariants: mask algebra, scheduling validation
+//! (cycle detection / topo completion), RVD search, and simulator
+//! conservation laws.
+
+use crate::util::rng::Rng;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi)`.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// A "reasonable" dimension size, biased toward small values but
+    /// occasionally large — good at shaking out off-by-one splits.
+    pub fn dim(&mut self) -> usize {
+        match self.rng.below(4) {
+            0 => self.int(1, 8),
+            1 => self.int(8, 64),
+            2 => self.int(64, 512),
+            _ => self.int(512, 4096),
+        }
+    }
+
+    /// A divisor of `n` (uniform over divisors).
+    pub fn divisor_of(&mut self, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        *self.rng.choose(&divs)
+    }
+
+    /// Power of two in `[1, max]`.
+    pub fn pow2(&mut self, max: usize) -> usize {
+        let maxexp = (usize::BITS - 1 - max.leading_zeros()) as usize;
+        1 << self.int(0, maxexp + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_in(lo, hi)
+    }
+
+    /// Vector of length in `[0, max_len)` built by `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.int(0, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics with the failing seed on the
+/// first property violation (properties signal failure via `Err(msg)`).
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    // Base seed can be overridden for replay: SUPERSCALER_PROP_SEED=<n>.
+    let base: u64 = std::env::var("SUPERSCALER_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5c41e7_u64);
+    let replay = std::env::var("SUPERSCALER_PROP_SEED").is_ok();
+    let n = if replay { 1 } else { cases };
+    for case in 0..n {
+        let seed = base.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut gen = Gen {
+            rng: Rng::new(seed),
+            size: case,
+        };
+        if let Err(msg) = prop(&mut gen) {
+            panic!(
+                "property '{name}' failed on case {case}: {msg}\n  replay with SUPERSCALER_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 100, |g| {
+            let a = g.int(0, 1000);
+            let b = g.int(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn divisor_divides() {
+        check("divisor", 200, |g| {
+            let n = g.int(1, 400);
+            let d = g.divisor_of(n);
+            if n % d == 0 {
+                Ok(())
+            } else {
+                Err(format!("{d} does not divide {n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn pow2_is_power_of_two() {
+        check("pow2", 100, |g| {
+            let p = g.pow2(64);
+            if p.is_power_of_two() && p <= 64 {
+                Ok(())
+            } else {
+                Err(format!("{p}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! Aligned console tables + CSV output for the bench harnesses. Every bench
+//! prints the same rows/series the paper's figure or table reports, and
+//! mirrors them to a CSV so results can be plotted.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table with a title.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: ToString, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let r: Vec<String> = cells.into_iter().map(|c| c.to_string()).collect();
+        assert_eq!(
+            r.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(r);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}", c, w = widths[i] + 2);
+                let _ = i; // keep clippy quiet about last-pad
+            }
+            out.push('\n');
+        };
+        line(&self.header, &mut out);
+        let total: usize = widths.iter().map(|w| w + 2).sum::<usize>().max(4);
+        let _ = writeln!(out, "{}", "-".repeat(total.min(120)));
+        for r in &self.rows {
+            line(r, &mut out);
+        }
+        let _ = ncol;
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Write the table as CSV (header + rows). Creates parent dirs.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", csv_row(&self.header))?;
+        for r in &self.rows {
+            writeln!(f, "{}", csv_row(r))?;
+        }
+        Ok(())
+    }
+}
+
+fn csv_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Wall-clock timing helper for the bench harnesses: runs `f` `warmup+iters`
+/// times, returns (mean_secs, min_secs) over the measured iterations.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut total = 0.0;
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        best = best.min(dt);
+    }
+    (total / iters.max(1) as f64, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(["a", "1"]);
+        t.row(["longer-name", "2.5"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("longer-name"));
+        // Both data rows start the value column at the same offset.
+        let lines: Vec<&str> = s.lines().collect();
+        let col = lines[1].find("value").unwrap();
+        assert_eq!(lines[3].find('1').unwrap(), col);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(
+            csv_row(&["a,b".into(), "c\"d".into(), "e".into()]),
+            "\"a,b\",\"c\"\"d\",e"
+        );
+    }
+
+    #[test]
+    fn csv_roundtrip_to_disk() {
+        let mut t = Table::new("t", &["k", "v"]);
+        t.row(["x", "1"]);
+        let p = std::env::temp_dir().join("superscaler_table_test.csv");
+        t.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "k,v\nx,1\n");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn time_it_positive() {
+        let (mean, best) = time_it(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(mean >= best && best >= 0.0);
+    }
+}
