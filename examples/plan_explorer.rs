@@ -1,18 +1,17 @@
-//! Plan explorer: sweep every applicable sProgram over one model and
-//! cluster size — the "which plan should I use?" workflow a SuperScaler
-//! user actually runs.
+//! Plan explorer: the "which plan should I use?" workflow, now powered by
+//! the search engine — enumerate every applicable sProgram's feasible
+//! `PlanSpec` grid for one model + cluster size, evaluate all candidates in
+//! parallel, and print the ranking (best iteration time first).
 //!
 //! ```text
 //! cargo run --release --example plan_explorer -- --model mbart --gpus 8
+//! cargo run --release --example plan_explorer -- --model gpt3 --gpus 8 --top 5
 //! ```
 
-use superscaler::materialize::CommMode;
+use superscaler::cost::Cluster;
 use superscaler::models;
-use superscaler::plans::*;
+use superscaler::search::{self, SearchConfig};
 use superscaler::util::cli::Args;
-use superscaler::util::table::Table;
-use superscaler::util::{fmt_bytes, fmt_secs};
-use superscaler::{cost::Cluster, sim};
 
 fn main() {
     let args = Args::parse_env();
@@ -20,60 +19,33 @@ fn main() {
     let name = args.str("model", "gpt3").to_string();
     let scale = args.usize("scale", 0);
     let batch = args.usize("batch", 16);
-    let k = args.usize("micro", 4);
+    let top = args.usize("top", 0);
+    if args.has("micro") {
+        eprintln!("note: --micro is ignored; the search grid sweeps micro-batch counts itself");
+    }
     let cluster = Cluster::v100(gpus);
 
-    let build = |name: &str| -> models::Model {
-        match name {
+    let build = || -> models::Model {
+        match name.as_str() {
             "gpt3" => models::gpt3(scale, batch, 2048),
             "swin" => models::swin_transformer(scale, batch, 1536),
             "mbart" => models::mbart(scale, batch, 1024),
             "alphafold2" => models::alphafold2(scale, batch),
-            _ => panic!("unknown model"),
+            other => panic!("unknown model '{other}'"),
         }
     };
 
-    let mut candidates: Vec<(&str, PlanResult)> = vec![
-        ("dp", data_parallel(build(&name), gpus)),
-        ("tp", megatron(build(&name), 1, 1, gpus, 1, PipeOrder::OneFOneB)),
-        ("1f1b", megatron(build(&name), 1, gpus, 1, k, PipeOrder::OneFOneB)),
-        ("gpipe", megatron(build(&name), 1, gpus, 1, k, PipeOrder::GPipe)),
-        ("zero3", zero3(build(&name), gpus, false)),
-        ("zero3-offload", zero3(build(&name), gpus, true)),
-        ("coshard", coshard(build(&name), gpus, 4, None)),
-    ];
-    if name == "mbart" {
-        candidates.push(("interlaced", interlaced_pipeline(build(&name), gpus, k, true, false)));
-    }
-    if name == "alphafold2" {
-        candidates.push(("3f1b", pipeline_3f1b(build(&name), gpus, k)));
-        candidates.push(("dap+dp", dap_dp(build(&name), gpus, 1)));
-    }
-
-    let mut t = Table::new(
-        &format!("{name} scale{scale} on {gpus} GPUs (batch {batch}, {k} micro-batches)"),
-        &["plan", "iteration", "TFLOPS", "comm", "peak mem", "bubble%", "status"],
-    );
-    for (label, built) in candidates {
-        match built {
-            Err(e) => t.row([label.to_string(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), format!("invalid: {e}")]),
-            Ok(out) => match sim::run(&out.graph, &out.schedule, &cluster, CommMode::InterRvd) {
-                Err(e) => t.row([label.to_string(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), format!("deadlock: {e}")]),
-                Ok(r) => {
-                    let (_, _, bub) = r.breakdown();
-                    t.row([
-                        label.to_string(),
-                        fmt_secs(r.makespan),
-                        format!("{:.1}", r.aggregate_tflops),
-                        fmt_bytes(r.comm_bytes),
-                        fmt_bytes(r.max_peak_mem()),
-                        format!("{:.0}%", 100.0 * bub / r.makespan.max(1e-12)),
-                        if r.oom { "OOM".into() } else { "ok".to_string() },
-                    ]);
-                }
-            },
-        }
-    }
+    let cfg = SearchConfig {
+        workers: args.usize("workers", 0),
+        ..SearchConfig::default()
+    };
+    let report = search::search(build, &cluster, &cfg);
+    let t = report.to_table(top);
     t.print();
     t.write_csv("bench_results/plan_explorer.csv").ok();
+    if let Some(best) = report.best() {
+        println!("best plan: {} ({})", best.plan_name, best.spec);
+    } else {
+        println!("no feasible plan completed without OOM/deadlock");
+    }
 }

@@ -5,6 +5,9 @@
 //! {4, 8, 16, 32}. Global batch 512 (128 for AlphaFold2), as in §6.2.
 //! OOM configurations print `x` like the paper's figures.
 //!
+//! Every plan is built through `plans::registry` from a declarative
+//! `PlanSpec` — the same path the CLI and the search engine use.
+//!
 //! ```text
 //! cargo bench --bench fig12_e2e                # all four subfigures
 //! cargo bench --bench fig12_e2e -- --model swin --quick
@@ -28,6 +31,30 @@ fn tflops(out: &PlanOutput, gpus: usize) -> String {
 
 fn fail(e: impl std::fmt::Display) -> String {
     format!("x ({e})")
+}
+
+/// Megatron-grid spec shorthand.
+fn mspec(dp: usize, pp: usize, tp: usize, k: usize) -> PlanSpec {
+    PlanSpec { dp, pp, tp, micro: k, ..PlanSpec::new(PlanKind::Megatron) }
+}
+
+/// SuperScaler's co-shard configuration for the weak-scaling rows:
+/// co-shard heads 8 ways + ZeRO-style optimizer sharding across the DP
+/// group (how the large points fit in 32 GB).
+fn cspec(gpus: usize) -> PlanSpec {
+    PlanSpec { dp: gpus, shards: 8, zero_shard: true, ..PlanSpec::new(PlanKind::Coshard) }
+}
+
+/// ZeRO-3 spec + registry name, offload optional.
+fn zspec(gpus: usize, offload: bool) -> (&'static str, PlanSpec) {
+    if offload {
+        (
+            "zero3-offload",
+            PlanSpec { dp: gpus, offload: true, ..PlanSpec::new(PlanKind::Zero3Offload) },
+        )
+    } else {
+        ("zero3", PlanSpec { dp: gpus, ..PlanSpec::new(PlanKind::Zero3) })
+    }
 }
 
 fn main() {
@@ -66,13 +93,16 @@ fn main() {
             let mk = || models::swin_transformer(i, batch, 512);
             let params = format!("{:.1}B", mk().num_params() as f64 / 1e9);
             // SuperScaler: co-shard heads + sharded optimizer state (DP across all).
-            let ss = coshard_opt(mk(), gpus, 8, None, true).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
-            // Megatron: tensor parallelism wide enough to fit (paper: 16/32-way at scale).
-            let tp = gpus.min(8 * (i + 1));
-            let mg = megatron(mk(), gpus / tp, 1, tp, k, PipeOrder::OneFOneB)
+            let ss = registry::build("coshard", mk(), &cspec(gpus))
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
-            let zr = zero3(mk(), gpus, i >= 2).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            // Megatron: tensor parallelism wide enough to fit (paper: 16/32-way at scale).
+            let tp = gpus.min(8 * (i + 1));
+            let mg = registry::build("megatron", mk(), &mspec(gpus / tp, 1, tp, k))
+                .map(|o| tflops(&o, gpus))
+                .unwrap_or_else(fail);
+            let (zn, zs) = zspec(gpus, i >= 2);
+            let zr = registry::build(zn, mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
             t.row([gpus.to_string(), params, ss, mg, zr]);
         }
         t.print();
@@ -92,10 +122,13 @@ fn main() {
             let seq = 16384;
             let mk = || models::gpt3(i, batch, seq);
             let params = format!("{:.1}B", mk().num_params() as f64 / 1e9);
-            let ss = coshard_opt(mk(), gpus, 8, None, true).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let ss = registry::build("coshard", mk(), &cspec(gpus))
+                .map(|o| tflops(&o, gpus))
+                .unwrap_or_else(fail);
             let tp = gpus.min(16);
-            let mg = megatron(mk(), (gpus / tp).max(1), 1, tp, k, PipeOrder::OneFOneB)
-                .map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let mg = registry::build("megatron", mk(), &mspec((gpus / tp).max(1), 1, tp, k))
+                .map(|o| tflops(&o, gpus))
+                .unwrap_or_else(fail);
             // Alpa-like: stage-wise search approximated by the best of a few
             // (dp, pp, tp) grids.
             let alpa = ["a", "b", "c"]
@@ -110,7 +143,7 @@ fn main() {
                     if dp * pp * tp != gpus {
                         return None;
                     }
-                    megatron(mk(), dp, pp, tp, k, PipeOrder::OneFOneB).ok().map(|o| {
+                    registry::build("megatron", mk(), &mspec(dp, pp, tp, k)).ok().map(|o| {
                         let c = Cluster::v100(gpus);
                         sim::run(&o.graph, &o.schedule, &c, CommMode::InterRvd)
                             .ok()
@@ -121,7 +154,8 @@ fn main() {
                 })
                 .fold(0.0f64, f64::max);
             let alpa = if alpa > 0.0 { format!("{alpa:.0}") } else { "x (OOM)".into() };
-            let zr = zero3(mk(), gpus, i >= 3).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let (zn, zs) = zspec(gpus, i >= 3);
+            let zr = registry::build(zn, mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
             t.row([gpus.to_string(), params, ss, mg, alpa, zr]);
         }
         t.print();
@@ -138,12 +172,21 @@ fn main() {
             let batch = 2 * gpus; // micro-batch 2/device, grad-accumulated
             let mk = || models::mbart(i, batch, 1024);
             let params = format!("{:.1}B", mk().num_params() as f64 / 1e9);
-            let ss = interlaced_pipeline(mk(), gpus, k, true, false)
-                .map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let il_spec = PlanSpec {
+                pp: gpus,
+                micro: k,
+                recompute: true,
+                ..PlanSpec::new(PlanKind::Interlaced)
+            };
+            let ss = registry::build("interlaced", mk(), &il_spec)
+                .map(|o| tflops(&o, gpus))
+                .unwrap_or_else(fail);
             let tp = gpus.min(16);
-            let mg = megatron(mk(), (gpus / tp).max(1), 1, tp, k, PipeOrder::OneFOneB)
-                .map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
-            let zr = zero3(mk(), gpus, true).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let mg = registry::build("megatron", mk(), &mspec((gpus / tp).max(1), 1, tp, k))
+                .map(|o| tflops(&o, gpus))
+                .unwrap_or_else(fail);
+            let (zn, zs) = zspec(gpus, true);
+            let zr = registry::build(zn, mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
             t.row([gpus.to_string(), params, ss, mg, zr]);
         }
         t.print();
@@ -162,13 +205,18 @@ fn main() {
             let batch = gpus; // per-device micro-batch 1, grad-accumulated
             let mk = || models::alphafold2(i, batch);
             let params = format!("{:.2}B", mk().num_params() as f64 / 1e9);
-            let ss = pipeline_3f1b(mk(), gpus, k)
+            let f3_spec = PlanSpec { pp: gpus, micro: k, ..PlanSpec::new(PlanKind::ThreeFOneB) };
+            let ss = registry::build("3f1b", mk(), &f3_spec)
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             let dap_ways = gpus.min(4 << i.min(3));
             let dp_ways = (gpus / dap_ways).max(1);
-            let dap = dap_dp(mk(), dap_ways, dp_ways).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
-            let zr = zero3(mk(), gpus, false).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let dap_spec = PlanSpec { dp: dp_ways, tp: dap_ways, ..PlanSpec::new(PlanKind::Dap) };
+            let dap = registry::build("dap", mk(), &dap_spec)
+                .map(|o| tflops(&o, gpus))
+                .unwrap_or_else(fail);
+            let (zn, zs) = zspec(gpus, false);
+            let zr = registry::build(zn, mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
             t.row([gpus.to_string(), params, ss, dap, zr]);
         }
         t.print();

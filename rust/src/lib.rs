@@ -22,6 +22,20 @@
 //!   thread running AOT-compiled JAX/Pallas artifacts through the PJRT CPU
 //!   client ([`runtime`]), with collectives implemented in Rust.
 //!
+//! # Plans as data: `Planner` / `PlanSpec` / search
+//!
+//! The sProgram library ([`plans`]) is exposed through a uniform plan
+//! abstraction: every plan implements the [`plans::Planner`] trait
+//! (`name` / `applicable` / `build`), is described by a declarative
+//! [`plans::PlanSpec`] (kind + dp/pp/tp degrees + micro-batch / shard
+//! counts + offload/recompute flags), and registers in
+//! [`plans::registry`]. On top of that sits [`search`]: enumerate the
+//! feasible spec grid for a model + cluster, prune by divisibility and the
+//! cost model's memory bound, evaluate every survivor (transform →
+//! validate → materialize → simulate) in parallel on [`util::pool`]
+//! workers, and rank by iteration time — `superscaler search --model gpt3
+//! --gpus 8` end to end.
+//!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! measured results.
 
@@ -34,6 +48,7 @@ pub mod plans;
 pub mod runtime;
 pub mod rvd;
 pub mod schedule;
+pub mod search;
 pub mod sim;
 pub mod trans;
 pub mod util;

@@ -2,15 +2,20 @@
 //!
 //! ```text
 //! superscaler simulate --model gpt3 --plan coshard --gpus 16 [--scale 2 ...]
+//! superscaler search   --model gpt3 --gpus 8 [--top 10] [--workers N]
 //! superscaler rvd --from "R(1)V(2)D(1,2)" --to "R(2)V(1)D(2,1)" --gpus 4
 //! superscaler train --devices 4 --steps 100 [--artifacts artifacts]
-//! superscaler plans                      # list available sPrograms
+//! superscaler plans                      # list registered sPrograms
 //! ```
+//!
+//! Plan names resolve through `plans::registry`; `simulate` builds exactly
+//! one spec, `search` enumerates and ranks the whole feasible spec grid.
 
 use superscaler::materialize::CommMode;
 use superscaler::models;
-use superscaler::plans::{self, PipeOrder};
+use superscaler::plans::{self, PlanKind, PlanSpec, Planner};
 use superscaler::rvd::Rvd;
+use superscaler::search;
 use superscaler::util::cli::Args;
 use superscaler::util::{fmt_bytes, fmt_secs};
 use superscaler::{cost::Cluster, sim};
@@ -20,6 +25,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "simulate" => simulate(&args),
+        "search" => search_cmd(&args),
         "rvd" => rvd_query(&args),
         "train" => train(&args),
         "plans" => list_plans(),
@@ -36,6 +42,14 @@ fn usage() {
                                 [--gpus N] [--scale 0..3] [--batch B] [--seq S]\n\
                                 [--tp T] [--pp P] [--dp D] [--micro K] [--shards C]\n\
                                 [--comm p2p|intra|inter]\n\
+           superscaler search   --model <gpt3|swin|mbart|alphafold2> [--gpus N]\n\
+                                [--scale 0..3] [--batch B] [--seq S] [--top N]\n\
+                                [--workers N] [--max-candidates N]\n\
+                                [--comm p2p|intra|inter]\n\
+                                  enumerate the feasible PlanSpec grid, evaluate\n\
+                                  every candidate in parallel (transform ->\n\
+                                  validate -> materialize -> simulate), print the\n\
+                                  ranking (best iteration time first)\n\
            superscaler rvd      --from 'R(r)V(v)D(k1,k2)' --to '...' [--gpus N]\n\
                                 [--src-gpus N] [--dst-gpus N] [--mb MB]\n\
            superscaler train    [--devices N] [--steps N] [--lr F] [--artifacts DIR]\n\
@@ -44,20 +58,9 @@ fn usage() {
 }
 
 fn list_plans() {
-    println!("available sPrograms (rust/src/plans/):");
-    for (name, desc) in [
-        ("dp", "Algorithm 1 data parallelism"),
-        ("tp", "Megatron tensor parallelism (megatron with pp=1)"),
-        ("megatron", "dp x pp x tp grid, 1F1B ordering"),
-        ("gpipe", "megatron grid with GPipe ordering"),
-        ("zero3", "DeepSpeed ZeRO-3 sharded optimizer"),
-        ("zero3-offload", "ZeRO-3 with CPU-offloaded optimizer"),
-        ("coshard", "NEW: co-located shards + recompute (paper Fig. 3)"),
-        ("interlaced", "NEW: interlaced pipeline for mBART (Algorithm 2)"),
-        ("3f1b", "NEW: 3F1B recycling pipeline for AlphaFold2 (Fig. 2)"),
-        ("dap", "Dynamic Axial Parallelism + DP (AlphaFold2 baseline)"),
-    ] {
-        println!("  {name:<15} {desc}");
+    println!("registered sPrograms (plans::registry):");
+    for p in plans::registry::all() {
+        println!("  {:<15} {}", p.name(), p.description());
     }
 }
 
@@ -85,42 +88,36 @@ fn comm_mode(args: &Args) -> CommMode {
     }
 }
 
+/// The planner's canonical spec for this GPU count, overridden by whatever
+/// degree flags the user passed.
+fn spec_from_args(planner: &dyn Planner, args: &Args, gpus: usize) -> PlanSpec {
+    let mut spec = planner.default_spec(gpus, args.usize("micro", 4));
+    spec.dp = args.usize("dp", spec.dp);
+    spec.pp = args.usize("pp", spec.pp);
+    spec.tp = args.usize("tp", spec.tp);
+    spec.micro = args.usize("micro", spec.micro);
+    spec.shards = args.usize("shards", spec.shards);
+    if args.has("offload") {
+        spec.offload = args.bool("offload", spec.offload);
+    }
+    // DAP's axial width fills whatever the DP degree leaves — unless the
+    // user pinned it explicitly with --tp.
+    if spec.kind == PlanKind::Dap && !args.has("tp") {
+        spec.tp = (gpus / spec.dp.max(1)).max(1);
+    }
+    spec
+}
+
 fn simulate(args: &Args) {
     let gpus = args.usize("gpus", 4);
     let model = build_model(args);
-    let plan_name = args.str("plan", "dp").to_string();
-    let k = args.usize("micro", 4);
-    let out = match plan_name.as_str() {
-        "dp" => plans::data_parallel(model, gpus),
-        "tp" => plans::megatron(model, 1, 1, gpus, 1, PipeOrder::OneFOneB),
-        "megatron" => plans::megatron(
-            model,
-            args.usize("dp", 1),
-            args.usize("pp", gpus),
-            args.usize("tp", 1),
-            k,
-            PipeOrder::OneFOneB,
-        ),
-        "gpipe" => plans::megatron(
-            model,
-            args.usize("dp", 1),
-            args.usize("pp", gpus),
-            args.usize("tp", 1),
-            k,
-            PipeOrder::GPipe,
-        ),
-        "zero3" => plans::zero3(model, gpus, false),
-        "zero3-offload" => plans::zero3(model, gpus, true),
-        "coshard" => plans::coshard(model, gpus, args.usize("shards", 4), None),
-        "interlaced" => plans::interlaced_pipeline(model, gpus, k, true, false),
-        "3f1b" => plans::pipeline_3f1b(model, gpus, k),
-        "dap" => plans::dap_dp(model, gpus / args.usize("dp", 1).max(1), args.usize("dp", 1)),
-        other => {
-            eprintln!("unknown plan '{other}' (see `superscaler plans`)");
-            std::process::exit(2);
-        }
-    }
-    .unwrap_or_else(|e| {
+    let plan_name = args.str("plan", "dp");
+    let Some(planner) = plans::registry::find(plan_name) else {
+        eprintln!("unknown plan '{plan_name}' (see `superscaler plans`)");
+        std::process::exit(2);
+    };
+    let spec = spec_from_args(planner, args, gpus);
+    let out = planner.build(model, &spec).unwrap_or_else(|e| {
         eprintln!("plan construction failed: {e}");
         std::process::exit(1);
     });
@@ -137,6 +134,41 @@ fn simulate(args: &Args) {
         }
         Err(e) => {
             eprintln!("schedule invalid: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn search_cmd(args: &Args) {
+    let gpus = args.usize("gpus", 8);
+    if gpus == 0 || (gpus > 8 && gpus % 8 != 0) {
+        eprintln!("--gpus must be 1..=8 or a multiple of 8 (servers hold 8 GPUs)");
+        std::process::exit(2);
+    }
+    let top = args.usize("top", 10);
+    let cluster = Cluster::v100(gpus);
+    let cfg = search::SearchConfig {
+        workers: args.usize("workers", 0),
+        comm: comm_mode(args),
+        max_candidates: args.usize("max-candidates", 256),
+    };
+    let report = search::search(|| build_model(args), &cluster, &cfg);
+    let t = report.to_table(top);
+    t.print();
+    t.write_csv("bench_results/search.csv").ok();
+    match report.best() {
+        Some(best) => {
+            let m = best.metrics().expect("best candidate has metrics");
+            println!(
+                "best: {} — {} / iteration, {:.1} TFLOPS, peak mem {}",
+                best.plan_name,
+                fmt_secs(m.makespan),
+                m.aggregate_tflops,
+                fmt_bytes(m.peak_mem)
+            );
+        }
+        None => {
+            eprintln!("no feasible plan completed without OOM/deadlock");
             std::process::exit(1);
         }
     }

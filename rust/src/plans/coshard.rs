@@ -179,6 +179,52 @@ pub fn coshard_opt(
     })
 }
 
+/// [`Planner`] for the paper's co-shard plan (DP across devices, co-located
+/// sequential shards + recompute within each).
+pub struct CoshardPlanner;
+
+impl Planner for CoshardPlanner {
+    fn kind(&self) -> PlanKind {
+        PlanKind::Coshard
+    }
+
+    fn description(&self) -> &'static str {
+        "NEW: co-located shards + recompute (paper Fig. 3)"
+    }
+
+    fn applicable(&self, model: &Model) -> bool {
+        // Needs ops tagged with a co-shardable dim (attention heads / FFN
+        // hidden).
+        !model.coshard_dim.is_empty()
+    }
+
+    fn default_spec(&self, gpus: usize, _micro: usize) -> PlanSpec {
+        PlanSpec { dp: gpus.max(1), shards: 4, ..PlanSpec::new(PlanKind::Coshard) }
+    }
+
+    fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
+        let n = cluster.num_gpus();
+        let mut out: Vec<PlanSpec> = [2usize, 4, 8]
+            .iter()
+            .map(|&s| PlanSpec { dp: n, shards: s, ..PlanSpec::new(PlanKind::Coshard) })
+            .collect();
+        // The composed variant: co-shard + ZeRO-style optimizer sharding
+        // (how the large weak-scaling points fit in memory).
+        out.push(PlanSpec { dp: n, shards: 8, zero_shard: true, ..PlanSpec::new(PlanKind::Coshard) });
+        out
+    }
+
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+        coshard_opt(
+            model,
+            spec.dp.max(1),
+            spec.shards.max(1),
+            spec.coshard_layers,
+            spec.zero_shard,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

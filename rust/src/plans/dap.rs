@@ -53,6 +53,48 @@ pub fn dap_dp(mut model: Model, dap: usize, dp: usize) -> PlanResult {
     })
 }
 
+/// [`Planner`] for DAP + DP (the FastFold baseline).
+pub struct DapPlanner;
+
+impl Planner for DapPlanner {
+    fn kind(&self) -> PlanKind {
+        PlanKind::Dap
+    }
+
+    fn description(&self) -> &'static str {
+        "Dynamic Axial Parallelism + DP (AlphaFold2 baseline)"
+    }
+
+    fn applicable(&self, model: &Model) -> bool {
+        // DAP's token/head axis flips are the AlphaFold2 baseline; other
+        // zoo models express the same family through megatron.
+        model.name.starts_with("alphafold")
+    }
+
+    fn default_spec(&self, gpus: usize, _micro: usize) -> PlanSpec {
+        PlanSpec { tp: gpus.max(1), ..PlanSpec::new(PlanKind::Dap) }
+    }
+
+    fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
+        let n = cluster.num_gpus();
+        let mut out = Vec::new();
+        for dp in 1..=n {
+            if n % dp != 0 {
+                continue;
+            }
+            let axial = n / dp;
+            if axial > 1 {
+                out.push(PlanSpec { dp, tp: axial, ..PlanSpec::new(PlanKind::Dap) });
+            }
+        }
+        out
+    }
+
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+        dap_dp(model, spec.tp.max(1), spec.dp.max(1))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

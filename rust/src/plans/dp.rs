@@ -61,6 +61,38 @@ pub fn data_parallel(mut model: Model, ndev: usize) -> PlanResult {
     })
 }
 
+/// [`Planner`] for Algorithm-1 data parallelism.
+pub struct DpPlanner;
+
+impl super::Planner for DpPlanner {
+    fn kind(&self) -> super::PlanKind {
+        super::PlanKind::Dp
+    }
+
+    fn description(&self) -> &'static str {
+        "Algorithm 1 data parallelism"
+    }
+
+    fn applicable(&self, _model: &Model) -> bool {
+        true
+    }
+
+    fn default_spec(&self, gpus: usize, _micro: usize) -> super::PlanSpec {
+        super::PlanSpec { dp: gpus.max(1), ..super::PlanSpec::new(super::PlanKind::Dp) }
+    }
+
+    fn candidates(&self, _model: &Model, _cluster: &crate::cost::Cluster) -> Vec<super::PlanSpec> {
+        // The megatron grid's (n, 1, 1) point degenerates to Algorithm-1
+        // data parallelism (see plans/megatron.rs docs), so contributing a
+        // dp candidate here would make every search evaluate it twice.
+        Vec::new()
+    }
+
+    fn build(&self, model: Model, spec: &super::PlanSpec) -> PlanResult {
+        data_parallel(model, spec.dp.max(1))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

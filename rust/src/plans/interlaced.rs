@@ -173,6 +173,55 @@ pub fn interlaced_pipeline(
     })
 }
 
+/// [`Planner`] for the interlaced pipeline (Algorithm 2).
+pub struct InterlacedPlanner;
+
+impl Planner for InterlacedPlanner {
+    fn kind(&self) -> PlanKind {
+        PlanKind::Interlaced
+    }
+
+    fn description(&self) -> &'static str {
+        "NEW: interlaced pipeline for mBART (Algorithm 2)"
+    }
+
+    fn applicable(&self, model: &Model) -> bool {
+        // Needs tagged embedding layers to vocab-shard across all devices.
+        !model.emb_ops.is_empty()
+    }
+
+    fn default_spec(&self, gpus: usize, micro: usize) -> PlanSpec {
+        PlanSpec {
+            pp: gpus.max(1),
+            micro: micro.max(1),
+            recompute: true,
+            ..PlanSpec::new(PlanKind::Interlaced)
+        }
+    }
+
+    fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
+        [4usize, 8]
+            .iter()
+            .map(|&k| PlanSpec {
+                pp: cluster.num_gpus(),
+                micro: k,
+                recompute: true,
+                ..PlanSpec::new(PlanKind::Interlaced)
+            })
+            .collect()
+    }
+
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+        interlaced_pipeline(
+            model,
+            spec.pp.max(1),
+            spec.micro.max(1),
+            spec.recompute,
+            spec.block_recompute,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -140,6 +140,129 @@ pub fn megatron(
     })
 }
 
+/// [`Planner`] for the Megatron dp × pp × tp grid with 1F1B ordering.
+pub struct MegatronPlanner;
+
+/// [`Planner`] for pure tensor parallelism (the grid with pp = 1, tp = n).
+pub struct TpPlanner;
+
+/// [`Planner`] for the megatron grid under GPipe ordering.
+pub struct GPipePlanner;
+
+impl Planner for MegatronPlanner {
+    fn kind(&self) -> PlanKind {
+        PlanKind::Megatron
+    }
+
+    fn description(&self) -> &'static str {
+        "dp x pp x tp grid, 1F1B ordering"
+    }
+
+    fn applicable(&self, _model: &Model) -> bool {
+        true
+    }
+
+    fn default_spec(&self, gpus: usize, micro: usize) -> PlanSpec {
+        PlanSpec { pp: gpus.max(1), micro: micro.max(1), ..PlanSpec::new(PlanKind::Megatron) }
+    }
+
+    fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
+        let mut out = Vec::new();
+        for (dp, pp, tp) in factorizations(cluster.num_gpus()) {
+            // Pipelines need enough micro-batches to fill; the degenerate
+            // pp = 1 grids are plain dp×tp and need only one.
+            let micros: &[usize] = if pp > 1 { &[4, 8] } else { &[1] };
+            for &k in micros {
+                out.push(PlanSpec { dp, pp, tp, micro: k, ..PlanSpec::new(PlanKind::Megatron) });
+            }
+        }
+        out
+    }
+
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+        megatron(
+            model,
+            spec.dp.max(1),
+            spec.pp.max(1),
+            spec.tp.max(1),
+            spec.micro.max(1),
+            PipeOrder::OneFOneB,
+        )
+    }
+}
+
+impl Planner for TpPlanner {
+    fn kind(&self) -> PlanKind {
+        PlanKind::Tp
+    }
+
+    fn description(&self) -> &'static str {
+        "Megatron tensor parallelism (megatron with pp=1)"
+    }
+
+    fn applicable(&self, _model: &Model) -> bool {
+        true
+    }
+
+    fn default_spec(&self, gpus: usize, _micro: usize) -> PlanSpec {
+        PlanSpec { tp: gpus.max(1), ..PlanSpec::new(PlanKind::Tp) }
+    }
+
+    fn candidates(&self, _model: &Model, _cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
+        // The megatron grid already owns the (1, 1, n) point; contributing
+        // it again here would make every search evaluate it twice.
+        Vec::new()
+    }
+
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+        megatron(
+            model,
+            spec.dp.max(1),
+            spec.pp.max(1),
+            spec.tp.max(1),
+            spec.micro.max(1),
+            PipeOrder::OneFOneB,
+        )
+    }
+}
+
+impl Planner for GPipePlanner {
+    fn kind(&self) -> PlanKind {
+        PlanKind::GPipe
+    }
+
+    fn description(&self) -> &'static str {
+        "megatron grid with GPipe ordering"
+    }
+
+    fn applicable(&self, _model: &Model) -> bool {
+        true
+    }
+
+    fn default_spec(&self, gpus: usize, micro: usize) -> PlanSpec {
+        PlanSpec { pp: gpus.max(1), micro: micro.max(1), ..PlanSpec::new(PlanKind::GPipe) }
+    }
+
+    fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
+        factorizations(cluster.num_gpus())
+            .into_iter()
+            .filter(|&(_, pp, _)| pp > 1)
+            .map(|(dp, pp, tp)| PlanSpec { dp, pp, tp, micro: 4, ..PlanSpec::new(PlanKind::GPipe) })
+            .collect()
+    }
+
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+        megatron(
+            model,
+            spec.dp.max(1),
+            spec.pp.max(1),
+            spec.tp.max(1),
+            spec.micro.max(1),
+            PipeOrder::GPipe,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

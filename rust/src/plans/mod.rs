@@ -7,6 +7,26 @@
 //! parallelism (Algorithm 1), Megatron-style TP/PP with 1F1B, GPipe,
 //! ZeRO-3 (±offload), DAP — and the paper's new plans: **co-shard**,
 //! **interlaced pipeline** (Algorithm 2) and **3F1B**.
+//!
+//! # The declarative layer: `PlanSpec` / `Planner` / `registry`
+//!
+//! On top of the free functions sits a uniform plan abstraction:
+//!
+//! * [`PlanSpec`] — a declarative description of one plan instance (kind +
+//!   dp/pp/tp degrees, micro-batch count, shard count, offload/recompute
+//!   flags). Pure data: it can be enumerated, pruned and compared without
+//!   building anything.
+//! * [`Planner`] — the trait every sProgram implements: `name()`,
+//!   `applicable(&Model)`, `default_spec(...)`, `candidates(...)` (its
+//!   slice of the search grid) and `build(Model, &PlanSpec) -> PlanResult`.
+//! * [`registry`] — the central table of all planners. The CLI, the
+//!   benches, the examples and the search engine ([`crate::search`]) all
+//!   resolve plan names here, so a new sProgram becomes visible everywhere
+//!   by adding one registry entry.
+//!
+//! The free functions (`data_parallel`, `megatron`, ...) remain the
+//! implementation vocabulary; planners are thin declarative adapters over
+//! them.
 
 mod coshard;
 mod dap;
@@ -14,15 +34,18 @@ mod dp;
 mod interlaced;
 mod megatron;
 mod pipe3f1b;
+pub mod registry;
+mod spec;
 mod zero;
 
-pub use coshard::{coshard, coshard_opt};
-pub use dap::dap_dp;
-pub use dp::data_parallel;
-pub use interlaced::interlaced_pipeline;
-pub use megatron::{megatron, PipeOrder};
-pub use pipe3f1b::pipeline_3f1b;
-pub use zero::zero3;
+pub use coshard::{coshard, coshard_opt, CoshardPlanner};
+pub use dap::{dap_dp, DapPlanner};
+pub use dp::{data_parallel, DpPlanner};
+pub use interlaced::{interlaced_pipeline, InterlacedPlanner};
+pub use megatron::{megatron, GPipePlanner, MegatronPlanner, PipeOrder, TpPlanner};
+pub use pipe3f1b::{pipeline_3f1b, ThreeFOneBPlanner};
+pub use spec::{factorizations, PlanKind, PlanSpec, Planner};
+pub use zero::{zero3, Zero3OffloadPlanner, Zero3Planner};
 
 use crate::graph::{Graph, OpId, OpKind, PTensorId, TensorKind};
 use crate::models::Model;

@@ -103,6 +103,48 @@ pub fn pipeline_3f1b(mut model: Model, s: usize, k: usize) -> PlanResult {
     })
 }
 
+/// [`Planner`] for the 3F1B recycling pipeline.
+pub struct ThreeFOneBPlanner;
+
+impl Planner for ThreeFOneBPlanner {
+    fn kind(&self) -> PlanKind {
+        PlanKind::ThreeFOneB
+    }
+
+    fn description(&self) -> &'static str {
+        "NEW: 3F1B recycling pipeline for AlphaFold2 (Fig. 2)"
+    }
+
+    fn applicable(&self, model: &Model) -> bool {
+        // Needs recycled forward passes (no_grad passes chained into one
+        // backward) — the structure `pipeline_3f1b` interleaves.
+        model.graph.live_ops().any(|o| o.is_forward && o.no_grad)
+    }
+
+    fn default_spec(&self, gpus: usize, micro: usize) -> PlanSpec {
+        PlanSpec {
+            pp: gpus.max(1),
+            micro: micro.max(1),
+            ..PlanSpec::new(PlanKind::ThreeFOneB)
+        }
+    }
+
+    fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
+        [4usize, 8]
+            .iter()
+            .map(|&k| PlanSpec {
+                pp: cluster.num_gpus(),
+                micro: k,
+                ..PlanSpec::new(PlanKind::ThreeFOneB)
+            })
+            .collect()
+    }
+
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+        pipeline_3f1b(model, spec.pp.max(1), spec.micro.max(1))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

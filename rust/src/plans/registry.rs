@@ -1,0 +1,55 @@
+//! Central sProgram registry. Every [`Planner`] implementation registers
+//! here; the CLI (`superscaler simulate|plans|search`), the benches and the
+//! examples resolve plan names through this table instead of hand-rolled
+//! string matches, and the search engine ([`crate::search`]) enumerates it
+//! to build its candidate grid.
+
+use super::coshard::CoshardPlanner;
+use super::dap::DapPlanner;
+use super::dp::DpPlanner;
+use super::interlaced::InterlacedPlanner;
+use super::megatron::{GPipePlanner, MegatronPlanner, TpPlanner};
+use super::pipe3f1b::ThreeFOneBPlanner;
+use super::spec::{PlanKind, PlanSpec, Planner};
+use super::zero::{Zero3OffloadPlanner, Zero3Planner};
+use super::PlanResult;
+use crate::models::Model;
+
+/// Every registered sProgram, in display order.
+pub static REGISTRY: [&dyn Planner; 10] = [
+    &DpPlanner,
+    &TpPlanner,
+    &MegatronPlanner,
+    &GPipePlanner,
+    &Zero3Planner,
+    &Zero3OffloadPlanner,
+    &CoshardPlanner,
+    &InterlacedPlanner,
+    &ThreeFOneBPlanner,
+    &DapPlanner,
+];
+
+/// All registered planners.
+pub fn all() -> &'static [&'static dyn Planner] {
+    &REGISTRY
+}
+
+/// Resolve a CLI/bench plan name to its planner: exact registry names
+/// first (so a newly registered planner is resolvable without touching any
+/// parse table), then the historical aliases via [`PlanKind::parse`].
+pub fn find(name: &str) -> Option<&'static dyn Planner> {
+    if let Some(p) = all().iter().copied().find(|p| p.name() == name) {
+        return Some(p);
+    }
+    let kind = PlanKind::parse(name)?;
+    all().iter().copied().find(|p| p.kind() == kind)
+}
+
+/// Build plan `name` from `spec`. Panics on an unregistered name — that is
+/// a programming error in the caller; user-facing code resolves names via
+/// [`find`] first and reports gracefully.
+pub fn build(name: &str, model: Model, spec: &PlanSpec) -> PlanResult {
+    find(name)
+        .unwrap_or_else(|| panic!("unregistered plan '{name}' (see `superscaler plans`)"))
+        .build(model, spec)
+}

@@ -1,0 +1,304 @@
+//! The declarative plan layer: a [`PlanSpec`] says *what* parallelization to
+//! apply (plan kind + dp/pp/tp degrees + micro-batch / shard counts +
+//! offload/recompute flags) without running anything; the [`Planner`] trait
+//! turns a spec into a concrete transformed graph + schedule. Every sProgram
+//! implements `Planner` and registers itself in [`super::registry`], giving
+//! the CLI, the benches and the search engine ([`crate::search`]) one
+//! uniform way to name, enumerate and build plans — the string-matched
+//! constructor calls that used to live in three separate binaries all route
+//! through here now.
+
+use super::PlanResult;
+use crate::cost::Cluster;
+use crate::models::Model;
+
+/// Which sProgram family a [`PlanSpec`] selects.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum PlanKind {
+    /// Algorithm 1 data parallelism.
+    Dp,
+    /// Pure (Shoeybi-style) tensor parallelism: the megatron grid, pp = 1.
+    Tp,
+    /// The Megatron dp × pp × tp grid with 1F1B ordering.
+    Megatron,
+    /// The megatron grid under GPipe ordering.
+    GPipe,
+    /// DeepSpeed ZeRO-3 optimizer/gradient/weight sharding.
+    Zero3,
+    /// ZeRO-3 with the optimizer offloaded to the host.
+    Zero3Offload,
+    /// The paper's co-located shards + recompute plan (Fig. 3).
+    Coshard,
+    /// The paper's interlaced pipeline for mBART (Algorithm 2).
+    Interlaced,
+    /// The paper's 3F1B recycling pipeline for AlphaFold2 (Fig. 2).
+    ThreeFOneB,
+    /// Dynamic Axial Parallelism + DP (the FastFold baseline).
+    Dap,
+}
+
+impl PlanKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlanKind::Dp => "dp",
+            PlanKind::Tp => "tp",
+            PlanKind::Megatron => "megatron",
+            PlanKind::GPipe => "gpipe",
+            PlanKind::Zero3 => "zero3",
+            PlanKind::Zero3Offload => "zero3-offload",
+            PlanKind::Coshard => "coshard",
+            PlanKind::Interlaced => "interlaced",
+            PlanKind::ThreeFOneB => "3f1b",
+            PlanKind::Dap => "dap",
+        }
+    }
+
+    /// Parse a CLI/bench plan name (aliases included).
+    pub fn parse(name: &str) -> Option<PlanKind> {
+        Some(match name {
+            "dp" => PlanKind::Dp,
+            "tp" => PlanKind::Tp,
+            "megatron" | "1f1b" => PlanKind::Megatron,
+            "gpipe" => PlanKind::GPipe,
+            "zero3" => PlanKind::Zero3,
+            "zero3-offload" | "zero3_offload" => PlanKind::Zero3Offload,
+            "coshard" => PlanKind::Coshard,
+            "interlaced" => PlanKind::Interlaced,
+            "3f1b" => PlanKind::ThreeFOneB,
+            "dap" | "dap+dp" => PlanKind::Dap,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for PlanKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Declarative description of one parallelization plan instance. Degrees
+/// default to 1 and flags to off; each planner reads the fields it uses.
+#[derive(Clone, PartialEq, Debug)]
+pub struct PlanSpec {
+    pub kind: PlanKind,
+    /// Data-parallel replicas.
+    pub dp: usize,
+    /// Pipeline stages (interlaced/3f1b: stages == devices).
+    pub pp: usize,
+    /// Tensor-parallel width (for [`PlanKind::Dap`]: the axial width).
+    pub tp: usize,
+    /// Micro-batches per data-parallel replica.
+    pub micro: usize,
+    /// Co-located shard count (coshard only).
+    pub shards: usize,
+    /// ZeRO: offload optimizer state to the host over PCIe.
+    pub offload: bool,
+    /// Coshard: ZeRO-style optimizer sharding across the DP group.
+    pub zero_shard: bool,
+    /// Interlaced: per-layer recompute.
+    pub recompute: bool,
+    /// Interlaced: coarse IL-block recompute barrier (Fig. 15 baseline).
+    pub block_recompute: bool,
+    /// Coshard: restrict co-sharding to the first N layers (`None` = all).
+    pub coshard_layers: Option<usize>,
+}
+
+impl Default for PlanSpec {
+    fn default() -> Self {
+        PlanSpec {
+            kind: PlanKind::Dp,
+            dp: 1,
+            pp: 1,
+            tp: 1,
+            micro: 1,
+            shards: 1,
+            offload: false,
+            zero_shard: false,
+            recompute: false,
+            block_recompute: false,
+            coshard_layers: None,
+        }
+    }
+}
+
+impl PlanSpec {
+    /// All-defaults spec of the given kind (fill fields with struct update).
+    pub fn new(kind: PlanKind) -> PlanSpec {
+        PlanSpec { kind, ..PlanSpec::default() }
+    }
+
+    /// Devices the spec occupies: `dp * pp * tp`.
+    pub fn devices(&self) -> usize {
+        self.dp.max(1) * self.pp.max(1) * self.tp.max(1)
+    }
+
+    /// Optimistic lower bound on per-device *static* bytes. Full static
+    /// state is 4× the weight bytes (weights + grads + two Adam moments),
+    /// divided by whatever sharding the spec guarantees. Used by the
+    /// search's memory-capacity pruning: a spec whose lower bound already
+    /// exceeds device memory cannot run, so it is never built.
+    pub fn static_bytes_lower_bound(&self, weight_bytes: u64) -> u64 {
+        let w = weight_bytes;
+        let full = 4 * w;
+        let d = self.devices().max(1) as u64;
+        match self.kind {
+            PlanKind::Dp | PlanKind::Dap => full,
+            PlanKind::Tp | PlanKind::Megatron | PlanKind::GPipe => {
+                full / (self.pp.max(1) * self.tp.max(1)) as u64
+            }
+            PlanKind::Zero3 => w + 3 * w / d,
+            // Offload moves optimizer state to host memory; only the
+            // weights are guaranteed resident on the device.
+            PlanKind::Zero3Offload => w,
+            PlanKind::Coshard => {
+                if self.zero_shard {
+                    w + 3 * w / d
+                } else {
+                    full
+                }
+            }
+            PlanKind::Interlaced | PlanKind::ThreeFOneB => full / self.pp.max(1) as u64,
+        }
+    }
+
+    /// Compact human label: kind + the non-unit degrees and set flags.
+    pub fn label(&self) -> String {
+        let mut s = self.kind.as_str().to_string();
+        if self.dp > 1 {
+            s.push_str(&format!(" dp{}", self.dp));
+        }
+        if self.pp > 1 {
+            s.push_str(&format!(" pp{}", self.pp));
+        }
+        if self.tp > 1 {
+            s.push_str(&format!(" tp{}", self.tp));
+        }
+        if self.micro > 1 {
+            s.push_str(&format!(" k{}", self.micro));
+        }
+        if self.shards > 1 {
+            s.push_str(&format!(" x{}", self.shards));
+        }
+        if self.offload {
+            s.push_str(" offload");
+        }
+        if self.zero_shard {
+            s.push_str(" zero");
+        }
+        if self.block_recompute {
+            s.push_str(" block");
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for PlanSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// All ordered `(dp, pp, tp)` triples with `dp * pp * tp == n` — the
+/// megatron-family search grid.
+pub fn factorizations(n: usize) -> Vec<(usize, usize, usize)> {
+    let n = n.max(1);
+    let mut out = Vec::new();
+    for dp in 1..=n {
+        if n % dp != 0 {
+            continue;
+        }
+        let rest = n / dp;
+        for pp in 1..=rest {
+            if rest % pp != 0 {
+                continue;
+            }
+            out.push((dp, pp, rest / pp));
+        }
+    }
+    out
+}
+
+/// A named, registered sProgram: applicability test + spec-driven builder.
+/// `Sync` so trait objects can live in the static registry and be shared by
+/// the search's worker threads.
+pub trait Planner: Sync {
+    /// The spec kind this planner builds.
+    fn kind(&self) -> PlanKind;
+
+    /// Registry / CLI name.
+    fn name(&self) -> &'static str {
+        self.kind().as_str()
+    }
+
+    /// One-line description for `superscaler plans`.
+    fn description(&self) -> &'static str;
+
+    /// Whether the plan is expressible on `model` at all (structural
+    /// requirements such as recycled passes or tagged embedding layers).
+    fn applicable(&self, model: &Model) -> bool;
+
+    /// The canonical spec for `gpus` devices (the CLI's defaults).
+    fn default_spec(&self, gpus: usize, micro: usize) -> PlanSpec;
+
+    /// Candidate specs for the search grid on this model + cluster. May
+    /// include infeasible points; [`crate::search::feasibility`] prunes
+    /// them before anything is built.
+    fn candidates(&self, model: &Model, cluster: &Cluster) -> Vec<PlanSpec>;
+
+    /// Transform + schedule the model according to `spec`.
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [
+            PlanKind::Dp,
+            PlanKind::Tp,
+            PlanKind::Megatron,
+            PlanKind::GPipe,
+            PlanKind::Zero3,
+            PlanKind::Zero3Offload,
+            PlanKind::Coshard,
+            PlanKind::Interlaced,
+            PlanKind::ThreeFOneB,
+            PlanKind::Dap,
+        ] {
+            assert_eq!(PlanKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(PlanKind::parse("1f1b"), Some(PlanKind::Megatron));
+        assert_eq!(PlanKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn devices_is_degree_product() {
+        let s = PlanSpec { dp: 2, pp: 2, tp: 2, ..PlanSpec::new(PlanKind::Megatron) };
+        assert_eq!(s.devices(), 8);
+        assert_eq!(PlanSpec::new(PlanKind::Dp).devices(), 1);
+    }
+
+    #[test]
+    fn factorizations_cover_and_multiply_out() {
+        let f = factorizations(8);
+        assert_eq!(f.len(), 10);
+        assert!(f.iter().all(|&(a, b, c)| a * b * c == 8));
+        assert!(f.contains(&(1, 8, 1)));
+        assert!(f.contains(&(2, 2, 2)));
+        assert_eq!(factorizations(1), vec![(1, 1, 1)]);
+    }
+
+    #[test]
+    fn memory_lower_bound_reflects_sharding() {
+        let w = 1 << 30;
+        let dp = PlanSpec { dp: 8, ..PlanSpec::new(PlanKind::Dp) };
+        let mg = PlanSpec { pp: 4, tp: 2, ..PlanSpec::new(PlanKind::Megatron) };
+        let z = PlanSpec { dp: 8, ..PlanSpec::new(PlanKind::Zero3) };
+        assert_eq!(dp.static_bytes_lower_bound(w), 4 * w);
+        assert_eq!(mg.static_bytes_lower_bound(w), 4 * w / 8);
+        assert!(z.static_bytes_lower_bound(w) < 2 * w);
+    }
+}

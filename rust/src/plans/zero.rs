@@ -71,6 +71,70 @@ pub fn zero3(mut model: Model, ndev: usize, offload: bool) -> PlanResult {
     })
 }
 
+/// [`Planner`] for ZeRO-3 (device-resident optimizer shards).
+pub struct Zero3Planner;
+
+/// [`Planner`] for ZeRO-3 with the optimizer offloaded to the host.
+pub struct Zero3OffloadPlanner;
+
+impl super::Planner for Zero3Planner {
+    fn kind(&self) -> super::PlanKind {
+        super::PlanKind::Zero3
+    }
+
+    fn description(&self) -> &'static str {
+        "DeepSpeed ZeRO-3 sharded optimizer"
+    }
+
+    fn applicable(&self, _model: &Model) -> bool {
+        true
+    }
+
+    fn default_spec(&self, gpus: usize, _micro: usize) -> super::PlanSpec {
+        super::PlanSpec { dp: gpus.max(1), ..super::PlanSpec::new(super::PlanKind::Zero3) }
+    }
+
+    fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<super::PlanSpec> {
+        vec![self.default_spec(cluster.num_gpus(), 1)]
+    }
+
+    fn build(&self, model: Model, spec: &super::PlanSpec) -> PlanResult {
+        zero3(model, spec.dp.max(1), spec.offload)
+    }
+}
+
+impl super::Planner for Zero3OffloadPlanner {
+    fn kind(&self) -> super::PlanKind {
+        super::PlanKind::Zero3Offload
+    }
+
+    fn description(&self) -> &'static str {
+        "ZeRO-3 with CPU-offloaded optimizer"
+    }
+
+    fn applicable(&self, _model: &Model) -> bool {
+        true
+    }
+
+    fn default_spec(&self, gpus: usize, _micro: usize) -> super::PlanSpec {
+        super::PlanSpec {
+            dp: gpus.max(1),
+            offload: true,
+            ..super::PlanSpec::new(super::PlanKind::Zero3Offload)
+        }
+    }
+
+    fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<super::PlanSpec> {
+        vec![self.default_spec(cluster.num_gpus(), 1)]
+    }
+
+    fn build(&self, model: Model, spec: &super::PlanSpec) -> PlanResult {
+        // default_spec sets offload = true; honoring the field keeps
+        // `--offload false` truthful instead of silently ignored.
+        zero3(model, spec.dp.max(1), spec.offload)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

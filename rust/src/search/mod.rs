@@ -1,0 +1,376 @@
+//! Parallel plan-search engine — the layer the paper's decoupling exists to
+//! enable (and what FlexFlow-style systems show unlocks the speedups):
+//! instead of hand-picking an sProgram, enumerate the feasible [`PlanSpec`]
+//! grid for a model + cluster, prune candidates that cannot work
+//! (degree/divisibility mismatches, static-memory lower bounds above device
+//! capacity — via the [`crate::cost`] model), then run the full
+//! transform → schedule-validate → materialize → simulate pipeline for every
+//! survivor in parallel on [`crate::util::pool`] worker threads and rank the
+//! results by iteration time.
+//!
+//! Entry points: [`search`] (used by `superscaler search` and
+//! `examples/plan_explorer.rs`), [`enumerate`] + [`feasibility`] for callers
+//! that want the grid without evaluating it.
+
+use crate::cost::Cluster;
+use crate::materialize::CommMode;
+use crate::models::Model;
+use crate::plans::{registry, PlanSpec, Planner};
+use crate::sim;
+use crate::util::pool;
+use crate::util::table::Table;
+use crate::util::{fmt_bytes, fmt_secs};
+
+/// Knobs for one search run.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Worker threads evaluating candidates; 0 = one per available CPU.
+    pub workers: usize,
+    /// Communication tier used for every candidate's materialization.
+    pub comm: CommMode,
+    /// Hard cap on evaluated candidates (0 = unlimited). Overflow counts
+    /// as pruned and is reported, never silently dropped.
+    pub max_candidates: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig { workers: 0, comm: CommMode::InterRvd, max_candidates: 256 }
+    }
+}
+
+/// Why a candidate spec was pruned before evaluation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Infeasible {
+    /// `spec.devices()` does not match the cluster's GPU count.
+    DeviceMismatch { want: usize, got: usize },
+    /// More data-parallel replicas than global-batch samples.
+    BatchTooSmall { batch: usize, dp: usize },
+    /// More pipeline stages than the model has layers.
+    TooManyStages { stages: usize, layers: usize },
+    /// Static-memory lower bound exceeds device capacity.
+    MemoryBound { need: u64, cap: u64 },
+}
+
+impl std::fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Infeasible::DeviceMismatch { want, got } => {
+                write!(f, "spec occupies {got} devices, cluster has {want}")
+            }
+            Infeasible::BatchTooSmall { batch, dp } => {
+                write!(f, "dp {dp} exceeds global batch {batch}")
+            }
+            Infeasible::TooManyStages { stages, layers } => {
+                write!(f, "{stages} stages over {layers} layers")
+            }
+            Infeasible::MemoryBound { need, cap } => {
+                write!(f, "needs >= {} static bytes, device holds {}", need, cap)
+            }
+        }
+    }
+}
+
+/// Cheap feasibility check run before any graph transformation: degree
+/// consistency, batch divisibility headroom, stage/layer fit and the
+/// cost-model memory bound.
+pub fn feasibility(spec: &PlanSpec, model: &Model, cluster: &Cluster) -> Result<(), Infeasible> {
+    let want = cluster.num_gpus();
+    let got = spec.devices();
+    if got != want {
+        return Err(Infeasible::DeviceMismatch { want, got });
+    }
+    let batch = model.global_batch.max(1);
+    if spec.dp > batch {
+        return Err(Infeasible::BatchTooSmall { batch, dp: spec.dp });
+    }
+    let layers = model.layers.len().max(1);
+    if spec.pp > layers {
+        return Err(Infeasible::TooManyStages { stages: spec.pp, layers });
+    }
+    let need = spec.static_bytes_lower_bound(model.graph.weight_bytes());
+    let cap = cluster.spec.mem_bytes;
+    if need > cap {
+        return Err(Infeasible::MemoryBound { need, cap });
+    }
+    Ok(())
+}
+
+/// Enumerate the feasible `(planner, spec)` grid for `model` on `cluster`.
+/// Returns the surviving candidates and how many were pruned.
+pub fn enumerate(
+    model: &Model,
+    cluster: &Cluster,
+) -> (Vec<(&'static dyn Planner, PlanSpec)>, usize) {
+    let mut out = Vec::new();
+    let mut pruned = 0;
+    for &p in registry::all() {
+        if !p.applicable(model) {
+            continue;
+        }
+        for spec in p.candidates(model, cluster) {
+            match feasibility(&spec, model, cluster) {
+                Ok(()) => out.push((p, spec)),
+                Err(_) => pruned += 1,
+            }
+        }
+    }
+    (out, pruned)
+}
+
+/// Simulation metrics of one evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    /// Iteration time, seconds.
+    pub makespan: f64,
+    pub aggregate_tflops: f64,
+    pub comm_bytes: u64,
+    /// Max per-device peak memory, bytes.
+    pub peak_mem: u64,
+    /// Mean bubble fraction of the iteration.
+    pub bubble_frac: f64,
+    pub oom: bool,
+}
+
+/// What happened to one candidate.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    Ok(Metrics),
+    /// Plan construction (transformation) failed.
+    BuildError(String),
+    /// Schedule validation found a deadlock / missing producer.
+    ScheduleError(String),
+}
+
+/// One evaluated point of the search grid.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Registry name of the planner that built it.
+    pub planner: &'static str,
+    pub spec: PlanSpec,
+    /// The built plan's self-reported name (empty if construction failed).
+    pub plan_name: String,
+    pub outcome: Outcome,
+}
+
+impl Candidate {
+    /// 0 = valid, 1 = valid but OOM, 2 = failed. Primary ranking key.
+    fn rank_class(&self) -> u8 {
+        match &self.outcome {
+            Outcome::Ok(m) if !m.oom => 0,
+            Outcome::Ok(_) => 1,
+            _ => 2,
+        }
+    }
+
+    pub fn metrics(&self) -> Option<&Metrics> {
+        match &self.outcome {
+            Outcome::Ok(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// The ranked result of one search run.
+#[derive(Debug)]
+pub struct SearchReport {
+    pub model: String,
+    pub gpus: usize,
+    /// All evaluated candidates: valid non-OOM by iteration time, then OOM,
+    /// then failures. Deterministic for identical inputs.
+    pub ranked: Vec<Candidate>,
+    /// Candidates rejected before evaluation (feasibility + cap overflow).
+    pub pruned: usize,
+    /// Candidates actually built + simulated.
+    pub evaluated: usize,
+    /// Wall-clock search time, seconds.
+    pub wall_secs: f64,
+}
+
+impl SearchReport {
+    /// Best valid (non-OOM) plan, if any.
+    pub fn best(&self) -> Option<&Candidate> {
+        self.ranked.first().filter(|c| c.rank_class() == 0)
+    }
+
+    /// Render the top `top` rows (0 = all) as a console/CSV table.
+    pub fn to_table(&self, top: usize) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "plan search: {} on {} GPUs — {} specs evaluated, {} pruned, {}",
+                self.model,
+                self.gpus,
+                self.evaluated,
+                self.pruned,
+                fmt_secs(self.wall_secs)
+            ),
+            &["#", "plan", "spec", "iteration", "TFLOPS", "comm", "peak mem", "bubble%", "status"],
+        );
+        let n = if top == 0 { self.ranked.len() } else { top };
+        for (i, c) in self.ranked.iter().take(n).enumerate() {
+            let rank = (i + 1).to_string();
+            match &c.outcome {
+                Outcome::Ok(m) => t.row([
+                    rank,
+                    c.planner.to_string(),
+                    c.spec.label(),
+                    fmt_secs(m.makespan),
+                    format!("{:.1}", m.aggregate_tflops),
+                    fmt_bytes(m.comm_bytes),
+                    fmt_bytes(m.peak_mem),
+                    format!("{:.0}%", 100.0 * m.bubble_frac),
+                    if m.oom { "OOM".to_string() } else { "ok".to_string() },
+                ]),
+                Outcome::BuildError(e) => t.row([
+                    rank,
+                    c.planner.to_string(),
+                    c.spec.label(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    format!("invalid: {e}"),
+                ]),
+                Outcome::ScheduleError(e) => t.row([
+                    rank,
+                    c.planner.to_string(),
+                    c.spec.label(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    format!("deadlock: {e}"),
+                ]),
+            }
+        }
+        t
+    }
+}
+
+fn evaluate<F: Fn() -> Model>(
+    build_model: &F,
+    planner: &'static dyn Planner,
+    spec: &PlanSpec,
+    cluster: &Cluster,
+    comm: CommMode,
+) -> Candidate {
+    let model = build_model();
+    match planner.build(model, spec) {
+        Err(e) => Candidate {
+            planner: planner.name(),
+            spec: spec.clone(),
+            plan_name: String::new(),
+            outcome: Outcome::BuildError(e.to_string()),
+        },
+        Ok(out) => match sim::run(&out.graph, &out.schedule, cluster, comm) {
+            Err(e) => Candidate {
+                planner: planner.name(),
+                spec: spec.clone(),
+                plan_name: out.name,
+                outcome: Outcome::ScheduleError(e.to_string()),
+            },
+            Ok(r) => {
+                let (_, _, bubble) = r.breakdown();
+                Candidate {
+                    planner: planner.name(),
+                    spec: spec.clone(),
+                    plan_name: out.name,
+                    outcome: Outcome::Ok(Metrics {
+                        makespan: r.makespan,
+                        aggregate_tflops: r.aggregate_tflops,
+                        comm_bytes: r.comm_bytes,
+                        peak_mem: r.max_peak_mem(),
+                        bubble_frac: bubble / r.makespan.max(1e-12),
+                        oom: r.oom,
+                    }),
+                }
+            }
+        },
+    }
+}
+
+/// Run the full search: enumerate + prune the spec grid, evaluate every
+/// survivor in parallel (each worker rebuilds the model via `build_model` —
+/// plan construction consumes its model), rank deterministically.
+pub fn search<F>(build_model: F, cluster: &Cluster, cfg: &SearchConfig) -> SearchReport
+where
+    F: Fn() -> Model + Sync,
+{
+    let t0 = std::time::Instant::now();
+    let probe = build_model();
+    let model_name = probe.name.clone();
+    let (mut cands, mut pruned) = enumerate(&probe, cluster);
+    drop(probe);
+    if cfg.max_candidates > 0 && cands.len() > cfg.max_candidates {
+        pruned += cands.len() - cfg.max_candidates;
+        cands.truncate(cfg.max_candidates);
+    }
+    let workers = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    };
+    let comm = cfg.comm;
+    let mut ranked: Vec<Candidate> = pool::par_map(cands.len(), workers, |i| {
+        let (p, spec) = &cands[i];
+        evaluate(&build_model, *p, spec, cluster, comm)
+    });
+    let evaluated = ranked.len();
+    ranked.sort_by(|a, b| {
+        a.rank_class()
+            .cmp(&b.rank_class())
+            .then_with(|| {
+                let ta = a.metrics().map(|m| m.makespan).unwrap_or(f64::INFINITY);
+                let tb = b.metrics().map(|m| m.makespan).unwrap_or(f64::INFINITY);
+                ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then_with(|| a.plan_name.cmp(&b.plan_name))
+    });
+    SearchReport {
+        model: model_name,
+        gpus: cluster.num_gpus(),
+        ranked,
+        pruned,
+        evaluated,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::plans::PlanKind;
+
+    #[test]
+    fn feasibility_rejects_degree_mismatch() {
+        let model = models::gpt3(0, 8, 256);
+        let cluster = Cluster::v100(8);
+        let bad = PlanSpec { dp: 3, ..PlanSpec::new(PlanKind::Dp) };
+        assert!(matches!(
+            feasibility(&bad, &model, &cluster),
+            Err(Infeasible::DeviceMismatch { want: 8, got: 3 })
+        ));
+    }
+
+    #[test]
+    fn feasibility_rejects_dp_beyond_batch() {
+        let model = models::gpt3(0, 2, 256);
+        let cluster = Cluster::v100(8);
+        let bad = PlanSpec { dp: 8, ..PlanSpec::new(PlanKind::Dp) };
+        assert!(matches!(
+            feasibility(&bad, &model, &cluster),
+            Err(Infeasible::BatchTooSmall { .. })
+        ));
+    }
+
+    #[test]
+    fn feasibility_accepts_the_canonical_megatron_grid() {
+        let model = models::gpt3(0, 8, 256);
+        let cluster = Cluster::v100(4);
+        let spec = PlanSpec { pp: 4, micro: 4, ..PlanSpec::new(PlanKind::Megatron) };
+        assert_eq!(feasibility(&spec, &model, &cluster), Ok(()));
+    }
+}

@@ -1,0 +1,157 @@
+//! The declarative plan layer end to end: registry round-trip (every
+//! registered planner builds + validates on a zoo model), `PlanSpec`
+//! feasibility pruning, and the search engine's determinism + quality
+//! (its top plan must not lose to the hand-written megatron baseline).
+
+use superscaler::cost::Cluster;
+use superscaler::materialize::CommMode;
+use superscaler::models::{self, Model};
+use superscaler::plans::{self, registry, PipeOrder, PlanKind, PlanSpec, Planner};
+use superscaler::schedule::validate;
+use superscaler::search::{self, Infeasible, SearchConfig};
+use superscaler::sim;
+
+#[test]
+fn registry_covers_every_plan_name() {
+    let names: Vec<&str> = registry::all().iter().map(|p| p.name()).collect();
+    for want in [
+        "dp",
+        "tp",
+        "megatron",
+        "gpipe",
+        "zero3",
+        "zero3-offload",
+        "coshard",
+        "interlaced",
+        "3f1b",
+        "dap",
+    ] {
+        assert!(names.contains(&want), "registry missing '{want}' (has {names:?})");
+    }
+    assert_eq!(names.len(), 10);
+}
+
+#[test]
+fn find_resolves_names_and_aliases() {
+    assert_eq!(registry::find("megatron").unwrap().kind(), PlanKind::Megatron);
+    assert_eq!(registry::find("1f1b").unwrap().kind(), PlanKind::Megatron);
+    assert_eq!(registry::find("zero3-offload").unwrap().kind(), PlanKind::Zero3Offload);
+    assert!(registry::find("not-a-plan").is_none());
+}
+
+/// Every registered planner must declare itself applicable to at least one
+/// zoo model, build its default spec on 4 GPUs, and pass schedule
+/// validation (deadlock-free, fully assigned).
+#[test]
+fn registry_roundtrip_every_planner_builds_and_validates() {
+    let zoo: Vec<fn() -> Model> = vec![
+        || models::gpt3(0, 8, 256),
+        || models::mbart(0, 8, 128),
+        || models::alphafold2(0, 8),
+    ];
+    for p in registry::all() {
+        let mk = zoo
+            .iter()
+            .find(|mk| p.applicable(&mk()))
+            .unwrap_or_else(|| panic!("planner '{}' applicable to no zoo model", p.name()));
+        let spec = p.default_spec(4, 4);
+        assert_eq!(spec.kind, p.kind(), "{}: default_spec kind mismatch", p.name());
+        let out = p
+            .build(mk(), &spec)
+            .unwrap_or_else(|e| panic!("{}: build failed: {e}", p.name()));
+        assert!(!out.name.is_empty());
+        let vs = validate(&out.graph, &out.schedule)
+            .unwrap_or_else(|e| panic!("{}: schedule invalid: {e}", p.name()));
+        assert!(!vs.topo.is_empty());
+    }
+}
+
+#[test]
+fn enumerate_produces_a_rich_feasible_grid() {
+    let model = models::gpt3(0, 8, 256);
+    let cluster = Cluster::v100(8);
+    let (cands, _pruned) = search::enumerate(&model, &cluster);
+    assert!(cands.len() >= 20, "only {} feasible candidates", cands.len());
+    for (p, s) in &cands {
+        assert_eq!(s.devices(), 8, "{}: {s:?} does not tile the cluster", p.name());
+        assert!(s.dp <= 8, "{s:?}");
+    }
+    // The canonical megatron grid point the CLI defaults to must be in the
+    // grid (this is what guarantees search never loses to the baseline).
+    assert!(
+        cands.iter().any(|(p, s)| p.name() == "megatron"
+            && s.dp == 1
+            && s.pp == 8
+            && s.tp == 1
+            && s.micro == 4),
+        "megatron dp1 pp8 tp1 k4 missing from the grid"
+    );
+}
+
+#[test]
+fn feasibility_prunes_batch_and_memory_bounds() {
+    let cluster = Cluster::v100(8);
+
+    // dp wider than the global batch: pruned.
+    let small_batch = models::gpt3(0, 2, 256);
+    let dp8 = PlanSpec { dp: 8, ..PlanSpec::new(PlanKind::Dp) };
+    assert!(matches!(
+        search::feasibility(&dp8, &small_batch, &cluster),
+        Err(Infeasible::BatchTooSmall { batch: 2, dp: 8 })
+    ));
+    let (cands, pruned) = search::enumerate(&small_batch, &cluster);
+    assert!(pruned > 0, "batch-bound specs must be pruned");
+    assert!(cands.iter().all(|(_, s)| s.dp <= 2));
+
+    // Fully replicated 15B model: 4x weights >> 32 GiB, pruned by the cost
+    // model's memory bound before anything is built.
+    let giant = models::gpt3(3, 32, 1024);
+    assert!(matches!(
+        search::feasibility(&dp8, &giant, &cluster),
+        Err(Infeasible::MemoryBound { .. })
+    ));
+
+    // Device-degree mismatch: pruned.
+    let mismatch = PlanSpec { dp: 2, pp: 2, tp: 1, ..PlanSpec::new(PlanKind::Megatron) };
+    assert!(matches!(
+        search::feasibility(&mismatch, &small_batch, &cluster),
+        Err(Infeasible::DeviceMismatch { want: 8, got: 4 })
+    ));
+}
+
+#[test]
+fn search_is_deterministic() {
+    let cluster = Cluster::v100(4);
+    let cfg = SearchConfig { workers: 2, ..Default::default() };
+    let run = || search::search(|| models::gpt3(0, 8, 256), &cluster, &cfg);
+    let a = run();
+    let b = run();
+    assert_eq!(a.evaluated, b.evaluated);
+    assert!(a.evaluated > 0);
+    let key = |r: &search::SearchReport| -> Vec<(String, String)> {
+        r.ranked
+            .iter()
+            .map(|c| (c.planner.to_string(), c.plan_name.clone()))
+            .collect()
+    };
+    assert_eq!(key(&a), key(&b), "same inputs must rank identically");
+}
+
+#[test]
+fn search_top_plan_not_slower_than_megatron_baseline() {
+    let gpus = 4;
+    let cluster = Cluster::v100(gpus);
+    let report = search::search(|| models::gpt3(0, 8, 512), &cluster, &SearchConfig::default());
+    let best = report.best().expect("search found no valid plan");
+    let bm = best.metrics().unwrap();
+
+    let base = plans::megatron(models::gpt3(0, 8, 512), 1, gpus, 1, 4, PipeOrder::OneFOneB).unwrap();
+    let rb = sim::run(&base.graph, &base.schedule, &cluster, CommMode::InterRvd).unwrap();
+    assert!(
+        bm.makespan <= rb.makespan * 1.0001,
+        "search best {} ({}) slower than megatron baseline {}",
+        bm.makespan,
+        best.plan_name,
+        rb.makespan
+    );
+}
