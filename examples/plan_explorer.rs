@@ -3,9 +3,14 @@
 //! `PlanSpec` grid for one model + cluster size, evaluate all candidates in
 //! parallel, and print the ranking (best iteration time first).
 //!
+//! The grid includes heterogeneous per-stage pipelines (`--no-hetero` to
+//! exclude them) and is dominance-pruned against the analytic cost lower
+//! bound (`--no-prune` to simulate every feasible spec).
+//!
 //! ```text
 //! cargo run --release --example plan_explorer -- --model mbart --gpus 8
 //! cargo run --release --example plan_explorer -- --model gpt3 --gpus 8 --top 5
+//! cargo run --release --example plan_explorer -- --model gpt3 --no-hetero --no-prune
 //! ```
 
 use superscaler::cost::Cluster;
@@ -37,6 +42,8 @@ fn main() {
 
     let cfg = SearchConfig {
         workers: args.usize("workers", 0),
+        hetero: !args.has("no-hetero"),
+        prune: !args.has("no-prune"),
         ..SearchConfig::default()
     };
     let report = search::search(build, &cluster, &cfg);

@@ -36,7 +36,8 @@ fn main() {
         .expect("training failed");
     let wall = t0.elapsed().as_secs_f64();
 
-    let mut t = Table::new("loss curve (leader device)", &["step", "loss", "s/step", "allreduce ms"]);
+    let mut t =
+        Table::new("loss curve (leader device)", &["step", "loss", "s/step", "allreduce ms"]);
     for s in curve.iter().filter(|s| s.step % 10 == 0 || s.step == 1) {
         t.row([
             s.step.to_string(),
@@ -57,5 +58,8 @@ fn main() {
     if steps >= 20 {
         assert!(last < first, "loss must decrease — e2e stack is broken");
     }
-    println!("full three-layer stack verified: Pallas (L1) -> JAX AOT (L2) -> rust PJRT + collectives (L3)");
+    println!(
+        "full three-layer stack verified: Pallas (L1) -> JAX AOT (L2) -> rust PJRT + \
+         collectives (L3)"
+    );
 }

@@ -113,7 +113,14 @@ fn main() {
     if only.as_deref().map(|m| m == "gpt3").unwrap_or(true) {
         let mut t = Table::new(
             "Fig 12(b): GPT-3 weak scaling (aggregate TFLOPS, batch 512, seq 16384)",
-            &["gpus", "params", "superscaler(coshard)", "megatron", "alpa-like", "deepspeed(zero3)"],
+            &[
+                "gpus",
+                "params",
+                "superscaler(coshard)",
+                "megatron",
+                "alpa-like",
+                "deepspeed(zero3)",
+            ],
         );
         for (i, &gpus) in gpus_list.iter().enumerate() {
             // Micro-batch 1 per device (grad-accumulated to the paper's
@@ -166,7 +173,13 @@ fn main() {
     if only.as_deref().map(|m| m == "mbart").unwrap_or(true) {
         let mut t = Table::new(
             "Fig 12(c): mBART weak scaling (aggregate TFLOPS, batch 512, seq 1024, 500k vocab)",
-            &["gpus", "params", "superscaler(interlaced)", "megatron(tp)", "deepspeed(zero3-offload)"],
+            &[
+                "gpus",
+                "params",
+                "superscaler(interlaced)",
+                "megatron(tp)",
+                "deepspeed(zero3-offload)",
+            ],
         );
         for (i, &gpus) in gpus_list.iter().enumerate() {
             let batch = 2 * gpus; // micro-batch 2/device, grad-accumulated

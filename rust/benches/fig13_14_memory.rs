@@ -33,11 +33,22 @@ fn main() {
     // ---- Fig. 13: Swin, growing model size, single GPU ----
     let mut t = Table::new(
         "Fig 13: Swin single-GPU peak memory / latency vs model size (micro-batch 1)",
-        &["hidden", "params", "coshard mem", "coshard lat", "recompute mem", "recompute lat", "zero3-offload mem", "zero3-offload lat"],
+        &[
+            "hidden",
+            "params",
+            "coshard mem",
+            "coshard lat",
+            "recompute mem",
+            "recompute lat",
+            "zero3-offload mem",
+            "zero3-offload lat",
+        ],
     );
     // Paper Fig. 13 sweeps 115M -> 1.3B Swin variants (below Table 2's
     // smallest column); micro-batch 1, resolution 1536.
-    for (layers, hidden, heads) in [(16usize, 128usize, 4usize), (24, 192, 6), (24, 256, 8), (32, 320, 10), (32, 384, 12)] {
+    let shapes =
+        [(16usize, 128usize, 4usize), (24, 192, 6), (24, 256, 8), (32, 320, 10), (32, 384, 12)];
+    for (layers, hidden, heads) in shapes {
         let mk = || models::swin_custom(layers, hidden, heads, 1, 1536);
         let params = format!("{:.0}M", mk().num_params() as f64 / 1e6);
         // co-shard: heads split sequentially + recompute.
@@ -53,7 +64,15 @@ fn main() {
     // ---- Fig. 14: GPT-3 1.3B, growing sequence length ----
     let mut t = Table::new(
         "Fig 14: GPT-3 1.3B single-GPU peak memory / latency vs sequence length (micro-batch 1)",
-        &["seq", "coshard mem", "coshard lat", "recompute mem", "recompute lat", "zero3-offload mem", "zero3-offload lat"],
+        &[
+            "seq",
+            "coshard mem",
+            "coshard lat",
+            "recompute mem",
+            "recompute lat",
+            "zero3-offload mem",
+            "zero3-offload lat",
+        ],
     );
     for seq in [2048usize, 4096, 6144, 8192, 10240] {
         let mk = || models::gpt3(0, 1, seq);

@@ -23,7 +23,17 @@ fn main() {
         let k = gpus.min(16);
         let cluster = Cluster::v100(gpus);
         let cases: Vec<(&str, PlanResult)> = vec![
-            ("megatron", megatron(mbart(scale, batch, 1024), (gpus / 16).max(1), 1, gpus.min(16), k, PipeOrder::OneFOneB)),
+            (
+                "megatron",
+                megatron(
+                    mbart(scale, batch, 1024),
+                    (gpus / 16).max(1),
+                    1,
+                    gpus.min(16),
+                    k,
+                    PipeOrder::OneFOneB,
+                ),
+            ),
             ("IL-block", interlaced_pipeline(mbart(scale, batch, 1024), gpus, k, true, true)),
             ("superscaler", interlaced_pipeline(mbart(scale, batch, 1024), gpus, k, true, false)),
         ];
@@ -40,7 +50,14 @@ fn main() {
                         fmt_secs(b),
                     ]);
                 }
-                _ => t.row([gpus.to_string(), name.to_string(), "x".into(), "-".into(), "-".into(), "-".into()]),
+                _ => t.row([
+                    gpus.to_string(),
+                    name.to_string(),
+                    "x".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
             }
         }
     }

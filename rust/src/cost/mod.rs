@@ -14,8 +14,10 @@
 //! operators slightly slower — Fig. 13's latency panel — while still
 //! winning on memory).
 
-use crate::graph::CollKind;
+use crate::graph::{CollKind, Graph, TensorKind};
+use crate::plans::{PlanKind, PlanSpec};
 use crate::schedule::{DeviceId, CPU_DEVICE};
+use crate::trans::autograd::BWD_FLOP_RATIO;
 
 /// Per-device compute/memory characteristics (defaults: V100-ish).
 #[derive(Clone, Debug)]
@@ -203,6 +205,88 @@ impl Cluster {
     }
 }
 
+/// Aggregate model quantities the analytic plan bound needs, extracted once
+/// from a forward-only probe graph (before any transformation/autograd).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelStats {
+    /// Total forward FLOPs of the untransformed graph.
+    pub fwd_flops: f64,
+    /// Forward FLOPs of ops that participate in backward (`!no_grad`) —
+    /// autograd will emit `BWD_FLOP_RATIO ×` this much backward work.
+    pub grad_fwd_flops: f64,
+    /// Total trainable-weight bytes.
+    pub weight_bytes: u64,
+    /// Total activation bytes of the forward graph (what a plan stashes
+    /// for backward unless it recomputes).
+    pub act_bytes: u64,
+}
+
+impl ModelStats {
+    /// Extract stats from a forward-only model graph.
+    pub fn of(g: &Graph) -> ModelStats {
+        let mut fwd = 0.0;
+        let mut grad = 0.0;
+        for o in g.live_ops().filter(|o| o.is_forward) {
+            fwd += o.flops;
+            if !o.no_grad {
+                grad += o.flops;
+            }
+        }
+        let act = g
+            .ptensors
+            .iter()
+            .filter(|p| p.kind == TensorKind::Activation)
+            .map(|p| p.bytes())
+            .sum();
+        ModelStats {
+            fwd_flops: fwd,
+            grad_fwd_flops: grad,
+            weight_bytes: g.weight_bytes(),
+            act_bytes: act,
+        }
+    }
+}
+
+impl Cluster {
+    /// Optimistic analytic lower bound (seconds) on the simulated iteration
+    /// time of ANY plan built from `spec` — the dominance-pruning key of
+    /// [`crate::search`]. Sound by construction, so pruning on it can never
+    /// discard the true optimum:
+    ///
+    /// * compute: the forward + backward FLOPs must execute somewhere; the
+    ///   busiest device carries at least the mean share, and no kernel runs
+    ///   faster than `peak_flops × max_util` (the saturation curve's ceiling).
+    ///   Recompute, replication, optimizer work and kernel-launch overheads
+    ///   only add to the true time and are ignored.
+    /// * communication: a data-parallel plan must synchronize each replica's
+    ///   gradient shard; the simulator's synchronous-collective model blocks
+    ///   every group member for the ring all-reduce, costed here at NVLink
+    ///   bandwidth (the fastest link in the cluster) with zero latency and a
+    ///   further 2× safety margin. Compute and communication both occupy the
+    ///   device timeline, so the two bounds add.
+    pub fn plan_time_lower_bound(&self, spec: &PlanSpec, stats: &ModelStats) -> f64 {
+        let devices = spec.devices().max(1) as f64;
+        let work = stats.fwd_flops + BWD_FLOP_RATIO * stats.grad_fwd_flops;
+        let compute = work / devices / (self.spec.peak_flops * self.spec.max_util);
+        let dp = spec.dp.max(1);
+        let comm = if dp > 1 {
+            // Per-device gradient bytes that cross the DP group. Grid plans
+            // hold 1/(pp·tp) of the weights per device; ZeRO-family plans
+            // reduce-scatter instead of all-reduce (half the ring traffic).
+            let w = stats.weight_bytes as f64;
+            let grad_bytes = match spec.kind {
+                PlanKind::Zero3 | PlanKind::Zero3Offload => w / 2.0,
+                _ => w / (spec.pp.max(1) * spec.tp.max(1)) as f64,
+            };
+            let n = dp as f64;
+            0.5 * (2.0 * (n - 1.0) / n * grad_bytes / self.nvlink_bw)
+        } else {
+            0.0
+        };
+        compute + comm
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -273,6 +357,26 @@ mod tests {
         let c = Cluster::v100(8);
         let (bw, _) = c.link(0, CPU_DEVICE);
         assert_eq!(bw, c.pcie_bw);
+    }
+
+    #[test]
+    fn plan_lower_bound_never_exceeds_simulated_time() {
+        use crate::materialize::CommMode;
+        use crate::plans::registry;
+        let c = Cluster::v100(4);
+        let stats = ModelStats::of(&crate::models::gpt3(0, 8, 256).graph);
+        let specs = [
+            ("megatron", PlanSpec { pp: 4, micro: 4, ..PlanSpec::new(PlanKind::Megatron) }),
+            ("megatron", PlanSpec { dp: 2, tp: 2, ..PlanSpec::new(PlanKind::Megatron) }),
+            ("megatron", PlanSpec { dp: 4, ..PlanSpec::new(PlanKind::Megatron) }),
+        ];
+        for (name, spec) in specs {
+            let out = registry::build(name, crate::models::gpt3(0, 8, 256), &spec).unwrap();
+            let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
+            let lb = c.plan_time_lower_bound(&spec, &stats);
+            assert!(lb > 0.0);
+            assert!(lb <= r.makespan, "{}: lb {} > simulated {}", spec.label(), lb, r.makespan);
+        }
     }
 
     #[test]

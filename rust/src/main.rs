@@ -13,7 +13,7 @@
 
 use superscaler::materialize::CommMode;
 use superscaler::models;
-use superscaler::plans::{self, PlanKind, PlanSpec, Planner};
+use superscaler::plans::{self, PlanKind, PlanSpec, Planner, StageSpec};
 use superscaler::rvd::Rvd;
 use superscaler::search;
 use superscaler::util::cli::Args;
@@ -45,11 +45,18 @@ fn usage() {
            superscaler search   --model <gpt3|swin|mbart|alphafold2> [--gpus N]\n\
                                 [--scale 0..3] [--batch B] [--seq S] [--top N]\n\
                                 [--workers N] [--max-candidates N]\n\
-                                [--comm p2p|intra|inter]\n\
-                                  enumerate the feasible PlanSpec grid, evaluate\n\
-                                  every candidate in parallel (transform ->\n\
+                                [--comm p2p|intra|inter] [--hetero] [--no-prune]\n\
+                                [--baseline FILE] [--write-baseline] [--tol F]\n\
+                                  enumerate the feasible PlanSpec grid (--hetero\n\
+                                  adds heterogeneous per-stage pipelines),\n\
+                                  dominance-prune against the analytic cost\n\
+                                  lower bound (--no-prune simulates everything),\n\
+                                  evaluate survivors in parallel (transform ->\n\
                                   validate -> materialize -> simulate), print the\n\
-                                  ranking (best iteration time first)\n\
+                                  ranking (best iteration time first).\n\
+                                  --baseline gates the best time against a\n\
+                                  committed JSON (exit 3 on regression > --tol,\n\
+                                  default 0.001); --write-baseline refreshes it\n\
            superscaler rvd      --from 'R(r)V(v)D(k1,k2)' --to '...' [--gpus N]\n\
                                 [--src-gpus N] [--dst-gpus N] [--mb MB]\n\
            superscaler train    [--devices N] [--steps N] [--lr F] [--artifacts DIR]\n\
@@ -105,6 +112,21 @@ fn spec_from_args(planner: &dyn Planner, args: &Args, gpus: usize) -> PlanSpec {
     if spec.kind == PlanKind::Dap && !args.has("tp") {
         spec.tp = (gpus / spec.dp.max(1)).max(1);
     }
+    // Hetero builds from its stage list, so degree flags rebuild it as a
+    // uniform pipeline (--pp stages of --tp width, default gpus/pp) instead
+    // of silently drifting from the stages the planner chose.
+    if spec.kind == PlanKind::Hetero {
+        if args.has("pp") || args.has("tp") {
+            let pp = spec.pp.max(1);
+            let width =
+                if args.has("tp") { spec.tp.max(1) } else { (gpus / spec.dp.max(1) / pp).max(1) };
+            spec.stages = Some(vec![StageSpec::tp(width); pp]);
+        }
+        if let Some(stages) = &spec.stages {
+            spec.pp = stages.len();
+            spec.tp = 1;
+        }
+    }
     spec
 }
 
@@ -128,9 +150,15 @@ fn simulate(args: &Args) {
             println!("plan       {}", out.name);
             println!("iteration  {}", fmt_secs(r.makespan));
             println!("aggregate  {:.1} TFLOPS ({:.1}/GPU)", r.aggregate_tflops, r.tflops_per_gpu);
-            println!("breakdown  compute {} | comm {} | bubble {}", fmt_secs(comp), fmt_secs(comm), fmt_secs(bub));
+            println!(
+                "breakdown  compute {} | comm {} | bubble {}",
+                fmt_secs(comp),
+                fmt_secs(comm),
+                fmt_secs(bub)
+            );
             println!("comm       {}", fmt_bytes(r.comm_bytes));
-            println!("peak mem   {}{}", fmt_bytes(r.max_peak_mem()), if r.oom { "  ** OOM **" } else { "" });
+            let oom = if r.oom { "  ** OOM **" } else { "" };
+            println!("peak mem   {}{}", fmt_bytes(r.max_peak_mem()), oom);
         }
         Err(e) => {
             eprintln!("schedule invalid: {e}");
@@ -151,6 +179,8 @@ fn search_cmd(args: &Args) {
         workers: args.usize("workers", 0),
         comm: comm_mode(args),
         max_candidates: args.usize("max-candidates", 256),
+        hetero: args.has("hetero"),
+        prune: !args.has("no-prune"),
     };
     let report = search::search(|| build_model(args), &cluster, &cfg);
     let t = report.to_table(top);
@@ -166,10 +196,86 @@ fn search_cmd(args: &Args) {
                 m.aggregate_tflops,
                 fmt_bytes(m.peak_mem)
             );
+            if let Some(path) = args.get("baseline") {
+                baseline_gate(path, &report, args);
+            }
         }
         None => {
             eprintln!("no feasible plan completed without OOM/deadlock");
             std::process::exit(1);
+        }
+    }
+}
+
+/// The CI perf-trajectory gate: compare the search's best iteration time
+/// against a committed baseline JSON. A missing/unset baseline (or
+/// `--write-baseline`) writes the current numbers instead of gating, so the
+/// first CI run bootstraps the file it uploads as an artifact.
+fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
+    use superscaler::util::json::{self, Value};
+    let best = report.best().expect("gate runs only with a best plan");
+    let m = best.metrics().expect("best candidate has metrics");
+    let tol = args.f64("tol", 0.001);
+    let current = Value::obj([
+        ("model", report.model.clone().into()),
+        ("gpus", report.gpus.into()),
+        ("best_plan", best.plan_name.clone().into()),
+        ("best_spec", best.spec.label().into()),
+        ("best_makespan", m.makespan.into()),
+        ("simulated", report.evaluated.into()),
+        ("pruned_infeasible", report.pruned.into()),
+        ("capped", report.capped.into()),
+        ("pruned_cost_bound", report.pruned_bound.into()),
+    ]);
+    let write = |reason: &str| {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        match std::fs::write(path, json::to_string_pretty(&current) + "\n") {
+            Ok(()) => println!("baseline {reason}: wrote {path} (best {})", fmt_secs(m.makespan)),
+            Err(e) => {
+                eprintln!("cannot write baseline {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let prior = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| json::parse(&s).ok())
+        .and_then(|v| v.get("best_makespan").and_then(|b| b.as_f64()))
+        .filter(|&b| b > 0.0);
+    match prior {
+        None => write("bootstrap"),
+        Some(base) => {
+            let ratio = m.makespan / base;
+            let delta = (ratio - 1.0) * 100.0;
+            if ratio > 1.0 + tol {
+                if !args.has("write-baseline") {
+                    eprintln!(
+                        "PERF GATE FAILED: best plan {} at {} regressed {delta:+.2}% vs \
+                         baseline {}",
+                        best.plan_name,
+                        fmt_secs(m.makespan),
+                        fmt_secs(base)
+                    );
+                    std::process::exit(3);
+                }
+                println!(
+                    "perf gate: REGRESSION {delta:+.2}% vs {} accepted by --write-baseline",
+                    fmt_secs(base)
+                );
+            } else {
+                println!(
+                    "perf gate ok: {} vs baseline {} ({delta:+.2}%)",
+                    fmt_secs(m.makespan),
+                    fmt_secs(base)
+                );
+            }
+            if args.has("write-baseline") {
+                write("refresh");
+            } else if ratio < 1.0 - tol {
+                println!("note: best improved; refresh with --write-baseline to lock it in");
+            }
         }
     }
 }
@@ -194,7 +300,10 @@ fn rvd_query(args: &Args) {
     let cluster = Cluster::v100(32);
     let src: Vec<usize> = (0..src_n).collect();
     let dst: Vec<usize> = (8..8 + dst_n).collect();
-    println!("searching {from} ({src_n} gpus, server 0) -> {to} ({dst_n} gpus, server 1), {}", fmt_bytes(mb));
+    println!(
+        "searching {from} ({src_n} gpus, server 0) -> {to} ({dst_n} gpus, server 1), {}",
+        fmt_bytes(mb)
+    );
     match superscaler::rvd::search_inter(&cluster, &src, &dst, mb, &from, &to) {
         Some(p) => {
             println!("plan: {}", p.describe(&from));

@@ -448,7 +448,18 @@ fn synthesize_component(
             };
             if let Some(path) = path {
                 plan.n_rvd += 1;
-                emit_rvd_path(g, plan, pt, total_bytes, producers, &cons_views, &path, cross_iter, &pgroup, &cgroup);
+                emit_rvd_path(
+                    g,
+                    plan,
+                    pt,
+                    total_bytes,
+                    producers,
+                    &cons_views,
+                    &path,
+                    cross_iter,
+                    &pgroup,
+                    &cgroup,
+                );
                 return;
             }
         }
@@ -665,9 +676,27 @@ mod tests {
         let m1 = g.add_ptensor("w.m", &[16, 16], DType::F32, TensorKind::OptState);
         let y = g.add_ptensor("y", &[8, 4, 16], DType::F32, TensorKind::Activation);
         let (xv, wv, yv) = (g.full_view(x), g.full_view(w), g.full_view(y));
-        let lin = g.add_op("lin", OpKind::Matmul, vec![xv, wv], vec![yv], 1e9, Some(sigs::linear()), true, 0);
+        let lin = g.add_op(
+            "lin",
+            OpKind::Matmul,
+            vec![xv, wv],
+            vec![yv],
+            1e9,
+            Some(sigs::linear()),
+            true,
+            0,
+        );
         let (gv, wv2, mv, wv3) = (g.full_view(wg), g.full_view(w), g.full_view(m1), g.full_view(w));
-        let opt = g.add_op("opt", OpKind::Optimizer, vec![gv, wv2, mv], vec![wv3], 256.0, Some(sigs::optimizer()), false, 0);
+        let opt = g.add_op(
+            "opt",
+            OpKind::Optimizer,
+            vec![gv, wv2, mv],
+            vec![wv3],
+            256.0,
+            Some(sigs::optimizer()),
+            false,
+            0,
+        );
 
         let fwd = op_trans(&mut g, lin, &TransformAlgo::split("b", n)).unwrap();
         let opts = op_trans(&mut g, opt, &TransformAlgo::replicate(n)).unwrap();
@@ -725,7 +754,8 @@ mod tests {
         let vs = validate(&g, &s).unwrap();
         let cluster = Cluster::v100(8);
         let plan = materialize(&g, &vs, &cluster, CommMode::InterRvd);
-        assert_eq!(plan.comm_bytes, 0, "{:#?}", plan.tasks.iter().map(|t| &t.label).collect::<Vec<_>>());
+        let labels: Vec<_> = plan.tasks.iter().map(|t| &t.label).collect();
+        assert_eq!(plan.comm_bytes, 0, "{labels:#?}");
         assert!(plan.tasks.iter().all(|t| !t.is_comm()));
     }
 

@@ -266,7 +266,8 @@ impl ModelBuilder {
         self.tp_dim.insert(op1, "n");
         self.coshard_dim.insert(op1, "n");
         ops.push(op1);
-        let (y2, op2) = self.eltwise(&format!("{name}.gelu"), "gelu", &[y1], layer, &[batch, seq, ff]);
+        let (y2, op2) =
+            self.eltwise(&format!("{name}.gelu"), "gelu", &[y1], layer, &[batch, seq, ff]);
         self.tp_dim.insert(op2, "h"); // eltwise3 names the last dim "h"
         self.coshard_dim.insert(op2, "h");
         ops.push(op2);
@@ -294,17 +295,27 @@ impl ModelBuilder {
         let mut ops = Vec::new();
         let (n1, op) = self.layernorm(&format!("{name}.ln1"), x, layer, &[batch, seq, hidden]);
         ops.push(op);
-        let (att, mut a_ops) =
-            self.attention_block(&format!("{name}.at"), n1, layer, batch, seq, hidden, heads, attn_flops);
+        let (att, mut a_ops) = self.attention_block(
+            &format!("{name}.at"),
+            n1,
+            layer,
+            batch,
+            seq,
+            hidden,
+            heads,
+            attn_flops,
+        );
         ops.append(&mut a_ops);
-        let (r1, op) = self.eltwise(&format!("{name}.res1"), "add", &[x, att], layer, &[batch, seq, hidden]);
+        let (r1, op) =
+            self.eltwise(&format!("{name}.res1"), "add", &[x, att], layer, &[batch, seq, hidden]);
         ops.push(op);
         let (n2, op) = self.layernorm(&format!("{name}.ln2"), r1, layer, &[batch, seq, hidden]);
         ops.push(op);
         let (ffn, mut f_ops) =
             self.ffn_block(&format!("{name}.ff"), n2, layer, batch, seq, hidden, ff);
         ops.append(&mut f_ops);
-        let (out, op) = self.eltwise(&format!("{name}.res2"), "add", &[r1, ffn], layer, &[batch, seq, hidden]);
+        let (out, op) =
+            self.eltwise(&format!("{name}.res2"), "add", &[r1, ffn], layer, &[batch, seq, hidden]);
         ops.push(op);
         (out, ops)
     }

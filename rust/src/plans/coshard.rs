@@ -204,13 +204,22 @@ impl Planner for CoshardPlanner {
 
     fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
         let n = cluster.num_gpus();
-        let mut out: Vec<PlanSpec> = [2usize, 4, 8]
-            .iter()
-            .map(|&s| PlanSpec { dp: n, shards: s, ..PlanSpec::new(PlanKind::Coshard) })
+        // The full shard range 2..=8 (shards = 1 degenerates to plain DP,
+        // which the megatron grid already owns); dominance pruning keeps
+        // the finer grid affordable.
+        let mut out: Vec<PlanSpec> = (2usize..=8)
+            .map(|s| PlanSpec { dp: n, shards: s, ..PlanSpec::new(PlanKind::Coshard) })
             .collect();
-        // The composed variant: co-shard + ZeRO-style optimizer sharding
+        // The composed variants: co-shard + ZeRO-style optimizer sharding
         // (how the large weak-scaling points fit in memory).
-        out.push(PlanSpec { dp: n, shards: 8, zero_shard: true, ..PlanSpec::new(PlanKind::Coshard) });
+        for s in [4usize, 8] {
+            out.push(PlanSpec {
+                dp: n,
+                shards: s,
+                zero_shard: true,
+                ..PlanSpec::new(PlanKind::Coshard)
+            });
+        }
         out
     }
 

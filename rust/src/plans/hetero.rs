@@ -1,0 +1,662 @@
+//! Heterogeneous pipeline — the §5 / Fig. 18 plan family: a pipeline whose
+//! stages each apply their *own* intra-stage transformation. One stage may
+//! run Megatron tensor parallelism over four devices while its neighbour
+//! runs co-located shards + recompute on a single device and a third
+//! offloads its optimizer to the host. Empirical plan generators cannot
+//! reach these points because they bake one intra-stage choice into the
+//! whole grid; with transformation decoupled from space-time scheduling the
+//! combination is just another sProgram.
+//!
+//! The plan is declaratively a [`PlanSpec`] of kind [`PlanKind::Hetero`]
+//! whose `stages` field carries one [`StageSpec`] per pipeline stage
+//! (tp width, co-shard count, recompute and optimizer-offload flags).
+//! [`HeteroPlanner::candidates`] performs the *inner* level of the
+//! two-level search: for every pipeline depth it enumerates stage-width
+//! compositions of the cluster, picks each stage's transformation by
+//! analytic cost-model ranking ([`crate::cost::ModelStats`] + α–β/compute
+//! estimates), and emits only the best-ranked combinations — the outer
+//! level (feasibility, dominance pruning, simulation) lives in
+//! [`crate::search`].
+
+use super::*;
+use crate::cost::{Cluster, ModelStats};
+use crate::schedule::CPU_DEVICE;
+use crate::trans::autograd::BWD_FLOP_RATIO;
+use crate::trans::{autograd, recompute, TransError};
+
+/// Build a heterogeneous pipeline: `dp` replicas of a `stages.len()`-stage
+/// pipeline with `k` micro-batches, where stage `s` applies `stages[s]`'s
+/// intra-stage transformation. Layers are FLOP-balanced across stages; a
+/// stage of width `w` occupies `w` consecutive devices.
+pub fn hetero(mut model: Model, dp: usize, k: usize, stages: &[StageSpec]) -> PlanResult {
+    if stages.is_empty() {
+        return Err(TransError::Invalid("hetero plan needs at least one stage".into()));
+    }
+    for (i, st) in stages.iter().enumerate() {
+        if st.tp.max(1) > 1 && st.shards.max(1) > 1 {
+            return Err(TransError::Invalid(format!(
+                "stage {i}: tp {} and shards {} are mutually exclusive (co-shard is single-device)",
+                st.tp, st.shards
+            )));
+        }
+    }
+    let dp = dp.max(1);
+    let k = k.max(1);
+    let pp = stages.len();
+    if model.layers.len() < pp {
+        return Err(TransError::Invalid(format!(
+            "{} stages over {} layers",
+            pp,
+            model.layers.len()
+        )));
+    }
+    let tp_dim = model.tp_dim.clone();
+    let coshard_dim = model.coshard_dim.clone();
+    let g = &mut model.graph;
+    let mut sched = Schedule::new();
+    let layer_stages = balance_stages(g, &model.layers, pp);
+    let stage_of_layer: HashMap<usize, usize> = layer_stages
+        .iter()
+        .enumerate()
+        .flat_map(|(s, ls)| ls.iter().map(move |&l| (l, s)))
+        .collect();
+    let widths: Vec<usize> = stages.iter().map(|s| s.width()).collect();
+    let mut offsets = Vec::with_capacity(pp);
+    let mut total = 0usize;
+    for &w in &widths {
+        offsets.push(total);
+        total += w;
+    }
+    let device = |dpg: usize, s: usize, t: usize| dpg * total + offsets[s] + t;
+
+    // Weight pTensor -> stage, for per-stage optimizer offload. Gathered
+    // before transformation, while `model.layers` still names live ops.
+    let mut weight_stage: HashMap<PTensorId, usize> = HashMap::new();
+    if stages.iter().any(|s| s.offload) {
+        for (li, ops) in model.layers.iter().enumerate() {
+            let s = stage_of_layer[&li];
+            for &op in ops {
+                for &v in &g.op(op).inputs {
+                    let pt = g.vtensor(v).ptensor;
+                    if g.ptensor(pt).kind == TensorKind::Weight {
+                        weight_stage.insert(pt, s);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- transformation: dp split -> K micro-batches -> per-stage ----
+    // pieces[(layer, dpg, mb)] = that micro-batch's ops on the layer's
+    // stage (tp shards laid out across the stage group, or co-shard pieces
+    // co-located on the stage device).
+    let mut pieces: HashMap<(usize, usize, usize), Vec<OpId>> = HashMap::new();
+    // sblocks[(dpg, layer, run, mb)][shard] = ops of one sequential
+    // co-shard block (the coshard plan's contiguous-run structure).
+    let mut sblocks: HashMap<(usize, usize, usize, usize), Vec<Vec<OpId>>> = HashMap::new();
+    for (li, ops) in model.layers.iter().enumerate() {
+        let s = stage_of_layer[&li];
+        let st = &stages[s];
+        let tp = st.width();
+        let want_shards = if tp == 1 { st.shards.max(1) } else { 1 };
+        let mut run = 0usize;
+        let mut in_run = false;
+        for &op in ops {
+            let eligible = want_shards > 1 && coshard_dim.contains_key(&op);
+            if !eligible && in_run {
+                run += 1;
+                in_run = false;
+            }
+            let batch_dim = g
+                .op(op)
+                .signature
+                .as_ref()
+                .and_then(|sg| sg.batch.clone())
+                .expect("fwd op without batch");
+            let dp_parts = op_trans(g, op, &TransformAlgo::split(&batch_dim, dp))?;
+            for (dpg, p) in dp_parts.into_iter().enumerate() {
+                let mbs = op_trans(g, p, &TransformAlgo::split(&batch_dim, k))?;
+                for (mi, m) in mbs.into_iter().enumerate() {
+                    if tp > 1 {
+                        // Megatron-style TP split, capped by the dim's
+                        // actual size with replicas filling the group. The
+                        // split factor must divide BOTH the dim size and
+                        // the stage width so every op contributes exactly
+                        // `tp` pieces — the `idx % tp` device layout below
+                        // would misalign corresponding shards of
+                        // producer/consumer ops otherwise.
+                        let shards = match tp_dim.get(&op) {
+                            Some(dim) => {
+                                let sz = dim_size(g, m, dim);
+                                let eff = (1..=tp)
+                                    .rev()
+                                    .find(|&c| tp % c == 0 && sz.map_or(false, |s| s % c == 0))
+                                    .unwrap_or(1);
+                                let mut out = Vec::with_capacity(tp);
+                                for piece in op_trans(g, m, &TransformAlgo::split(dim, eff))? {
+                                    if tp / eff > 1 {
+                                        out.extend(op_trans(
+                                            g,
+                                            piece,
+                                            &TransformAlgo::replicate(tp / eff),
+                                        )?);
+                                    } else {
+                                        out.push(piece);
+                                    }
+                                }
+                                out
+                            }
+                            None => op_trans(g, m, &TransformAlgo::replicate(tp))?,
+                        };
+                        pieces.entry((li, dpg, mi)).or_default().extend(shards);
+                    } else if eligible {
+                        let sdim = coshard_dim[&op];
+                        let eff = dim_size(g, m, sdim)
+                            .map(|sz| feasible_split(sz, want_shards))
+                            .unwrap_or(1);
+                        let sparts = op_trans(g, m, &TransformAlgo::split(sdim, eff))?;
+                        let entry = sblocks
+                            .entry((dpg, li, run, mi))
+                            .or_insert_with(|| vec![Vec::new(); sparts.len()]);
+                        let cap = entry.len() - 1;
+                        for (si, sp) in sparts.into_iter().enumerate() {
+                            entry[si.min(cap)].push(sp);
+                            pieces.entry((li, dpg, mi)).or_default().push(sp);
+                        }
+                    } else {
+                        pieces.entry((li, dpg, mi)).or_default().push(m);
+                    }
+                }
+            }
+            if eligible {
+                in_run = true;
+            }
+        }
+    }
+
+    let ag = autograd::complete(g);
+    let mut bwd_all: Vec<OpId> = ag.bwd_of.values().copied().collect();
+    bwd_all.sort_unstable();
+
+    // ---- per-stage recompute ----
+    // One recompute() call per (dpg, layer) — all micro-batches (and, for
+    // co-shard stages, all runs and shards) together — so the twins share
+    // recomputed-activation pTensors and every backward reads its own twin
+    // region (the interlaced/coshard pattern).
+    let mut rc_pieces: HashMap<(usize, usize, usize), Vec<OpId>> = HashMap::new();
+    let mut rc_blocks: HashMap<(usize, usize, usize, usize), Vec<Vec<OpId>>> = HashMap::new();
+    let mut sblock_keys: Vec<(usize, usize, usize, usize)> = sblocks.keys().copied().collect();
+    sblock_keys.sort_unstable();
+    for li in 0..model.layers.len() {
+        let s = stage_of_layer[&li];
+        let st = &stages[s];
+        let sharded = st.width() == 1 && st.shards.max(1) > 1;
+        if sharded {
+            for dpg in 0..dp {
+                let keys: Vec<&(usize, usize, usize, usize)> = sblock_keys
+                    .iter()
+                    .filter(|&&(d, l, _, _)| d == dpg && l == li)
+                    .collect();
+                let mut flat: Vec<OpId> = Vec::new();
+                let mut lens: Vec<((usize, usize, usize, usize), Vec<usize>)> = Vec::new();
+                for &&key in &keys {
+                    let blocks = &sblocks[&key];
+                    lens.push((key, blocks.iter().map(|b| b.len()).collect()));
+                    for b in blocks {
+                        flat.extend_from_slice(b);
+                    }
+                }
+                if flat.is_empty() {
+                    continue;
+                }
+                let rc = recompute(g, &flat, &bwd_all);
+                let mut cur = 0;
+                for (key, shard_lens) in lens {
+                    let mut blocks_rc = Vec::with_capacity(shard_lens.len());
+                    for n in shard_lens {
+                        blocks_rc.push(rc[cur..cur + n].to_vec());
+                        cur += n;
+                    }
+                    rc_blocks.insert(key, blocks_rc);
+                }
+            }
+        } else if st.recompute {
+            for dpg in 0..dp {
+                let mut flat: Vec<OpId> = Vec::new();
+                let mut lens = Vec::with_capacity(k);
+                for mi in 0..k {
+                    let ops = &pieces[&(li, dpg, mi)];
+                    flat.extend_from_slice(ops);
+                    lens.push(ops.len());
+                }
+                if flat.is_empty() {
+                    continue;
+                }
+                let rc = recompute(g, &flat, &bwd_all);
+                let mut cur = 0;
+                for (mi, n) in lens.into_iter().enumerate() {
+                    rc_pieces.insert((li, dpg, mi), rc[cur..cur + n].to_vec());
+                    cur += n;
+                }
+            }
+        }
+    }
+
+    // ---- spatial assignment ----
+    let mut piece_keys: Vec<(usize, usize, usize)> = pieces.keys().copied().collect();
+    piece_keys.sort_unstable();
+    for &(li, dpg, mi) in &piece_keys {
+        let s = stage_of_layer[&li];
+        let tpw = stages[s].width();
+        for (idx, &op) in pieces[&(li, dpg, mi)].iter().enumerate() {
+            let t = idx % tpw;
+            sched.assign(op, device(dpg, s, t));
+            if let Some(&b) = ag.bwd_of.get(&op) {
+                sched.assign(b, device(dpg, s, t));
+            }
+        }
+        if let Some(rc) = rc_pieces.get(&(li, dpg, mi)) {
+            for (idx, &op) in rc.iter().enumerate() {
+                sched.assign(op, device(dpg, s, idx % tpw));
+            }
+        }
+    }
+    for &(dpg, li, run, mi) in &sblock_keys {
+        let s = stage_of_layer[&li];
+        if let Some(blocks_rc) = rc_blocks.get(&(dpg, li, run, mi)) {
+            for b in blocks_rc {
+                for &op in b {
+                    sched.assign(op, device(dpg, s, 0));
+                }
+            }
+        }
+    }
+
+    // ---- optimizers: align, then per-stage offload, then placement ----
+    let opt_regions = align_optimizers(g);
+    if stages.iter().any(|s| s.offload) {
+        let mut wpts: Vec<PTensorId> = opt_regions.keys().copied().collect();
+        wpts.sort_unstable();
+        for w_pt in wpts {
+            let Some(&s) = weight_stage.get(&w_pt) else { continue };
+            if stages[s].offload {
+                for &op in &opt_regions[&w_pt] {
+                    sched.assign(op, CPU_DEVICE);
+                }
+            }
+        }
+    }
+    assign_optimizers(g, &mut sched);
+
+    // ---- temporal ordering: 1F1B across stages ----
+    for dpg in 0..dp {
+        for (s, ls) in layer_stages.iter().enumerate() {
+            let mut fwd_spans = Vec::with_capacity(k);
+            let mut bwd_spans = Vec::with_capacity(k);
+            let mut fwd_only: Vec<(OpId, OpId)> = Vec::with_capacity(k);
+            for m in 0..k {
+                let fops: Vec<OpId> = ls
+                    .iter()
+                    .flat_map(|&li| pieces[&(li, dpg, m)].iter().copied())
+                    .collect();
+                if fops.is_empty() {
+                    continue;
+                }
+                let fs = span(&fops);
+                fwd_only.push(fs);
+                let bops: Vec<OpId> =
+                    fops.iter().filter_map(|op| ag.bwd_of.get(op).copied()).collect();
+                if bops.is_empty() {
+                    continue;
+                }
+                fwd_spans.push(fs);
+                bwd_spans.push(span(&bops));
+            }
+            if fwd_spans.len() == k {
+                order_1f1b(&mut sched, s, pp, k, &fwd_spans, &bwd_spans);
+            } else {
+                // A stage without a complete backward per micro-batch
+                // (no_grad passes): still serialize the forwards so the
+                // micro-batches cannot all run concurrently.
+                for w in fwd_only.windows(2) {
+                    sched.order(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+    // ---- sequential co-shard ordering within each block run ----
+    for &(dpg, li, run, mi) in &sblock_keys {
+        let blocks = &sblocks[&(dpg, li, run, mi)];
+        for si in 1..blocks.len() {
+            if blocks[si - 1].is_empty() || blocks[si].is_empty() {
+                continue;
+            }
+            let prev = span(&blocks[si - 1]);
+            let next = span(&blocks[si]);
+            sched.order(prev.1, next.0);
+        }
+        if let Some(blocks_rc) = rc_blocks.get(&(dpg, li, run, mi)) {
+            // Shard i's backward before shard i+1's recompute, so only one
+            // shard's recomputed activations are live at a time.
+            for si in 1..blocks.len() {
+                let prev_bwd: Vec<OpId> = blocks[si - 1]
+                    .iter()
+                    .filter_map(|op| ag.bwd_of.get(op).copied())
+                    .collect();
+                let next_rc = &blocks_rc[si];
+                if !prev_bwd.is_empty() && !next_rc.is_empty() {
+                    sched.order(span(&prev_bwd).1, span(next_rc).0);
+                }
+            }
+        }
+    }
+
+    let stage_lbl: Vec<String> = stages.iter().map(|s| s.label()).collect();
+    Ok(PlanOutput {
+        graph: model.graph,
+        schedule: sched,
+        name: format!("hetero-dp{dp}k{k}[{}]", stage_lbl.join("|")),
+    })
+}
+
+/// Widths a stage may occupy in the candidate grid.
+const STAGE_WIDTHS: [usize; 4] = [8, 4, 2, 1];
+/// Cost-ranked non-uniform combinations kept per search (each is emitted
+/// with two micro-batch counts).
+const HETERO_TOP: usize = 12;
+/// Cap on width compositions explored per pipeline depth.
+const MAX_COMPOSITIONS: usize = 128;
+
+fn compositions(n: usize, parts: usize, prefix: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+    if out.len() >= MAX_COMPOSITIONS {
+        return;
+    }
+    if parts == 0 {
+        if n == 0 {
+            out.push(prefix.clone());
+        }
+        return;
+    }
+    for &w in &STAGE_WIDTHS {
+        if w <= n && n - w >= parts - 1 {
+            prefix.push(w);
+            compositions(n - w, parts - 1, prefix, out);
+            prefix.pop();
+        }
+    }
+}
+
+/// The per-stage transformation vocabulary for a stage of `width` devices.
+fn stage_choices(width: usize, can_coshard: bool) -> Vec<StageSpec> {
+    let mut out = vec![StageSpec::tp(width), StageSpec { recompute: true, ..StageSpec::tp(width) }];
+    if width == 1 && can_coshard {
+        for s in [2usize, 4, 8] {
+            out.push(StageSpec::coshard(s));
+        }
+    }
+    if width <= 2 {
+        out.push(StageSpec { offload: true, ..StageSpec::tp(width) });
+    }
+    out
+}
+
+/// Analytic (seconds, bytes) estimate for one stage choice given the
+/// stage's share of the model — the inner-level ranking key. This is a
+/// *heuristic* (recompute re-runs the forward, co-shard pays a small-kernel
+/// tax, TP pays an activation-collective tax, offload pays CPU Adam + PCIe);
+/// soundness is not required here because every emitted candidate is still
+/// simulated (or dominance-checked against the sound bound) by the search.
+/// Memory models both static state and the stashed activations — that is
+/// what makes recompute/co-shard *selectable*: they trade the time taxes
+/// above for an activation footprint plain TP cannot reach, so they win a
+/// stage exactly when the plain variant no longer fits the device.
+fn stage_cost(
+    cluster: &Cluster,
+    st: &StageSpec,
+    fwd: f64,
+    grad: f64,
+    weight: u64,
+    act: u64,
+) -> (f64, u64) {
+    let d = &cluster.spec;
+    let tpw = st.width() as f64;
+    let shards = st.shards.max(1) as u64;
+    let mut work = fwd + BWD_FLOP_RATIO * grad;
+    if st.recompute || shards > 1 {
+        work += fwd;
+    }
+    let mut t = work / tpw / (d.peak_flops * d.max_util);
+    if shards > 1 {
+        t *= 1.0 + 0.03 * shards as f64;
+    }
+    if st.width() > 1 {
+        t *= 1.05;
+    }
+    let mut stat = 4 * weight / st.width() as u64;
+    let mut act_mem = act / st.width() as u64;
+    if st.recompute {
+        // Only layer-boundary inputs stay stashed.
+        act_mem /= 8;
+    } else if shards > 1 {
+        // One shard's working set live at a time, plus boundary stashes.
+        act_mem = act_mem / shards + act_mem / 8;
+    }
+    if st.offload {
+        let params = weight as f64 / 4.0;
+        t += 16.0 * params / (cluster.cpu_spec.peak_flops * cluster.cpu_spec.max_util);
+        t += 2.0 * weight as f64 / cluster.pcie_bw;
+        stat = weight;
+    }
+    (t, stat + act_mem)
+}
+
+/// The inner level of the two-level search: enumerate stage-width
+/// compositions per pipeline depth, pick each stage's transformation by
+/// cost-model ranking, keep only the best-ranked combinations. Uniform
+/// (homogeneous-equivalent) combinations are always included so the
+/// heterogeneous space is a strict superset of the megatron pipeline grid.
+pub fn hetero_candidates(model: &Model, cluster: &Cluster) -> Vec<PlanSpec> {
+    let n = cluster.num_gpus();
+    let layers = model.layers.len().max(1);
+    let batch = model.global_batch.max(1);
+    if n < 2 || layers < 2 {
+        return Vec::new();
+    }
+    let stats = ModelStats::of(&model.graph);
+    let can_coshard = !model.coshard_dim.is_empty();
+    let cap = cluster.spec.mem_bytes;
+    let micros = [1usize, 2, 4, 8, 16];
+    let mut out: Vec<PlanSpec> = Vec::new();
+    let mut ranked: Vec<(f64, PlanSpec)> = Vec::new();
+    for pp in 2..=n.min(layers).min(8) {
+        let fwd = stats.fwd_flops / pp as f64;
+        let grad = stats.grad_fwd_flops / pp as f64;
+        let wsh = stats.weight_bytes / pp as u64;
+        let ash = stats.act_bytes / pp as u64;
+        if n % pp == 0 {
+            for &kk in &micros {
+                if kk <= batch {
+                    out.push(PlanSpec::hetero(vec![StageSpec::tp(n / pp); pp], kk));
+                }
+            }
+        }
+        let mut comps = Vec::new();
+        compositions(n, pp, &mut Vec::new(), &mut comps);
+        for comp in comps {
+            let mut combo: Vec<StageSpec> = Vec::with_capacity(pp);
+            let mut bottleneck = 0.0f64;
+            let mut feasible = true;
+            for &w in &comp {
+                let mut best: Option<(f64, StageSpec)> = None;
+                for st in stage_choices(w, can_coshard) {
+                    let (t, mem) = stage_cost(cluster, &st, fwd, grad, wsh, ash);
+                    if mem > cap {
+                        continue;
+                    }
+                    if best.as_ref().map(|&(bt, _)| t < bt).unwrap_or(true) {
+                        best = Some((t, st));
+                    }
+                }
+                match best {
+                    Some((t, st)) => {
+                        bottleneck = bottleneck.max(t);
+                        combo.push(st);
+                    }
+                    None => {
+                        feasible = false;
+                        break;
+                    }
+                }
+            }
+            if !feasible {
+                continue;
+            }
+            // All-plain uniform combos are already in `out`.
+            let uniform = combo.iter().all(|st| *st == StageSpec::tp(combo[0].tp));
+            if uniform && n % pp == 0 && combo[0].tp.max(1) == n / pp {
+                continue;
+            }
+            ranked.push((bottleneck, PlanSpec::hetero(combo, 4)));
+        }
+    }
+    ranked.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.1.label().cmp(&b.1.label()))
+    });
+    for (_, spec) in ranked.into_iter().take(HETERO_TOP) {
+        // Always emit each kept combination with a feasible micro count
+        // (dp = 1, so micro <= batch) — a small-batch model still explores
+        // heterogeneous points rather than silently skipping the space.
+        let mut s4 = spec.clone();
+        s4.micro = batch.min(4);
+        out.push(s4);
+        if batch >= 8 {
+            let mut s8 = spec;
+            s8.micro = 8;
+            out.push(s8);
+        }
+    }
+    out
+}
+
+/// [`Planner`] for the heterogeneous per-stage pipeline.
+pub struct HeteroPlanner;
+
+impl Planner for HeteroPlanner {
+    fn kind(&self) -> PlanKind {
+        PlanKind::Hetero
+    }
+
+    fn description(&self) -> &'static str {
+        "NEW: heterogeneous pipeline (per-stage tp/coshard/recompute/offload)"
+    }
+
+    fn applicable(&self, model: &Model) -> bool {
+        model.layers.len() >= 2
+    }
+
+    fn default_spec(&self, gpus: usize, micro: usize) -> PlanSpec {
+        let g = gpus.max(1);
+        let stages = if g >= 2 {
+            let half = g / 2;
+            vec![StageSpec::tp(g - half), StageSpec::tp(half)]
+        } else {
+            vec![StageSpec::tp(1)]
+        };
+        PlanSpec::hetero(stages, micro.max(1))
+    }
+
+    fn candidates(&self, model: &Model, cluster: &Cluster) -> Vec<PlanSpec> {
+        hetero_candidates(model, cluster)
+    }
+
+    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+        let Some(stages) = spec.stages.clone() else {
+            return Err(TransError::Invalid("hetero spec carries no per-stage list".into()));
+        };
+        hetero(model, spec.dp.max(1), spec.micro.max(1), &stages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::materialize::CommMode;
+    use crate::models::gpt3;
+    use crate::plans::megatron;
+    use crate::plans::PipeOrder;
+    use crate::schedule::validate;
+
+    #[test]
+    fn uniform_hetero_matches_megatron_pipeline() {
+        let c = crate::cost::Cluster::v100(4);
+        let h = hetero(gpt3(0, 8, 256), 1, 4, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+        let m = megatron(gpt3(0, 8, 256), 1, 2, 2, 4, PipeOrder::OneFOneB).unwrap();
+        let rh = crate::sim::run(&h.graph, &h.schedule, &c, CommMode::InterRvd).unwrap();
+        let rm = crate::sim::run(&m.graph, &m.schedule, &c, CommMode::InterRvd).unwrap();
+        let rel = (rh.makespan - rm.makespan).abs() / rm.makespan.max(1e-12);
+        assert!(rel < 0.01, "uniform hetero {} vs megatron {}", rh.makespan, rm.makespan);
+        assert_eq!(rh.per_device.len(), rm.per_device.len());
+    }
+
+    #[test]
+    fn mixed_width_pipeline_builds_and_validates() {
+        let out =
+            hetero(gpt3(0, 8, 256), 1, 4, &[StageSpec::tp(2), StageSpec::tp(1), StageSpec::tp(1)])
+                .unwrap();
+        let vs = validate(&out.graph, &out.schedule).expect("mixed hetero schedule valid");
+        assert!(!vs.topo.is_empty());
+        let c = crate::cost::Cluster::v100(4);
+        let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
+        assert!(!r.oom);
+        assert_eq!(r.per_device.len(), 4);
+    }
+
+    #[test]
+    fn coshard_stage_cuts_stage_memory() {
+        // Same 2-stage shape, second stage co-sharded: its device's peak
+        // must drop vs. the plain variant (that is co-shard's whole point).
+        let c = crate::cost::Cluster::v100(2);
+        let plain = hetero(gpt3(0, 4, 2048), 1, 2, &[StageSpec::tp(1), StageSpec::tp(1)]).unwrap();
+        let cs =
+            hetero(gpt3(0, 4, 2048), 1, 2, &[StageSpec::tp(1), StageSpec::coshard(4)]).unwrap();
+        let rp = crate::sim::run(&plain.graph, &plain.schedule, &c, CommMode::InterRvd).unwrap();
+        let rc = crate::sim::run(&cs.graph, &cs.schedule, &c, CommMode::InterRvd).unwrap();
+        assert!(
+            rc.per_device[1].peak_mem < rp.per_device[1].peak_mem,
+            "coshard stage {} vs plain {}",
+            rc.per_device[1].peak_mem,
+            rp.per_device[1].peak_mem
+        );
+    }
+
+    #[test]
+    fn conflicting_stage_spec_is_rejected() {
+        let bad = StageSpec { tp: 2, shards: 4, ..StageSpec::default() };
+        let err = hetero(gpt3(0, 8, 256), 1, 4, &[bad, StageSpec::tp(2)]).unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn candidates_cover_uniform_and_heterogeneous_points() {
+        let model = gpt3(0, 8, 256);
+        let cluster = crate::cost::Cluster::v100(8);
+        let cands = hetero_candidates(&model, &cluster);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|s| s.devices() == 8), "all candidates tile the cluster");
+        // The homogeneous-equivalent uniform point megatron defaults to.
+        assert!(cands.iter().any(|s| {
+            s.micro == 4
+                && s.stages.as_ref().map_or(false, |st| {
+                    st.len() == 2 && st.iter().all(|x| *x == StageSpec::tp(4))
+                })
+        }));
+        // And at least one genuinely heterogeneous composition.
+        assert!(cands.iter().any(|s| {
+            s.stages
+                .as_ref()
+                .map_or(false, |st| st.iter().any(|x| x.width() != st[0].width()))
+        }));
+    }
+}

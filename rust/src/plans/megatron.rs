@@ -169,9 +169,11 @@ impl Planner for MegatronPlanner {
     fn candidates(&self, _model: &Model, cluster: &crate::cost::Cluster) -> Vec<PlanSpec> {
         let mut out = Vec::new();
         for (dp, pp, tp) in factorizations(cluster.num_gpus()) {
-            // Pipelines need enough micro-batches to fill; the degenerate
-            // pp = 1 grids are plain dp×tp and need only one.
-            let micros: &[usize] = if pp > 1 { &[4, 8] } else { &[1] };
+            // The fine micro-batch grid (dominance pruning keeps it
+            // affordable); the degenerate pp = 1 grids are plain dp×tp and
+            // need only one micro-batch. Specs whose dp × micro overruns
+            // the global batch are feasibility-pruned by the search.
+            let micros: &[usize] = if pp > 1 { &[1, 2, 4, 8, 16] } else { &[1] };
             for &k in micros {
                 out.push(PlanSpec { dp, pp, tp, micro: k, ..PlanSpec::new(PlanKind::Megatron) });
             }

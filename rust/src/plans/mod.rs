@@ -15,7 +15,11 @@
 //! * [`PlanSpec`] — a declarative description of one plan instance (kind +
 //!   dp/pp/tp degrees, micro-batch count, shard count, offload/recompute
 //!   flags). Pure data: it can be enumerated, pruned and compared without
-//!   building anything.
+//!   building anything. A spec may additionally carry a [`StageSpec`] list:
+//!   one intra-stage transformation choice (tp width / co-shard count /
+//!   recompute / optimizer offload) per pipeline stage, which the `hetero`
+//!   planner materializes as a *heterogeneous* pipeline — the §5 / Fig. 18
+//!   plan family in which different stages parallelize differently.
 //! * [`Planner`] — the trait every sProgram implements: `name()`,
 //!   `applicable(&Model)`, `default_spec(...)`, `candidates(...)` (its
 //!   slice of the search grid) and `build(Model, &PlanSpec) -> PlanResult`.
@@ -31,6 +35,7 @@
 mod coshard;
 mod dap;
 mod dp;
+mod hetero;
 mod interlaced;
 mod megatron;
 mod pipe3f1b;
@@ -41,10 +46,11 @@ mod zero;
 pub use coshard::{coshard, coshard_opt, CoshardPlanner};
 pub use dap::{dap_dp, DapPlanner};
 pub use dp::{data_parallel, DpPlanner};
+pub use hetero::{hetero, hetero_candidates, HeteroPlanner};
 pub use interlaced::{interlaced_pipeline, InterlacedPlanner};
 pub use megatron::{megatron, GPipePlanner, MegatronPlanner, PipeOrder, TpPlanner};
 pub use pipe3f1b::{pipeline_3f1b, ThreeFOneBPlanner};
-pub use spec::{factorizations, PlanKind, PlanSpec, Planner};
+pub use spec::{factorizations, PlanKind, PlanSpec, Planner, StageSpec};
 pub use zero::{zero3, Zero3OffloadPlanner, Zero3Planner};
 
 use crate::graph::{Graph, OpId, OpKind, PTensorId, TensorKind};
@@ -207,7 +213,8 @@ pub fn assign_optimizers(g: &mut Graph, sched: &mut Schedule) {
             .get(&(vt.ptensor, spatial_key(&vt.mask)))
             .cloned()
             .unwrap_or_default();
-        let mut devs: Vec<DeviceId> = devs.into_iter().collect::<std::collections::HashSet<_>>().into_iter().collect();
+        let mut devs: Vec<DeviceId> =
+            devs.into_iter().collect::<std::collections::HashSet<_>>().into_iter().collect();
         devs.sort_unstable();
         match devs.len() {
             0 => sched.assign(op_id, 0),

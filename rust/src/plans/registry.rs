@@ -7,6 +7,7 @@
 use super::coshard::CoshardPlanner;
 use super::dap::DapPlanner;
 use super::dp::DpPlanner;
+use super::hetero::HeteroPlanner;
 use super::interlaced::InterlacedPlanner;
 use super::megatron::{GPipePlanner, MegatronPlanner, TpPlanner};
 use super::pipe3f1b::ThreeFOneBPlanner;
@@ -16,7 +17,7 @@ use super::PlanResult;
 use crate::models::Model;
 
 /// Every registered sProgram, in display order.
-pub static REGISTRY: [&dyn Planner; 10] = [
+pub static REGISTRY: [&dyn Planner; 11] = [
     &DpPlanner,
     &TpPlanner,
     &MegatronPlanner,
@@ -27,6 +28,7 @@ pub static REGISTRY: [&dyn Planner; 10] = [
     &InterlacedPlanner,
     &ThreeFOneBPlanner,
     &DapPlanner,
+    &HeteroPlanner,
 ];
 
 /// All registered planners.

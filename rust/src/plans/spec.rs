@@ -35,6 +35,10 @@ pub enum PlanKind {
     ThreeFOneB,
     /// Dynamic Axial Parallelism + DP (the FastFold baseline).
     Dap,
+    /// Heterogeneous pipeline: each stage applies its own intra-stage
+    /// transformation ([`StageSpec`]) — the §5 / Fig. 18 plan family that
+    /// homogeneous grids cannot express.
+    Hetero,
 }
 
 impl PlanKind {
@@ -50,6 +54,7 @@ impl PlanKind {
             PlanKind::Interlaced => "interlaced",
             PlanKind::ThreeFOneB => "3f1b",
             PlanKind::Dap => "dap",
+            PlanKind::Hetero => "hetero",
         }
     }
 
@@ -66,6 +71,7 @@ impl PlanKind {
             "interlaced" => PlanKind::Interlaced,
             "3f1b" => PlanKind::ThreeFOneB,
             "dap" | "dap+dp" => PlanKind::Dap,
+            "hetero" => PlanKind::Hetero,
             _ => return None,
         })
     }
@@ -74,6 +80,62 @@ impl PlanKind {
 impl std::fmt::Display for PlanKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.as_str())
+    }
+}
+
+/// Intra-stage transformation choice for ONE pipeline stage of a
+/// heterogeneous plan ([`PlanKind::Hetero`]). A stage occupies `tp`
+/// consecutive devices; `shards > 1` selects co-located sequential
+/// co-sharding (with recompute, as in [`PlanKind::Coshard`]) and requires
+/// `tp == 1`; `recompute` re-executes the stage's forward ops during
+/// backward; `offload` moves the stage's optimizer ops to the host.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct StageSpec {
+    /// Tensor-parallel width of the stage (devices it occupies).
+    pub tp: usize,
+    /// Co-located sequential shard count (coshard-style; needs `tp == 1`).
+    pub shards: usize,
+    /// Per-layer activation recompute within the stage.
+    pub recompute: bool,
+    /// Offload this stage's optimizer state to the host over PCIe.
+    pub offload: bool,
+}
+
+impl Default for StageSpec {
+    fn default() -> Self {
+        StageSpec { tp: 1, shards: 1, recompute: false, offload: false }
+    }
+}
+
+impl StageSpec {
+    /// A plain tensor-parallel stage of the given width.
+    pub fn tp(width: usize) -> StageSpec {
+        StageSpec { tp: width.max(1), ..StageSpec::default() }
+    }
+
+    /// A single-device co-shard stage of the given shard count.
+    pub fn coshard(shards: usize) -> StageSpec {
+        StageSpec { shards: shards.max(1), ..StageSpec::default() }
+    }
+
+    /// Devices this stage occupies (its tensor-parallel width).
+    pub fn width(&self) -> usize {
+        self.tp.max(1)
+    }
+
+    /// Compact label: width + shard/flag suffixes, e.g. `tp4`, `x8`, `tp2r`.
+    pub fn label(&self) -> String {
+        let mut s = format!("tp{}", self.tp.max(1));
+        if self.shards.max(1) > 1 {
+            s = format!("x{}", self.shards);
+        }
+        if self.recompute {
+            s.push('r');
+        }
+        if self.offload {
+            s.push('o');
+        }
+        s
     }
 }
 
@@ -102,6 +164,10 @@ pub struct PlanSpec {
     pub block_recompute: bool,
     /// Coshard: restrict co-sharding to the first N layers (`None` = all).
     pub coshard_layers: Option<usize>,
+    /// Hetero: per-stage intra-stage transformations. `Some` implies
+    /// `kind == Hetero` and `pp == stages.len()`; the stage widths replace
+    /// `tp` in the device count.
+    pub stages: Option<Vec<StageSpec>>,
 }
 
 impl Default for PlanSpec {
@@ -118,6 +184,7 @@ impl Default for PlanSpec {
             recompute: false,
             block_recompute: false,
             coshard_layers: None,
+            stages: None,
         }
     }
 }
@@ -128,8 +195,25 @@ impl PlanSpec {
         PlanSpec { kind, ..PlanSpec::default() }
     }
 
-    /// Devices the spec occupies: `dp * pp * tp`.
+    /// A heterogeneous-pipeline spec from per-stage choices. `pp` is pinned
+    /// to `stages.len()` so arity can never drift from the stage list.
+    pub fn hetero(stages: Vec<StageSpec>, micro: usize) -> PlanSpec {
+        PlanSpec {
+            kind: PlanKind::Hetero,
+            pp: stages.len().max(1),
+            micro: micro.max(1),
+            stages: Some(stages),
+            ..PlanSpec::default()
+        }
+    }
+
+    /// Devices the spec occupies: `dp * pp * tp` for homogeneous plans,
+    /// `dp * sum(stage widths)` for heterogeneous ones.
     pub fn devices(&self) -> usize {
+        if let Some(stages) = &self.stages {
+            let width: usize = stages.iter().map(|s| s.width()).sum();
+            return self.dp.max(1) * width.max(1);
+        }
         self.dp.max(1) * self.pp.max(1) * self.tp.max(1)
     }
 
@@ -159,6 +243,22 @@ impl PlanSpec {
                 }
             }
             PlanKind::Interlaced | PlanKind::ThreeFOneB => full / self.pp.max(1) as u64,
+            // Per stage: ~1/pp of the weights (FLOP-balanced stages of a
+            // uniform-layer model), split across the stage's tp width; an
+            // offloaded stage is only guaranteed to keep the weights
+            // resident. The bound is the busiest stage's device.
+            PlanKind::Hetero => {
+                let Some(stages) = &self.stages else { return full };
+                let pp = stages.len().max(1) as u64;
+                stages
+                    .iter()
+                    .map(|s| {
+                        let share = if s.offload { w / pp } else { full / pp };
+                        share / s.width() as u64
+                    })
+                    .max()
+                    .unwrap_or(full)
+            }
         }
     }
 
@@ -188,6 +288,10 @@ impl PlanSpec {
         }
         if self.block_recompute {
             s.push_str(" block");
+        }
+        if let Some(stages) = &self.stages {
+            let inner: Vec<String> = stages.iter().map(|st| st.label()).collect();
+            s.push_str(&format!(" [{}]", inner.join("|")));
         }
         s
     }
@@ -267,6 +371,7 @@ mod tests {
             PlanKind::Interlaced,
             PlanKind::ThreeFOneB,
             PlanKind::Dap,
+            PlanKind::Hetero,
         ] {
             assert_eq!(PlanKind::parse(k.as_str()), Some(k));
         }
@@ -289,6 +394,27 @@ mod tests {
         assert!(f.contains(&(1, 8, 1)));
         assert!(f.contains(&(2, 2, 2)));
         assert_eq!(factorizations(1), vec![(1, 1, 1)]);
+    }
+
+    #[test]
+    fn hetero_devices_sum_stage_widths() {
+        let s = PlanSpec::hetero(vec![StageSpec::tp(4), StageSpec::tp(2), StageSpec::tp(2)], 4);
+        assert_eq!(s.devices(), 8);
+        assert_eq!(s.pp, 3);
+        let lbl = s.label();
+        assert!(lbl.contains("hetero") && lbl.contains("[tp4|tp2|tp2]"), "{lbl}");
+    }
+
+    #[test]
+    fn hetero_memory_bound_tracks_busiest_stage() {
+        let w = 1 << 30;
+        // Two stages: tp4 holds 4W/2/4 = W/2; tp1 holds 4W/2 = 2W -> bound 2W.
+        let s = PlanSpec::hetero(vec![StageSpec::tp(4), StageSpec::tp(1)], 4);
+        assert_eq!(s.static_bytes_lower_bound(w), 2 * w);
+        // Offloading the narrow stage drops it to weights-only: W/2.
+        let off = StageSpec { offload: true, ..StageSpec::tp(1) };
+        let s = PlanSpec::hetero(vec![StageSpec::tp(4), off], 4);
+        assert_eq!(s.static_bytes_lower_bound(w), w / 2);
     }
 
     #[test]

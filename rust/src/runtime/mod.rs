@@ -41,7 +41,9 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json -- run `make artifacts`", dir.display()))?;
+            .with_context(|| {
+                format!("reading {}/manifest.json -- run `make artifacts`", dir.display())
+            })?;
         let v = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
         let cfg = v.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
         let geti = |k: &str| -> Result<usize> {

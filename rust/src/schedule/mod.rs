@@ -78,7 +78,8 @@ impl Schedule {
 
     /// Devices in use.
     pub fn devices(&self) -> Vec<DeviceId> {
-        let mut d: Vec<DeviceId> = self.assign.values().copied().collect::<HashSet<_>>().into_iter().collect();
+        let mut d: Vec<DeviceId> =
+            self.assign.values().copied().collect::<HashSet<_>>().into_iter().collect();
         d.sort_unstable();
         d
     }

@@ -8,11 +8,36 @@
 //! survivor in parallel on [`crate::util::pool`] worker threads and rank the
 //! results by iteration time.
 //!
+//! # Two-level search over heterogeneous pipelines
+//!
+//! The grid is two-level. The *outer* level (here) enumerates every
+//! registered planner's candidates — including the `hetero` planner, whose
+//! [`StageSpec`](crate::plans::StageSpec) lists give pipelines per-stage
+//! intra-stage transformations. The *inner* level lives in the hetero
+//! planner's `candidates()`: per pipeline depth it composes stage widths
+//! over the cluster and picks each stage's transformation by analytic
+//! cost-model ranking, so only the best-ranked combinations of an
+//! otherwise-combinatorial space reach the outer level.
+//!
+//! # Dominance pruning
+//!
+//! The finer grid is affordable because candidates are *dominance-pruned*
+//! before simulation: every spec gets a sound analytic lower bound on its
+//! iteration time ([`Cluster::plan_time_lower_bound`] — mean-share compute
+//! at saturation ceiling + ring α–β gradient sync). Candidates are sorted
+//! by bound, a fixed-size seed prefix is simulated, and any remaining spec
+//! whose *lower bound* already exceeds the best *simulated* seed time is
+//! skipped — it provably cannot win. The decision uses only the seed
+//! results, so searches stay deterministic, and pruned counts are reported
+//! in the [`SearchReport`] (never silently dropped). Disable with
+//! [`SearchConfig::prune`] = false; the prune-on/prune-off agreement is
+//! covered by `rust/tests/hetero_search.rs`.
+//!
 //! Entry points: [`search`] (used by `superscaler search` and
 //! `examples/plan_explorer.rs`), [`enumerate`] + [`feasibility`] for callers
 //! that want the grid without evaluating it.
 
-use crate::cost::Cluster;
+use crate::cost::{Cluster, ModelStats};
 use crate::materialize::CommMode;
 use crate::models::Model;
 use crate::plans::{registry, PlanSpec, Planner};
@@ -28,16 +53,33 @@ pub struct SearchConfig {
     pub workers: usize,
     /// Communication tier used for every candidate's materialization.
     pub comm: CommMode,
-    /// Hard cap on evaluated candidates (0 = unlimited). Overflow counts
-    /// as pruned and is reported, never silently dropped.
+    /// Hard cap on evaluated candidates (0 = unlimited). Overflow is
+    /// reported as [`SearchReport::capped`], never silently dropped; the
+    /// cap keeps the *best-bounded* candidates.
     pub max_candidates: usize,
+    /// Include the heterogeneous per-stage pipeline space (`hetero`).
+    pub hetero: bool,
+    /// Dominance-prune candidates whose analytic lower bound exceeds the
+    /// best simulated seed candidate (sound: can never drop the optimum).
+    pub prune: bool,
 }
 
 impl Default for SearchConfig {
     fn default() -> Self {
-        SearchConfig { workers: 0, comm: CommMode::InterRvd, max_candidates: 256 }
+        SearchConfig {
+            workers: 0,
+            comm: CommMode::InterRvd,
+            max_candidates: 256,
+            hetero: true,
+            prune: true,
+        }
     }
 }
+
+/// Candidates simulated up-front (in lower-bound order) to establish the
+/// dominance-pruning threshold. Fixed so searches are deterministic
+/// regardless of worker count.
+const PRUNE_SEED: usize = 8;
 
 /// Why a candidate spec was pruned before evaluation.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -50,6 +92,13 @@ pub enum Infeasible {
     TooManyStages { stages: usize, layers: usize },
     /// Static-memory lower bound exceeds device capacity.
     MemoryBound { need: u64, cap: u64 },
+    /// Micro-batch split finer than the per-replica batch.
+    MicroTooFine { batch: usize, dp: usize, micro: usize },
+    /// A hetero stage combines mutually exclusive transformations
+    /// (co-shard is single-device, so `tp > 1` excludes `shards > 1`).
+    StageConflict { stage: usize, tp: usize, shards: usize },
+    /// A hetero spec whose `pp` disagrees with its stage-list length.
+    StageArity { pp: usize, stages: usize },
 }
 
 impl std::fmt::Display for Infeasible {
@@ -66,6 +115,15 @@ impl std::fmt::Display for Infeasible {
             }
             Infeasible::MemoryBound { need, cap } => {
                 write!(f, "needs >= {} static bytes, device holds {}", need, cap)
+            }
+            Infeasible::MicroTooFine { batch, dp, micro } => {
+                write!(f, "dp {dp} x micro {micro} exceeds global batch {batch}")
+            }
+            Infeasible::StageConflict { stage, tp, shards } => {
+                write!(f, "stage {stage}: tp {tp} excludes shards {shards}")
+            }
+            Infeasible::StageArity { pp, stages } => {
+                write!(f, "pp {pp} disagrees with {stages} stage specs")
             }
         }
     }
@@ -84,9 +142,22 @@ pub fn feasibility(spec: &PlanSpec, model: &Model, cluster: &Cluster) -> Result<
     if spec.dp > batch {
         return Err(Infeasible::BatchTooSmall { batch, dp: spec.dp });
     }
+    if spec.dp.max(1) * spec.micro.max(1) > batch {
+        return Err(Infeasible::MicroTooFine { batch, dp: spec.dp.max(1), micro: spec.micro });
+    }
     let layers = model.layers.len().max(1);
     if spec.pp > layers {
         return Err(Infeasible::TooManyStages { stages: spec.pp, layers });
+    }
+    if let Some(stages) = &spec.stages {
+        if spec.pp != stages.len() {
+            return Err(Infeasible::StageArity { pp: spec.pp, stages: stages.len() });
+        }
+        for (i, st) in stages.iter().enumerate() {
+            if st.tp.max(1) > 1 && st.shards.max(1) > 1 {
+                return Err(Infeasible::StageConflict { stage: i, tp: st.tp, shards: st.shards });
+            }
+        }
     }
     let need = spec.static_bytes_lower_bound(model.graph.weight_bytes());
     let cap = cluster.spec.mem_bytes;
@@ -102,10 +173,23 @@ pub fn enumerate(
     model: &Model,
     cluster: &Cluster,
 ) -> (Vec<(&'static dyn Planner, PlanSpec)>, usize) {
+    enumerate_filtered(model, cluster, true)
+}
+
+/// [`enumerate`] with the heterogeneous per-stage space optionally
+/// excluded (the `search --hetero` gate).
+pub fn enumerate_filtered(
+    model: &Model,
+    cluster: &Cluster,
+    hetero: bool,
+) -> (Vec<(&'static dyn Planner, PlanSpec)>, usize) {
     let mut out = Vec::new();
     let mut pruned = 0;
     for &p in registry::all() {
         if !p.applicable(model) {
+            continue;
+        }
+        if !hetero && p.kind() == crate::plans::PlanKind::Hetero {
             continue;
         }
         for spec in p.candidates(model, cluster) {
@@ -179,8 +263,14 @@ pub struct SearchReport {
     /// All evaluated candidates: valid non-OOM by iteration time, then OOM,
     /// then failures. Deterministic for identical inputs.
     pub ranked: Vec<Candidate>,
-    /// Candidates rejected before evaluation (feasibility + cap overflow).
+    /// Candidates rejected by the feasibility checks before evaluation.
     pub pruned: usize,
+    /// Feasible candidates dropped by the [`SearchConfig::max_candidates`]
+    /// cap (the worst-bounded ones).
+    pub capped: usize,
+    /// Feasible candidates skipped by dominance pruning: their analytic
+    /// lower bound already exceeded the best simulated seed candidate.
+    pub pruned_bound: usize,
     /// Candidates actually built + simulated.
     pub evaluated: usize,
     /// Wall-clock search time, seconds.
@@ -193,15 +283,25 @@ impl SearchReport {
         self.ranked.first().filter(|c| c.rank_class() == 0)
     }
 
-    /// Render the top `top` rows (0 = all) as a console/CSV table.
+    /// Total specs the grid produced, however they were dispatched.
+    pub fn total_candidates(&self) -> usize {
+        self.evaluated + self.pruned + self.capped + self.pruned_bound
+    }
+
+    /// Render the top `top` rows (0 = all) as a console/CSV table. The
+    /// title carries the full simulated/pruned accounting so search
+    /// coverage is auditable from the table alone.
     pub fn to_table(&self, top: usize) -> Table {
         let mut t = Table::new(
             &format!(
-                "plan search: {} on {} GPUs — {} specs evaluated, {} pruned, {}",
+                "plan search: {} on {} GPUs — {} specs simulated, {} infeasible, \
+                 {} capped, {} cost-dominated, {}",
                 self.model,
                 self.gpus,
                 self.evaluated,
                 self.pruned,
+                self.capped,
+                self.pruned_bound,
                 fmt_secs(self.wall_secs)
             ),
             &["#", "plan", "spec", "iteration", "TFLOPS", "comm", "peak mem", "bubble%", "status"],
@@ -291,9 +391,17 @@ fn evaluate<F: Fn() -> Model>(
     }
 }
 
-/// Run the full search: enumerate + prune the spec grid, evaluate every
-/// survivor in parallel (each worker rebuilds the model via `build_model` —
-/// plan construction consumes its model), rank deterministically.
+/// Run the full search: enumerate + prune the spec grid, dominance-prune
+/// against the analytic lower bound, evaluate every survivor in parallel
+/// (each worker rebuilds the model via `build_model` — plan construction
+/// consumes its model), rank deterministically.
+///
+/// Dominance pruning is two-phase so it stays deterministic under any
+/// worker count: candidates are sorted by lower bound, the best-bounded
+/// [`PRUNE_SEED`] prefix is simulated first, and the remaining candidates
+/// are skipped iff their *bound* exceeds the best *simulated* seed time —
+/// such a candidate's true time can only be worse, so the optimum is never
+/// pruned.
 pub fn search<F>(build_model: F, cluster: &Cluster, cfg: &SearchConfig) -> SearchReport
 where
     F: Fn() -> Model + Sync,
@@ -301,10 +409,20 @@ where
     let t0 = std::time::Instant::now();
     let probe = build_model();
     let model_name = probe.name.clone();
-    let (mut cands, mut pruned) = enumerate(&probe, cluster);
+    let stats = ModelStats::of(&probe.graph);
+    let (cands, pruned) = enumerate_filtered(&probe, cluster, cfg.hetero);
     drop(probe);
+    // Sort by analytic lower bound (stable tie-break on the enumeration
+    // order via sort_by's stability) so both the candidate cap and the
+    // pruning seed keep the most promising specs.
+    let mut cands: Vec<(f64, &'static dyn Planner, PlanSpec)> = cands
+        .into_iter()
+        .map(|(p, spec)| (cluster.plan_time_lower_bound(&spec, &stats), p, spec))
+        .collect();
+    cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut capped = 0;
     if cfg.max_candidates > 0 && cands.len() > cfg.max_candidates {
-        pruned += cands.len() - cfg.max_candidates;
+        capped = cands.len() - cfg.max_candidates;
         cands.truncate(cfg.max_candidates);
     }
     let workers = if cfg.workers > 0 {
@@ -313,10 +431,26 @@ where
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     };
     let comm = cfg.comm;
-    let mut ranked: Vec<Candidate> = pool::par_map(cands.len(), workers, |i| {
-        let (p, spec) = &cands[i];
+    let eval_at = |i: usize| -> Candidate {
+        let (_, p, spec) = &cands[i];
         evaluate(&build_model, *p, spec, cluster, comm)
-    });
+    };
+
+    let seed_len = if cfg.prune { PRUNE_SEED.min(cands.len()) } else { cands.len() };
+    let mut ranked = pool::par_map(seed_len, workers, &eval_at);
+    let mut pruned_bound = 0;
+    if seed_len < cands.len() {
+        let best_seed = ranked
+            .iter()
+            .filter(|c| c.rank_class() == 0)
+            .filter_map(|c| c.metrics().map(|m| m.makespan))
+            .fold(f64::INFINITY, f64::min);
+        let survivors: Vec<usize> = (seed_len..cands.len())
+            .filter(|&i| cands[i].0 <= best_seed)
+            .collect();
+        pruned_bound = cands.len() - seed_len - survivors.len();
+        ranked.extend(pool::par_map(survivors.len(), workers, |j| eval_at(survivors[j])));
+    }
     let evaluated = ranked.len();
     ranked.sort_by(|a, b| {
         a.rank_class()
@@ -333,6 +467,8 @@ where
         gpus: cluster.num_gpus(),
         ranked,
         pruned,
+        capped,
+        pruned_bound,
         evaluated,
         wall_secs: t0.elapsed().as_secs_f64(),
     }
@@ -363,6 +499,17 @@ mod tests {
         assert!(matches!(
             feasibility(&bad, &model, &cluster),
             Err(Infeasible::BatchTooSmall { .. })
+        ));
+    }
+
+    #[test]
+    fn feasibility_rejects_micro_beyond_batch() {
+        let model = models::gpt3(0, 4, 256);
+        let cluster = Cluster::v100(8);
+        let bad = PlanSpec { dp: 2, pp: 2, tp: 2, micro: 4, ..PlanSpec::new(PlanKind::Megatron) };
+        assert!(matches!(
+            feasibility(&bad, &model, &cluster),
+            Err(Infeasible::MicroTooFine { batch: 4, dp: 2, micro: 4 })
         ));
     }
 

@@ -217,7 +217,8 @@ fn simulate_inner(
         if let TaskKind::Compute { op, .. } = t.kind {
             for &iv in &g.op(op).inputs {
                 let vt = g.vtensor(iv);
-                if matches!(g.ptensor(vt.ptensor).kind, TensorKind::Activation | TensorKind::Input) {
+                let kind = g.ptensor(vt.ptensor).kind;
+                if matches!(kind, TensorKind::Activation | TensorKind::Input) {
                     let key = (vt.ptensor, region_of(&vt.mask));
                     let e = last_read.entry(key).or_insert(0.0);
                     *e = e.max(finish[t.id]);
@@ -260,7 +261,9 @@ fn simulate_inner(
             cur += e.delta;
             peak = peak.max(cur);
         }
-        let st = stats.entry(dev).or_insert_with(|| DeviceStat { device: dev, ..Default::default() });
+        let st = stats
+            .entry(dev)
+            .or_insert_with(|| DeviceStat { device: dev, ..Default::default() });
         st.peak_mem = peak as u64;
     }
     // Add static memory + OOM check.
@@ -324,8 +327,10 @@ mod tests {
         let mut ops = Vec::new();
         for l in 0..layers {
             let w = g.add_ptensor(&format!("w{l}"), &[16, 16], DType::F32, TensorKind::Weight);
-            let _wg = g.add_ptensor(&format!("w{l}.grad"), &[16, 16], DType::F32, TensorKind::Gradient);
-            let y = g.add_ptensor(&format!("y{l}"), &[8, 4, 16], DType::F32, TensorKind::Activation);
+            let _wg =
+                g.add_ptensor(&format!("w{l}.grad"), &[16, 16], DType::F32, TensorKind::Gradient);
+            let y =
+                g.add_ptensor(&format!("y{l}"), &[8, 4, 16], DType::F32, TensorKind::Activation);
             let (xv, wv, yv) = (g.full_view(prev), g.full_view(w), g.full_view(y));
             ops.push(g.add_op(
                 &format!("lin{l}"),
@@ -382,11 +387,29 @@ mod tests {
         let _wg = g.add_ptensor("w.grad", &[256, 256], DType::F32, TensorKind::Gradient);
         let y = g.add_ptensor("y", &[8, 4, 256], DType::F32, TensorKind::Activation);
         let (xv, wv, yv) = (g.full_view(x), g.full_view(w), g.full_view(y));
-        let lin = g.add_op("lin", OpKind::Matmul, vec![xv, wv], vec![yv], 4e10, Some(sigs::linear()), true, 0);
+        let lin = g.add_op(
+            "lin",
+            OpKind::Matmul,
+            vec![xv, wv],
+            vec![yv],
+            4e10,
+            Some(sigs::linear()),
+            true,
+            0,
+        );
         let wgv = g.full_view(_wg);
         let wv2 = g.full_view(w);
         let wv3 = g.full_view(w);
-        let opt = g.add_op("opt", OpKind::Optimizer, vec![wgv, wv2], vec![wv3], 1e5, Some(sigs::optimizer()), false, 0);
+        let opt = g.add_op(
+            "opt",
+            OpKind::Optimizer,
+            vec![wgv, wv2],
+            vec![wv3],
+            1e5,
+            Some(sigs::optimizer()),
+            false,
+            0,
+        );
         let fwd = op_trans(&mut g, lin, &TransformAlgo::split("b", 4)).unwrap();
         let opts = op_trans(&mut g, opt, &TransformAlgo::replicate(4)).unwrap();
         let ag = autograd::complete(&mut g);

@@ -53,6 +53,8 @@ pub enum TransError {
     NoSuchDim { op: OpId, dim: String },
     /// parts/copies must be >= 1.
     BadFactor(usize),
+    /// Plan-level constraint violation (e.g. an inconsistent stage spec).
+    Invalid(String),
 }
 
 impl std::fmt::Display for TransError {
@@ -63,6 +65,7 @@ impl std::fmt::Display for TransError {
                 write!(f, "op {op} has no dim '{dim}'")
             }
             TransError::BadFactor(n) => write!(f, "bad split factor {n}"),
+            TransError::Invalid(msg) => f.write_str(msg),
         }
     }
 }
@@ -414,7 +417,8 @@ mod tests {
         let (t_i, yv) = (g.full_view(t), g.full_view(y));
         let b = g.add_op("B", OpKind::Identity, vec![t_i], vec![yv], 4.0, None, true, 0);
         let (gyv, t_i2, gxv) = (g.full_view(gy), g.full_view(t), g.full_view(gx));
-        let bw = g.add_op("B.bw", OpKind::Identity, vec![gyv, t_i2], vec![gxv], 8.0, None, false, 0);
+        let bw =
+            g.add_op("B.bw", OpKind::Identity, vec![gyv, t_i2], vec![gxv], 8.0, None, false, 0);
         let _ = b;
         let rc = recompute(&mut g, &[a], &[bw]);
         assert_eq!(rc.len(), 1);

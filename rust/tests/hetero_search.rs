@@ -1,0 +1,162 @@
+//! The heterogeneous-pipeline plan space and the cost-guided search on top
+//! of it: hetero planner round-trip through the registry, per-stage spec
+//! feasibility errors, dominance pruning soundness (prune-on and prune-off
+//! searches agree on the optimum of a brute-forceable grid, with auditable
+//! pruned/simulated accounting), and the acceptance claim that the
+//! heterogeneous space never loses to the homogeneous pipeline grid it
+//! strictly contains.
+
+use superscaler::cost::Cluster;
+use superscaler::models;
+use superscaler::plans::{registry, PlanKind, PlanSpec, StageSpec};
+use superscaler::schedule::validate;
+use superscaler::search::{self, Infeasible, SearchConfig};
+
+#[test]
+fn hetero_roundtrip_via_registry() {
+    let p = registry::find("hetero").expect("hetero registered");
+    assert_eq!(p.kind(), PlanKind::Hetero);
+    let model = models::gpt3(0, 8, 256);
+    assert!(p.applicable(&model));
+    let spec = p.default_spec(4, 4);
+    assert_eq!(spec.kind, PlanKind::Hetero);
+    assert_eq!(spec.devices(), 4);
+    let out = p.build(model, &spec).expect("hetero default spec builds");
+    assert!(out.name.starts_with("hetero"), "{}", out.name);
+    let vs = validate(&out.graph, &out.schedule).expect("hetero schedule validates");
+    assert!(!vs.topo.is_empty());
+}
+
+#[test]
+fn stage_spec_feasibility_errors() {
+    let model = models::gpt3(0, 8, 256);
+    let cluster = Cluster::v100(4);
+
+    // tp and co-shard on the same stage are mutually exclusive.
+    let conflict = PlanSpec::hetero(
+        vec![StageSpec { tp: 2, shards: 4, ..StageSpec::default() }, StageSpec::tp(2)],
+        4,
+    );
+    assert!(matches!(
+        search::feasibility(&conflict, &model, &cluster),
+        Err(Infeasible::StageConflict { stage: 0, tp: 2, shards: 4 })
+    ));
+
+    // pp must agree with the stage-list arity.
+    let mut arity = PlanSpec::hetero(vec![StageSpec::tp(2), StageSpec::tp(2)], 4);
+    arity.pp = 3;
+    assert!(matches!(
+        search::feasibility(&arity, &model, &cluster),
+        Err(Infeasible::StageArity { pp: 3, stages: 2 })
+    ));
+
+    // Stage widths must tile the cluster.
+    let narrow = PlanSpec::hetero(vec![StageSpec::tp(2), StageSpec::tp(1)], 4);
+    assert!(matches!(
+        search::feasibility(&narrow, &model, &cluster),
+        Err(Infeasible::DeviceMismatch { want: 4, got: 3 })
+    ));
+
+    // Micro-batches finer than the per-replica batch are rejected.
+    let fine = PlanSpec::hetero(vec![StageSpec::tp(2), StageSpec::tp(2)], 16);
+    assert!(matches!(
+        search::feasibility(&fine, &model, &cluster),
+        Err(Infeasible::MicroTooFine { batch: 8, dp: 1, micro: 16 })
+    ));
+
+    // And the build itself reports a stage conflict when called directly.
+    let p = registry::find("hetero").unwrap();
+    let err = p.build(models::gpt3(0, 8, 256), &conflict).unwrap_err();
+    assert!(err.to_string().contains("mutually exclusive"), "{err}");
+}
+
+/// Dominance pruning must be sound: on a small brute-forceable grid, the
+/// prune-on search finds a best plan exactly as good as the prune-off
+/// search that simulates every feasible spec, and the pruned/simulated
+/// accounting adds up to the same grid.
+#[test]
+fn dominance_pruning_never_prunes_the_optimum() {
+    let cluster = Cluster::v100(4);
+    let mk = || models::gpt3(0, 8, 256);
+    let on = search::search(
+        mk,
+        &cluster,
+        &SearchConfig { workers: 2, prune: true, ..SearchConfig::default() },
+    );
+    let off = search::search(
+        mk,
+        &cluster,
+        &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
+    );
+    assert_eq!(off.pruned_bound, 0, "prune-off must simulate everything");
+    assert_eq!(
+        on.evaluated + on.pruned_bound,
+        off.evaluated,
+        "pruned candidates must be accounted for, not dropped"
+    );
+    assert_eq!(on.pruned, off.pruned, "feasibility pruning is prune-flag independent");
+    let tb = on.best().expect("prune-on search found a plan");
+    let tf = off.best().expect("prune-off search found a plan");
+    let (mb, mf) = (tb.metrics().unwrap().makespan, tf.metrics().unwrap().makespan);
+    let rel = (mb - mf).abs() / mf.max(1e-12);
+    assert!(
+        rel < 1e-4,
+        "prune-on best {mb} ({}) vs prune-off best {mf} ({})",
+        tb.plan_name,
+        tf.plan_name
+    );
+}
+
+/// The heterogeneous space strictly contains the homogeneous pipeline grid
+/// (uniform stage lists), so its best plan can never lose to the best
+/// homogeneous megatron pipeline.
+#[test]
+fn hetero_best_not_worse_than_homogeneous_pipeline() {
+    let cluster = Cluster::v100(4);
+    let report = search::search(
+        || models::gpt3(0, 8, 256),
+        &cluster,
+        &SearchConfig { workers: 2, prune: false, hetero: true, ..SearchConfig::default() },
+    );
+    let best_of = |pred: &dyn Fn(&search::Candidate) -> bool| {
+        report
+            .ranked
+            .iter()
+            .filter(|c| pred(c))
+            .filter_map(|c| c.metrics().filter(|m| !m.oom).map(|m| m.makespan))
+            .fold(f64::INFINITY, f64::min)
+    };
+    let hetero = best_of(&|c| c.planner == "hetero");
+    let homog = best_of(&|c| c.planner == "megatron" && c.spec.pp >= 2 && c.spec.dp == 1);
+    assert!(hetero.is_finite(), "no hetero candidate simulated");
+    assert!(homog.is_finite(), "no homogeneous pipeline candidate simulated");
+    // 1% tolerance: the uniform-hetero construction is megatron-equivalent
+    // to within the same bound its unit test asserts (hetero's TP split
+    // alignment rule is deliberately stricter).
+    assert!(
+        hetero <= homog * 1.01,
+        "best hetero {hetero} worse than best homogeneous pipeline {homog}"
+    );
+}
+
+/// The report table must make search coverage auditable: simulated,
+/// infeasible and cost-dominated counts all appear in the rendered title.
+#[test]
+fn report_table_carries_prune_accounting() {
+    let cluster = Cluster::v100(4);
+    let report = search::search(
+        || models::gpt3(0, 8, 256),
+        &cluster,
+        &SearchConfig { workers: 2, ..SearchConfig::default() },
+    );
+    // Every enumerated spec is either simulated, infeasible or
+    // cost-dominated — nothing disappears from the accounting.
+    let (feasible, infeasible) = search::enumerate(&models::gpt3(0, 8, 256), &cluster);
+    assert_eq!(report.evaluated + report.pruned_bound, feasible.len());
+    assert_eq!(report.pruned, infeasible);
+    assert_eq!(report.total_candidates(), feasible.len() + infeasible);
+    let rendered = report.to_table(5).render();
+    assert!(rendered.contains("specs simulated"), "{rendered}");
+    assert!(rendered.contains("infeasible"), "{rendered}");
+    assert!(rendered.contains("cost-dominated"), "{rendered}");
+}

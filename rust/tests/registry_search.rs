@@ -25,10 +25,11 @@ fn registry_covers_every_plan_name() {
         "interlaced",
         "3f1b",
         "dap",
+        "hetero",
     ] {
         assert!(names.contains(&want), "registry missing '{want}' (has {names:?})");
     }
-    assert_eq!(names.len(), 10);
+    assert_eq!(names.len(), 11);
 }
 
 #[test]
@@ -145,7 +146,8 @@ fn search_top_plan_not_slower_than_megatron_baseline() {
     let best = report.best().expect("search found no valid plan");
     let bm = best.metrics().unwrap();
 
-    let base = plans::megatron(models::gpt3(0, 8, 512), 1, gpus, 1, 4, PipeOrder::OneFOneB).unwrap();
+    let base =
+        plans::megatron(models::gpt3(0, 8, 512), 1, gpus, 1, 4, PipeOrder::OneFOneB).unwrap();
     let rb = sim::run(&base.graph, &base.schedule, &cluster, CommMode::InterRvd).unwrap();
     assert!(
         bm.makespan <= rb.makespan * 1.0001,
