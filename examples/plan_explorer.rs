@@ -5,11 +5,15 @@
 //!
 //! The grid includes heterogeneous per-stage pipelines (`--no-hetero` to
 //! exclude them) and is dominance-pruned against the analytic cost lower
-//! bound (`--no-prune` to simulate every feasible spec).
+//! bound (`--no-prune` to simulate every feasible spec). `--fidelity des`
+//! re-scores the top candidates (`--des-top`, default 8) with the
+//! discrete-event engine so overlap-friendly pipelines rank by what they
+//! actually overlap.
 //!
 //! ```text
 //! cargo run --release --example plan_explorer -- --model mbart --gpus 8
 //! cargo run --release --example plan_explorer -- --model gpt3 --gpus 8 --top 5
+//! cargo run --release --example plan_explorer -- --model gpt3 --fidelity des
 //! cargo run --release --example plan_explorer -- --model gpt3 --no-hetero --no-prune
 //! ```
 
@@ -44,6 +48,14 @@ fn main() {
         workers: args.usize("workers", 0),
         hetero: !args.has("no-hetero"),
         prune: !args.has("no-prune"),
+        fidelity: {
+            let s = args.str("fidelity", "list");
+            superscaler::search::Fidelity::parse(s).unwrap_or_else(|| {
+                eprintln!("--fidelity expects 'list' or 'des', got '{s}'");
+                std::process::exit(2);
+            })
+        },
+        des_top: args.usize("des-top", 8),
         ..SearchConfig::default()
     };
     let report = search::search(build, &cluster, &cfg);

@@ -19,6 +19,22 @@ use crate::plans::{PlanKind, PlanSpec};
 use crate::schedule::{DeviceId, CPU_DEVICE};
 use crate::trans::autograd::BWD_FLOP_RATIO;
 
+/// One contended physical transport of the cluster — the unit of the
+/// discrete-event simulator's ([`crate::des`]) fair-sharing bandwidth
+/// accounting. The α–β collective costs above assume every transfer has its
+/// bottleneck link to itself; [`Cluster::group_links`] names the links a
+/// transfer actually crosses so concurrent transfers that share one can be
+/// slowed down proportionally.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub enum LinkId {
+    /// A device's NVLink port (intra-server traffic).
+    NvLink(DeviceId),
+    /// A server's InfiniBand NIC (inter-server traffic).
+    Nic(usize),
+    /// A device's PCIe lane to the host (offload/swap traffic).
+    Pcie(DeviceId),
+}
+
 /// Per-device compute/memory characteristics (defaults: V100-ish).
 #[derive(Clone, Debug)]
 pub struct DeviceSpec {
@@ -166,6 +182,40 @@ impl Cluster {
             let max_share = *per_server.values().max().unwrap() as f64;
             (self.ib_bw / max_share, self.ib_lat)
         }
+    }
+
+    /// Physical links a transfer among `group` occupies, deduplicated and
+    /// sorted: PCIe lanes when the host participates, the spanned servers'
+    /// NICs when the group crosses servers, the members' NVLink ports
+    /// otherwise. A single-device "group" crosses nothing. This is the
+    /// per-link capacity accounting the DES fair-shares: two concurrent
+    /// transfers whose link sets intersect split the shared link's
+    /// bandwidth, so each runs at `1/n` of its solo rate while contended.
+    pub fn group_links(&self, group: &[DeviceId]) -> Vec<LinkId> {
+        let mut devs: Vec<DeviceId> = group.to_vec();
+        devs.sort_unstable();
+        devs.dedup();
+        let mut out: Vec<LinkId> = if devs.contains(&CPU_DEVICE) {
+            devs.iter()
+                .filter(|&&d| d != CPU_DEVICE)
+                .map(|&d| LinkId::Pcie(d))
+                .collect()
+        } else if devs.len() <= 1 {
+            Vec::new()
+        } else {
+            let s0 = self.server_of(devs[0]);
+            if devs.iter().all(|&d| self.server_of(d) == s0) {
+                devs.iter().map(|&d| LinkId::NvLink(d)).collect()
+            } else {
+                let mut servers: Vec<usize> = devs.iter().map(|&d| self.server_of(d)).collect();
+                servers.sort_unstable();
+                servers.dedup();
+                servers.into_iter().map(LinkId::Nic).collect()
+            }
+        };
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 
     /// Ring-collective time over `group` where each participant holds
@@ -337,6 +387,24 @@ mod tests {
         let (bw2, _) = c.group_link(&two);
         let (bw16, _) = c.group_link(&sixteen);
         assert!((bw2 / bw16 - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn group_links_classify_transport() {
+        let c = Cluster::v100(16);
+        // Intra-server: one NVLink port per member.
+        assert_eq!(c.group_links(&[0, 3]), vec![LinkId::NvLink(0), LinkId::NvLink(3)]);
+        // Inter-server: one NIC per spanned server, however many members.
+        assert_eq!(c.group_links(&[0, 1, 8]), vec![LinkId::Nic(0), LinkId::Nic(1)]);
+        // Host traffic: PCIe lanes of the GPU members.
+        assert_eq!(c.group_links(&[4, CPU_DEVICE]), vec![LinkId::Pcie(4)]);
+        // Self-transfers cross nothing.
+        assert!(c.group_links(&[5]).is_empty());
+        // Two disjoint intra-server pairs share no links; two cross-server
+        // transfers out of server 0 share its NIC.
+        let a = c.group_links(&[0, 8]);
+        let b = c.group_links(&[1, 9]);
+        assert_eq!(a, b, "both cross the same pair of NICs");
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! Chrome-trace (catapult / Perfetto) export of a DES timeline.
+//!
+//! `superscaler simulate --fidelity des --trace out.json` (and the CI
+//! search-smoke job) write this format; load it at `chrome://tracing` or
+//! <https://ui.perfetto.dev> to inspect a plan visually: one process per
+//! device, thread 0 = compute stream, thread 1 = communication stream,
+//! complete (`ph: "X"`) events per task span, and a `resident bytes`
+//! counter track per device carrying the time-resolved memory profile.
+
+use super::DesReport;
+use crate::materialize::Plan;
+use crate::schedule::{DeviceId, CPU_DEVICE};
+use crate::util::json::{self, Value};
+
+/// Trace pid for a device: the host gets pid 0, GPU `d` gets `d + 1`
+/// (`usize::MAX` does not survive the JSON number round-trip).
+fn pid_of(d: DeviceId) -> usize {
+    if d == CPU_DEVICE {
+        0
+    } else {
+        d + 1
+    }
+}
+
+fn device_name(d: DeviceId) -> String {
+    if d == CPU_DEVICE {
+        "host".to_string()
+    } else {
+        format!("GPU {d}")
+    }
+}
+
+/// Serialize `report`'s timeline as a Chrome trace JSON document.
+/// Timestamps are microseconds, matching the viewer's native unit.
+pub fn chrome_trace(report: &DesReport, plan: &Plan) -> String {
+    let us = 1e6;
+    let mut events: Vec<Value> = Vec::new();
+    // Process/thread naming metadata, one process per device.
+    for st in &report.per_device {
+        let pid = pid_of(st.device);
+        events.push(Value::obj([
+            ("name", "process_name".into()),
+            ("ph", "M".into()),
+            ("pid", pid.into()),
+            ("args", Value::obj([("name", device_name(st.device).into())])),
+        ]));
+        for (tid, name) in [(0usize, "compute"), (1, "comm")] {
+            events.push(Value::obj([
+                ("name", "thread_name".into()),
+                ("ph", "M".into()),
+                ("pid", pid.into()),
+                ("tid", tid.into()),
+                ("args", Value::obj([("name", name.into())])),
+            ]));
+        }
+    }
+    // One complete event per task per occupied device.
+    for span in &report.spans {
+        let task = &plan.tasks[span.task];
+        let (cat, tid) = if task.is_comm() { ("comm", 1usize) } else { ("compute", 0) };
+        for d in task.devices() {
+            events.push(Value::obj([
+                ("name", task.label.clone().into()),
+                ("cat", cat.into()),
+                ("ph", "X".into()),
+                ("ts", (span.start * us).into()),
+                ("dur", ((span.finish - span.start) * us).into()),
+                ("pid", pid_of(d).into()),
+                ("tid", tid.into()),
+            ]));
+        }
+    }
+    // Per-device resident-memory counter track.
+    for tl in &report.mem {
+        for &(t, bytes) in &tl.points {
+            events.push(Value::obj([
+                ("name", "resident bytes".into()),
+                ("ph", "C".into()),
+                ("ts", (t * us).into()),
+                ("pid", pid_of(tl.device).into()),
+                ("args", Value::obj([("bytes", bytes.into())])),
+            ]));
+        }
+    }
+    json::to_string(&Value::obj([
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", "ms".into()),
+    ]))
+}
+
+/// [`chrome_trace`] written to `path` (parent directories created).
+pub fn write_chrome_trace(path: &str, report: &DesReport, plan: &Plan) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, chrome_trace(report, plan) + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Cluster;
+    use crate::materialize::CommMode;
+    use crate::models::gpt3;
+    use crate::plans::{megatron, PipeOrder};
+
+    #[test]
+    fn trace_is_valid_json_with_one_span_per_task_device() {
+        let out = megatron(gpt3(0, 4, 256), 1, 2, 1, 2, PipeOrder::OneFOneB).unwrap();
+        let c = Cluster::v100(2);
+        let vs = crate::schedule::validate(&out.graph, &out.schedule).unwrap();
+        let plan = crate::materialize::materialize(&out.graph, &vs, &c, CommMode::InterRvd);
+        let r = crate::des::simulate(&out.graph, &vs, &plan, &c);
+        let doc = json::parse(&chrome_trace(&r, &plan)).expect("trace parses");
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+        let spans = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .count();
+        let want: usize = plan.tasks.iter().map(|t| t.devices().len()).sum();
+        assert_eq!(spans, want, "one X event per task per device");
+        assert!(
+            evs.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C")),
+            "memory counter events present"
+        );
+        // Spans stay within the makespan.
+        for e in evs {
+            if e.get("ph").and_then(|p| p.as_str()) == Some("X") {
+                let ts = e.get("ts").and_then(|v| v.as_f64()).unwrap();
+                let dur = e.get("dur").and_then(|v| v.as_f64()).unwrap();
+                assert!(ts >= 0.0 && ts + dur <= r.makespan * 1e6 + 1e-6);
+            }
+        }
+    }
+}

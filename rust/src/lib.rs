@@ -17,7 +17,12 @@
 //!
 //! The materialized plan can then be:
 //! * **simulated** ([`sim`]) on a modeled GPU cluster (V100-like, NVLink +
-//!   InfiniBand hierarchy) to reproduce the paper's evaluation, or
+//!   InfiniBand hierarchy) to reproduce the paper's evaluation — a fast
+//!   list scheduler in which communication blocks its devices;
+//! * **replayed at high fidelity** ([`des`]): a deterministic
+//!   discrete-event engine with separate compute/communication streams per
+//!   device, fair-shared link contention and time-resolved memory
+//!   timelines, exportable as a Chrome trace for visual debugging;
 //! * **executed** ([`exec`]) with real numerics: each simulated device is a
 //!   thread running AOT-compiled JAX/Pallas artifacts through the PJRT CPU
 //!   client ([`runtime`]), with collectives implemented in Rust.
@@ -34,12 +39,15 @@
 //! cost model's memory bound, evaluate every survivor (transform →
 //! validate → materialize → simulate) in parallel on [`util::pool`]
 //! workers, and rank by iteration time — `superscaler search --model gpt3
-//! --gpus 8` end to end.
+//! --gpus 8` end to end. With `--fidelity des` the ranking's top
+//! candidates are re-scored by the discrete-event engine, so schedules
+//! that overlap communication with compute are credited for it.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! measured results.
 
 pub mod cost;
+pub mod des;
 pub mod exec;
 pub mod graph;
 pub mod materialize;

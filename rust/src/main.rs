@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! superscaler simulate --model gpt3 --plan coshard --gpus 16 [--scale 2 ...]
+//!                      [--fidelity list|des] [--trace out.json]
 //! superscaler search   --model gpt3 --gpus 8 [--top 10] [--workers N]
+//!                      [--fidelity list|des] [--trace out.json]
 //! superscaler rvd --from "R(1)V(2)D(1,2)" --to "R(2)V(1)D(2,1)" --gpus 4
 //! superscaler train --devices 4 --steps 100 [--artifacts artifacts]
 //! superscaler plans                      # list registered sPrograms
@@ -10,6 +12,9 @@
 //!
 //! Plan names resolve through `plans::registry`; `simulate` builds exactly
 //! one spec, `search` enumerates and ranks the whole feasible spec grid.
+//! `--fidelity des` scores with the discrete-event engine (comm/compute
+//! overlap + link contention) on top of the list simulation; `--trace`
+//! writes the DES timeline as a Chrome trace for `chrome://tracing`.
 
 use superscaler::materialize::CommMode;
 use superscaler::models;
@@ -41,11 +46,19 @@ fn usage() {
            superscaler simulate --model <gpt3|swin|mbart|alphafold2> --plan <name>\n\
                                 [--gpus N] [--scale 0..3] [--batch B] [--seq S]\n\
                                 [--tp T] [--pp P] [--dp D] [--micro K] [--shards C]\n\
-                                [--comm p2p|intra|inter]\n\
+                                [--comm p2p|intra|inter] [--fidelity list|des]\n\
+                                [--trace FILE]\n\
+                                  --fidelity des additionally executes the plan\n\
+                                  on the discrete-event engine (per-device\n\
+                                  compute+comm streams, fair-shared link\n\
+                                  contention) and reports the overlap headroom\n\
+                                  the list simulation cannot credit; --trace\n\
+                                  writes the DES timeline as Chrome-trace JSON\n\
            superscaler search   --model <gpt3|swin|mbart|alphafold2> [--gpus N]\n\
                                 [--scale 0..3] [--batch B] [--seq S] [--top N]\n\
                                 [--workers N] [--max-candidates N]\n\
                                 [--comm p2p|intra|inter] [--hetero] [--no-prune]\n\
+                                [--fidelity list|des] [--des-top K] [--trace FILE]\n\
                                 [--baseline FILE] [--write-baseline] [--tol F]\n\
                                   enumerate the feasible PlanSpec grid (--hetero\n\
                                   adds heterogeneous per-stage pipelines),\n\
@@ -54,9 +67,15 @@ fn usage() {
                                   evaluate survivors in parallel (transform ->\n\
                                   validate -> materialize -> simulate), print the\n\
                                   ranking (best iteration time first).\n\
-                                  --baseline gates the best time against a\n\
-                                  committed JSON (exit 3 on regression > --tol,\n\
-                                  default 0.001); --write-baseline refreshes it\n\
+                                  --fidelity des re-scores the top K (--des-top,\n\
+                                  default 8) candidates with the discrete-event\n\
+                                  engine and re-ranks them by it; the report\n\
+                                  carries both scores. --trace writes the\n\
+                                  winning plan's DES Chrome trace.\n\
+                                  --baseline gates the best list-simulated time\n\
+                                  against a committed JSON (exit 3 on regression\n\
+                                  > --tol, default 0.001); --write-baseline\n\
+                                  refreshes it\n\
            superscaler rvd      --from 'R(r)V(v)D(k1,k2)' --to '...' [--gpus N]\n\
                                 [--src-gpus N] [--dst-gpus N] [--mb MB]\n\
            superscaler train    [--devices N] [--steps N] [--lr F] [--artifacts DIR]\n\
@@ -93,6 +112,14 @@ fn comm_mode(args: &Args) -> CommMode {
         "intra" => CommMode::IntraRvd,
         _ => CommMode::InterRvd,
     }
+}
+
+fn fidelity(args: &Args) -> search::Fidelity {
+    let s = args.str("fidelity", "list");
+    search::Fidelity::parse(s).unwrap_or_else(|| {
+        eprintln!("--fidelity expects 'list' or 'des', got '{s}'");
+        std::process::exit(2);
+    })
 }
 
 /// The planner's canonical spec for this GPU count, overridden by whatever
@@ -144,25 +171,48 @@ fn simulate(args: &Args) {
         std::process::exit(1);
     });
     let cluster = Cluster::v100(gpus);
-    match sim::run(&out.graph, &out.schedule, &cluster, comm_mode(args)) {
-        Ok(r) => {
-            let (comp, comm, bub) = r.breakdown();
-            println!("plan       {}", out.name);
-            println!("iteration  {}", fmt_secs(r.makespan));
-            println!("aggregate  {:.1} TFLOPS ({:.1}/GPU)", r.aggregate_tflops, r.tflops_per_gpu);
-            println!(
-                "breakdown  compute {} | comm {} | bubble {}",
-                fmt_secs(comp),
-                fmt_secs(comm),
-                fmt_secs(bub)
-            );
-            println!("comm       {}", fmt_bytes(r.comm_bytes));
-            let oom = if r.oom { "  ** OOM **" } else { "" };
-            println!("peak mem   {}{}", fmt_bytes(r.max_peak_mem()), oom);
-        }
+    let vs = match superscaler::schedule::validate(&out.graph, &out.schedule) {
+        Ok(vs) => vs,
         Err(e) => {
             eprintln!("schedule invalid: {e}");
             std::process::exit(1);
+        }
+    };
+    let plan = superscaler::materialize::materialize(&out.graph, &vs, &cluster, comm_mode(args));
+    let tg = sim::TaskGraph::prepare(&vs, &plan);
+    let r = sim::simulate_prepared(&out.graph, &tg, &plan, &cluster);
+    let (comp, comm, bub) = r.breakdown();
+    println!("plan       {}", out.name);
+    println!("iteration  {}", fmt_secs(r.makespan));
+    println!("aggregate  {:.1} TFLOPS ({:.1}/GPU)", r.aggregate_tflops, r.tflops_per_gpu);
+    println!(
+        "breakdown  compute {} | comm {} | bubble {}",
+        fmt_secs(comp),
+        fmt_secs(comm),
+        fmt_secs(bub)
+    );
+    println!("comm       {}", fmt_bytes(r.comm_bytes));
+    let oom = if r.oom { "  ** OOM **" } else { "" };
+    println!("peak mem   {}{}", fmt_bytes(r.max_peak_mem()), oom);
+    // The high-fidelity tier: overlap + contention replay, and the trace.
+    if fidelity(args) == search::Fidelity::Des || args.has("trace") {
+        let d = superscaler::des::execute(&out.graph, &plan, &cluster, &tg);
+        let headroom = (r.makespan - d.makespan) / r.makespan.max(1e-12);
+        println!(
+            "DES        {} ({:+.1}% vs list — comm/compute overlap credited)",
+            fmt_secs(d.makespan),
+            -100.0 * headroom
+        );
+        let oom = if d.oom { "  ** OOM **" } else { "" };
+        println!("DES peak   {}{}", fmt_bytes(d.max_peak_mem()), oom);
+        if let Some(path) = args.get("trace") {
+            match superscaler::des::trace::write_chrome_trace(path, &d, &plan) {
+                Ok(()) => println!("trace      wrote {path} (open in chrome://tracing)"),
+                Err(e) => {
+                    eprintln!("cannot write trace {path}: {e}");
+                    std::process::exit(2);
+                }
+            }
         }
     }
 }
@@ -181,6 +231,8 @@ fn search_cmd(args: &Args) {
         max_candidates: args.usize("max-candidates", 256),
         hetero: args.has("hetero"),
         prune: !args.has("no-prune"),
+        fidelity: fidelity(args),
+        des_top: args.usize("des-top", 8),
     };
     let report = search::search(|| build_model(args), &cluster, &cfg);
     let t = report.to_table(top);
@@ -189,13 +241,27 @@ fn search_cmd(args: &Args) {
     match report.best() {
         Some(best) => {
             let m = best.metrics().expect("best candidate has metrics");
-            println!(
-                "best: {} — {} / iteration, {:.1} TFLOPS, peak mem {}",
-                best.plan_name,
-                fmt_secs(m.makespan),
-                m.aggregate_tflops,
-                fmt_bytes(m.peak_mem)
-            );
+            match m.des_makespan {
+                Some(d) => println!(
+                    "best: {} — {} / iteration (DES; list {}), {:.1} TFLOPS, peak mem {}{}",
+                    best.plan_name,
+                    fmt_secs(d),
+                    fmt_secs(m.makespan),
+                    m.aggregate_tflops,
+                    fmt_bytes(m.peak_mem),
+                    if m.des_oom { "  ** DES-OOM **" } else { "" }
+                ),
+                None => println!(
+                    "best: {} — {} / iteration, {:.1} TFLOPS, peak mem {}",
+                    best.plan_name,
+                    fmt_secs(m.makespan),
+                    m.aggregate_tflops,
+                    fmt_bytes(m.peak_mem)
+                ),
+            }
+            if let Some(path) = args.get("trace") {
+                trace_best(path, best, args, &cluster);
+            }
             if let Some(path) = args.get("baseline") {
                 baseline_gate(path, &report, args);
             }
@@ -207,21 +273,68 @@ fn search_cmd(args: &Args) {
     }
 }
 
+/// Rebuild the search's winning plan, replay it on the DES and write its
+/// Chrome trace — the search-smoke CI artifact that makes a regression's
+/// pipeline shape inspectable without re-running anything locally.
+///
+/// This deliberately re-runs the build → validate → materialize → DES
+/// pipeline the `--fidelity des` re-score already executed for this
+/// candidate: holding every top-k materialized `Plan` (100k+ tasks on the
+/// Fig. 12 models) in the report to save one re-run would cost far more
+/// memory than the seconds it saves, and the trace path also works for
+/// list-fidelity searches that never DES-scored anything.
+fn trace_best(path: &str, best: &search::Candidate, args: &Args, cluster: &Cluster) {
+    let Some(planner) = plans::registry::find(best.planner) else {
+        eprintln!("winning planner '{}' not in registry", best.planner);
+        std::process::exit(2);
+    };
+    let out = planner.build(build_model(args), &best.spec).unwrap_or_else(|e| {
+        eprintln!("winning plan failed to rebuild for tracing: {e}");
+        std::process::exit(2);
+    });
+    let vs = superscaler::schedule::validate(&out.graph, &out.schedule).unwrap_or_else(|e| {
+        eprintln!("winning plan failed to re-validate for tracing: {e}");
+        std::process::exit(2);
+    });
+    let plan = superscaler::materialize::materialize(&out.graph, &vs, cluster, comm_mode(args));
+    let r = superscaler::des::simulate(&out.graph, &vs, &plan, cluster);
+    match superscaler::des::trace::write_chrome_trace(path, &r, &plan) {
+        Ok(()) => println!("trace: wrote {path} ({} DES)", fmt_secs(r.makespan)),
+        Err(e) => {
+            eprintln!("cannot write trace {path}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// The CI perf-trajectory gate: compare the search's best iteration time
 /// against a committed baseline JSON. A missing/unset baseline (or
 /// `--write-baseline`) writes the current numbers instead of gating, so the
 /// first CI run bootstraps the file it uploads as an artifact.
 fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
     use superscaler::util::json::{self, Value};
-    let best = report.best().expect("gate runs only with a best plan");
-    let m = best.metrics().expect("best candidate has metrics");
+    let des_best = report.best().expect("gate runs only with a best plan");
+    let des_score = des_best.metrics().and_then(|m| m.des_makespan);
+    // Gate on the best *list-simulated* time: it is measured for every
+    // candidate under every fidelity, so a `--fidelity des` run cannot
+    // shift what the baseline compares against. `best_plan`/`best_spec`/
+    // `best_makespan` therefore describe the list winner (a consistent
+    // tuple); the DES winner and its score are recorded alongside for the
+    // overlap-headroom audit.
+    let best = report.best_by_list().expect("a best plan implies a list winner");
+    let gate_makespan = best.metrics().expect("list winner has metrics").makespan;
     let tol = args.f64("tol", 0.001);
     let current = Value::obj([
         ("model", report.model.clone().into()),
         ("gpus", report.gpus.into()),
         ("best_plan", best.plan_name.clone().into()),
         ("best_spec", best.spec.label().into()),
-        ("best_makespan", m.makespan.into()),
+        ("best_makespan", gate_makespan.into()),
+        (
+            "des_best_plan",
+            if des_score.is_some() { des_best.plan_name.clone().into() } else { Value::Null },
+        ),
+        ("des_best_makespan", des_score.map(Value::from).unwrap_or(Value::Null)),
         ("simulated", report.evaluated.into()),
         ("pruned_infeasible", report.pruned.into()),
         ("capped", report.capped.into()),
@@ -232,7 +345,9 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
             std::fs::create_dir_all(dir).ok();
         }
         match std::fs::write(path, json::to_string_pretty(&current) + "\n") {
-            Ok(()) => println!("baseline {reason}: wrote {path} (best {})", fmt_secs(m.makespan)),
+            Ok(()) => {
+                println!("baseline {reason}: wrote {path} (best {})", fmt_secs(gate_makespan))
+            }
             Err(e) => {
                 eprintln!("cannot write baseline {path}: {e}");
                 std::process::exit(2);
@@ -247,7 +362,7 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
     match prior {
         None => write("bootstrap"),
         Some(base) => {
-            let ratio = m.makespan / base;
+            let ratio = gate_makespan / base;
             let delta = (ratio - 1.0) * 100.0;
             if ratio > 1.0 + tol {
                 if !args.has("write-baseline") {
@@ -255,7 +370,7 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
                         "PERF GATE FAILED: best plan {} at {} regressed {delta:+.2}% vs \
                          baseline {}",
                         best.plan_name,
-                        fmt_secs(m.makespan),
+                        fmt_secs(gate_makespan),
                         fmt_secs(base)
                     );
                     std::process::exit(3);
@@ -267,7 +382,7 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
             } else {
                 println!(
                     "perf gate ok: {} vs baseline {} ({delta:+.2}%)",
-                    fmt_secs(m.makespan),
+                    fmt_secs(gate_makespan),
                     fmt_secs(base)
                 );
             }

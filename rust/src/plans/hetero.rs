@@ -94,6 +94,14 @@ pub fn hetero(mut model: Model, dp: usize, k: usize, stages: &[StageSpec]) -> Pl
     // sblocks[(dpg, layer, run, mb)][shard] = ops of one sequential
     // co-shard block (the coshard plan's contiguous-run structure).
     let mut sblocks: HashMap<(usize, usize, usize, usize), Vec<Vec<OpId>>> = HashMap::new();
+    // Megatron-style TP split via the shared dp→micro→tp helper, with
+    // hetero's stricter factor rule: it must divide BOTH the dim size and
+    // the stage width so every op contributes exactly `tp` pieces — the
+    // `idx % tp` device layout below would misalign corresponding shards
+    // of producer/consumer ops otherwise.
+    let strict_align = |sz: Option<usize>, tp: usize| {
+        (1..=tp).rev().find(|&c| tp % c == 0 && sz.map_or(false, |s| s % c == 0)).unwrap_or(1)
+    };
     for (li, ops) in model.layers.iter().enumerate() {
         let s = stage_of_layer[&li];
         let st = &stages[s];
@@ -107,65 +115,31 @@ pub fn hetero(mut model: Model, dp: usize, k: usize, stages: &[StageSpec]) -> Pl
                 run += 1;
                 in_run = false;
             }
-            let batch_dim = g
-                .op(op)
-                .signature
-                .as_ref()
-                .and_then(|sg| sg.batch.clone())
-                .expect("fwd op without batch");
-            let dp_parts = op_trans(g, op, &TransformAlgo::split(&batch_dim, dp))?;
-            for (dpg, p) in dp_parts.into_iter().enumerate() {
-                let mbs = op_trans(g, p, &TransformAlgo::split(&batch_dim, k))?;
-                for (mi, m) in mbs.into_iter().enumerate() {
-                    if tp > 1 {
-                        // Megatron-style TP split, capped by the dim's
-                        // actual size with replicas filling the group. The
-                        // split factor must divide BOTH the dim size and
-                        // the stage width so every op contributes exactly
-                        // `tp` pieces — the `idx % tp` device layout below
-                        // would misalign corresponding shards of
-                        // producer/consumer ops otherwise.
-                        let shards = match tp_dim.get(&op) {
-                            Some(dim) => {
-                                let sz = dim_size(g, m, dim);
-                                let eff = (1..=tp)
-                                    .rev()
-                                    .find(|&c| tp % c == 0 && sz.map_or(false, |s| s % c == 0))
-                                    .unwrap_or(1);
-                                let mut out = Vec::with_capacity(tp);
-                                for piece in op_trans(g, m, &TransformAlgo::split(dim, eff))? {
-                                    if tp / eff > 1 {
-                                        out.extend(op_trans(
-                                            g,
-                                            piece,
-                                            &TransformAlgo::replicate(tp / eff),
-                                        )?);
-                                    } else {
-                                        out.push(piece);
-                                    }
-                                }
-                                out
-                            }
-                            None => op_trans(g, m, &TransformAlgo::replicate(tp))?,
-                        };
-                        pieces.entry((li, dpg, mi)).or_default().extend(shards);
-                    } else if eligible {
-                        let sdim = coshard_dim[&op];
-                        let eff = dim_size(g, m, sdim)
-                            .map(|sz| feasible_split(sz, want_shards))
-                            .unwrap_or(1);
-                        let sparts = op_trans(g, m, &TransformAlgo::split(sdim, eff))?;
-                        let entry = sblocks
-                            .entry((dpg, li, run, mi))
-                            .or_insert_with(|| vec![Vec::new(); sparts.len()]);
-                        let cap = entry.len() - 1;
-                        for (si, sp) in sparts.into_iter().enumerate() {
-                            entry[si.min(cap)].push(sp);
-                            pieces.entry((li, dpg, mi)).or_default().push(sp);
-                        }
-                    } else {
-                        pieces.entry((li, dpg, mi)).or_default().push(m);
+            let shard_lists =
+                transform_layer_op(g, op, dp, k, tp, tp_dim.get(&op).copied(), &strict_align)?;
+            for (idx, shards) in shard_lists.into_iter().enumerate() {
+                let (dpg, mi) = (idx / k, idx % k);
+                if tp > 1 {
+                    pieces.entry((li, dpg, mi)).or_default().extend(shards);
+                } else if eligible {
+                    // Single-device stage: co-shard the micro-batch piece
+                    // sequentially along its co-shard dim.
+                    let m = shards[0];
+                    let sdim = coshard_dim[&op];
+                    let eff = dim_size(g, m, sdim)
+                        .map(|sz| feasible_split(sz, want_shards))
+                        .unwrap_or(1);
+                    let sparts = op_trans(g, m, &TransformAlgo::split(sdim, eff))?;
+                    let entry = sblocks
+                        .entry((dpg, li, run, mi))
+                        .or_insert_with(|| vec![Vec::new(); sparts.len()]);
+                    let cap = entry.len() - 1;
+                    for (si, sp) in sparts.into_iter().enumerate() {
+                        entry[si.min(cap)].push(sp);
+                        pieces.entry((li, dpg, mi)).or_default().push(sp);
                     }
+                } else {
+                    pieces.entry((li, dpg, mi)).or_default().push(shards[0]);
                 }
             }
             if eligible {

@@ -42,46 +42,17 @@ pub fn megatron(
 
     // ---- transformation: dp split -> K micro-batches -> tp shards ----
     // pieces[(layer_idx, dpg, mb)] = Vec<OpId> (tp shards of every op).
+    // The split factor is capped by the dim's actual size (early Swin
+    // stages have fewer heads than tp), replicas filling the rest.
+    let cap_by_size = |sz: Option<usize>, tp: usize| sz.map(|s| feasible_split(s, tp)).unwrap_or(1);
     let mut pieces: HashMap<(usize, usize, usize), Vec<OpId>> = HashMap::new();
     for (li, ops) in model.layers.iter().enumerate() {
         for &op in ops {
-            let batch_dim = g
-                .op(op)
-                .signature
-                .as_ref()
-                .and_then(|s| s.batch.clone())
-                .expect("fwd op without batch");
-            let dp_parts = op_trans(g, op, &TransformAlgo::split(&batch_dim, dp))?;
-            for (dpg, p) in dp_parts.into_iter().enumerate() {
-                let mbs = op_trans(g, p, &TransformAlgo::split(&batch_dim, k))?;
-                for (mi, m) in mbs.into_iter().enumerate() {
-                    let shards = match tp_dim.get(&op) {
-                        Some(dim) if tp > 1 => {
-                            // Cap the split by the dim's actual size (early
-                            // Swin stages have fewer heads than tp), filling
-                            // the rest of the group with replicas.
-                            let eff = dim_size(g, m, dim)
-                                .map(|sz| feasible_split(sz, tp))
-                                .unwrap_or(1);
-                            let mut out = Vec::with_capacity(tp);
-                            for piece in op_trans(g, m, &TransformAlgo::split(dim, eff))? {
-                                if tp / eff > 1 {
-                                    out.extend(op_trans(
-                                        g,
-                                        piece,
-                                        &TransformAlgo::replicate(tp / eff),
-                                    )?);
-                                } else {
-                                    out.push(piece);
-                                }
-                            }
-                            out
-                        }
-                        _ if tp > 1 => op_trans(g, m, &TransformAlgo::replicate(tp))?,
-                        _ => vec![m],
-                    };
-                    pieces.entry((li, dpg, mi)).or_default().extend(shards);
-                }
+            let shard_lists =
+                transform_layer_op(g, op, dp, k, tp, tp_dim.get(&op).copied(), &cap_by_size)?;
+            for (idx, shards) in shard_lists.into_iter().enumerate() {
+                let (dpg, mi) = (idx / k, idx % k);
+                pieces.entry((li, dpg, mi)).or_default().extend(shards);
             }
         }
     }

@@ -85,6 +85,59 @@ pub fn split_batch(g: &mut Graph, ops: &[OpId], k: usize) -> Vec<Vec<OpId>> {
         .collect()
 }
 
+/// The shared dp → micro → tp transform of one forward layer op — the
+/// common prefix of the megatron and hetero planners. The op is split
+/// `dp` ways along its batch dim, each replica into `k` micro-batches,
+/// and each micro-batch into `tp` tensor-parallel shards along `tp_dim`
+/// (replicated when the op declares no TP dim). Returns the shard lists
+/// indexed `[dpg * k + mb]`.
+///
+/// `eff_split(dim_size, tp)` chooses the *effective* tensor-split factor,
+/// which is where the two callers legitimately differ: megatron caps the
+/// split by the dim's actual size and fills the group with replicas (early
+/// Swin stages have fewer heads than tp), while hetero additionally
+/// requires the factor to divide the stage width so the `idx % width`
+/// device layout keeps corresponding producer/consumer shards aligned.
+pub fn transform_layer_op(
+    g: &mut Graph,
+    op: OpId,
+    dp: usize,
+    k: usize,
+    tp: usize,
+    tp_dim: Option<&str>,
+    eff_split: &dyn Fn(Option<usize>, usize) -> usize,
+) -> Result<Vec<Vec<OpId>>, crate::trans::TransError> {
+    let batch_dim = g
+        .op(op)
+        .signature
+        .as_ref()
+        .and_then(|s| s.batch.clone())
+        .expect("fwd op without batch");
+    let mut out = Vec::with_capacity(dp * k);
+    for p in op_trans(g, op, &TransformAlgo::split(&batch_dim, dp))? {
+        for m in op_trans(g, p, &TransformAlgo::split(&batch_dim, k))? {
+            let shards = match tp_dim {
+                Some(dim) if tp > 1 => {
+                    let eff = eff_split(dim_size(g, m, dim), tp);
+                    let mut sh = Vec::with_capacity(tp);
+                    for piece in op_trans(g, m, &TransformAlgo::split(dim, eff))? {
+                        if tp / eff > 1 {
+                            sh.extend(op_trans(g, piece, &TransformAlgo::replicate(tp / eff))?);
+                        } else {
+                            sh.push(piece);
+                        }
+                    }
+                    sh
+                }
+                _ if tp > 1 => op_trans(g, m, &TransformAlgo::replicate(tp))?,
+                _ => vec![m],
+            };
+            out.push(shards);
+        }
+    }
+    Ok(out)
+}
+
 /// Apply tensor-parallel splitting: each op splits `t` ways along its
 /// model-declared TP dim, or replicates if it has none (layernorm etc).
 /// Returns `shards[orig_index][t]`.
@@ -336,4 +389,40 @@ pub fn span(ops: &[OpId]) -> (OpId, OpId) {
     let mut v = ops.to_vec();
     v.sort_unstable();
     (*v.first().unwrap(), *v.last().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::gpt3;
+
+    #[test]
+    fn transform_layer_op_yields_dp_x_micro_lists_of_tp_shards() {
+        let mut model = gpt3(0, 8, 256);
+        let op = model.layers[1][0]; // first transformer-layer op
+        let tp_dim = model.tp_dim.get(&op).copied();
+        let g = &mut model.graph;
+        let cap = |sz: Option<usize>, tp: usize| sz.map(|s| feasible_split(s, tp)).unwrap_or(1);
+        let lists = transform_layer_op(g, op, 2, 2, 2, tp_dim, &cap).unwrap();
+        assert_eq!(lists.len(), 4, "dp=2 x micro=2 shard lists");
+        for l in &lists {
+            assert_eq!(l.len(), 2, "tp=2 shards per micro-batch");
+        }
+        // All pieces are distinct live ops.
+        let mut all: Vec<OpId> = lists.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 8);
+    }
+
+    #[test]
+    fn transform_layer_op_without_tp_is_plain_dp_micro() {
+        let mut model = gpt3(0, 4, 256);
+        let op = model.layers[1][0];
+        let g = &mut model.graph;
+        let cap = |sz: Option<usize>, tp: usize| sz.map(|s| feasible_split(s, tp)).unwrap_or(1);
+        let lists = transform_layer_op(g, op, 1, 4, 1, None, &cap).unwrap();
+        assert_eq!(lists.len(), 4);
+        assert!(lists.iter().all(|l| l.len() == 1));
+    }
 }

@@ -18,6 +18,30 @@
 //! Outputs per run: makespan, per-device compute/comm/bubble breakdown
 //! (Fig. 15), aggregate TFLOPS (Fig. 12), peak memory + OOM flags
 //! (Figs. 13/14).
+//!
+//! # Fidelity tiers
+//!
+//! This list scheduler is the *middle* of three plan-scoring tiers that
+//! trade cost for accuracy:
+//!
+//! 1. **analytic lower bound** ([`Cluster::plan_time_lower_bound`]) —
+//!    microseconds per spec, sound but optimistic; used by the search for
+//!    dominance pruning;
+//! 2. **list simulation** (this module) — milliseconds per plan; models
+//!    device occupancy and schedule order exactly but charges every
+//!    collective to *all* of its devices (no comm/compute overlap) and
+//!    every transfer its solo bandwidth (no link contention) — a
+//!    synchronous-NCCL pessimist;
+//! 3. **discrete-event simulation** ([`crate::des`]) — tens of
+//!    milliseconds per plan; separate per-device compute/communication
+//!    streams credit overlap-friendly schedules, and concurrent transfers
+//!    fair-share the links they cross ([`Cluster::group_links`]).
+//!
+//! The search screens with tier 2 and re-ranks its top candidates with
+//! tier 3 (`--fidelity des`). Both engines consume the same
+//! [`TaskGraph`] preparation (dependency DAG + per-device serial hints),
+//! so they disagree only where the execution *model* differs — never on
+//! which order the schedule asked for.
 
 use crate::cost::Cluster;
 use crate::graph::{Graph, TensorKind};
@@ -70,47 +94,171 @@ impl SimReport {
     }
 }
 
+/// The dependency structure both execution engines (this list scheduler and
+/// the discrete-event simulator, [`crate::des`]) schedule against: the task
+/// DAG of the materialized plan plus — when they do not create a cycle —
+/// per-device serial edges from the validated schedule's compute order.
+///
+/// The serial *hints* can conflict with merged communication chains (a
+/// collective waits on ALL producers of a component while validation
+/// ordered against one replica). Dropping them is safe — data/comm
+/// dependencies still hold and devices still serialize through their
+/// availability — so [`TaskGraph::prepare`] falls back to the bare DAG
+/// when the hinted graph is cyclic. Extracting this once keeps the two
+/// engines agreeing on *what* may run when; they differ only in how
+/// devices and links are occupied.
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    /// `consumers[t]` = tasks with an edge from `t` (deps + serial hints).
+    pub consumers: Vec<Vec<TaskId>>,
+    /// In-degree of each task under the same edge set.
+    pub indeg: Vec<usize>,
+    /// Whether the per-device serial hints were kept (false = fallback).
+    pub serial_hints: bool,
+}
+
+impl TaskGraph {
+    /// Build the task graph for `plan` with `vs`'s serial hints, falling
+    /// back to plain data dependencies if the hints introduce a cycle.
+    /// Panics if the plan's own dependencies are cyclic — that is a
+    /// materialization bug, not a schedule property.
+    pub fn prepare(vs: &ValidatedSchedule, plan: &Plan) -> TaskGraph {
+        let hinted = TaskGraph::build(plan, Some(vs));
+        if hinted.is_acyclic() {
+            return hinted;
+        }
+        let bare = TaskGraph::build(plan, None);
+        assert!(
+            bare.is_acyclic(),
+            "task plan has a true dependency cycle — materialization bug"
+        );
+        bare
+    }
+
+    /// Task graph of the plan's data dependencies alone (no schedule).
+    pub fn of_plan(plan: &Plan) -> TaskGraph {
+        TaskGraph::build(plan, None)
+    }
+
+    fn build(plan: &Plan, vs: Option<&ValidatedSchedule>) -> TaskGraph {
+        let n = plan.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut consumers: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for t in &plan.tasks {
+            for &d in &t.deps {
+                consumers[d].push(t.id);
+                indeg[t.id] += 1;
+            }
+        }
+        if let Some(vs) = vs {
+            for ops in vs.device_order.values() {
+                for w in ops.windows(2) {
+                    let (a, b) = (plan.task_of_op[&w[0]], plan.task_of_op[&w[1]]);
+                    consumers[a].push(b);
+                    indeg[b] += 1;
+                }
+            }
+        }
+        TaskGraph { consumers, indeg, serial_hints: vs.is_some() }
+    }
+
+    /// Kahn check: does the edge set admit a complete topological order?
+    pub fn is_acyclic(&self) -> bool {
+        let n = self.indeg.len();
+        let mut indeg = self.indeg.clone();
+        let mut q: Vec<TaskId> = (0..n).filter(|&t| indeg[t] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(u) = q.pop() {
+            seen += 1;
+            for &v in &self.consumers[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    q.push(v);
+                }
+            }
+        }
+        seen == n
+    }
+}
+
+/// Per-device activation memory *events* of an executed plan:
+/// `+bytes` at the producing task's start, `-bytes` when the region's last
+/// consumer finishes (frees sort before allocations at equal time). Both
+/// engines derive their memory accounting from this one function — the
+/// list scheduler reduces the events to a high-watermark, the DES keeps
+/// the full timeline — so a plan's memory profile never depends on which
+/// engine scored it, only on the start/finish times it produced.
+pub fn activation_events(
+    g: &Graph,
+    plan: &Plan,
+    start: &[f64],
+    finish: &[f64],
+) -> HashMap<DeviceId, Vec<(f64, i64)>> {
+    let mut events: HashMap<DeviceId, Vec<(f64, i64)>> = HashMap::new();
+    let mut last_read: HashMap<(usize, u64), f64> = HashMap::new(); // (ptensor, region) -> time
+    let region_of = |m: &crate::graph::mask::Mask| -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        for iv in &m.dims {
+            (iv.lo.num, iv.lo.den, iv.hi.num, iv.hi.den).hash(&mut h);
+        }
+        h.finish()
+    };
+    for t in &plan.tasks {
+        if let TaskKind::Compute { op, .. } = t.kind {
+            for &iv in &g.op(op).inputs {
+                let vt = g.vtensor(iv);
+                let kind = g.ptensor(vt.ptensor).kind;
+                if matches!(kind, TensorKind::Activation | TensorKind::Input) {
+                    let key = (vt.ptensor, region_of(&vt.mask));
+                    let e = last_read.entry(key).or_insert(0.0);
+                    *e = e.max(finish[t.id]);
+                }
+            }
+        }
+    }
+    for t in &plan.tasks {
+        if let TaskKind::Compute { op, device } = t.kind {
+            for &ov in &g.op(op).outputs {
+                let vt = g.vtensor(ov);
+                let p = g.ptensor(vt.ptensor);
+                if !matches!(p.kind, TensorKind::Activation | TensorKind::Input) {
+                    continue;
+                }
+                let bytes = (vt.mask.num_elements(&p.shape) * p.dtype.size_bytes()) as i64;
+                let key = (vt.ptensor, region_of(&vt.mask));
+                let freed = last_read.get(&key).copied().unwrap_or(finish[t.id]);
+                let evs = events.entry(device).or_default();
+                evs.push((start[t.id], bytes));
+                evs.push((freed.max(finish[t.id]), -bytes));
+            }
+        }
+    }
+    for evs in events.values_mut() {
+        evs.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap()
+                // Frees before allocs at equal time.
+                .then(a.1.cmp(&b.1))
+        });
+    }
+    events
+}
+
 /// Simulate one iteration of `plan`. `vs` supplies the per-device serial
 /// order for compute tasks; communication tasks are interleaved at the
 /// position their dependencies allow.
 pub fn simulate(g: &Graph, vs: &ValidatedSchedule, plan: &Plan, cluster: &Cluster) -> SimReport {
-    simulate_inner(g, vs, plan, cluster, true)
+    let tg = TaskGraph::prepare(vs, plan);
+    simulate_prepared(g, &tg, plan, cluster)
 }
 
-fn simulate_inner(
-    g: &Graph,
-    vs: &ValidatedSchedule,
-    plan: &Plan,
-    cluster: &Cluster,
-    with_serial_hints: bool,
-) -> SimReport {
+/// [`simulate`] against an already-prepared [`TaskGraph`] (shared with the
+/// DES when both engines score the same plan).
+pub fn simulate_prepared(g: &Graph, tg: &TaskGraph, plan: &Plan, cluster: &Cluster) -> SimReport {
     let n = plan.tasks.len();
-
-    // ---- establish a global dispatch order ----
-    // Start from the task-dependency DAG plus per-device compute serial
-    // edges from the validated schedule; Kahn with smallest-ready-id
-    // tie-break gives a deterministic order.
-    let mut extra_edges: Vec<(TaskId, TaskId)> = Vec::new();
-    if with_serial_hints {
-    for ops in vs.device_order.values() {
-        for w in ops.windows(2) {
-            let (a, b) = (plan.task_of_op[&w[0]], plan.task_of_op[&w[1]]);
-            extra_edges.push((a, b));
-        }
-    }
-    }
-    let mut indeg = vec![0usize; n];
-    let mut consumers: Vec<Vec<TaskId>> = vec![Vec::new(); n];
-    for t in &plan.tasks {
-        for &d in &t.deps {
-            consumers[d].push(t.id);
-            indeg[t.id] += 1;
-        }
-    }
-    for &(a, b) in &extra_edges {
-        consumers[a].push(b);
-        indeg[b] += 1;
-    }
+    let mut indeg = tg.indeg.clone();
+    let consumers = &tg.consumers;
     // ---- event-driven greedy scheduling (lazy min-heap) ----
     // Among ready tasks (all deps finished), repeatedly dispatch the one
     // with the earliest feasible start time (deps ⊔ device availability);
@@ -179,86 +327,17 @@ fn simulate_inner(
             }
         }
     }
-    if scheduled != n {
-        // The validated per-device serial order can conflict with merged
-        // communication chains (a collective waits on ALL producers of a
-        // component while validation ordered against one replica). Dropping
-        // the serial *hints* is safe — data/comm dependencies still hold and
-        // devices still serialize through dev_free — so retry without them.
-        assert!(
-            with_serial_hints,
-            "task plan has a true dependency cycle — materialization bug"
-        );
-        return simulate_inner(g, vs, plan, cluster, false);
-    }
+    assert_eq!(scheduled, n, "TaskGraph::prepare guarantees an acyclic task graph");
     let makespan = finish.iter().copied().fold(0.0, f64::max);
 
     // ---- memory watermark ----
-    // Activation regions: live from producer start to last-consumer finish.
-    // Events per device: (+bytes at producer start), (-bytes at last
-    // consumer finish).
-    #[derive(Debug)]
-    struct Ev {
-        time: f64,
-        delta: i64,
-    }
-    let mut events: HashMap<DeviceId, Vec<Ev>> = HashMap::new();
-    // For each compute task, collect transient outputs.
-    let mut last_read: HashMap<(usize, u64), f64> = HashMap::new(); // (ptensor, region) -> time
-    let mut region_of = |m: &crate::graph::mask::Mask| -> u64 {
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        for iv in &m.dims {
-            (iv.lo.num, iv.lo.den, iv.hi.num, iv.hi.den).hash(&mut h);
-        }
-        h.finish()
-    };
-    for t in &plan.tasks {
-        if let TaskKind::Compute { op, .. } = t.kind {
-            for &iv in &g.op(op).inputs {
-                let vt = g.vtensor(iv);
-                let kind = g.ptensor(vt.ptensor).kind;
-                if matches!(kind, TensorKind::Activation | TensorKind::Input) {
-                    let key = (vt.ptensor, region_of(&vt.mask));
-                    let e = last_read.entry(key).or_insert(0.0);
-                    *e = e.max(finish[t.id]);
-                }
-            }
-        }
-    }
-    for t in &plan.tasks {
-        if let TaskKind::Compute { op, device } = t.kind {
-            for &ov in &g.op(op).outputs {
-                let vt = g.vtensor(ov);
-                let p = g.ptensor(vt.ptensor);
-                if !matches!(p.kind, TensorKind::Activation | TensorKind::Input) {
-                    continue;
-                }
-                let bytes =
-                    (vt.mask.num_elements(&p.shape) * p.dtype.size_bytes()) as i64;
-                let key = (vt.ptensor, region_of(&vt.mask));
-                let freed = last_read
-                    .get(&key)
-                    .copied()
-                    .unwrap_or(finish[t.id]);
-                let evs = events.entry(device).or_default();
-                evs.push(Ev { time: start[t.id], delta: bytes });
-                evs.push(Ev { time: freed.max(finish[t.id]), delta: -bytes });
-            }
-        }
-    }
-    for (dev, mut evs) in events {
-        evs.sort_by(|a, b| {
-            a.time
-                .partial_cmp(&b.time)
-                .unwrap()
-                // Frees before allocs at equal time.
-                .then(a.delta.cmp(&b.delta))
-        });
+    // Activation regions: live from producer start to last-consumer finish;
+    // the shared event stream reduced to a per-device high-watermark.
+    for (dev, evs) in activation_events(g, plan, &start, &finish) {
         let mut cur: i64 = 0;
         let mut peak: i64 = 0;
-        for e in evs {
-            cur += e.delta;
+        for (_, delta) in evs {
+            cur += delta;
             peak = peak.max(cur);
         }
         let st = stats
