@@ -47,6 +47,7 @@ fn main() {
     let cfg = SearchConfig {
         workers: args.usize("workers", 0),
         hetero: !args.has("no-hetero"),
+        dp_min: args.usize("dp-min", 1),
         prune: !args.has("no-prune"),
         fidelity: {
             let s = args.str("fidelity", "list");

@@ -323,13 +323,28 @@ impl Cluster {
             // Per-device gradient bytes that cross the DP group. Grid plans
             // hold 1/(pp·tp) of the weights per device; ZeRO-family plans
             // reduce-scatter instead of all-reduce (half the ring traffic).
+            // Heterogeneous pipelines size the share by the *widest* stage
+            // (the smallest per-device gradient buffer any stage holds under
+            // the uniform-layer model) with an extra 2× margin on top of
+            // the usual one, because FLOP-balanced stages of non-uniform
+            // models can hold less than 1/pp of the weights — the sync term
+            // must stay below every device's true sync time for dominance
+            // pruning to remain sound.
             let w = stats.weight_bytes as f64;
-            let grad_bytes = match spec.kind {
-                PlanKind::Zero3 | PlanKind::Zero3Offload => w / 2.0,
-                _ => w / (spec.pp.max(1) * spec.tp.max(1)) as f64,
+            let (grad_bytes, margin) = match spec.kind {
+                PlanKind::Zero3 | PlanKind::Zero3Offload => (w / 2.0, 0.5),
+                PlanKind::Hetero => {
+                    let wmax = spec
+                        .stages
+                        .as_ref()
+                        .and_then(|st| st.iter().map(|s| s.width()).max())
+                        .unwrap_or_else(|| spec.tp.max(1));
+                    (w / (spec.pp.max(1) * wmax) as f64, 0.25)
+                }
+                _ => (w / (spec.pp.max(1) * spec.tp.max(1)) as f64, 0.5),
             };
             let n = dp as f64;
-            0.5 * (2.0 * (n - 1.0) / n * grad_bytes / self.nvlink_bw)
+            margin * (2.0 * (n - 1.0) / n * grad_bytes / self.nvlink_bw)
         } else {
             0.0
         };
@@ -445,6 +460,23 @@ mod tests {
             assert!(lb > 0.0);
             assert!(lb <= r.makespan, "{}: lb {} > simulated {}", spec.label(), lb, r.makespan);
         }
+    }
+
+    #[test]
+    fn hetero_dp_bound_adds_sync_term_below_grid_share() {
+        use crate::plans::StageSpec;
+        let c = Cluster::v100(8);
+        let stats = ModelStats::of(&crate::models::gpt3(0, 8, 256).graph);
+        let rep = PlanSpec::hetero_dp(2, vec![StageSpec::tp(2), StageSpec::tp(2)], 2);
+        let flat = PlanSpec::hetero(vec![StageSpec::tp(4), StageSpec::tp(4)], 2);
+        assert_eq!(rep.devices(), flat.devices());
+        let br = c.plan_time_lower_bound(&rep, &stats);
+        let bf = c.plan_time_lower_bound(&flat, &stats);
+        assert!(br > bf, "dp > 1 hetero bound must carry a gradient-sync term: {br} vs {bf}");
+        // The hetero sync share carries an extra margin vs the equal-shape
+        // megatron grid (uneven stage weights must never make it unsound).
+        let mg = PlanSpec { dp: 2, pp: 2, tp: 2, micro: 2, ..PlanSpec::new(PlanKind::Megatron) };
+        assert!(br <= c.plan_time_lower_bound(&mg, &stats));
     }
 
     #[test]

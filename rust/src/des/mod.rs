@@ -26,7 +26,11 @@
 //!   host offloads from different GPUs) run at full rate in parallel;
 //! * **time-resolved memory** — the full per-device resident-bytes
 //!   timeline ([`MemTimeline`]), not just the high-watermark, so
-//!   offload/recompute plans are judged on *when* memory peaks;
+//!   offload/recompute plans are judged on *when* memory peaks. Gradient
+//!   buffers are part of the timeline too (allocated at their backward
+//!   producer, freed after the optimizer and any sync collective), so a
+//!   dp plan OOMs only when gradient liveness actually collides with the
+//!   activation peak — not merely because watermark sums exceed capacity;
 //! * **trace export** — every task's `(start, finish)` span is kept
 //!   ([`TaskSpan`]) and can be serialized to Chrome's `chrome://tracing` /
 //!   Perfetto JSON via [`trace::chrome_trace`].
@@ -46,7 +50,7 @@ use crate::cost::{Cluster, LinkId};
 use crate::graph::Graph;
 use crate::materialize::{Plan, TaskId};
 use crate::schedule::{DeviceId, ValidatedSchedule, CPU_DEVICE};
-use crate::sim::{activation_events, DeviceStat, TaskGraph};
+use crate::sim::{activation_events, gradient_events, DeviceStat, TaskGraph};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
 
@@ -59,8 +63,10 @@ pub struct TaskSpan {
 }
 
 /// Time-resolved resident memory of one device: step points
-/// `(time, bytes)` — the value holds until the next point — including the
-/// static (weights/grads/optimizer) baseline at time 0.
+/// `(time, bytes)` — the value holds until the next point. The time-0
+/// baseline is the static weights/optimizer bytes; gradient buffers enter
+/// and leave the timeline with their actual liveness (they are *not* part
+/// of the baseline, unlike the list scheduler's accounting).
 #[derive(Clone, Debug)]
 pub struct MemTimeline {
     pub device: DeviceId,
@@ -369,27 +375,42 @@ pub fn execute(g: &Graph, plan: &Plan, cluster: &Cluster, tg: &TaskGraph) -> Des
     let makespan = eng.finish.iter().copied().fold(0.0, f64::max);
 
     // ---- time-resolved memory ----
+    // Activations from the shared event stream, *plus* gradient-buffer
+    // liveness: the DES baseline is the static bytes minus the gradient
+    // share, and each gradient region is allocated when its backward
+    // producer starts and freed when its last local toucher (optimizer /
+    // sync collective) finishes. A plan therefore OOMs under the DES only
+    // if gradient buffers are live *at the same time* as the activation
+    // peak — the timeline admission the list scheduler's always-resident
+    // watermark cannot express (dp replicas shift when gradients are live).
     let acts = activation_events(g, plan, &eng.start, &eng.finish);
+    let grads = gradient_events(g, plan, &eng.start, &eng.finish);
     let mut devs: BTreeSet<DeviceId> = stats.keys().copied().collect();
     devs.extend(acts.keys().copied());
+    devs.extend(grads.keys().copied());
     devs.extend(plan.static_mem.keys().copied());
     let mut mem: Vec<MemTimeline> = Vec::new();
     for d in devs {
-        let base = plan.static_mem.get(&d).copied().unwrap_or(0) as i64;
+        let static_total = plan.static_mem.get(&d).copied().unwrap_or(0);
+        let grad_share = plan.static_grad_mem.get(&d).copied().unwrap_or(0);
+        let base = static_total.saturating_sub(grad_share) as i64;
+        let mut evs: Vec<(f64, i64)> = acts.get(&d).cloned().unwrap_or_default();
+        if let Some(ge) = grads.get(&d) {
+            evs.extend(ge.iter().copied());
+            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        }
         let mut points: Vec<(f64, u64)> = vec![(0.0, base.max(0) as u64)];
         let mut cur = base;
         let mut peak = base;
-        if let Some(evs) = acts.get(&d) {
-            let mut i = 0;
-            while i < evs.len() {
-                let t0 = evs[i].0;
-                while i < evs.len() && evs[i].0 == t0 {
-                    cur += evs[i].1;
-                    i += 1;
-                }
-                peak = peak.max(cur);
-                points.push((t0, cur.max(0) as u64));
+        let mut i = 0;
+        while i < evs.len() {
+            let t0 = evs[i].0;
+            while i < evs.len() && evs[i].0 == t0 {
+                cur += evs[i].1;
+                i += 1;
             }
+            peak = peak.max(cur);
+            points.push((t0, cur.max(0) as u64));
         }
         let peak = peak.max(0) as u64;
         match stats.entry(d) {
@@ -397,7 +418,7 @@ pub fn execute(g: &Graph, plan: &Plan, cluster: &Cluster, tg: &TaskGraph) -> Des
             std::collections::hash_map::Entry::Vacant(e) => {
                 // A device with memory traffic but no tasks still reports
                 // (mirrors the list scheduler's accounting).
-                if acts.contains_key(&d) {
+                if acts.contains_key(&d) || grads.contains_key(&d) {
                     e.insert(DeviceStat { device: d, peak_mem: peak, ..Default::default() });
                 }
             }

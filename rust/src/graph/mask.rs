@@ -253,6 +253,20 @@ impl Mask {
     pub fn same_region(&self, o: &Mask) -> bool {
         self == o
     }
+
+    /// Hash of the *spatial* region only (value splits ignored): the dedup
+    /// key the memory-accounting paths share — value partials of one region
+    /// are a single allocation. One definition, used by the simulators'
+    /// activation/gradient event streams and materialization's static
+    /// memory, so the region keying cannot silently diverge between them.
+    pub fn region_hash(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        for iv in &self.dims {
+            (iv.lo.num, iv.lo.den, iv.hi.num, iv.hi.den).hash(&mut h);
+        }
+        h.finish()
+    }
 }
 
 /// Check that a set of masks exactly tiles the full tensor: spatial volumes

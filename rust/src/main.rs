@@ -58,12 +58,16 @@ fn usage() {
                                 [--scale 0..3] [--batch B] [--seq S] [--top N]\n\
                                 [--workers N] [--max-candidates N]\n\
                                 [--comm p2p|intra|inter] [--hetero] [--no-prune]\n\
+                                [--dp-min D]\n\
                                 [--fidelity list|des] [--des-top K] [--trace FILE]\n\
                                 [--baseline FILE] [--write-baseline] [--tol F]\n\
                                   enumerate the feasible PlanSpec grid (--hetero\n\
                                   adds heterogeneous per-stage pipelines),\n\
                                   dominance-prune against the analytic cost\n\
                                   lower bound (--no-prune simulates everything),\n\
+                                  --dp-min restricts the grid to specs with at\n\
+                                  least that data-parallel degree (replicated\n\
+                                  pipelines only),\n\
                                   evaluate survivors in parallel (transform ->\n\
                                   validate -> materialize -> simulate), print the\n\
                                   ranking (best iteration time first).\n\
@@ -230,6 +234,7 @@ fn search_cmd(args: &Args) {
         comm: comm_mode(args),
         max_candidates: args.usize("max-candidates", 256),
         hetero: args.has("hetero"),
+        dp_min: args.usize("dp-min", 1),
         prune: !args.has("no-prune"),
         fidelity: fidelity(args),
         des_top: args.usize("des-top", 8),

@@ -94,6 +94,12 @@ pub struct Plan {
     /// Static per-device memory (weights + gradients + optimizer state
     /// shards resident for the whole iteration), bytes.
     pub static_mem: HashMap<DeviceId, u64>,
+    /// The gradient-region share of [`Plan::static_mem`], bytes. The list
+    /// scheduler keeps gradients in the static baseline (high-watermark
+    /// semantics); the DES subtracts this share and replays gradient
+    /// liveness from the timeline instead ([`crate::sim::gradient_events`]),
+    /// so OOM verdicts depend on *when* gradient buffers are live.
+    pub static_grad_mem: HashMap<DeviceId, u64>,
     /// Total communication volume, bytes (for §6.5-style reporting).
     pub comm_bytes: u64,
     /// Count of dependency edges materialized through each tier.
@@ -255,7 +261,9 @@ pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: C
     // ---- per-device serial-order dependencies are the simulator's job ----
 
     // ---- static memory ----
-    plan.static_mem = static_memory(g, vs);
+    let (static_mem, static_grad_mem) = static_memory(g, vs);
+    plan.static_mem = static_mem;
+    plan.static_grad_mem = static_grad_mem;
     plan
 }
 
@@ -432,6 +440,42 @@ fn synthesize_component(
         if let (Some((prvd, pgroup)), Some((crvd, cgroup))) =
             (infer_rvd(&uniq_prods), infer_rvd(&uniq))
         {
+            // Cross-replica gradient sync: pure value-partials turning into
+            // pure replicas over one physical device set — the shape a
+            // dp > 1 plan produces for every gradient region. When the dp
+            // group spans servers, bypass the flat single-collective
+            // synthesis and emit the RVD decomposition (reduce-scatter
+            // within servers, all-reduce across, all-gather back) as
+            // separate collective tasks, so both execution engines see the
+            // per-hop link use ([`Cluster::group_links`]) instead of one
+            // opaque group-wide transfer.
+            if g.ptensor(pt).kind == TensorKind::Gradient
+                && prvd.r == 1
+                && prvd.v > 1
+                && prvd.d_prod() == 1
+                && crvd.v == 1
+                && crvd.d_prod() == 1
+            {
+                let dedup = |g: &[DeviceId]| {
+                    let mut d = g.to_vec();
+                    d.sort_unstable();
+                    d.dedup();
+                    d
+                };
+                let pdevs = dedup(&pgroup);
+                let cdevs = dedup(&cgroup);
+                let spans_servers = pdevs.len() > 1
+                    && !pdevs.contains(&crate::schedule::CPU_DEVICE)
+                    && pdevs.iter().any(|&d| !cluster.same_server(d, pdevs[0]));
+                if pdevs == cdevs && spans_servers {
+                    let sync = rvd::grad_sync_plan(cluster, &pdevs, total_bytes);
+                    if sync.is_hierarchical() {
+                        plan.n_rvd += 1;
+                        emit_sync_plan(g, cluster, plan, pt, producers, &cons_views, &sync);
+                        return;
+                    }
+                }
+            }
             let same_group = {
                 let mut a = pgroup.clone();
                 let mut b = cgroup.clone();
@@ -494,6 +538,62 @@ fn synthesize_component(
         }
         let ct = plan.task_of_op[&c.op];
         for t in fetched {
+            if !plan.tasks[ct].deps.contains(&t) {
+                plan.tasks[ct].deps.push(t);
+            }
+        }
+    }
+}
+
+/// Emit a [`rvd::SyncPlan`]'s steps as materialized collective tasks: every
+/// subgroup of a step becomes its own task (duration = that subgroup's
+/// *solo* collective time — contention is the execution engines' job: the
+/// list scheduler blocks the subgroup's devices, the DES fair-shares the
+/// links the subgroup crosses), steps chain producers → step₁ → … → stepₙ →
+/// consumers. Steps over-synchronize slightly (a step waits on the whole
+/// previous step, not just the subgroups it reads from); that is safe and
+/// keeps the dependency structure acyclic by construction.
+fn emit_sync_plan(
+    g: &Graph,
+    cluster: &Cluster,
+    plan: &mut Plan,
+    pt: PTensorId,
+    producers: &[View],
+    consumers: &[View],
+    sync: &rvd::SyncPlan,
+) {
+    let mut frontier: Vec<TaskId> = producers.iter().map(|p| plan.task_of_op[&p.op]).collect();
+    for step in &sync.steps {
+        let name = match step.kind {
+            CollKind::AllReduce => "all-reduce",
+            CollKind::ReduceScatter => "reduce-scatter",
+            CollKind::AllGather => "all-gather",
+            CollKind::AllToAll => "all-to-all",
+            CollKind::Broadcast => "broadcast",
+            CollKind::RdScatter => "rd-scatter",
+            CollKind::RdGather => "rd-gather",
+        };
+        let mut next = Vec::with_capacity(step.groups.len());
+        for grp in &step.groups {
+            let dur = cluster.collective_time(step.kind, grp, step.bytes);
+            let t = plan.push(
+                TaskKind::Collective {
+                    kind: step.kind,
+                    group: grp.clone(),
+                    bytes: step.bytes,
+                    ptensor: pt,
+                },
+                frontier.clone(),
+                dur,
+                format!("dp-sync {name}:{}", g.ptensor(pt).name),
+            );
+            next.push(t);
+        }
+        frontier = next;
+    }
+    for c in consumers {
+        let ct = plan.task_of_op[&c.op];
+        for &t in &frontier {
             if !plan.tasks[ct].deps.contains(&t) {
                 plan.tasks[ct].deps.push(t);
             }
@@ -619,9 +719,14 @@ fn infer_rvd(views: &[View]) -> Option<(Rvd, Vec<DeviceId>)> {
 }
 
 /// Static (iteration-long) per-device memory: distinct weight, gradient and
-/// optimizer-state regions touched by the ops on each device.
-fn static_memory(g: &Graph, vs: &ValidatedSchedule) -> HashMap<DeviceId, u64> {
-    let mut mem: HashMap<DeviceId, HashMap<(PTensorId, u64), u64>> = HashMap::new();
+/// optimizer-state regions touched by the ops on each device. Returns
+/// `(total, gradient share)` per device — the gradient share is what the
+/// DES subtracts from its baseline to replay gradient liveness in time.
+fn static_memory(
+    g: &Graph,
+    vs: &ValidatedSchedule,
+) -> (HashMap<DeviceId, u64>, HashMap<DeviceId, u64>) {
+    let mut mem: HashMap<DeviceId, HashMap<(PTensorId, u64), (u64, bool)>> = HashMap::new();
     for (&dev, ops) in &vs.device_order {
         let slot = mem.entry(dev).or_default();
         for &op in ops {
@@ -634,29 +739,21 @@ fn static_memory(g: &Graph, vs: &ValidatedSchedule) -> HashMap<DeviceId, u64> {
                 ) {
                     // Key by (ptensor, region hash): identical regions on the
                     // same device are one allocation.
-                    let key = (vt.ptensor, region_hash(&vt.mask));
+                    let key = (vt.ptensor, vt.mask.region_hash());
                     let bytes = vt.mask.num_elements(&p.shape) as u64
                         * p.dtype.size_bytes() as u64;
-                    slot.insert(key, bytes);
+                    slot.insert(key, (bytes, p.kind == TensorKind::Gradient));
                 }
             }
         }
     }
-    mem.into_iter()
-        .map(|(d, m)| (d, m.values().sum()))
-        .collect()
-}
-
-fn region_hash(m: &Mask) -> u64 {
-    use std::hash::{Hash, Hasher};
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    for iv in &m.dims {
-        iv.lo.num.hash(&mut h);
-        iv.lo.den.hash(&mut h);
-        iv.hi.num.hash(&mut h);
-        iv.hi.den.hash(&mut h);
+    let mut total = HashMap::new();
+    let mut grad = HashMap::new();
+    for (d, m) in mem {
+        total.insert(d, m.values().map(|&(b, _)| b).sum());
+        grad.insert(d, m.values().filter(|&&(_, is_g)| is_g).map(|&(b, _)| b).sum());
     }
-    h.finish()
+    (total, grad)
 }
 
 #[cfg(test)]
@@ -669,6 +766,11 @@ mod tests {
 
     /// One linear layer + loss + optimizer, data-parallel over `n` devices.
     fn dp_model(n: usize) -> (Graph, Schedule) {
+        dp_model_on(n, |i| i)
+    }
+
+    /// [`dp_model`] with replica `i` placed on device `dev(i)`.
+    fn dp_model_on(n: usize, dev: impl Fn(usize) -> usize) -> (Graph, Schedule) {
         let mut g = Graph::new();
         let x = g.add_ptensor("x", &[8, 4, 16], DType::F32, TensorKind::Input);
         let w = g.add_ptensor("w", &[16, 16], DType::F32, TensorKind::Weight);
@@ -703,9 +805,9 @@ mod tests {
         let ag = autograd::complete(&mut g);
         let mut s = Schedule::new();
         for (i, &f) in fwd.iter().enumerate() {
-            s.assign(f, i);
-            s.assign(ag.bwd_of[&f], i);
-            s.assign(opts[i], i);
+            s.assign(f, dev(i));
+            s.assign(ag.bwd_of[&f], dev(i));
+            s.assign(opts[i], dev(i));
         }
         (g, s)
     }
@@ -730,6 +832,48 @@ mod tests {
         assert!(plan.n_rvd >= 1);
         // Weight reads are aligned & co-located -> direct.
         assert!(plan.n_direct > 0);
+    }
+
+    #[test]
+    fn cross_server_dp_grad_sync_is_rvd_decomposed() {
+        // 4 replicas, two per server: the gradient sync must decompose into
+        // reduce-scatter within servers → all-reduce across → all-gather,
+        // each step a separate collective task with its own device group.
+        let (g, s) = dp_model_on(4, |i| 4 * i); // devices 0,4 | 8,12
+        let vs = validate(&g, &s).unwrap();
+        let cluster = Cluster::v100(16);
+        let plan = materialize(&g, &vs, &cluster, CommMode::InterRvd);
+        let sync: Vec<&Task> =
+            plan.tasks.iter().filter(|t| t.label.starts_with("dp-sync")).collect();
+        assert!(!sync.is_empty(), "cross-server gradient sync must take the decomposed path");
+        let kind_of = |t: &Task| match &t.kind {
+            TaskKind::Collective { kind, .. } => *kind,
+            other => panic!("dp-sync task is not a collective: {other:?}"),
+        };
+        assert!(sync.iter().any(|t| kind_of(t) == CollKind::ReduceScatter));
+        assert!(sync.iter().any(|t| kind_of(t) == CollKind::AllGather));
+        // The cross-server hop: an all-reduce whose group spans servers.
+        assert!(sync.iter().any(|t| {
+            let devs = t.devices();
+            kind_of(t) == CollKind::AllReduce
+                && devs.iter().any(|&d| cluster.server_of(d) != cluster.server_of(devs[0]))
+        }));
+        // Intra-server steps only ever group same-server devices.
+        for t in &sync {
+            if matches!(kind_of(t), CollKind::ReduceScatter | CollKind::AllGather) {
+                let devs = t.devices();
+                assert!(devs.iter().all(|&d| cluster.same_server(d, devs[0])), "{:?}", devs);
+            }
+        }
+        // A single-server dp group keeps the flat all-reduce form.
+        let (g2, s2) = dp_model(4);
+        let vs2 = validate(&g2, &s2).unwrap();
+        let plan2 = materialize(&g2, &vs2, &cluster, CommMode::InterRvd);
+        assert!(plan2.tasks.iter().all(|t| !t.label.starts_with("dp-sync")));
+        assert!(plan2.tasks.iter().any(|t| matches!(
+            t.kind,
+            TaskKind::Collective { kind: CollKind::AllReduce, .. }
+        )));
     }
 
     #[test]

@@ -9,14 +9,28 @@
 //!
 //! The plan is declaratively a [`PlanSpec`] of kind [`PlanKind::Hetero`]
 //! whose `stages` field carries one [`StageSpec`] per pipeline stage
-//! (tp width, co-shard count, recompute and optimizer-offload flags).
-//! [`HeteroPlanner::candidates`] performs the *inner* level of the
-//! two-level search: for every pipeline depth it enumerates stage-width
-//! compositions of the cluster, picks each stage's transformation by
-//! analytic cost-model ranking ([`crate::cost::ModelStats`] + α–β/compute
-//! estimates), and emits only the best-ranked combinations — the outer
-//! level (feasibility, dominance pruning, simulation) lives in
+//! (tp width, co-shard count, recompute and optimizer-offload flags), and
+//! a `dp` degree replicating the whole per-stage pipeline.
+//! [`HeteroPlanner::candidates`] performs the inner levels of the
+//! **three-level search** — dp × pp-composition × per-stage choice: the
+//! outer loop composes `dp` replicas of a pipeline over `n / dp` devices,
+//! the middle loop enumerates stage-width compositions per pipeline depth,
+//! and the inner choice picks each stage's transformation by analytic
+//! cost-model ranking ([`crate::cost::ModelStats`] + α–β/compute
+//! estimates, plus the modeled cross-replica gradient-sync time at
+//! dp > 1). Only the best-ranked combinations per dp are emitted — the
+//! final level (feasibility, dominance pruning, simulation) lives in
 //! [`crate::search`].
+//!
+//! At dp > 1 every gradient region must synchronize across the replicas.
+//! The planner does not insert explicit sync ops: the replicas' backward
+//! value-partials and the replicated optimizer reads form the
+//! `V(dp) → R(dp)` RVD shape, which materialization
+//! ([`crate::materialize`]) turns into collective tasks — RVD-decomposed
+//! (reduce-scatter within servers, all-reduce across, all-gather back,
+//! [`crate::rvd::grad_sync_plan`]) whenever the dp group spans servers, so
+//! the simulators watch sync traffic contend on real links instead of one
+//! flat group-wide collective.
 
 use super::*;
 use crate::cost::{Cluster, ModelStats};
@@ -335,11 +349,18 @@ pub fn hetero(mut model: Model, dp: usize, k: usize, stages: &[StageSpec]) -> Pl
 
 /// Widths a stage may occupy in the candidate grid.
 const STAGE_WIDTHS: [usize; 4] = [8, 4, 2, 1];
-/// Cost-ranked non-uniform combinations kept per search (each is emitted
-/// with two micro-batch counts).
+/// Cost-ranked non-uniform combinations kept *per dp value* (each is
+/// emitted with up to two micro-batch counts), so a replication degree can
+/// never crowd another out of the grid before simulation sees both.
 const HETERO_TOP: usize = 12;
-/// Cap on width compositions explored per pipeline depth.
+/// Cap on width compositions explored per (dp, pipeline depth).
 const MAX_COMPOSITIONS: usize = 128;
+/// Largest replication degree the dp outer loop enumerates — a deliberate
+/// grid truncation (like [`MAX_COMPOSITIONS`]), not a feasibility bound:
+/// on clusters past `8 × MAX_DP` GPUs, wider-dp pipelines exist but are
+/// not enumerated here (pure data parallelism at any width stays covered
+/// by the `dp`/`megatron` planners). Raise alongside cluster scale.
+const MAX_DP: usize = 8;
 
 fn compositions(n: usize, parts: usize, prefix: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
     if out.len() >= MAX_COMPOSITIONS {
@@ -424,11 +445,18 @@ fn stage_cost(
     (t, stat + act_mem)
 }
 
-/// The inner level of the two-level search: enumerate stage-width
-/// compositions per pipeline depth, pick each stage's transformation by
-/// cost-model ranking, keep only the best-ranked combinations. Uniform
-/// (homogeneous-equivalent) combinations are always included so the
-/// heterogeneous space is a strict superset of the megatron pipeline grid.
+/// The inner levels of the three-level search. The *outer* loop composes
+/// `dp` replicas of a pipeline over `n / dp` devices (divisors of the
+/// cluster bounded by the global batch); the *middle* loop enumerates
+/// stage-width compositions per pipeline depth; the *inner* choice picks
+/// each stage's transformation by cost-model ranking. Non-uniform
+/// combinations are ranked by pipeline-bottleneck time **plus the modeled
+/// cross-replica gradient-sync time** ([`crate::rvd::grad_sync_time`] —
+/// RVD-decomposed when the replica groups span servers), so a dp that buys
+/// compute scaling but pays a flat cross-server all-reduce ranks honestly
+/// against a dp whose sync decomposes. Uniform (homogeneous-equivalent)
+/// combinations are always included so the heterogeneous space is a strict
+/// superset of the megatron pipeline grid at every dp.
 pub fn hetero_candidates(model: &Model, cluster: &Cluster) -> Vec<PlanSpec> {
     let n = cluster.num_gpus();
     let layers = model.layers.len().max(1);
@@ -441,74 +469,99 @@ pub fn hetero_candidates(model: &Model, cluster: &Cluster) -> Vec<PlanSpec> {
     let cap = cluster.spec.mem_bytes;
     let micros = [1usize, 2, 4, 8, 16];
     let mut out: Vec<PlanSpec> = Vec::new();
-    let mut ranked: Vec<(f64, PlanSpec)> = Vec::new();
-    for pp in 2..=n.min(layers).min(8) {
-        let fwd = stats.fwd_flops / pp as f64;
-        let grad = stats.grad_fwd_flops / pp as f64;
-        let wsh = stats.weight_bytes / pp as u64;
-        let ash = stats.act_bytes / pp as u64;
-        if n % pp == 0 {
-            for &kk in &micros {
-                if kk <= batch {
-                    out.push(PlanSpec::hetero(vec![StageSpec::tp(n / pp); pp], kk));
+    for dp in (1..=n.min(batch).min(MAX_DP)).filter(|d| n % d == 0) {
+        let per = n / dp;
+        let min_pp = if dp == 1 { 2 } else { 1 };
+        let max_pp = per.min(layers).min(8);
+        let mut ranked: Vec<(f64, PlanSpec)> = Vec::new();
+        for pp in min_pp..=max_pp {
+            // Per-replica, per-stage shares: a replica sees 1/dp of the
+            // batch's FLOPs and activations; weights replicate across dp.
+            let fwd = stats.fwd_flops / (dp * pp) as f64;
+            let grad = stats.grad_fwd_flops / (dp * pp) as f64;
+            let wsh = stats.weight_bytes / pp as u64;
+            let ash = stats.act_bytes / (dp * pp) as u64;
+            if per % pp == 0 {
+                for &kk in &micros {
+                    if dp * kk <= batch {
+                        out.push(PlanSpec::hetero_dp(dp, vec![StageSpec::tp(per / pp); pp], kk));
+                    }
                 }
+            }
+            let mut comps = Vec::new();
+            compositions(per, pp, &mut Vec::new(), &mut comps);
+            for comp in comps {
+                let mut combo: Vec<StageSpec> = Vec::with_capacity(pp);
+                let mut bottleneck = 0.0f64;
+                let mut feasible = true;
+                for &w in &comp {
+                    let mut best: Option<(f64, StageSpec)> = None;
+                    for st in stage_choices(w, can_coshard) {
+                        let (t, mem) = stage_cost(cluster, &st, fwd, grad, wsh, ash);
+                        if mem > cap {
+                            continue;
+                        }
+                        if best.as_ref().map(|&(bt, _)| t < bt).unwrap_or(true) {
+                            best = Some((t, st));
+                        }
+                    }
+                    match best {
+                        Some((t, st)) => {
+                            bottleneck = bottleneck.max(t);
+                            combo.push(st);
+                        }
+                        None => {
+                            feasible = false;
+                            break;
+                        }
+                    }
+                }
+                if !feasible {
+                    continue;
+                }
+                // All-plain uniform combos are already in `out`.
+                let uniform = combo.iter().all(|st| *st == StageSpec::tp(combo[0].tp));
+                if uniform && per % pp == 0 && combo[0].tp.max(1) == per / pp {
+                    continue;
+                }
+                // Rank by bottleneck stage time + modeled gradient sync
+                // across replicas (zero at dp = 1). The representative dp
+                // group is the widest stage's first device in each replica —
+                // at its actual device offset, so whether the group spans
+                // servers (and the sync decomposes) reflects the real
+                // layout; its per-device gradient buffer is the stage share
+                // spread over the stage width.
+                let mut cost = bottleneck;
+                if dp > 1 {
+                    let wmax = combo.iter().map(|s| s.width()).max().unwrap_or(1);
+                    let widest_off: usize = combo
+                        .iter()
+                        .take_while(|s| s.width() != wmax)
+                        .map(|s| s.width())
+                        .sum();
+                    let group: Vec<usize> = (0..dp).map(|r| r * per + widest_off).collect();
+                    cost += crate::rvd::grad_sync_time(cluster, &group, wsh / wmax as u64);
+                }
+                ranked.push((cost, PlanSpec::hetero_dp(dp, combo, 4)));
             }
         }
-        let mut comps = Vec::new();
-        compositions(n, pp, &mut Vec::new(), &mut comps);
-        for comp in comps {
-            let mut combo: Vec<StageSpec> = Vec::with_capacity(pp);
-            let mut bottleneck = 0.0f64;
-            let mut feasible = true;
-            for &w in &comp {
-                let mut best: Option<(f64, StageSpec)> = None;
-                for st in stage_choices(w, can_coshard) {
-                    let (t, mem) = stage_cost(cluster, &st, fwd, grad, wsh, ash);
-                    if mem > cap {
-                        continue;
-                    }
-                    if best.as_ref().map(|&(bt, _)| t < bt).unwrap_or(true) {
-                        best = Some((t, st));
-                    }
-                }
-                match best {
-                    Some((t, st)) => {
-                        bottleneck = bottleneck.max(t);
-                        combo.push(st);
-                    }
-                    None => {
-                        feasible = false;
-                        break;
-                    }
-                }
+        ranked.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.1.label().cmp(&b.1.label()))
+        });
+        for (_, spec) in ranked.into_iter().take(HETERO_TOP) {
+            // Always emit each kept combination with a feasible micro count
+            // (dp × micro <= batch) — a small-batch model still explores
+            // heterogeneous points rather than silently skipping the space.
+            let mut s4 = spec.clone();
+            s4.micro = (batch / dp).min(4).max(1);
+            out.push(s4);
+            if batch / dp >= 8 {
+                let mut s8 = spec;
+                s8.micro = 8;
+                out.push(s8);
             }
-            if !feasible {
-                continue;
-            }
-            // All-plain uniform combos are already in `out`.
-            let uniform = combo.iter().all(|st| *st == StageSpec::tp(combo[0].tp));
-            if uniform && n % pp == 0 && combo[0].tp.max(1) == n / pp {
-                continue;
-            }
-            ranked.push((bottleneck, PlanSpec::hetero(combo, 4)));
-        }
-    }
-    ranked.sort_by(|a, b| {
-        a.0.partial_cmp(&b.0)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then_with(|| a.1.label().cmp(&b.1.label()))
-    });
-    for (_, spec) in ranked.into_iter().take(HETERO_TOP) {
-        // Always emit each kept combination with a feasible micro count
-        // (dp = 1, so micro <= batch) — a small-batch model still explores
-        // heterogeneous points rather than silently skipping the space.
-        let mut s4 = spec.clone();
-        s4.micro = batch.min(4);
-        out.push(s4);
-        if batch >= 8 {
-            let mut s8 = spec;
-            s8.micro = 8;
-            out.push(s8);
         }
     }
     out
@@ -610,6 +663,39 @@ mod tests {
         let bad = StageSpec { tp: 2, shards: 4, ..StageSpec::default() };
         let err = hetero(gpt3(0, 8, 256), 1, 4, &[bad, StageSpec::tp(2)]).unwrap_err();
         assert!(err.to_string().contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn candidates_include_dp_replicated_pipelines() {
+        let model = gpt3(0, 8, 256);
+        let cluster = crate::cost::Cluster::v100(8);
+        let cands = hetero_candidates(&model, &cluster);
+        // Every emitted spec tiles the cluster through dp × sum(widths)...
+        for s in &cands {
+            let widths: usize = s.stages.as_ref().unwrap().iter().map(|st| st.width()).sum();
+            assert_eq!(s.devices(), s.dp.max(1) * widths, "{}", s.label());
+            assert_eq!(s.devices(), 8, "{}", s.label());
+            assert!(s.dp.max(1) * s.micro.max(1) <= 8, "{}", s.label());
+        }
+        // ...and the dp outer loop actually reaches dp >= 2 replicas.
+        assert!(cands.iter().any(|s| s.dp >= 2), "no replicated pipeline emitted");
+        // dp = 1 heterogeneous compositions are still explored.
+        let varied = |st: &[StageSpec]| st.iter().any(|x| x.width() != st[0].width());
+        assert!(cands
+            .iter()
+            .any(|s| s.dp <= 1 && s.stages.as_deref().map_or(false, varied)));
+    }
+
+    #[test]
+    fn dp_replicated_hetero_builds_and_names_dp() {
+        let out = hetero(gpt3(0, 8, 256), 2, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+        assert!(out.name.contains("dp2"), "{}", out.name);
+        let vs = validate(&out.graph, &out.schedule).expect("dp hetero schedule valid");
+        assert!(!vs.topo.is_empty());
+        let c = crate::cost::Cluster::v100(8);
+        let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
+        assert_eq!(r.per_device.len(), 8, "2 replicas x 4 devices");
+        assert!(r.comm_bytes > 0, "cross-replica gradient sync must move bytes");
     }
 
     #[test]

@@ -19,7 +19,13 @@
 //!   one intra-stage transformation choice (tp width / co-shard count /
 //!   recompute / optimizer offload) per pipeline stage, which the `hetero`
 //!   planner materializes as a *heterogeneous* pipeline — the §5 / Fig. 18
-//!   plan family in which different stages parallelize differently.
+//!   plan family in which different stages parallelize differently. At
+//!   `dp > 1` the whole per-stage pipeline replicates and the replicas'
+//!   gradients synchronize through RVD-decomposed collectives
+//!   ([`crate::rvd::grad_sync_plan`]) — the search over this space is
+//!   three-level: dp × stage-width composition × per-stage choice.
+//!   Labels round-trip: [`PlanSpec::label`] is complete and
+//!   [`PlanSpec::parse`] inverts it with typed [`SpecParseError`]s.
 //! * [`Planner`] — the trait every sProgram implements: `name()`,
 //!   `applicable(&Model)`, `default_spec(...)`, `candidates(...)` (its
 //!   slice of the search grid) and `build(Model, &PlanSpec) -> PlanResult`.
@@ -50,7 +56,7 @@ pub use hetero::{hetero, hetero_candidates, HeteroPlanner};
 pub use interlaced::{interlaced_pipeline, InterlacedPlanner};
 pub use megatron::{megatron, GPipePlanner, MegatronPlanner, PipeOrder, TpPlanner};
 pub use pipe3f1b::{pipeline_3f1b, ThreeFOneBPlanner};
-pub use spec::{factorizations, PlanKind, PlanSpec, Planner, StageSpec};
+pub use spec::{factorizations, PlanKind, PlanSpec, Planner, SpecParseError, StageSpec};
 pub use zero::{zero3, Zero3OffloadPlanner, Zero3Planner};
 
 use crate::graph::{Graph, OpId, OpKind, PTensorId, TensorKind};
@@ -283,12 +289,7 @@ pub fn assign_optimizers(g: &mut Graph, sched: &mut Schedule) {
 }
 
 fn spatial_key(m: &crate::graph::mask::Mask) -> u64 {
-    use std::hash::{Hash, Hasher};
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    for iv in &m.dims {
-        (iv.lo.num, iv.lo.den, iv.hi.num, iv.hi.den).hash(&mut h);
-    }
-    h.finish()
+    m.region_hash()
 }
 
 /// Partition `layers` into `s` contiguous stages balanced by FLOPs.

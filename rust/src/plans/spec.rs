@@ -137,7 +137,74 @@ impl StageSpec {
         }
         s
     }
+
+    /// Parse one stage label back into a [`StageSpec`] — the exact inverse
+    /// of [`StageSpec::label`] for every valid stage (`tp > 1` implies
+    /// `shards == 1`, so the `x{n}` form losing the width is lossless).
+    pub fn parse(tok: &str) -> Result<StageSpec, SpecParseError> {
+        let bad = || SpecParseError::BadStage(tok.to_string());
+        let mut st = StageSpec::default();
+        let mut rest = tok;
+        // Flag suffixes (`r` recompute, `o` offload) — digits can't collide.
+        loop {
+            if let Some(r) = rest.strip_suffix('o') {
+                if st.offload {
+                    return Err(bad());
+                }
+                st.offload = true;
+                rest = r;
+            } else if let Some(r) = rest.strip_suffix('r') {
+                if st.recompute {
+                    return Err(bad());
+                }
+                st.recompute = true;
+                rest = r;
+            } else {
+                break;
+            }
+        }
+        let num = |s: &str| match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(bad()),
+        };
+        if let Some(n) = rest.strip_prefix("tp") {
+            st.tp = num(n)?;
+        } else if let Some(n) = rest.strip_prefix('x') {
+            st.shards = num(n)?;
+        } else {
+            return Err(bad());
+        }
+        Ok(st)
+    }
 }
+
+/// Typed error of [`PlanSpec::parse`] / [`StageSpec::parse`]. Malformed
+/// input is always a value of this enum, never a panic — the parser is fed
+/// CLI arguments and round-trip fuzz input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpecParseError {
+    /// The input was empty (no plan-kind token).
+    Empty,
+    /// The first token is not a registered plan-kind name.
+    UnknownKind(String),
+    /// A degree/flag token is not part of the label grammar.
+    BadToken(String),
+    /// A stage token inside `[...]` is malformed.
+    BadStage(String),
+}
+
+impl std::fmt::Display for SpecParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecParseError::Empty => write!(f, "empty plan spec"),
+            SpecParseError::UnknownKind(k) => write!(f, "unknown plan kind '{k}'"),
+            SpecParseError::BadToken(t) => write!(f, "bad spec token '{t}'"),
+            SpecParseError::BadStage(t) => write!(f, "bad stage spec '{t}'"),
+        }
+    }
+}
+
+impl std::error::Error for SpecParseError {}
 
 /// Declarative description of one parallelization plan instance. Degrees
 /// default to 1 and flags to off; each planner reads the fields it uses.
@@ -198,8 +265,17 @@ impl PlanSpec {
     /// A heterogeneous-pipeline spec from per-stage choices. `pp` is pinned
     /// to `stages.len()` so arity can never drift from the stage list.
     pub fn hetero(stages: Vec<StageSpec>, micro: usize) -> PlanSpec {
+        PlanSpec::hetero_dp(1, stages, micro)
+    }
+
+    /// [`PlanSpec::hetero`] replicated `dp` ways: `dp` identical copies of
+    /// the per-stage pipeline, gradients synchronized across replicas every
+    /// iteration (RVD-decomposed when the dp groups span servers). The
+    /// spec occupies `dp * sum(stage widths)` devices.
+    pub fn hetero_dp(dp: usize, stages: Vec<StageSpec>, micro: usize) -> PlanSpec {
         PlanSpec {
             kind: PlanKind::Hetero,
+            dp: dp.max(1),
             pp: stages.len().max(1),
             micro: micro.max(1),
             stages: Some(stages),
@@ -263,6 +339,9 @@ impl PlanSpec {
     }
 
     /// Compact human label: kind + the non-unit degrees and set flags.
+    /// Complete — every non-default field appears — so
+    /// [`PlanSpec::parse`] round-trips it exactly (covered by the spec
+    /// property tests).
     pub fn label(&self) -> String {
         let mut s = self.kind.as_str().to_string();
         if self.dp > 1 {
@@ -286,14 +365,87 @@ impl PlanSpec {
         if self.zero_shard {
             s.push_str(" zero");
         }
+        if self.recompute {
+            s.push_str(" rc");
+        }
         if self.block_recompute {
             s.push_str(" block");
+        }
+        if let Some(n) = self.coshard_layers {
+            s.push_str(&format!(" L{n}"));
         }
         if let Some(stages) = &self.stages {
             let inner: Vec<String> = stages.iter().map(|st| st.label()).collect();
             s.push_str(&format!(" [{}]", inner.join("|")));
         }
         s
+    }
+
+    /// Parse a [`PlanSpec::label`]-formatted string back into a spec — the
+    /// format → parse round-trip that lets labels in reports, baselines and
+    /// CLI flags name exact grid points. Grammar (whitespace-separated):
+    ///
+    /// ```text
+    /// <kind> [dpN] [ppN] [tpN] [kN] [xN] [offload] [zero] [rc] [block]
+    ///        [LN] [[stage|stage|...]]
+    /// ```
+    ///
+    /// Absent tokens keep their defaults (degree 1 / flag off). A stage
+    /// list implies `pp = stages.len()` unless an explicit `ppN` token
+    /// disagrees — that inconsistency is preserved so
+    /// [`crate::search::feasibility`] can reject it with the typed
+    /// `StageArity` error rather than the parser silently repairing it.
+    /// Malformed input returns a typed [`SpecParseError`]; this function
+    /// never panics.
+    pub fn parse(s: &str) -> Result<PlanSpec, SpecParseError> {
+        let mut toks = s.split_whitespace();
+        let kind_tok = toks.next().ok_or(SpecParseError::Empty)?;
+        let kind = PlanKind::parse(kind_tok)
+            .ok_or_else(|| SpecParseError::UnknownKind(kind_tok.to_string()))?;
+        let mut spec = PlanSpec::new(kind);
+        let mut explicit_pp = false;
+        for tok in toks {
+            if let Some(inner) = tok.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+                let stages: Result<Vec<StageSpec>, SpecParseError> =
+                    inner.split('|').map(StageSpec::parse).collect();
+                spec.stages = Some(stages?);
+                continue;
+            }
+            let num = |rest: &str| match rest.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(n),
+                _ => Err(SpecParseError::BadToken(tok.to_string())),
+            };
+            match tok {
+                "offload" => spec.offload = true,
+                "zero" => spec.zero_shard = true,
+                "rc" => spec.recompute = true,
+                "block" => spec.block_recompute = true,
+                _ => {
+                    if let Some(r) = tok.strip_prefix("dp") {
+                        spec.dp = num(r)?;
+                    } else if let Some(r) = tok.strip_prefix("pp") {
+                        spec.pp = num(r)?;
+                        explicit_pp = true;
+                    } else if let Some(r) = tok.strip_prefix("tp") {
+                        spec.tp = num(r)?;
+                    } else if let Some(r) = tok.strip_prefix('k') {
+                        spec.micro = num(r)?;
+                    } else if let Some(r) = tok.strip_prefix('x') {
+                        spec.shards = num(r)?;
+                    } else if let Some(r) = tok.strip_prefix('L') {
+                        spec.coshard_layers = Some(num(r)?);
+                    } else {
+                        return Err(SpecParseError::BadToken(tok.to_string()));
+                    }
+                }
+            }
+        }
+        if let Some(stages) = &spec.stages {
+            if !explicit_pp {
+                spec.pp = stages.len().max(1);
+            }
+        }
+        Ok(spec)
     }
 }
 
@@ -415,6 +567,161 @@ mod tests {
         let off = StageSpec { offload: true, ..StageSpec::tp(1) };
         let s = PlanSpec::hetero(vec![StageSpec::tp(4), off], 4);
         assert_eq!(s.static_bytes_lower_bound(w), w / 2);
+    }
+
+    #[test]
+    fn hetero_dp_multiplies_device_count() {
+        let s = PlanSpec::hetero_dp(2, vec![StageSpec::tp(2), StageSpec::tp(2)], 4);
+        assert_eq!(s.devices(), 8);
+        assert_eq!(s.dp, 2);
+        let lbl = s.label();
+        assert!(lbl.contains("dp2") && lbl.contains("[tp2|tp2]"), "{lbl}");
+    }
+
+    #[test]
+    fn spec_label_parse_roundtrip_examples() {
+        let cases = [
+            PlanSpec::new(PlanKind::Dp),
+            PlanSpec { dp: 4, ..PlanSpec::new(PlanKind::Dp) },
+            PlanSpec { dp: 2, pp: 2, tp: 2, micro: 8, ..PlanSpec::new(PlanKind::Megatron) },
+            PlanSpec { dp: 8, offload: true, ..PlanSpec::new(PlanKind::Zero3Offload) },
+            PlanSpec {
+                shards: 4,
+                zero_shard: true,
+                coshard_layers: Some(3),
+                ..PlanSpec::new(PlanKind::Coshard)
+            },
+            PlanSpec {
+                pp: 4,
+                recompute: true,
+                block_recompute: true,
+                micro: 4,
+                ..PlanSpec::new(PlanKind::Interlaced)
+            },
+            PlanSpec::hetero(vec![StageSpec::tp(4), StageSpec::coshard(8)], 4),
+            PlanSpec::hetero_dp(
+                2,
+                vec![
+                    StageSpec { recompute: true, ..StageSpec::tp(2) },
+                    StageSpec { offload: true, ..StageSpec::tp(1) },
+                    StageSpec { recompute: true, ..StageSpec::coshard(4) },
+                ],
+                2,
+            ),
+        ];
+        for spec in cases {
+            let lbl = spec.label();
+            let back = PlanSpec::parse(&lbl).unwrap_or_else(|e| panic!("parse '{lbl}': {e}"));
+            assert_eq!(back, spec, "round-trip through '{lbl}'");
+        }
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed_with_typed_errors() {
+        assert_eq!(PlanSpec::parse(""), Err(SpecParseError::Empty));
+        assert_eq!(PlanSpec::parse("   "), Err(SpecParseError::Empty));
+        assert_eq!(
+            PlanSpec::parse("warp dp2"),
+            Err(SpecParseError::UnknownKind("warp".into()))
+        );
+        assert_eq!(
+            PlanSpec::parse("megatron qq7"),
+            Err(SpecParseError::BadToken("qq7".into()))
+        );
+        assert_eq!(
+            PlanSpec::parse("megatron dp"),
+            Err(SpecParseError::BadToken("dp".into()))
+        );
+        assert_eq!(
+            PlanSpec::parse("megatron dp0"),
+            Err(SpecParseError::BadToken("dp0".into()))
+        );
+        assert_eq!(
+            PlanSpec::parse("hetero [tp2|zz]"),
+            Err(SpecParseError::BadStage("zz".into()))
+        );
+        // An explicit pp disagreeing with the stage arity parses — the
+        // typed StageArity rejection is feasibility's job, not the parser's.
+        let s = PlanSpec::parse("hetero pp3 [tp2|tp2]").unwrap();
+        assert_eq!(s.pp, 3);
+        assert_eq!(s.stages.as_ref().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn prop_spec_label_parse_roundtrip() {
+        crate::util::prop::check("spec-roundtrip", 300, |g| {
+            let kinds = [
+                PlanKind::Dp,
+                PlanKind::Tp,
+                PlanKind::Megatron,
+                PlanKind::GPipe,
+                PlanKind::Zero3,
+                PlanKind::Zero3Offload,
+                PlanKind::Coshard,
+                PlanKind::Interlaced,
+                PlanKind::ThreeFOneB,
+                PlanKind::Dap,
+                PlanKind::Hetero,
+            ];
+            let kind = *g.rng.choose(&kinds);
+            let mut spec = PlanSpec::new(kind);
+            spec.dp = g.pow2(8);
+            spec.micro = g.pow2(16);
+            spec.offload = g.bool();
+            spec.zero_shard = g.bool();
+            spec.recompute = g.bool();
+            spec.block_recompute = g.bool();
+            if g.bool() {
+                spec.coshard_layers = Some(g.int(1, 9));
+            }
+            if kind == PlanKind::Hetero {
+                let n = g.int(1, 5);
+                let stages: Vec<StageSpec> = (0..n)
+                    .map(|_| {
+                        let mut st = if g.bool() {
+                            StageSpec::tp(g.pow2(8))
+                        } else {
+                            StageSpec::coshard(*g.rng.choose(&[2usize, 4, 8]))
+                        };
+                        st.recompute = g.bool();
+                        st.offload = g.bool();
+                        st
+                    })
+                    .collect();
+                spec.pp = stages.len();
+                spec.stages = Some(stages);
+            } else {
+                spec.pp = g.pow2(8);
+                spec.tp = g.pow2(8);
+                spec.shards = g.pow2(8);
+            }
+            let lbl = spec.label();
+            match PlanSpec::parse(&lbl) {
+                Ok(back) if back == spec => Ok(()),
+                Ok(back) => Err(format!("'{lbl}' parsed to {back:?}, wanted {spec:?}")),
+                Err(e) => Err(format!("'{lbl}' failed to parse: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_spec_parse_never_panics_on_garbage() {
+        crate::util::prop::check("spec-parse-fuzz", 500, |g| {
+            const ALPHABET: &[u8] = b"dpthexko 0123456789[]|rLzc-";
+            let len = g.int(0, 24);
+            let s: String = (0..len)
+                .map(|_| ALPHABET[g.int(0, ALPHABET.len())] as char)
+                .collect();
+            // Any outcome is fine — the property is "returns, never panics",
+            // and Ok results must round-trip their own label.
+            if let Ok(spec) = PlanSpec::parse(&s) {
+                let lbl = spec.label();
+                if PlanSpec::parse(&lbl) != Ok(spec) {
+                    return Err(format!("accepted '{s}' but label '{lbl}' diverges"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

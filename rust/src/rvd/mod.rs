@@ -459,6 +459,143 @@ pub fn search_inter(
     dijkstra(cluster, src_group, Some(dst_group), total_bytes, from, to)
 }
 
+/// One step of a hierarchical cross-replica gradient synchronization: every
+/// subgroup in `groups` runs the same collective concurrently; `bytes` is
+/// the per-rank payload of each subgroup's collective. `time` is the
+/// modeled duration of the step — the slowest subgroup's solo collective
+/// time scaled by how many concurrent subgroups share its bottleneck link
+/// (the NIC, for the cross-server step), so the planner-facing estimate
+/// does not pretend the fan-out is free. The execution engines re-derive
+/// contention themselves ([`Cluster::group_links`]); task durations stay
+/// solo times there.
+#[derive(Clone, Debug)]
+pub struct SyncStep {
+    pub kind: CollKind,
+    pub groups: Vec<Vec<DeviceId>>,
+    /// Per-rank payload of each subgroup collective, bytes.
+    pub bytes: u64,
+    /// Modeled step duration, seconds (contention-adjusted, see above).
+    pub time: f64,
+}
+
+/// A gradient-sync decomposition over one data-parallel group — the
+/// `V(n) → R(n)` RVD transition (§4) specialized to the gradient buffers a
+/// dp plan must synchronize every iteration, exposed for planner use.
+///
+/// When the group has ≥ 2 members on each of ≥ 2 servers, the flat ring
+/// all-reduce (whose bottleneck is the per-server NIC shared by all local
+/// members) decomposes into **reduce-scatter within each server → ring
+/// all-reduce across servers (one member per server and shard slot) →
+/// all-gather within each server**: the cross-server traffic shrinks from
+/// the whole buffer per local member to one shard per slot, exactly the
+/// Fig. 18-style win the RVD abstraction exists to express. Irregular
+/// layouts (one member per server, uneven membership, host participants)
+/// keep the flat single-collective form.
+#[derive(Clone, Debug)]
+pub struct SyncPlan {
+    /// Sequential steps; each step's subgroups run concurrently.
+    pub steps: Vec<SyncStep>,
+    /// Modeled total time, seconds (sum of step times).
+    pub time: f64,
+}
+
+impl SyncPlan {
+    /// Whether the sync decomposed beyond a single flat collective.
+    pub fn is_hierarchical(&self) -> bool {
+        self.steps.len() > 1
+    }
+}
+
+/// Build the gradient-sync decomposition for `group`, where every member
+/// holds a `bytes`-sized additive partial of the same gradient region.
+/// Deterministic: picks the hierarchical form iff its modeled time beats
+/// the flat all-reduce.
+pub fn grad_sync_plan(cluster: &Cluster, group: &[DeviceId], bytes: u64) -> SyncPlan {
+    let n = group.len();
+    if n <= 1 {
+        return SyncPlan { steps: Vec::new(), time: 0.0 };
+    }
+    let flat = |cluster: &Cluster| -> SyncPlan {
+        let t = cluster.collective_time(CollKind::AllReduce, group, bytes);
+        SyncPlan {
+            steps: vec![SyncStep {
+                kind: CollKind::AllReduce,
+                groups: vec![group.to_vec()],
+                bytes,
+                time: t,
+            }],
+            time: t,
+        }
+    };
+    // Bucket members per server, preserving group order. The host has no
+    // NVLink peers to reduce-scatter with — keep it flat.
+    let mut servers: Vec<(usize, Vec<DeviceId>)> = Vec::new();
+    for &d in group {
+        if d == crate::schedule::CPU_DEVICE {
+            return flat(cluster);
+        }
+        let s = cluster.server_of(d);
+        match servers.iter_mut().find(|(sv, _)| *sv == s) {
+            Some((_, v)) => v.push(d),
+            None => servers.push((s, vec![d])),
+        }
+    }
+    let m = servers[0].1.len();
+    if servers.len() < 2 || m < 2 || servers.iter().any(|(_, v)| v.len() != m) {
+        return flat(cluster);
+    }
+    let shard = (bytes / m as u64).max(1);
+    // Step 1: reduce-scatter the partials within each server (NVLink).
+    let rs_groups: Vec<Vec<DeviceId>> = servers.iter().map(|(_, v)| v.clone()).collect();
+    let rs_solo = rs_groups
+        .iter()
+        .map(|g| cluster.collective_time(CollKind::ReduceScatter, g, shard))
+        .fold(0.0, f64::max);
+    // Step 2: all-reduce each shard slot across servers — `m` concurrent
+    // groups, one member per server, all funneling through the same NICs,
+    // so the modeled step time is the solo time × m.
+    let ar_groups: Vec<Vec<DeviceId>> =
+        (0..m).map(|i| servers.iter().map(|(_, v)| v[i]).collect()).collect();
+    let ar_solo = ar_groups
+        .iter()
+        .map(|g| cluster.collective_time(CollKind::AllReduce, g, shard))
+        .fold(0.0, f64::max);
+    // Step 3: all-gather the reduced shards back within each server.
+    let ag_solo = rs_groups
+        .iter()
+        .map(|g| cluster.collective_time(CollKind::AllGather, g, shard))
+        .fold(0.0, f64::max);
+    let hier_time = rs_solo + ar_solo * m as f64 + ag_solo;
+    let flat_plan = flat(cluster);
+    if hier_time >= flat_plan.time {
+        return flat_plan;
+    }
+    SyncPlan {
+        steps: vec![
+            SyncStep {
+                kind: CollKind::ReduceScatter,
+                groups: rs_groups.clone(),
+                bytes: shard,
+                time: rs_solo,
+            },
+            SyncStep {
+                kind: CollKind::AllReduce,
+                groups: ar_groups,
+                bytes: shard,
+                time: ar_solo * m as f64,
+            },
+            SyncStep { kind: CollKind::AllGather, groups: rs_groups, bytes: shard, time: ag_solo },
+        ],
+        time: hier_time,
+    }
+}
+
+/// Modeled time of [`grad_sync_plan`] — the gradient-sync term of the
+/// hetero planner's candidate ranking.
+pub fn grad_sync_time(cluster: &Cluster, group: &[DeviceId], bytes: u64) -> f64 {
+    grad_sync_plan(cluster, group, bytes).time
+}
+
 /// The paper's P2P send/recv baseline (§6.5): every consumer independently
 /// fetches the full value it needs from producers — no collectives, no
 /// shard reuse. For replicated consumers this ships the whole tensor to
@@ -645,6 +782,44 @@ mod tests {
             .steps
             .iter()
             .any(|(t, _, _)| matches!(t, Transition::RdGather { .. })));
+    }
+
+    #[test]
+    fn grad_sync_flat_within_one_server() {
+        let c = Cluster::v100(8);
+        let p = grad_sync_plan(&c, &[0, 2, 4, 6], 1 << 26);
+        assert!(!p.is_hierarchical(), "single-server sync must stay one all-reduce");
+        assert_eq!(p.steps.len(), 1);
+        assert_eq!(p.steps[0].kind, CollKind::AllReduce);
+        assert_eq!(p.time, c.collective_time(CollKind::AllReduce, &[0, 2, 4, 6], 1 << 26));
+    }
+
+    #[test]
+    fn grad_sync_decomposes_across_servers() {
+        // 2 members per server over 2 servers: reduce-scatter within,
+        // all-reduce across, all-gather back — and the modeled time beats
+        // the flat NIC-shared all-reduce.
+        let c = Cluster::v100(16);
+        let group = [0usize, 4, 8, 12];
+        let bytes = 1u64 << 26;
+        let p = grad_sync_plan(&c, &group, bytes);
+        assert!(p.is_hierarchical(), "cross-server sync must decompose");
+        let kinds: Vec<CollKind> = p.steps.iter().map(|s| s.kind).collect();
+        assert_eq!(kinds, vec![CollKind::ReduceScatter, CollKind::AllReduce, CollKind::AllGather]);
+        // Step structure: intra-server groups then one group per shard slot.
+        assert_eq!(p.steps[0].groups, vec![vec![0, 4], vec![8, 12]]);
+        assert_eq!(p.steps[1].groups, vec![vec![0, 8], vec![4, 12]]);
+        let flat = c.collective_time(CollKind::AllReduce, &group, bytes);
+        assert!(p.time < flat, "hierarchical {} must beat flat {flat}", p.time);
+        let sum: f64 = p.steps.iter().map(|s| s.time).sum();
+        assert!((sum - p.time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_sync_one_member_per_server_stays_flat() {
+        let c = Cluster::v100(16);
+        let p = grad_sync_plan(&c, &[0, 8], 1 << 26);
+        assert!(!p.is_hierarchical(), "no local peers to reduce-scatter with");
     }
 
     #[test]

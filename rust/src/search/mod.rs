@@ -8,16 +8,21 @@
 //! survivor in parallel on [`crate::util::pool`] worker threads and rank the
 //! results by iteration time.
 //!
-//! # Two-level search over heterogeneous pipelines
+//! # Three-level search over replicated heterogeneous pipelines
 //!
-//! The grid is two-level. The *outer* level (here) enumerates every
-//! registered planner's candidates — including the `hetero` planner, whose
+//! The engine (here) enumerates every registered planner's candidates —
+//! including the `hetero` planner, whose
 //! [`StageSpec`](crate::plans::StageSpec) lists give pipelines per-stage
-//! intra-stage transformations. The *inner* level lives in the hetero
-//! planner's `candidates()`: per pipeline depth it composes stage widths
-//! over the cluster and picks each stage's transformation by analytic
-//! cost-model ranking, so only the best-ranked combinations of an
-//! otherwise-combinatorial space reach the outer level.
+//! intra-stage transformations. The hetero grid itself is **three-level**
+//! (all inside the planner's `candidates()`): an outer *dp* loop composes
+//! replicated copies of a pipeline over `n / dp` devices (gradients
+//! RVD-synchronized across the replicas every iteration), a middle loop
+//! enumerates stage-width compositions per pipeline depth, and an inner
+//! choice picks each stage's transformation by analytic cost-model
+//! ranking — so only the best-ranked combinations of an
+//! otherwise-combinatorial space reach the engine. [`SearchConfig::dp_min`]
+//! restricts the whole grid to replicated plans (the CI dp-smoke runs with
+//! `--dp-min 2`).
 //!
 //! # Dominance pruning
 //!
@@ -95,6 +100,11 @@ pub struct SearchConfig {
     pub max_candidates: usize,
     /// Include the heterogeneous per-stage pipeline space (`hetero`).
     pub hetero: bool,
+    /// Only consider specs with at least this data-parallel degree
+    /// (1 = unrestricted). Filtered specs count toward
+    /// [`SearchReport::excluded`] — dropped by configuration, not
+    /// infeasibility, and never silently.
+    pub dp_min: usize,
     /// Dominance-prune candidates whose analytic lower bound exceeds the
     /// best simulated seed candidate (sound: can never drop the optimum).
     pub prune: bool,
@@ -112,6 +122,7 @@ impl Default for SearchConfig {
             comm: CommMode::InterRvd,
             max_candidates: 256,
             hetero: true,
+            dp_min: 1,
             prune: true,
             fidelity: Fidelity::List,
             des_top: 8,
@@ -226,8 +237,24 @@ pub fn enumerate_filtered(
     cluster: &Cluster,
     hetero: bool,
 ) -> (Vec<(&'static dyn Planner, PlanSpec)>, usize) {
+    let (out, pruned, _) = enumerate_constrained(model, cluster, hetero, 1);
+    (out, pruned)
+}
+
+/// [`enumerate_filtered`] additionally restricted to specs with
+/// `spec.dp >= dp_min` (the `search --dp-min` gate — e.g. the CI dp-smoke
+/// run explores only replicated plans). Returns
+/// `(candidates, infeasible, excluded)` — config exclusions are counted
+/// separately from infeasibility so the coverage accounting stays honest.
+pub fn enumerate_constrained(
+    model: &Model,
+    cluster: &Cluster,
+    hetero: bool,
+    dp_min: usize,
+) -> (Vec<(&'static dyn Planner, PlanSpec)>, usize, usize) {
     let mut out = Vec::new();
     let mut pruned = 0;
+    let mut excluded = 0;
     for &p in registry::all() {
         if !p.applicable(model) {
             continue;
@@ -236,13 +263,17 @@ pub fn enumerate_filtered(
             continue;
         }
         for spec in p.candidates(model, cluster) {
+            if spec.dp.max(1) < dp_min {
+                excluded += 1;
+                continue;
+            }
             match feasibility(&spec, model, cluster) {
                 Ok(()) => out.push((p, spec)),
                 Err(_) => pruned += 1,
             }
         }
     }
-    (out, pruned)
+    (out, pruned, excluded)
 }
 
 /// Simulation metrics of one evaluated candidate.
@@ -320,6 +351,10 @@ pub struct SearchReport {
     pub ranked: Vec<Candidate>,
     /// Candidates rejected by the feasibility checks before evaluation.
     pub pruned: usize,
+    /// Feasible-or-not candidates dropped by configuration
+    /// ([`SearchConfig::dp_min`]) before the feasibility checks — reported
+    /// apart from `pruned` so "infeasible" keeps meaning infeasible.
+    pub excluded: usize,
     /// Feasible candidates dropped by the [`SearchConfig::max_candidates`]
     /// cap (the worst-bounded ones).
     pub capped: usize,
@@ -368,7 +403,7 @@ impl SearchReport {
 
     /// Total specs the grid produced, however they were dispatched.
     pub fn total_candidates(&self) -> usize {
-        self.evaluated + self.pruned + self.capped + self.pruned_bound
+        self.evaluated + self.pruned + self.excluded + self.capped + self.pruned_bound
     }
 
     /// Render the top `top` rows (0 = all) as a console/CSV table. The
@@ -378,11 +413,12 @@ impl SearchReport {
         let mut t = Table::new(
             &format!(
                 "plan search: {} on {} GPUs — {} specs simulated, {} infeasible, \
-                 {} capped, {} cost-dominated, {} des-rescored, {}",
+                 {} dp-excluded, {} capped, {} cost-dominated, {} des-rescored, {}",
                 self.model,
                 self.gpus,
                 self.evaluated,
                 self.pruned,
+                self.excluded,
                 self.capped,
                 self.pruned_bound,
                 self.des_rescored,
@@ -508,7 +544,8 @@ where
     let probe = build_model();
     let model_name = probe.name.clone();
     let stats = ModelStats::of(&probe.graph);
-    let (cands, pruned) = enumerate_filtered(&probe, cluster, cfg.hetero);
+    let (cands, pruned, excluded) =
+        enumerate_constrained(&probe, cluster, cfg.hetero, cfg.dp_min.max(1));
     drop(probe);
     // Sort by analytic lower bound (stable tie-break on the enumeration
     // order via sort_by's stability) so both the candidate cap and the
@@ -613,6 +650,7 @@ where
         gpus: cluster.num_gpus(),
         ranked,
         pruned,
+        excluded,
         capped,
         pruned_bound,
         evaluated,

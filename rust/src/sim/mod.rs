@@ -196,21 +196,13 @@ pub fn activation_events(
 ) -> HashMap<DeviceId, Vec<(f64, i64)>> {
     let mut events: HashMap<DeviceId, Vec<(f64, i64)>> = HashMap::new();
     let mut last_read: HashMap<(usize, u64), f64> = HashMap::new(); // (ptensor, region) -> time
-    let region_of = |m: &crate::graph::mask::Mask| -> u64 {
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        for iv in &m.dims {
-            (iv.lo.num, iv.lo.den, iv.hi.num, iv.hi.den).hash(&mut h);
-        }
-        h.finish()
-    };
     for t in &plan.tasks {
         if let TaskKind::Compute { op, .. } = t.kind {
             for &iv in &g.op(op).inputs {
                 let vt = g.vtensor(iv);
                 let kind = g.ptensor(vt.ptensor).kind;
                 if matches!(kind, TensorKind::Activation | TensorKind::Input) {
-                    let key = (vt.ptensor, region_of(&vt.mask));
+                    let key = (vt.ptensor, vt.mask.region_hash());
                     let e = last_read.entry(key).or_insert(0.0);
                     *e = e.max(finish[t.id]);
                 }
@@ -226,13 +218,90 @@ pub fn activation_events(
                     continue;
                 }
                 let bytes = (vt.mask.num_elements(&p.shape) * p.dtype.size_bytes()) as i64;
-                let key = (vt.ptensor, region_of(&vt.mask));
+                let key = (vt.ptensor, vt.mask.region_hash());
                 let freed = last_read.get(&key).copied().unwrap_or(finish[t.id]);
                 let evs = events.entry(device).or_default();
                 evs.push((start[t.id], bytes));
                 evs.push((freed.max(finish[t.id]), -bytes));
             }
         }
+    }
+    for evs in events.values_mut() {
+        evs.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap()
+                // Frees before allocs at equal time.
+                .then(a.1.cmp(&b.1))
+        });
+    }
+    events
+}
+
+/// Per-device *gradient-buffer* liveness events, mirroring
+/// [`activation_events`]: a gradient region on a device is resident from
+/// the start of the first task touching it (its producing backward op)
+/// until the finish of the last local toucher — the optimizer region op,
+/// kept alive through any collective or P2P transfer that ships the
+/// region's pTensor. The list scheduler does not consume these (it keeps
+/// gradients in the static baseline, the conservative high-watermark
+/// semantics); the discrete-event engine subtracts the gradient share from
+/// its static baseline and replays these events instead, so an OOM verdict
+/// depends on *when* gradient buffers are live and whether they collide
+/// with the activation peak — dp replicas shift exactly that.
+pub fn gradient_events(
+    g: &Graph,
+    plan: &Plan,
+    start: &[f64],
+    finish: &[f64],
+) -> HashMap<DeviceId, Vec<(f64, i64)>> {
+    // (device, ptensor, region) -> (alloc time, free time, bytes).
+    let mut regions: HashMap<(DeviceId, usize, u64), (f64, f64, i64)> = HashMap::new();
+    for t in &plan.tasks {
+        if let TaskKind::Compute { op, device } = t.kind {
+            for &vref in g.op(op).inputs.iter().chain(g.op(op).outputs.iter()) {
+                let vt = g.vtensor(vref);
+                let p = g.ptensor(vt.ptensor);
+                if p.kind != TensorKind::Gradient {
+                    continue;
+                }
+                let bytes = (vt.mask.num_elements(&p.shape) * p.dtype.size_bytes()) as i64;
+                let e = regions
+                    .entry((device, vt.ptensor, vt.mask.region_hash()))
+                    .or_insert((start[t.id], finish[t.id], bytes));
+                e.0 = e.0.min(start[t.id]);
+                e.1 = e.1.max(finish[t.id]);
+                e.2 = e.2.max(bytes);
+            }
+        }
+    }
+    // Communication shipping a gradient pTensor pins its regions on every
+    // participating device until the transfer completes (the buffer is the
+    // collective's working storage).
+    let mut comm_pin: HashMap<(DeviceId, usize), f64> = HashMap::new();
+    for t in &plan.tasks {
+        let pt = match &t.kind {
+            TaskKind::P2P { ptensor, .. } | TaskKind::Collective { ptensor, .. } => *ptensor,
+            TaskKind::Compute { .. } => continue,
+        };
+        // Synthetic plans (DES unit tests) carry placeholder pTensor ids
+        // that may not resolve against their graph.
+        if pt >= g.ptensors.len() || g.ptensor(pt).kind != TensorKind::Gradient {
+            continue;
+        }
+        for d in t.devices() {
+            let e = comm_pin.entry((d, pt)).or_insert(0.0);
+            *e = e.max(finish[t.id]);
+        }
+    }
+    let mut events: HashMap<DeviceId, Vec<(f64, i64)>> = HashMap::new();
+    let mut keys: Vec<(DeviceId, usize, u64)> = regions.keys().copied().collect();
+    keys.sort_unstable();
+    for key in keys {
+        let (alloc, free, bytes) = regions[&key];
+        let free = free.max(comm_pin.get(&(key.0, key.1)).copied().unwrap_or(0.0));
+        let evs = events.entry(key.0).or_default();
+        evs.push((alloc, bytes));
+        evs.push((free.max(alloc), -bytes));
     }
     for evs in events.values_mut() {
         evs.sort_by(|a, b| {

@@ -1,0 +1,210 @@
+//! The dp outer loop over replicated heterogeneous pipelines: dp >= 2
+//! replicas build/validate/simulate end-to-end on small GPT-3, the search
+//! enumerates them with exact `dp * sum(stage widths)` device accounting,
+//! the extended space can never lose to its dp = 1 restriction, dominance
+//! pruning stays sound over the three-level grid, the analytic lower bound
+//! stays below every simulated dp-replicated plan, and cross-server
+//! replicas synchronize gradients through the RVD decomposition rather
+//! than one flat collective.
+
+use superscaler::cost::{Cluster, ModelStats};
+use superscaler::graph::CollKind;
+use superscaler::materialize::{materialize, CommMode, TaskKind};
+use superscaler::models;
+use superscaler::plans::{hetero, registry, PlanSpec, StageSpec};
+use superscaler::schedule::validate;
+use superscaler::search::{self, SearchConfig};
+use superscaler::sim;
+
+#[test]
+fn dp_replicated_hetero_builds_validates_and_simulates() {
+    let out = hetero(
+        models::gpt3(0, 8, 256),
+        2,
+        2,
+        &[StageSpec::tp(2), StageSpec { recompute: true, ..StageSpec::tp(2) }],
+    )
+    .unwrap();
+    assert!(out.name.contains("dp2"), "{}", out.name);
+    let vs = validate(&out.graph, &out.schedule).expect("dp hetero schedule validates");
+    assert!(!vs.topo.is_empty());
+    let c = Cluster::v100(8);
+    let r = sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
+    assert!(!r.oom);
+    assert_eq!(r.per_device.len(), 8, "2 replicas x (2+2)-wide pipeline");
+    assert!(r.comm_bytes > 0, "gradient sync must move bytes across replicas");
+}
+
+#[test]
+fn search_enumerates_dp_replicas_with_exact_device_accounting() {
+    let model = models::gpt3(0, 8, 256);
+    let cluster = Cluster::v100(8);
+    let planner = registry::find("hetero").unwrap();
+    let cands = planner.candidates(&model, &cluster);
+    assert!(cands.iter().any(|s| s.dp >= 2), "dp outer loop emitted no replicas");
+    for s in &cands {
+        let widths: usize = s.stages.as_ref().unwrap().iter().map(|st| st.width()).sum();
+        assert_eq!(s.devices(), s.dp.max(1) * widths, "devices() accounting for {}", s.label());
+        assert_eq!(
+            search::feasibility(s, &model, &cluster),
+            Ok(()),
+            "planner emitted an infeasible spec: {}",
+            s.label()
+        );
+    }
+    // And the full engine-level enumeration keeps the same invariant.
+    let (feasible, _) = search::enumerate(&model, &cluster);
+    assert!(feasible
+        .iter()
+        .any(|(p, s)| p.name() == "hetero" && s.dp >= 2 && s.devices() == 8));
+}
+
+/// The dp >= 1 heterogeneous space strictly contains its dp = 1
+/// restriction, so the extended search's hetero optimum can never be worse
+/// than the dp = 1 hetero optimum under the list simulator.
+#[test]
+fn dp_space_optimum_no_worse_than_dp1_restriction() {
+    let cluster = Cluster::v100(4);
+    let report = search::search(
+        || models::gpt3(0, 8, 256),
+        &cluster,
+        &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
+    );
+    let best_hetero = |pred: &dyn Fn(&PlanSpec) -> bool| {
+        report
+            .ranked
+            .iter()
+            .filter(|c| c.planner == "hetero" && pred(&c.spec))
+            .filter_map(|c| c.metrics().filter(|m| !m.oom).map(|m| m.makespan))
+            .fold(f64::INFINITY, f64::min)
+    };
+    let any_dp = best_hetero(&|_| true);
+    let dp1 = best_hetero(&|s| s.dp <= 1);
+    assert!(any_dp.is_finite(), "no hetero candidate simulated");
+    assert!(dp1.is_finite(), "no dp = 1 hetero candidate simulated");
+    assert!(any_dp <= dp1, "extended space lost to its restriction: {any_dp} vs {dp1}");
+    // The replicated region was actually explored, not vacuously absent.
+    assert!(
+        report.ranked.iter().any(|c| c.planner == "hetero" && c.spec.dp >= 2),
+        "no dp >= 2 hetero candidate reached evaluation"
+    );
+}
+
+/// Dominance pruning must stay sound over the three-level grid: prune-on
+/// and prune-off searches (which now include dp-replicated hetero specs)
+/// agree on the optimum, with consistent accounting.
+#[test]
+fn prune_on_off_agree_over_dp_grid() {
+    let cluster = Cluster::v100(4);
+    let mk = || models::gpt3(0, 8, 256);
+    let on = search::search(
+        mk,
+        &cluster,
+        &SearchConfig { workers: 2, prune: true, ..SearchConfig::default() },
+    );
+    let off = search::search(
+        mk,
+        &cluster,
+        &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
+    );
+    assert_eq!(on.evaluated + on.pruned_bound, off.evaluated);
+    let (tb, tf) = (on.best().unwrap(), off.best().unwrap());
+    let (mb, mf) = (tb.metrics().unwrap().makespan, tf.metrics().unwrap().makespan);
+    let rel = (mb - mf).abs() / mf.max(1e-12);
+    assert!(
+        rel < 1e-4,
+        "prune-on best {mb} ({}) vs prune-off {mf} ({})",
+        tb.plan_name,
+        tf.plan_name
+    );
+}
+
+/// `--dp-min` restricts the grid to replicated plans and still finds one.
+#[test]
+fn dp_min_restricts_the_grid_to_replicated_plans() {
+    let cluster = Cluster::v100(4);
+    let report = search::search(
+        || models::gpt3(0, 8, 256),
+        &cluster,
+        &SearchConfig { workers: 2, dp_min: 2, ..SearchConfig::default() },
+    );
+    assert!(!report.ranked.is_empty());
+    assert!(report.ranked.iter().all(|c| c.spec.dp >= 2), "dp < 2 spec leaked through --dp-min");
+    assert!(report.best().is_some(), "replicated-only search found no plan");
+    assert!(report.excluded > 0, "dp-filtered specs must be accounted as excluded");
+    // Config exclusions are reported apart from infeasibility, and the
+    // rendered accounting carries them.
+    assert!(report.to_table(1).title.contains("dp-excluded"));
+}
+
+/// The analytic lower bound must stay below the simulated time of every
+/// dp-replicated hetero plan it prunes against.
+#[test]
+fn lower_bound_sound_for_dp_hetero_plans() {
+    let cases: [(usize, Vec<StageSpec>, usize, usize); 3] = [
+        (2, vec![StageSpec::tp(2), StageSpec::tp(2)], 2, 8),
+        (2, vec![StageSpec::tp(1), StageSpec::tp(1)], 4, 4),
+        (4, vec![StageSpec::tp(2), StageSpec::tp(2)], 2, 16),
+    ];
+    let stats = ModelStats::of(&models::gpt3(0, 8, 256).graph);
+    for (dp, stages, micro, gpus) in cases {
+        let c = Cluster::v100(gpus);
+        let spec = PlanSpec::hetero_dp(dp, stages.clone(), micro);
+        let out = registry::build("hetero", models::gpt3(0, 8, 256), &spec).unwrap();
+        let r = sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
+        let lb = c.plan_time_lower_bound(&spec, &stats);
+        assert!(lb > 0.0);
+        assert!(lb <= r.makespan, "{}: bound {lb} > simulated {}", spec.label(), r.makespan);
+    }
+}
+
+/// Cross-server dp replicas synchronize gradients through the RVD
+/// decomposition: reduce-scatter within servers, all-reduce across,
+/// all-gather back — visible as distinct collective tasks. Same-server
+/// replicas keep the flat all-reduce.
+#[test]
+fn dp_grad_sync_rvd_decomposes_across_servers_only() {
+    // dp = 4 over 16 GPUs: replicas 0,1 on server 0, replicas 2,3 on
+    // server 1, so every gradient's dp group has two members per server.
+    let out = hetero(models::gpt3(0, 8, 256), 4, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+    let c = Cluster::v100(16);
+    let vs = validate(&out.graph, &out.schedule).unwrap();
+    let plan = materialize(&out.graph, &vs, &c, CommMode::InterRvd);
+    let sync: Vec<_> = plan.tasks.iter().filter(|t| t.label.starts_with("dp-sync")).collect();
+    assert!(!sync.is_empty(), "cross-server gradient sync must decompose");
+    let has_kind = |k: CollKind| {
+        sync.iter().any(|t| matches!(&t.kind, TaskKind::Collective { kind, .. } if *kind == k))
+    };
+    assert!(has_kind(CollKind::ReduceScatter), "missing intra-server reduce-scatter");
+    assert!(has_kind(CollKind::AllReduce), "missing cross-server all-reduce");
+    assert!(has_kind(CollKind::AllGather), "missing intra-server all-gather");
+    // Same-server replicas (dp = 2 on one 8-GPU server): flat form.
+    let out = hetero(models::gpt3(0, 8, 256), 2, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+    let c8 = Cluster::v100(8);
+    let vs = validate(&out.graph, &out.schedule).unwrap();
+    let plan = materialize(&out.graph, &vs, &c8, CommMode::InterRvd);
+    assert!(plan.tasks.iter().all(|t| !t.label.starts_with("dp-sync")));
+    assert!(
+        plan.tasks.iter().any(|t| matches!(
+            &t.kind,
+            TaskKind::Collective { kind: CollKind::AllReduce, .. }
+        )),
+        "same-server replicas still all-reduce"
+    );
+}
+
+/// Spec label round-trips cover the dp-replicated hetero family end to end
+/// at the integration level: every spec the search enumerates parses back
+/// from its own label.
+#[test]
+fn every_enumerated_spec_label_round_trips() {
+    let model = models::gpt3(0, 8, 256);
+    let cluster = Cluster::v100(8);
+    let (feasible, _) = search::enumerate(&model, &cluster);
+    assert!(!feasible.is_empty());
+    for (_, spec) in feasible {
+        let lbl = spec.label();
+        let back = PlanSpec::parse(&lbl).unwrap_or_else(|e| panic!("'{lbl}': {e}"));
+        assert_eq!(back, spec, "round-trip through '{lbl}'");
+    }
+}

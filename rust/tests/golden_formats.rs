@@ -1,0 +1,183 @@
+//! Golden-file tests over the CI artifact formats: the `SearchReport`
+//! table (the `bench_results/search.csv` schema external consumers parse)
+//! and the Chrome-trace JSON the DES exports. Both are rendered from
+//! fixed synthetic inputs — every value hand-checkable — and compared
+//! against committed fixtures under `rust/tests/golden/`, so format drift
+//! is a visible diff instead of a silently broken artifact consumer.
+
+use superscaler::cost::Cluster;
+use superscaler::des;
+use superscaler::graph::{Graph, OpKind};
+use superscaler::materialize::{Plan, Task, TaskKind};
+use superscaler::plans::{PlanKind, PlanSpec, StageSpec};
+use superscaler::search::{Candidate, Fidelity, Metrics, Outcome, SearchReport};
+use superscaler::sim::TaskGraph;
+use superscaler::util::json;
+
+/// A fully synthetic report with fixed values: one DES-rescored winner,
+/// one OOM grid plan, one build failure — every status path the table
+/// renders.
+fn synthetic_report() -> SearchReport {
+    let ok = Candidate {
+        planner: "hetero",
+        spec: PlanSpec::hetero_dp(2, vec![StageSpec::tp(2), StageSpec::tp(2)], 4),
+        plan_name: "hetero-dp2k4[tp2|tp2]".to_string(),
+        outcome: Outcome::Ok(Metrics {
+            makespan: 0.0525,
+            des_makespan: Some(0.05),
+            des_oom: false,
+            aggregate_tflops: 120.0,
+            comm_bytes: 3 * (1u64 << 30),
+            peak_mem: 2 * (1u64 << 30),
+            bubble_frac: 0.25,
+            oom: false,
+        }),
+    };
+    let oom = Candidate {
+        planner: "megatron",
+        spec: PlanSpec { dp: 2, pp: 2, tp: 2, micro: 4, ..PlanSpec::new(PlanKind::Megatron) },
+        plan_name: "megatron-dp2pp2tp2k4-OneFOneB".to_string(),
+        outcome: Outcome::Ok(Metrics {
+            makespan: 0.075,
+            des_makespan: None,
+            des_oom: false,
+            aggregate_tflops: 80.0,
+            comm_bytes: 1u64 << 30,
+            peak_mem: 1u64 << 30,
+            bubble_frac: 0.5,
+            oom: true,
+        }),
+    };
+    let failed = Candidate {
+        planner: "hetero",
+        spec: PlanSpec::hetero(vec![StageSpec::tp(1), StageSpec::tp(1)], 1),
+        plan_name: String::new(),
+        outcome: Outcome::BuildError("stage 0 conflicts".to_string()),
+    };
+    SearchReport {
+        model: "gpt3-0".to_string(),
+        gpus: 8,
+        ranked: vec![ok, oom, failed],
+        pruned: 3,
+        excluded: 0,
+        capped: 1,
+        pruned_bound: 2,
+        evaluated: 3,
+        fidelity: Fidelity::Des,
+        des_rescored: 1,
+        wall_secs: 1.5,
+    }
+}
+
+#[test]
+fn search_report_table_csv_matches_golden() {
+    let report = synthetic_report();
+    let table = report.to_table(0);
+    // The title carries the full coverage accounting — exact format.
+    assert_eq!(
+        table.title,
+        "plan search: gpt3-0 on 8 GPUs — 3 specs simulated, 3 infeasible, \
+         0 dp-excluded, 1 capped, 2 cost-dominated, 1 des-rescored, 1.500 s"
+    );
+    let path = std::env::temp_dir().join("superscaler_golden_search_table.csv");
+    table.write_csv(&path).unwrap();
+    let actual = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let golden = include_str!("golden/search_table.csv");
+    assert_eq!(
+        actual, golden,
+        "SearchReport::to_table CSV drifted from rust/tests/golden/search_table.csv\n\
+         -- actual --\n{actual}\n-- golden --\n{golden}"
+    );
+}
+
+#[test]
+fn search_report_render_keeps_column_set() {
+    // The rendered console table shares rows with the CSV; pin the header
+    // set and the per-row status strings without pinning column widths.
+    let rendered = synthetic_report().to_table(0).render();
+    let cols = [
+        "#", "plan", "spec", "iteration", "DES", "TFLOPS", "comm", "peak mem", "bubble%", "status",
+    ];
+    for col in cols {
+        assert!(rendered.contains(col), "missing column '{col}' in:\n{rendered}");
+    }
+    assert!(rendered.contains("52.500 ms") && rendered.contains("50.000 ms"));
+    assert!(rendered.contains("OOM"));
+    assert!(rendered.contains("invalid: stage 0 conflicts"));
+}
+
+/// Tiny deterministic DES run: one compute task per server bridged by a
+/// cross-server transfer, whole-second durations so every microsecond
+/// timestamp is integral and the trace JSON is bit-stable.
+fn synthetic_trace() -> (des::DesReport, Plan) {
+    let mut g = Graph::new();
+    for i in 0..2 {
+        g.add_op(&format!("op{i}"), OpKind::Identity, vec![], vec![], 0.0, None, true, 0);
+    }
+    let mut plan = Plan::default();
+    plan.tasks.push(Task {
+        id: 0,
+        kind: TaskKind::Compute { op: 0, device: 0 },
+        deps: vec![],
+        duration: 1.0,
+        label: "c0".to_string(),
+    });
+    plan.tasks.push(Task {
+        id: 1,
+        kind: TaskKind::P2P { from: 0, to: 8, bytes: 1 << 20, ptensor: 0 },
+        deps: vec![0],
+        duration: 2.0,
+        label: "x1".to_string(),
+    });
+    plan.tasks.push(Task {
+        id: 2,
+        kind: TaskKind::Compute { op: 1, device: 8 },
+        deps: vec![1],
+        duration: 1.0,
+        label: "c2".to_string(),
+    });
+    let c = Cluster::v100(16);
+    let tg = TaskGraph::of_plan(&plan);
+    let r = des::execute(&g, &plan, &c, &tg);
+    (r, plan)
+}
+
+#[test]
+fn chrome_trace_matches_golden() {
+    let (r, plan) = synthetic_trace();
+    assert_eq!(r.makespan, 4.0, "synthetic chain must be exactly 4 seconds");
+    let actual_str = des::trace::chrome_trace(&r, &plan);
+    let actual = json::parse(&actual_str).expect("trace is valid JSON");
+    let golden = json::parse(include_str!("golden/chrome_trace.json")).expect("fixture parses");
+    assert_eq!(
+        actual, golden,
+        "Chrome-trace schema drifted from rust/tests/golden/chrome_trace.json\n\
+         -- actual --\n{actual_str}"
+    );
+}
+
+#[test]
+fn chrome_trace_schema_invariants() {
+    let (r, plan) = synthetic_trace();
+    let doc = json::parse(&des::trace::chrome_trace(&r, &plan)).unwrap();
+    assert_eq!(doc.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+    // One X event per task per occupied device; metadata names both
+    // streams of both devices; a counter track exists per device.
+    let count = |ph: &str| {
+        evs.iter().filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph)).count()
+    };
+    assert_eq!(count("X"), 4, "c0 + x1 on two devices + c2");
+    assert_eq!(count("M"), 6, "2 process names + 2x2 thread names");
+    assert_eq!(count("C"), 2, "one memory counter point per device");
+    // Every X event stays within the makespan and carries pid/tid.
+    for e in evs {
+        if e.get("ph").and_then(|p| p.as_str()) == Some("X") {
+            let ts = e.get("ts").and_then(|v| v.as_f64()).unwrap();
+            let dur = e.get("dur").and_then(|v| v.as_f64()).unwrap();
+            assert!(ts >= 0.0 && ts + dur <= r.makespan * 1e6 + 1e-6);
+            assert!(e.get("pid").is_some() && e.get("tid").is_some());
+        }
+    }
+}
