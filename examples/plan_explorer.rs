@@ -59,7 +59,9 @@ fn main() {
         des_top: args.usize("des-top", 8),
         ..SearchConfig::default()
     };
-    let report = search::search(build, &cluster, &cfg);
+    // One model build per run — the search borrows it for every candidate.
+    let model = build();
+    let report = search::search(&model, &cluster, &cfg);
     let t = report.to_table(top);
     t.print();
     t.write_csv("bench_results/plan_explorer.csv").ok();

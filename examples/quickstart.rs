@@ -23,8 +23,8 @@ fn main() {
     println!("== SuperScaler quickstart: GPT-3 (1.3B config, seq 1024) on {ndev} GPUs ==\n");
 
     for (label, out) in [
-        ("data parallel (Algorithm 1)", data_parallel(gpt3(0, 8, 1024), ndev).unwrap()),
-        ("co-shard x4 + recompute     ", coshard(gpt3(0, 8, 1024), ndev, 4, None).unwrap()),
+        ("data parallel (Algorithm 1)", data_parallel(&gpt3(0, 8, 1024), ndev).unwrap()),
+        ("co-shard x4 + recompute     ", coshard(&gpt3(0, 8, 1024), ndev, 4, None).unwrap()),
     ] {
         let report = sim::run(&out.graph, &out.schedule, &cluster, CommMode::InterRvd)
             .expect("schedule must validate");

@@ -93,16 +93,16 @@ fn main() {
             let mk = || models::swin_transformer(i, batch, 512);
             let params = format!("{:.1}B", mk().num_params() as f64 / 1e9);
             // SuperScaler: co-shard heads + sharded optimizer state (DP across all).
-            let ss = registry::build("coshard", mk(), &cspec(gpus))
+            let ss = registry::build("coshard", &mk(), &cspec(gpus))
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             // Megatron: tensor parallelism wide enough to fit (paper: 16/32-way at scale).
             let tp = gpus.min(8 * (i + 1));
-            let mg = registry::build("megatron", mk(), &mspec(gpus / tp, 1, tp, k))
+            let mg = registry::build("megatron", &mk(), &mspec(gpus / tp, 1, tp, k))
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             let (zn, zs) = zspec(gpus, i >= 2);
-            let zr = registry::build(zn, mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let zr = registry::build(zn, &mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
             t.row([gpus.to_string(), params, ss, mg, zr]);
         }
         t.print();
@@ -129,11 +129,11 @@ fn main() {
             let seq = 16384;
             let mk = || models::gpt3(i, batch, seq);
             let params = format!("{:.1}B", mk().num_params() as f64 / 1e9);
-            let ss = registry::build("coshard", mk(), &cspec(gpus))
+            let ss = registry::build("coshard", &mk(), &cspec(gpus))
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             let tp = gpus.min(16);
-            let mg = registry::build("megatron", mk(), &mspec((gpus / tp).max(1), 1, tp, k))
+            let mg = registry::build("megatron", &mk(), &mspec((gpus / tp).max(1), 1, tp, k))
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             // Alpa-like: stage-wise search approximated by the best of a few
@@ -150,7 +150,7 @@ fn main() {
                     if dp * pp * tp != gpus {
                         return None;
                     }
-                    registry::build("megatron", mk(), &mspec(dp, pp, tp, k)).ok().map(|o| {
+                    registry::build("megatron", &mk(), &mspec(dp, pp, tp, k)).ok().map(|o| {
                         let c = Cluster::v100(gpus);
                         sim::run(&o.graph, &o.schedule, &c, CommMode::InterRvd)
                             .ok()
@@ -162,7 +162,7 @@ fn main() {
                 .fold(0.0f64, f64::max);
             let alpa = if alpa > 0.0 { format!("{alpa:.0}") } else { "x (OOM)".into() };
             let (zn, zs) = zspec(gpus, i >= 3);
-            let zr = registry::build(zn, mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let zr = registry::build(zn, &mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
             t.row([gpus.to_string(), params, ss, mg, alpa, zr]);
         }
         t.print();
@@ -191,15 +191,15 @@ fn main() {
                 recompute: true,
                 ..PlanSpec::new(PlanKind::Interlaced)
             };
-            let ss = registry::build("interlaced", mk(), &il_spec)
+            let ss = registry::build("interlaced", &mk(), &il_spec)
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             let tp = gpus.min(16);
-            let mg = registry::build("megatron", mk(), &mspec((gpus / tp).max(1), 1, tp, k))
+            let mg = registry::build("megatron", &mk(), &mspec((gpus / tp).max(1), 1, tp, k))
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             let (zn, zs) = zspec(gpus, true);
-            let zr = registry::build(zn, mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let zr = registry::build(zn, &mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
             t.row([gpus.to_string(), params, ss, mg, zr]);
         }
         t.print();
@@ -219,17 +219,17 @@ fn main() {
             let mk = || models::alphafold2(i, batch);
             let params = format!("{:.2}B", mk().num_params() as f64 / 1e9);
             let f3_spec = PlanSpec { pp: gpus, micro: k, ..PlanSpec::new(PlanKind::ThreeFOneB) };
-            let ss = registry::build("3f1b", mk(), &f3_spec)
+            let ss = registry::build("3f1b", &mk(), &f3_spec)
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             let dap_ways = gpus.min(4 << i.min(3));
             let dp_ways = (gpus / dap_ways).max(1);
             let dap_spec = PlanSpec { dp: dp_ways, tp: dap_ways, ..PlanSpec::new(PlanKind::Dap) };
-            let dap = registry::build("dap", mk(), &dap_spec)
+            let dap = registry::build("dap", &mk(), &dap_spec)
                 .map(|o| tflops(&o, gpus))
                 .unwrap_or_else(fail);
             let (zn, zs) = zspec(gpus, false);
-            let zr = registry::build(zn, mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
+            let zr = registry::build(zn, &mk(), &zs).map(|o| tflops(&o, gpus)).unwrap_or_else(fail);
             t.row([gpus.to_string(), params, ss, dap, zr]);
         }
         t.print();

@@ -52,10 +52,10 @@ fn main() {
         let mk = || models::swin_custom(layers, hidden, heads, 1, 1536);
         let params = format!("{:.0}M", mk().num_params() as f64 / 1e6);
         // co-shard: heads split sequentially + recompute.
-        let (m1, l1) = probe(coshard(mk(), 1, 4, None), &cluster);
+        let (m1, l1) = probe(coshard(&mk(), 1, 4, None), &cluster);
         // recompute baseline = same plan without co-sharding (shards=1).
-        let (m2, l2) = probe(coshard(mk(), 1, 1, None), &cluster);
-        let (m3, l3) = probe(zero3(mk(), 1, true), &cluster);
+        let (m2, l2) = probe(coshard(&mk(), 1, 1, None), &cluster);
+        let (m3, l3) = probe(zero3(&mk(), 1, true), &cluster);
         t.row([hidden.to_string(), params, m1, l1, m2, l2, m3, l3]);
     }
     t.print();
@@ -76,9 +76,9 @@ fn main() {
     );
     for seq in [2048usize, 4096, 6144, 8192, 10240] {
         let mk = || models::gpt3(0, 1, seq);
-        let (m1, l1) = probe(coshard(mk(), 1, 8, None), &cluster);
-        let (m2, l2) = probe(coshard(mk(), 1, 1, None), &cluster);
-        let (m3, l3) = probe(zero3(mk(), 1, true), &cluster);
+        let (m1, l1) = probe(coshard(&mk(), 1, 8, None), &cluster);
+        let (m2, l2) = probe(coshard(&mk(), 1, 1, None), &cluster);
+        let (m3, l3) = probe(zero3(&mk(), 1, true), &cluster);
         t.row([seq.to_string(), m1, l1, m2, l2, m3, l3]);
     }
     t.print();

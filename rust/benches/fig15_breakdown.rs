@@ -29,7 +29,7 @@ fn main() {
             (
                 "megatron",
                 megatron(
-                    mbart(scale, batch, 1024),
+                    &mbart(scale, batch, 1024),
                     (gpus / 16).max(1),
                     1,
                     gpus.min(16),
@@ -37,8 +37,8 @@ fn main() {
                     PipeOrder::OneFOneB,
                 ),
             ),
-            ("IL-block", interlaced_pipeline(mbart(scale, batch, 1024), gpus, k, true, true)),
-            ("superscaler", interlaced_pipeline(mbart(scale, batch, 1024), gpus, k, true, false)),
+            ("IL-block", interlaced_pipeline(&mbart(scale, batch, 1024), gpus, k, true, true)),
+            ("superscaler", interlaced_pipeline(&mbart(scale, batch, 1024), gpus, k, true, false)),
         ];
         for (name, out) in cases {
             let both = out.map(|o| -> Result<_, superscaler::schedule::ScheduleError> {

@@ -27,7 +27,7 @@ fn main() {
         &["gpus(pp)", "p2p", "intra-rvd", "inter-rvd"],
     );
     for gpus in [2usize, 4, 8, 16] {
-        let mk = || megatron(gpt3(0, batch, seq), 1, gpus, 1, k, PipeOrder::OneFOneB).unwrap();
+        let mk = || megatron(&gpt3(0, batch, seq), 1, gpus, 1, k, PipeOrder::OneFOneB).unwrap();
         t.row([
             gpus.to_string(),
             tput(&mk(), gpus, CommMode::P2POnly),
@@ -43,7 +43,7 @@ fn main() {
         &["gpus(tp)", "p2p", "intra-rvd", "inter-rvd"],
     );
     for gpus in [2usize, 4, 8, 16] {
-        let mk = || megatron(gpt3(0, batch, seq), 1, 1, gpus, 1, PipeOrder::OneFOneB).unwrap();
+        let mk = || megatron(&gpt3(0, batch, seq), 1, 1, gpus, 1, PipeOrder::OneFOneB).unwrap();
         t.row([
             gpus.to_string(),
             tput(&mk(), gpus, CommMode::P2POnly),

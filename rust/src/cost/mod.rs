@@ -454,7 +454,7 @@ mod tests {
             ("megatron", PlanSpec { dp: 4, ..PlanSpec::new(PlanKind::Megatron) }),
         ];
         for (name, spec) in specs {
-            let out = registry::build(name, crate::models::gpt3(0, 8, 256), &spec).unwrap();
+            let out = registry::build(name, &crate::models::gpt3(0, 8, 256), &spec).unwrap();
             let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
             let lb = c.plan_time_lower_bound(&spec, &stats);
             assert!(lb > 0.0);

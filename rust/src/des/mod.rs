@@ -50,7 +50,7 @@ use crate::cost::{Cluster, LinkId};
 use crate::graph::Graph;
 use crate::materialize::{Plan, TaskId};
 use crate::schedule::{DeviceId, ValidatedSchedule, CPU_DEVICE};
-use crate::sim::{activation_events, gradient_events, DeviceStat, TaskGraph};
+use crate::sim::{activation_events, dev_slot, gradient_events, DeviceStat, TaskGraph};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
 
@@ -107,14 +107,17 @@ impl DesReport {
     }
 }
 
-/// One serial execution lane of a device. Compute tasks occupy the compute
-/// stream of their device; communication tasks the communication stream of
-/// every participant — the "one compute + one comm stream per device"
-/// model that lets transfers overlap with kernels.
-#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
-enum Stream {
-    Compute(DeviceId),
-    Comm(DeviceId),
+/// One serial execution lane of a device, as a dense index: device slot
+/// `s`'s compute stream is `2s`, its communication stream `2s + 1`. Compute
+/// tasks occupy the compute stream of their device; communication tasks the
+/// communication stream of every participant — the "one compute + one comm
+/// stream per device" model that lets transfers overlap with kernels.
+fn compute_stream(d: DeviceId) -> usize {
+    2 * dev_slot(d)
+}
+
+fn comm_stream(d: DeviceId) -> usize {
+    2 * dev_slot(d) + 1
 }
 
 /// An in-flight transfer's fair-sharing state. `remaining` is measured in
@@ -131,8 +134,14 @@ struct Engine<'a> {
     plan: &'a Plan,
     consumers: &'a [Vec<TaskId>],
     indeg: Vec<usize>,
-    streams_of: Vec<Vec<Stream>>,
-    links_of: Vec<Vec<LinkId>>,
+    /// Per-task occupied devices, resolved once (`Task::devices` allocates
+    /// and sorts a fresh Vec per call — far too hot for the event loop).
+    devices: Vec<Vec<DeviceId>>,
+    /// Per-task dense stream indices (see [`compute_stream`]/[`comm_stream`]).
+    streams_of: Vec<Vec<usize>>,
+    /// Per-task dense link indices into `link_active` (the [`LinkId`] →
+    /// index registry is built once in [`Engine::new`]).
+    links_of: Vec<Vec<usize>>,
     start: Vec<f64>,
     finish: Vec<f64>,
     started: Vec<bool>,
@@ -143,49 +152,77 @@ struct Engine<'a> {
     seq: u64,
     /// Min-heap of predicted finish events `(time bits, seq, task, version)`.
     heap: BinaryHeap<Reverse<(u64, u64, TaskId, u64)>>,
-    /// Stream -> the task currently occupying it.
-    busy: BTreeMap<Stream, TaskId>,
+    /// Stream slot -> the task currently occupying it.
+    busy: Vec<Option<TaskId>>,
     /// Tasks ready but blocked on a busy stream, keyed `(is_compute, id)`
     /// so communication dispatches first (eager send), then lower id.
-    waiters: BTreeMap<Stream, BTreeSet<(bool, TaskId)>>,
-    xfers: HashMap<TaskId, Xfer>,
-    /// Link -> transfers currently crossing it (ordered for determinism).
-    link_active: BTreeMap<LinkId, BTreeSet<TaskId>>,
+    waiters: Vec<BTreeSet<(bool, TaskId)>>,
+    /// Per-task fair-sharing state (`None` when not an in-flight transfer).
+    xfers: Vec<Option<Xfer>>,
+    /// Link slot -> transfers currently crossing it (the sets stay ordered
+    /// by task id, which is what keeps repricing deterministic).
+    link_active: Vec<BTreeSet<TaskId>>,
+    /// Device slots in use (`busy.len() / 2`).
+    nslots: usize,
     completed: usize,
 }
 
 impl<'a> Engine<'a> {
     fn new(plan: &'a Plan, cluster: &Cluster, tg: &'a TaskGraph) -> Engine<'a> {
         let n = plan.tasks.len();
-        let streams_of: Vec<Vec<Stream>> = plan
+        let devices: Vec<Vec<DeviceId>> = plan.tasks.iter().map(|t| t.devices()).collect();
+        let max_gpu =
+            devices.iter().flatten().copied().filter(|&d| d != CPU_DEVICE).max().unwrap_or(0);
+        let nslots = max_gpu + 2;
+        let streams_of: Vec<Vec<usize>> = plan
             .tasks
             .iter()
-            .map(|t| {
+            .enumerate()
+            .map(|(i, t)| {
                 if t.is_comm() {
                     // The host is not a serializing endpoint: each GPU has
                     // its own PCIe lane + DMA engine, so concurrent
                     // offload transfers from different GPUs proceed in
                     // parallel and only the per-GPU comm stream (and the
                     // Pcie link) constrains them.
-                    t.devices()
-                        .into_iter()
+                    devices[i]
+                        .iter()
+                        .copied()
                         .filter(|&d| d != CPU_DEVICE)
-                        .map(Stream::Comm)
+                        .map(comm_stream)
                         .collect()
                 } else {
-                    t.devices().into_iter().map(Stream::Compute).collect()
+                    devices[i].iter().copied().map(compute_stream).collect()
                 }
             })
             .collect();
-        let links_of: Vec<Vec<LinkId>> = plan
+        // Dense link registry: LinkId -> index in first-seen task order
+        // (deterministic — the task list is fixed).
+        let mut link_index: BTreeMap<LinkId, usize> = BTreeMap::new();
+        let links_of: Vec<Vec<usize>> = plan
             .tasks
             .iter()
-            .map(|t| if t.is_comm() { cluster.group_links(&t.devices()) } else { Vec::new() })
+            .enumerate()
+            .map(|(i, t)| {
+                if !t.is_comm() {
+                    return Vec::new();
+                }
+                cluster
+                    .group_links(&devices[i])
+                    .into_iter()
+                    .map(|l| {
+                        let next = link_index.len();
+                        *link_index.entry(l).or_insert(next)
+                    })
+                    .collect()
+            })
             .collect();
+        let nlinks = link_index.len();
         Engine {
             plan,
             consumers: &tg.consumers,
             indeg: tg.indeg.clone(),
+            devices,
             streams_of,
             links_of,
             start: vec![0.0; n],
@@ -195,10 +232,11 @@ impl<'a> Engine<'a> {
             version: vec![0; n],
             seq: 0,
             heap: BinaryHeap::new(),
-            busy: BTreeMap::new(),
-            waiters: BTreeMap::new(),
-            xfers: HashMap::new(),
-            link_active: BTreeMap::new(),
+            busy: vec![None; 2 * nslots],
+            waiters: vec![BTreeSet::new(); 2 * nslots],
+            xfers: vec![None; n],
+            link_active: vec![BTreeSet::new(); nlinks],
+            nslots,
             completed: 0,
         }
     }
@@ -211,10 +249,8 @@ impl<'a> Engine<'a> {
     /// Fair-share rate of transfer `t`: 1 / (most crowded link it crosses).
     fn rate_of(&self, t: TaskId) -> f64 {
         let mut widest = 1usize;
-        for l in &self.links_of[t] {
-            if let Some(set) = self.link_active.get(l) {
-                widest = widest.max(set.len());
-            }
+        for &l in &self.links_of[t] {
+            widest = widest.max(self.link_active[l].len());
         }
         1.0 / widest as f64
     }
@@ -226,15 +262,13 @@ impl<'a> Engine<'a> {
     /// makes uncontended runs bit-identical to the list scheduler's sums.
     fn reprice_sharers(&mut self, t: TaskId, now: f64) {
         let mut affected: BTreeSet<TaskId> = BTreeSet::new();
-        for l in &self.links_of[t] {
-            if let Some(set) = self.link_active.get(l) {
-                affected.extend(set.iter().copied());
-            }
+        for &l in &self.links_of[t] {
+            affected.extend(self.link_active[l].iter().copied());
         }
         affected.remove(&t);
         for u in affected {
             let new_rate = self.rate_of(u);
-            let x = self.xfers.get_mut(&u).expect("active transfer has state");
+            let x = self.xfers[u].as_mut().expect("active transfer has state");
             if new_rate == x.rate {
                 continue;
             }
@@ -254,22 +288,22 @@ impl<'a> Engine<'a> {
         if self.started[t] {
             return true;
         }
-        let blocked: Vec<Stream> = self.streams_of[t]
+        let blocked: Vec<usize> = self.streams_of[t]
             .iter()
             .copied()
-            .filter(|s| self.busy.contains_key(s))
+            .filter(|&s| self.busy[s].is_some())
             .collect();
         if !blocked.is_empty() {
             let key = (!self.plan.tasks[t].is_comm(), t);
             for s in blocked {
-                self.waiters.entry(s).or_default().insert(key);
+                self.waiters[s].insert(key);
             }
             return false;
         }
         self.started[t] = true;
         self.start[t] = now;
-        for s in &self.streams_of[t] {
-            self.busy.insert(*s, t);
+        for &s in &self.streams_of[t] {
+            self.busy[s] = Some(t);
         }
         let dur = self.plan.tasks[t].duration;
         self.version[t] += 1;
@@ -277,50 +311,44 @@ impl<'a> Engine<'a> {
             // Compute, or link-free local communication: fixed duration.
             self.push_finish(now + dur, t);
         } else {
-            for l in self.links_of[t].clone() {
-                self.link_active.entry(l).or_default().insert(t);
+            for &l in &self.links_of[t] {
+                self.link_active[l].insert(t);
             }
             let rate = self.rate_of(t);
-            self.xfers.insert(t, Xfer { remaining: dur, rate, last: now });
+            self.xfers[t] = Some(Xfer { remaining: dur, rate, last: now });
             self.push_finish(now + dur / rate, t);
             self.reprice_sharers(t, now);
         }
         true
     }
 
-    fn finish_task(&mut self, t: TaskId, now: f64, stats: &mut HashMap<DeviceId, DeviceStat>) {
+    fn finish_task(&mut self, t: TaskId, now: f64, stats: &mut [Option<DeviceStat>]) {
         self.done[t] = true;
         self.completed += 1;
         self.finish[t] = now;
         let task = &self.plan.tasks[t];
         let elapsed = now - self.start[t];
-        for d in task.devices() {
+        for &d in &self.devices[t] {
             if task.is_comm() && d == CPU_DEVICE {
                 // The host has no serializing comm stream (per-GPU PCIe
                 // lanes carry offload traffic in parallel), so charging it
                 // per-transfer elapsed time would exceed wall-clock.
                 continue;
             }
-            let st = stats
-                .entry(d)
-                .or_insert_with(|| DeviceStat { device: d, ..Default::default() });
+            let st = stats[dev_slot(d)]
+                .get_or_insert_with(|| DeviceStat { device: d, ..Default::default() });
             if task.is_comm() {
                 st.comm += elapsed;
             } else {
                 st.compute += elapsed;
             }
         }
-        for s in &self.streams_of[t] {
-            self.busy.remove(s);
+        for &s in &self.streams_of[t] {
+            self.busy[s] = None;
         }
-        if self.xfers.remove(&t).is_some() {
-            for l in &self.links_of[t] {
-                if let Some(set) = self.link_active.get_mut(l) {
-                    set.remove(&t);
-                    if set.is_empty() {
-                        self.link_active.remove(l);
-                    }
-                }
+        if self.xfers[t].take().is_some() {
+            for &l in &self.links_of[t] {
+                self.link_active[l].remove(&t);
             }
             self.reprice_sharers(t, now);
         }
@@ -335,10 +363,9 @@ impl<'a> Engine<'a> {
                 cands.insert((!self.plan.tasks[c].is_comm(), c));
             }
         }
-        for s in self.streams_of[t].clone() {
-            if let Some(ws) = self.waiters.get_mut(&s) {
-                cands.extend(std::mem::take(ws));
-            }
+        for i in 0..self.streams_of[t].len() {
+            let s = self.streams_of[t][i];
+            cands.extend(std::mem::take(&mut self.waiters[s]));
         }
         for (_, c) in cands {
             if !self.done[c] && !self.started[c] {
@@ -353,7 +380,9 @@ impl<'a> Engine<'a> {
 pub fn execute(g: &Graph, plan: &Plan, cluster: &Cluster, tg: &TaskGraph) -> DesReport {
     let n = plan.tasks.len();
     let mut eng = Engine::new(plan, cluster, tg);
-    let mut stats: HashMap<DeviceId, DeviceStat> = HashMap::new();
+    // Dense per-slot stats during the event loop; converted to the
+    // device-keyed map the (once-per-run) reporting section reads below.
+    let mut slot_stats: Vec<Option<DeviceStat>> = vec![None; eng.nslots];
 
     let mut initial: BTreeSet<(bool, TaskId)> = BTreeSet::new();
     for t in 0..n {
@@ -369,10 +398,12 @@ pub fn execute(g: &Graph, plan: &Plan, cluster: &Cluster, tg: &TaskGraph) -> Des
             continue; // stale re-pricing
         }
         let now = f64::from_bits(time_bits);
-        eng.finish_task(t, now, &mut stats);
+        eng.finish_task(t, now, &mut slot_stats);
     }
     assert_eq!(eng.completed, n, "DES deadlock — TaskGraph::prepare guarantees acyclicity");
     let makespan = eng.finish.iter().copied().fold(0.0, f64::max);
+    let mut stats: HashMap<DeviceId, DeviceStat> =
+        slot_stats.into_iter().flatten().map(|s| (s.device, s)).collect();
 
     // ---- time-resolved memory ----
     // Activations from the shared event stream, *plus* gradient-buffer
@@ -501,7 +532,7 @@ mod tests {
             kind: TaskKind::P2P { from, to, bytes: 1 << 20, ptensor: 0 },
             deps,
             duration: dur,
-            label: format!("x{id}"),
+            label: format!("x{id}").into(),
         }
     }
 
@@ -511,7 +542,7 @@ mod tests {
             kind: TaskKind::Compute { op: id, device },
             deps,
             duration: dur,
-            label: format!("c{id}"),
+            label: format!("c{id}").into(),
         }
     }
 

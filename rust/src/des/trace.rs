@@ -60,7 +60,7 @@ pub fn chrome_trace(report: &DesReport, plan: &Plan) -> String {
         let (cat, tid) = if task.is_comm() { ("comm", 1usize) } else { ("compute", 0) };
         for d in task.devices() {
             events.push(Value::obj([
-                ("name", task.label.clone().into()),
+                ("name", Value::Str(task.label.to_string())),
                 ("cat", cat.into()),
                 ("ph", "X".into()),
                 ("ts", (span.start * us).into()),
@@ -106,7 +106,7 @@ mod tests {
 
     #[test]
     fn trace_is_valid_json_with_one_span_per_task_device() {
-        let out = megatron(gpt3(0, 4, 256), 1, 2, 1, 2, PipeOrder::OneFOneB).unwrap();
+        let out = megatron(&gpt3(0, 4, 256), 1, 2, 1, 2, PipeOrder::OneFOneB).unwrap();
         let c = Cluster::v100(2);
         let vs = crate::schedule::validate(&out.graph, &out.schedule).unwrap();
         let plan = crate::materialize::materialize(&out.graph, &vs, &c, CommMode::InterRvd);

@@ -61,6 +61,7 @@ fn usage() {
                                 [--dp-min D]\n\
                                 [--fidelity list|des] [--des-top K] [--trace FILE]\n\
                                 [--baseline FILE] [--write-baseline] [--tol F]\n\
+                                [--bench-json FILE]\n\
                                   enumerate the feasible PlanSpec grid (--hetero\n\
                                   adds heterogeneous per-stage pipelines),\n\
                                   dominance-prune against the analytic cost\n\
@@ -78,8 +79,16 @@ fn usage() {
                                   winning plan's DES Chrome trace.\n\
                                   --baseline gates the best list-simulated time\n\
                                   against a committed JSON (exit 3 on regression\n\
-                                  > --tol, default 0.001); --write-baseline\n\
-                                  refreshes it\n\
+                                  > --tol, default 0.001) AND the search's own\n\
+                                  wall-clock against the baseline's\n\
+                                  max_wall_secs ceiling (exit 3 when the search\n\
+                                  itself gets slower); --write-baseline\n\
+                                  refreshes both.\n\
+                                  --bench-json writes the search-throughput\n\
+                                  trajectory artifact (wall_secs, evaluated,\n\
+                                  pruned counts, des_rescored, best list\n\
+                                  makespan) — CI uploads it as\n\
+                                  BENCH_search.json\n\
            superscaler rvd      --from 'R(r)V(v)D(k1,k2)' --to '...' [--gpus N]\n\
                                 [--src-gpus N] [--dst-gpus N] [--mb MB]\n\
            superscaler train    [--devices N] [--steps N] [--lr F] [--artifacts DIR]\n\
@@ -170,7 +179,7 @@ fn simulate(args: &Args) {
         std::process::exit(2);
     };
     let spec = spec_from_args(planner, args, gpus);
-    let out = planner.build(model, &spec).unwrap_or_else(|e| {
+    let out = planner.build(&model, &spec).unwrap_or_else(|e| {
         eprintln!("plan construction failed: {e}");
         std::process::exit(1);
     });
@@ -239,10 +248,16 @@ fn search_cmd(args: &Args) {
         fidelity: fidelity(args),
         des_top: args.usize("des-top", 8),
     };
-    let report = search::search(|| build_model(args), &cluster, &cfg);
+    // One model build per search run: the engine borrows it for every
+    // candidate evaluation, the DES re-rank and the winner's trace replay.
+    let model = build_model(args);
+    let report = search::search(&model, &cluster, &cfg);
     let t = report.to_table(top);
     t.print();
     t.write_csv("bench_results/search.csv").ok();
+    if let Some(path) = args.get("bench-json") {
+        write_bench_json(path, &report);
+    }
     match report.best() {
         Some(best) => {
             let m = best.metrics().expect("best candidate has metrics");
@@ -265,7 +280,7 @@ fn search_cmd(args: &Args) {
                 ),
             }
             if let Some(path) = args.get("trace") {
-                trace_best(path, best, args, &cluster);
+                trace_best(path, best, &model, args, &cluster);
             }
             if let Some(path) = args.get("baseline") {
                 baseline_gate(path, &report, args);
@@ -282,18 +297,23 @@ fn search_cmd(args: &Args) {
 /// Chrome trace — the search-smoke CI artifact that makes a regression's
 /// pipeline shape inspectable without re-running anything locally.
 ///
-/// This deliberately re-runs the build → validate → materialize → DES
-/// pipeline the `--fidelity des` re-score already executed for this
-/// candidate: holding every top-k materialized `Plan` (100k+ tasks on the
-/// Fig. 12 models) in the report to save one re-run would cost far more
-/// memory than the seconds it saves, and the trace path also works for
-/// list-fidelity searches that never DES-scored anything.
-fn trace_best(path: &str, best: &search::Candidate, args: &Args, cluster: &Cluster) {
+/// This re-runs the build → validate → materialize → DES pipeline against
+/// the search's borrowed probe model (the model itself is never
+/// reconstructed): the search's O(des_top) artifact cache is consumed by
+/// the re-rank and lives inside the engine, and the trace path also works
+/// for list-fidelity searches that never DES-scored anything.
+fn trace_best(
+    path: &str,
+    best: &search::Candidate,
+    model: &models::Model,
+    args: &Args,
+    cluster: &Cluster,
+) {
     let Some(planner) = plans::registry::find(best.planner) else {
         eprintln!("winning planner '{}' not in registry", best.planner);
         std::process::exit(2);
     };
-    let out = planner.build(build_model(args), &best.spec).unwrap_or_else(|e| {
+    let out = planner.build(model, &best.spec).unwrap_or_else(|e| {
         eprintln!("winning plan failed to rebuild for tracing: {e}");
         std::process::exit(2);
     });
@@ -312,8 +332,47 @@ fn trace_best(path: &str, best: &search::Candidate, args: &Args, cluster: &Clust
     }
 }
 
+/// `--bench-json`: write the search-throughput trajectory artifact
+/// (`BENCH_search.json`). Each CI search-smoke run uploads one, so the
+/// repo accumulates a wall-clock + coverage trajectory of the search
+/// itself (what the `max_wall_secs` gate protects).
+fn write_bench_json(path: &str, report: &search::SearchReport) {
+    use superscaler::util::json::{self, Value};
+    let v = Value::obj([
+        ("model", report.model.clone().into()),
+        ("gpus", report.gpus.into()),
+        ("wall_secs", report.wall_secs.into()),
+        ("evaluated", report.evaluated.into()),
+        ("pruned_infeasible", report.pruned.into()),
+        ("pruned_bound", report.pruned_bound.into()),
+        ("excluded", report.excluded.into()),
+        ("capped", report.capped.into()),
+        ("des_rescored", report.des_rescored.into()),
+        (
+            "best_list_makespan",
+            report.best_list_makespan().map(Value::from).unwrap_or(Value::Null),
+        ),
+    ]);
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    match std::fs::write(path, json::to_string_pretty(&v) + "\n") {
+        Ok(()) => println!(
+            "bench: wrote {path} (wall {}, {} evaluated)",
+            fmt_secs(report.wall_secs),
+            report.evaluated
+        ),
+        Err(e) => {
+            eprintln!("cannot write bench json {path}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// The CI perf-trajectory gate: compare the search's best iteration time
-/// against a committed baseline JSON. A missing/unset baseline (or
+/// against a committed baseline JSON, and the search's own wall-clock
+/// against the baseline's `max_wall_secs` ceiling (the search-throughput
+/// gate — both regressions exit 3). A missing/unset baseline (or
 /// `--write-baseline`) writes the current numbers instead of gating, so the
 /// first CI run bootstraps the file it uploads as an artifact.
 fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
@@ -329,6 +388,10 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
     let best = report.best_by_list().expect("a best plan implies a list winner");
     let gate_makespan = best.metrics().expect("list winner has metrics").makespan;
     let tol = args.f64("tol", 0.001);
+    // The throughput ceiling the written baseline records: 3x the measured
+    // wall-clock (floored at 1 s), generous enough for CI-runner noise yet
+    // tight enough that committing a green run's artifact arms a real gate.
+    let next_ceiling = (report.wall_secs * 3.0).max(1.0);
     let current = Value::obj([
         ("model", report.model.clone().into()),
         ("gpus", report.gpus.into()),
@@ -344,6 +407,8 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
         ("pruned_infeasible", report.pruned.into()),
         ("capped", report.capped.into()),
         ("pruned_cost_bound", report.pruned_bound.into()),
+        ("wall_secs", report.wall_secs.into()),
+        ("max_wall_secs", next_ceiling.into()),
     ]);
     let write = |reason: &str| {
         if let Some(dir) = std::path::Path::new(path).parent() {
@@ -359,11 +424,20 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
             }
         }
     };
-    let prior = std::fs::read_to_string(path)
-        .ok()
-        .and_then(|s| json::parse(&s).ok())
+    let doc = std::fs::read_to_string(path).ok().and_then(|s| json::parse(&s).ok());
+    let prior = doc
+        .as_ref()
         .and_then(|v| v.get("best_makespan").and_then(|b| b.as_f64()))
         .filter(|&b| b > 0.0);
+    // Search-throughput ceiling: armed only when the makespan baseline is
+    // (a positive `max_wall_secs` alone does not arm it — a bootstrap run
+    // rewrites the whole file, so gating against the stale ceiling it just
+    // replaced would fail the run meant to arm both gates).
+    let wall_ceiling = prior.and(
+        doc.as_ref()
+            .and_then(|v| v.get("max_wall_secs").and_then(|b| b.as_f64()))
+            .filter(|&b| b > 0.0),
+    );
     match prior {
         None => write("bootstrap"),
         Some(base) => {
@@ -396,6 +470,35 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
             } else if ratio < 1.0 - tol {
                 println!("note: best improved; refresh with --write-baseline to lock it in");
             }
+        }
+    }
+    // ---- the search-throughput gate (ISSUE 5): the search itself must
+    // not get slower. Same exit-3 convention as the makespan gate; a
+    // --write-baseline run accepts the slower wall and records a fresh
+    // ceiling instead.
+    if let Some(ceil) = wall_ceiling {
+        if report.wall_secs > ceil {
+            if args.has("write-baseline") {
+                println!(
+                    "throughput gate: wall {} above ceiling {} accepted by --write-baseline",
+                    fmt_secs(report.wall_secs),
+                    fmt_secs(ceil)
+                );
+            } else {
+                eprintln!(
+                    "SEARCH THROUGHPUT GATE FAILED: search wall-clock {} exceeds \
+                     max_wall_secs {} from the committed baseline",
+                    fmt_secs(report.wall_secs),
+                    fmt_secs(ceil)
+                );
+                std::process::exit(3);
+            }
+        } else {
+            println!(
+                "throughput gate ok: search wall {} <= ceiling {}",
+                fmt_secs(report.wall_secs),
+                fmt_secs(ceil)
+            );
         }
     }
 }

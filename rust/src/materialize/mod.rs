@@ -26,8 +26,13 @@ use crate::graph::{mask::Mask, CollKind, Graph, OpId, PTensorId, TensorKind};
 use crate::rvd::{self, Rvd};
 use crate::schedule::{DeviceId, ValidatedSchedule};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 pub type TaskId = usize;
+
+/// Sentinel in [`Plan::task_of_op`] for op-id slots without a compute task
+/// (removed ops, or ops outside the materialized schedule).
+pub const NO_TASK: TaskId = usize::MAX;
 
 /// One schedulable unit of the materialized plan.
 #[derive(Clone, Debug)]
@@ -53,8 +58,12 @@ pub struct Task {
     pub deps: Vec<TaskId>,
     /// Modeled duration, seconds (cost model applied at materialization).
     pub duration: f64,
-    /// Human-readable label for traces.
-    pub label: String,
+    /// Human-readable label for traces. Shared (`Arc<str>`): the K
+    /// micro-batch transfers of one pTensor (and the per-subgroup tasks of
+    /// one sync step) all point at a single interned string, so the
+    /// per-candidate materialization pass stops allocating a fresh `String`
+    /// per task and task clones are pointer bumps.
+    pub label: Arc<str>,
 }
 
 impl Task {
@@ -89,8 +98,12 @@ impl Task {
 #[derive(Clone, Debug, Default)]
 pub struct Plan {
     pub tasks: Vec<Task>,
-    /// op -> its compute task.
-    pub task_of_op: HashMap<OpId, TaskId>,
+    /// op -> its compute task, densely indexed by op-id slot ([`NO_TASK`]
+    /// for slots without one). A `Vec` rather than a `HashMap`: the task
+    /// graph preparation and materialization's dependency wiring look ops
+    /// up on every edge, which dominates the per-candidate evaluation the
+    /// search engine runs thousands of times.
+    pub task_of_op: Vec<TaskId>,
     /// Static per-device memory (weights + gradients + optimizer state
     /// shards resident for the whole iteration), bytes.
     pub static_mem: HashMap<DeviceId, u64>,
@@ -109,7 +122,13 @@ pub struct Plan {
 }
 
 impl Plan {
-    fn push(&mut self, kind: TaskKind, deps: Vec<TaskId>, duration: f64, label: String) -> TaskId {
+    fn push(
+        &mut self,
+        kind: TaskKind,
+        deps: Vec<TaskId>,
+        duration: f64,
+        label: Arc<str>,
+    ) -> TaskId {
         let id = self.tasks.len();
         self.comm_bytes += match &kind {
             TaskKind::Compute { .. } => 0,
@@ -142,16 +161,28 @@ struct View {
 /// Materialize `g` + `vs` into an executable [`Plan`] against `cluster`.
 pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: CommMode) -> Plan {
     let mut plan = Plan::default();
-    // op -> device lookup table (device_order scan per op would be O(n^2)).
-    let dev_of: HashMap<OpId, DeviceId> = vs
-        .device_order
-        .iter()
-        .flat_map(|(&d, ops)| ops.iter().map(move |&o| (o, d)))
-        .collect();
+    plan.task_of_op = vec![NO_TASK; g.num_op_slots()];
+    // op -> device lookup table, densely indexed by op-id slot. The
+    // unassigned sentinel is deliberately distinct from CPU_DEVICE
+    // (usize::MAX): validation guarantees every op it names is assigned,
+    // and if that invariant ever breaks, the debug assert below keeps it a
+    // loud panic instead of a silently host-priced task.
+    const UNSCHEDULED: DeviceId = usize::MAX - 1;
+    let mut dev_of: Vec<DeviceId> = vec![UNSCHEDULED; g.num_op_slots()];
+    for (&d, ops) in &vs.device_order {
+        for &o in ops {
+            dev_of[o] = d;
+        }
+    }
+    let dev_of = |op: OpId| -> DeviceId {
+        let d = dev_of[op];
+        debug_assert_ne!(d, UNSCHEDULED, "op {op} reached materialization unscheduled");
+        d
+    };
 
     // ---- compute tasks, in global topo order ----
     for &op in &vs.topo {
-        let device = dev_of[&op];
+        let device = dev_of(op);
         let flops = g.op(op).flops;
         let spec = if device == crate::schedule::CPU_DEVICE {
             &cluster.cpu_spec
@@ -163,9 +194,9 @@ pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: C
             TaskKind::Compute { op, device },
             Vec::new(),
             dur,
-            g.op(op).name.clone(),
+            Arc::from(g.op(op).name.as_str()),
         );
-        plan.task_of_op.insert(op, id);
+        plan.task_of_op[op] = id;
     }
 
     // ---- group dependencies per (ptensor, consumer-mask-pattern) ----
@@ -180,7 +211,7 @@ pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: C
                     by_pt.entry(pt).or_default().0.push(View {
                         op: p,
                         mask: vt.mask.clone(),
-                        device: dev_of[&p],
+                        device: dev_of(p),
                     });
                 }
             }
@@ -192,7 +223,7 @@ pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: C
                     by_pt.entry(pt).or_default().1.push(View {
                         op: c,
                         mask: vt.mask.clone(),
-                        device: dev_of[&c],
+                        device: dev_of(c),
                     });
                 }
             }
@@ -219,7 +250,7 @@ pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: C
                         entry.1.push(View {
                             op: c,
                             mask: vt.mask.clone(),
-                            device: dev_of[&c],
+                            device: dev_of(c),
                         });
                     }
                 }
@@ -236,7 +267,7 @@ pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: C
                         entry.0.push(View {
                             op: p,
                             mask: vt.mask.clone(),
-                            device: dev_of[&p],
+                            device: dev_of(p),
                         });
                     }
                 }
@@ -291,8 +322,8 @@ fn materialize_ptensor(
             Some(p) => {
                 plan.n_direct += 1;
                 if !cross_iter {
-                    let pt_task = plan.task_of_op[&p.op];
-                    let ct = plan.task_of_op[&c.op];
+                    let pt_task = plan.task_of_op[p.op];
+                    let ct = plan.task_of_op[c.op];
                     if !plan.tasks[ct].deps.contains(&pt_task) {
                         plan.tasks[ct].deps.push(pt_task);
                     }
@@ -377,10 +408,10 @@ fn synthesize_component(
         plan.n_direct += unresolved.len();
         if !cross_iter {
             for c in unresolved {
-                let ct = plan.task_of_op[&c.op];
+                let ct = plan.task_of_op[c.op];
                 for p in producers {
                     if c.mask.depends_on(&p.mask) {
-                        let pt_task = plan.task_of_op[&p.op];
+                        let pt_task = plan.task_of_op[p.op];
                         if !plan.tasks[ct].deps.contains(&pt_task) {
                             plan.tasks[ct].deps.push(pt_task);
                         }
@@ -510,7 +541,9 @@ fn synthesize_component(
     }
 
     // Generic Fig. 8 fallback: per consumer, fetch every overlapping
-    // producer piece; reduces/concats are local (free).
+    // producer piece; reduces/concats are local (free). One interned label
+    // serves every transfer of this pTensor.
+    let p2p_label: Arc<str> = format!("p2p:{}", g.ptensor(pt).name).into();
     for c in unresolved {
         plan.n_p2p += 1;
         let mut fetched = Vec::new();
@@ -521,22 +554,22 @@ fn synthesize_component(
                 if p.device == c.device {
                     // Local slice: free, only a dependency.
                     if !cross_iter {
-                        fetched.push(plan.task_of_op[&p.op]);
+                        fetched.push(plan.task_of_op[p.op]);
                     }
                     continue;
                 }
-                let deps = if cross_iter { vec![] } else { vec![plan.task_of_op[&p.op]] };
+                let deps = if cross_iter { vec![] } else { vec![plan.task_of_op[p.op]] };
                 let dur = cluster.p2p_time(p.device, c.device, bytes);
                 let t = plan.push(
                     TaskKind::P2P { from: p.device, to: c.device, bytes, ptensor: pt },
                     deps,
                     dur,
-                    format!("p2p:{}", g.ptensor(pt).name),
+                    p2p_label.clone(),
                 );
                 fetched.push(t);
             }
         }
-        let ct = plan.task_of_op[&c.op];
+        let ct = plan.task_of_op[c.op];
         for t in fetched {
             if !plan.tasks[ct].deps.contains(&t) {
                 plan.tasks[ct].deps.push(t);
@@ -562,7 +595,7 @@ fn emit_sync_plan(
     consumers: &[View],
     sync: &rvd::SyncPlan,
 ) {
-    let mut frontier: Vec<TaskId> = producers.iter().map(|p| plan.task_of_op[&p.op]).collect();
+    let mut frontier: Vec<TaskId> = producers.iter().map(|p| plan.task_of_op[p.op]).collect();
     for step in &sync.steps {
         let name = match step.kind {
             CollKind::AllReduce => "all-reduce",
@@ -573,6 +606,8 @@ fn emit_sync_plan(
             CollKind::RdScatter => "rd-scatter",
             CollKind::RdGather => "rd-gather",
         };
+        // One interned label per step, shared by all of its subgroups.
+        let label: Arc<str> = format!("dp-sync {name}:{}", g.ptensor(pt).name).into();
         let mut next = Vec::with_capacity(step.groups.len());
         for grp in &step.groups {
             let dur = cluster.collective_time(step.kind, grp, step.bytes);
@@ -585,14 +620,14 @@ fn emit_sync_plan(
                 },
                 frontier.clone(),
                 dur,
-                format!("dp-sync {name}:{}", g.ptensor(pt).name),
+                label.clone(),
             );
             next.push(t);
         }
         frontier = next;
     }
     for c in consumers {
-        let ct = plan.task_of_op[&c.op];
+        let ct = plan.task_of_op[c.op];
         for &t in &frontier {
             if !plan.tasks[ct].deps.contains(&t) {
                 plan.tasks[ct].deps.push(t);
@@ -618,7 +653,7 @@ fn emit_rvd_path(
     let mut frontier: Vec<TaskId> = if cross_iter {
         Vec::new()
     } else {
-        producers.iter().map(|p| plan.task_of_op[&p.op]).collect()
+        producers.iter().map(|p| plan.task_of_op[p.op]).collect()
     };
     for (trans, state, dt) in &path.steps {
         let Some(kind) = trans.collective() else { continue }; // local = free
@@ -641,12 +676,12 @@ fn emit_rvd_path(
             TaskKind::Collective { kind, group, bytes, ptensor: pt },
             frontier.clone(),
             *dt,
-            format!("{}:{}", trans, g.ptensor(pt).name),
+            format!("{}:{}", trans, g.ptensor(pt).name).into(),
         );
         frontier = vec![t];
     }
     for c in consumers {
-        let ct = plan.task_of_op[&c.op];
+        let ct = plan.task_of_op[c.op];
         for &t in &frontier {
             if !plan.tasks[ct].deps.contains(&t) {
                 plan.tasks[ct].deps.push(t);

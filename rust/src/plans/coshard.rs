@@ -17,7 +17,7 @@ use crate::trans::{autograd, recompute};
 /// `coshard_layers` limits co-sharding to the first N layers (the paper
 /// applies it to Swin's first four memory-heavy layers; `None` = all).
 pub fn coshard(
-    model: Model,
+    model: &Model,
     ndev: usize,
     shards: usize,
     coshard_layers: Option<usize>,
@@ -29,14 +29,15 @@ pub fn coshard(
 /// the DP group (composes the paper's co-shard with DeepSpeed-style state
 /// partitioning — how the large weak-scaling points fit in 32 GB).
 pub fn coshard_opt(
-    mut model: Model,
+    model: &Model,
     ndev: usize,
     shards: usize,
     coshard_layers: Option<usize>,
     zero_opt: bool,
 ) -> PlanResult {
-    let coshard_dim = model.coshard_dim.clone();
-    let g = &mut model.graph;
+    let coshard_dim = &model.coshard_dim;
+    let mut graph = model.graph.clone();
+    let g = &mut graph;
     let mut sched = Schedule::new();
 
     // ---- DP split over devices, preserving layer op order ----
@@ -173,7 +174,7 @@ pub fn coshard_opt(
     }
 
     Ok(PlanOutput {
-        graph: model.graph,
+        graph,
         schedule: sched,
         name: format!("coshard{ndev}x{shards}"),
     })
@@ -223,7 +224,7 @@ impl Planner for CoshardPlanner {
         out
     }
 
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
         coshard_opt(
             model,
             spec.dp.max(1),
@@ -245,8 +246,8 @@ mod tests {
     fn coshard_cuts_peak_memory_vs_dp() {
         let c = crate::cost::Cluster::v100(2);
         // Long sequence -> attention activations dominate.
-        let cs = coshard(gpt3(0, 4, 2048), 2, 4, None).unwrap();
-        let dp = data_parallel(gpt3(0, 4, 2048), 2).unwrap();
+        let cs = coshard(&gpt3(0, 4, 2048), 2, 4, None).unwrap();
+        let dp = data_parallel(&gpt3(0, 4, 2048), 2).unwrap();
         let rc = crate::sim::run(&cs.graph, &cs.schedule, &c, CommMode::InterRvd).unwrap();
         let rd = crate::sim::run(&dp.graph, &dp.schedule, &c, CommMode::InterRvd).unwrap();
         assert!(
@@ -264,8 +265,8 @@ mod tests {
     fn coshard_no_extra_communication() {
         // Co-shard stays on-device: comm equals plain DP's gradient sync.
         let c = crate::cost::Cluster::v100(2);
-        let cs = coshard(gpt3(0, 4, 512), 2, 4, None).unwrap();
-        let dp = data_parallel(gpt3(0, 4, 512), 2).unwrap();
+        let cs = coshard(&gpt3(0, 4, 512), 2, 4, None).unwrap();
+        let dp = data_parallel(&gpt3(0, 4, 512), 2).unwrap();
         let rc = crate::sim::run(&cs.graph, &cs.schedule, &c, CommMode::InterRvd).unwrap();
         let rd = crate::sim::run(&dp.graph, &dp.schedule, &c, CommMode::InterRvd).unwrap();
         assert!(

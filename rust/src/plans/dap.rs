@@ -11,8 +11,9 @@ use crate::trans::autograd;
 
 /// `dap_dp(model, dap, dp)`: `dap × dp` devices; activations split `dap`
 /// ways along the token axis inside each DP replica.
-pub fn dap_dp(mut model: Model, dap: usize, dp: usize) -> PlanResult {
-    let g = &mut model.graph;
+pub fn dap_dp(model: &Model, dap: usize, dp: usize) -> PlanResult {
+    let mut graph = model.graph.clone();
+    let g = &mut graph;
     let mut sched = Schedule::new();
     let device = |dpg: usize, a: usize| dpg * dap + a;
 
@@ -47,7 +48,7 @@ pub fn dap_dp(mut model: Model, dap: usize, dp: usize) -> PlanResult {
     assign_optimizers(g, &mut sched);
 
     Ok(PlanOutput {
-        graph: model.graph,
+        graph,
         schedule: sched,
         name: format!("dap{dap}dp{dp}"),
     })
@@ -90,7 +91,7 @@ impl Planner for DapPlanner {
         out
     }
 
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
         dap_dp(model, spec.tp.max(1), spec.dp.max(1))
     }
 }
@@ -104,7 +105,7 @@ mod tests {
 
     #[test]
     fn dap_replicates_weights_and_pays_alltoall() {
-        let out = dap_dp(alphafold2(0, 8), 4, 1).unwrap();
+        let out = dap_dp(&alphafold2(0, 8), 4, 1).unwrap();
         let c = crate::cost::Cluster::v100(4);
         let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
         assert!(r.comm_bytes > 0, "DAP must communicate around attention");
@@ -120,8 +121,8 @@ mod tests {
         // Fig. 12d's crossover: at bigger scales 3F1B's boundary-only comm
         // beats DAP's per-layer all-to-alls.
         let c = crate::cost::Cluster::v100(4);
-        let dap = dap_dp(alphafold2(1, 8), 4, 1).unwrap();
-        let f31 = pipeline_3f1b(alphafold2(1, 8), 4, 4).unwrap();
+        let dap = dap_dp(&alphafold2(1, 8), 4, 1).unwrap();
+        let f31 = pipeline_3f1b(&alphafold2(1, 8), 4, 4).unwrap();
         let rd = crate::sim::run(&dap.graph, &dap.schedule, &c, CommMode::InterRvd).unwrap();
         let rf = crate::sim::run(&f31.graph, &f31.schedule, &c, CommMode::InterRvd).unwrap();
         assert!(

@@ -9,9 +9,12 @@ use crate::models::Model;
 use crate::schedule::Schedule;
 use crate::trans::{autograd, op_trans, TransformAlgo};
 
-/// `data_parallel(model, ndev)`: one replica per device.
-pub fn data_parallel(mut model: Model, ndev: usize) -> PlanResult {
-    let g = &mut model.graph;
+/// `data_parallel(model, ndev)`: one replica per device. The model is
+/// borrowed; only its graph (the structure the transformation rewrites) is
+/// cloned into the plan under construction.
+pub fn data_parallel(model: &Model, ndev: usize) -> PlanResult {
+    let mut graph = model.graph.clone();
+    let g = &mut graph;
     let mut sched = Schedule::new();
 
     // Algorithm 1 line 2-7: partition forward ops, replicate optimizers.
@@ -55,7 +58,7 @@ pub fn data_parallel(mut model: Model, ndev: usize) -> PlanResult {
     }
 
     Ok(PlanOutput {
-        graph: model.graph,
+        graph,
         schedule: sched,
         name: format!("dp{ndev}"),
     })
@@ -88,7 +91,7 @@ impl super::Planner for DpPlanner {
         Vec::new()
     }
 
-    fn build(&self, model: Model, spec: &super::PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &super::PlanSpec) -> PlanResult {
         data_parallel(model, spec.dp.max(1))
     }
 }
@@ -103,7 +106,7 @@ mod tests {
     fn dp_simulates_with_allreduce_comm() {
         let model = gpt3(0, 8, 512);
         let total_flops_serial = model.graph.total_flops();
-        let out = data_parallel(model, 4).unwrap();
+        let out = data_parallel(&model, 4).unwrap();
         let c = crate::cost::Cluster::v100(4);
         let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
         assert!(r.comm_bytes > 0, "DP must all-reduce gradients");
@@ -119,11 +122,11 @@ mod tests {
 
     #[test]
     fn dp_speedup_vs_serial_is_sublinear_but_real() {
-        let m1 = gpt3(0, 8, 512);
-        let m4 = gpt3(0, 8, 512);
+        // One borrowed model serves both plans — the zero-rebuild pipeline.
+        let m = gpt3(0, 8, 512);
         let c = crate::cost::Cluster::v100(4);
-        let s1 = data_parallel(m1, 1).unwrap();
-        let s4 = data_parallel(m4, 4).unwrap();
+        let s1 = data_parallel(&m, 1).unwrap();
+        let s4 = data_parallel(&m, 4).unwrap();
         let r1 = crate::sim::run(&s1.graph, &s1.schedule, &c, CommMode::InterRvd).unwrap();
         let r4 = crate::sim::run(&s4.graph, &s4.schedule, &c, CommMode::InterRvd).unwrap();
         let speedup = r1.makespan / r4.makespan;

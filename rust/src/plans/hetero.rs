@@ -42,7 +42,13 @@ use crate::trans::{autograd, recompute, TransError};
 /// pipeline with `k` micro-batches, where stage `s` applies `stages[s]`'s
 /// intra-stage transformation. Layers are FLOP-balanced across stages; a
 /// stage of width `w` occupies `w` consecutive devices.
-pub fn hetero(mut model: Model, dp: usize, k: usize, stages: &[StageSpec]) -> PlanResult {
+///
+/// The model is borrowed (only the graph is cloned), and the transform is
+/// single-pass over replicas: [`transform_layer_op`] emits every dp
+/// replica's pieces from one call per layer op, so replicas are never
+/// re-transformed; the split-factor rule is additionally memoized per
+/// `(dim size, stage width)` pair below.
+pub fn hetero(model: &Model, dp: usize, k: usize, stages: &[StageSpec]) -> PlanResult {
     if stages.is_empty() {
         return Err(TransError::Invalid("hetero plan needs at least one stage".into()));
     }
@@ -64,9 +70,10 @@ pub fn hetero(mut model: Model, dp: usize, k: usize, stages: &[StageSpec]) -> Pl
             model.layers.len()
         )));
     }
-    let tp_dim = model.tp_dim.clone();
-    let coshard_dim = model.coshard_dim.clone();
-    let g = &mut model.graph;
+    let tp_dim = &model.tp_dim;
+    let coshard_dim = &model.coshard_dim;
+    let mut graph = model.graph.clone();
+    let g = &mut graph;
     let mut sched = Schedule::new();
     let layer_stages = balance_stages(g, &model.layers, pp);
     let stage_of_layer: HashMap<usize, usize> = layer_stages
@@ -112,9 +119,14 @@ pub fn hetero(mut model: Model, dp: usize, k: usize, stages: &[StageSpec]) -> Pl
     // hetero's stricter factor rule: it must divide BOTH the dim size and
     // the stage width so every op contributes exactly `tp` pieces — the
     // `idx % tp` device layout below would misalign corresponding shards
-    // of producer/consumer ops otherwise.
+    // of producer/consumer ops otherwise. The factor depends only on the
+    // `(dim size, stage width)` pair, and the dp × micro × layer loop asks
+    // the same handful of pairs over and over on deep models — memoized.
+    let align_cache = std::cell::RefCell::new(HashMap::<(Option<usize>, usize), usize>::new());
     let strict_align = |sz: Option<usize>, tp: usize| {
-        (1..=tp).rev().find(|&c| tp % c == 0 && sz.map_or(false, |s| s % c == 0)).unwrap_or(1)
+        *align_cache.borrow_mut().entry((sz, tp)).or_insert_with(|| {
+            (1..=tp).rev().find(|&c| tp % c == 0 && sz.map_or(false, |s| s % c == 0)).unwrap_or(1)
+        })
     };
     for (li, ops) in model.layers.iter().enumerate() {
         let s = stage_of_layer[&li];
@@ -341,7 +353,7 @@ pub fn hetero(mut model: Model, dp: usize, k: usize, stages: &[StageSpec]) -> Pl
 
     let stage_lbl: Vec<String> = stages.iter().map(|s| s.label()).collect();
     Ok(PlanOutput {
-        graph: model.graph,
+        graph,
         schedule: sched,
         name: format!("hetero-dp{dp}k{k}[{}]", stage_lbl.join("|")),
     })
@@ -445,6 +457,35 @@ fn stage_cost(
     (t, stat + act_mem)
 }
 
+/// The best-ranked (cost, choice) for one stage of `width` devices given
+/// the stage's model shares — the inner level of the three-level search,
+/// factored out so [`hetero_candidates`] can memoize it per `(dp, pp,
+/// width)` instead of re-ranking the same vocabulary for every one of the
+/// up-to-[`MAX_COMPOSITIONS`] width compositions a pipeline depth explores.
+#[allow(clippy::too_many_arguments)]
+fn best_stage_choice(
+    cluster: &Cluster,
+    width: usize,
+    can_coshard: bool,
+    fwd: f64,
+    grad: f64,
+    wsh: u64,
+    ash: u64,
+    cap: u64,
+) -> Option<(f64, StageSpec)> {
+    let mut best: Option<(f64, StageSpec)> = None;
+    for st in stage_choices(width, can_coshard) {
+        let (t, mem) = stage_cost(cluster, &st, fwd, grad, wsh, ash);
+        if mem > cap {
+            continue;
+        }
+        if best.map(|(bt, _)| t < bt).unwrap_or(true) {
+            best = Some((t, st));
+        }
+    }
+    best
+}
+
 /// The inner levels of the three-level search. The *outer* loop composes
 /// `dp` replicas of a pipeline over `n / dp` devices (divisors of the
 /// cluster bounded by the global batch); the *middle* loop enumerates
@@ -457,7 +498,18 @@ fn stage_cost(
 /// against a dp whose sync decomposes. Uniform (homogeneous-equivalent)
 /// combinations are always included so the heterogeneous space is a strict
 /// superset of the megatron pipeline grid at every dp.
+///
+/// The inner choice is **memoized**: a stage's best-ranked transformation
+/// depends only on `(dp, pp, width)` — the model shares are fixed per
+/// `(dp, pp)` — so it is computed once per width and looked up across all
+/// compositions and dp replicas instead of re-ranked per stage slot
+/// (`hetero_candidates_impl(.., memoize = false)` keeps the direct path
+/// for the equivalence unit test).
 pub fn hetero_candidates(model: &Model, cluster: &Cluster) -> Vec<PlanSpec> {
+    hetero_candidates_impl(model, cluster, true)
+}
+
+fn hetero_candidates_impl(model: &Model, cluster: &Cluster, memoize: bool) -> Vec<PlanSpec> {
     let n = cluster.num_gpus();
     let layers = model.layers.len().max(1);
     let batch = model.global_batch.max(1);
@@ -488,6 +540,21 @@ pub fn hetero_candidates(model: &Model, cluster: &Cluster) -> Vec<PlanSpec> {
                     }
                 }
             }
+            // Inner-level memo: one ranked choice per stage width for this
+            // (dp, pp) point, shared by every composition below.
+            let memo: Vec<(usize, Option<(f64, StageSpec)>)> = STAGE_WIDTHS
+                .iter()
+                .map(|&w| {
+                    (w, best_stage_choice(cluster, w, can_coshard, fwd, grad, wsh, ash, cap))
+                })
+                .collect();
+            let choice_of = |w: usize| -> Option<(f64, StageSpec)> {
+                if memoize {
+                    memo.iter().find(|e| e.0 == w).and_then(|e| e.1)
+                } else {
+                    best_stage_choice(cluster, w, can_coshard, fwd, grad, wsh, ash, cap)
+                }
+            };
             let mut comps = Vec::new();
             compositions(per, pp, &mut Vec::new(), &mut comps);
             for comp in comps {
@@ -495,17 +562,7 @@ pub fn hetero_candidates(model: &Model, cluster: &Cluster) -> Vec<PlanSpec> {
                 let mut bottleneck = 0.0f64;
                 let mut feasible = true;
                 for &w in &comp {
-                    let mut best: Option<(f64, StageSpec)> = None;
-                    for st in stage_choices(w, can_coshard) {
-                        let (t, mem) = stage_cost(cluster, &st, fwd, grad, wsh, ash);
-                        if mem > cap {
-                            continue;
-                        }
-                        if best.as_ref().map(|&(bt, _)| t < bt).unwrap_or(true) {
-                            best = Some((t, st));
-                        }
-                    }
-                    match best {
+                    match choice_of(w) {
                         Some((t, st)) => {
                             bottleneck = bottleneck.max(t);
                             combo.push(st);
@@ -598,11 +655,11 @@ impl Planner for HeteroPlanner {
         hetero_candidates(model, cluster)
     }
 
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
-        let Some(stages) = spec.stages.clone() else {
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
+        let Some(stages) = spec.stages.as_deref() else {
             return Err(TransError::Invalid("hetero spec carries no per-stage list".into()));
         };
-        hetero(model, spec.dp.max(1), spec.micro.max(1), &stages)
+        hetero(model, spec.dp.max(1), spec.micro.max(1), stages)
     }
 }
 
@@ -618,8 +675,8 @@ mod tests {
     #[test]
     fn uniform_hetero_matches_megatron_pipeline() {
         let c = crate::cost::Cluster::v100(4);
-        let h = hetero(gpt3(0, 8, 256), 1, 4, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
-        let m = megatron(gpt3(0, 8, 256), 1, 2, 2, 4, PipeOrder::OneFOneB).unwrap();
+        let h = hetero(&gpt3(0, 8, 256), 1, 4, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+        let m = megatron(&gpt3(0, 8, 256), 1, 2, 2, 4, PipeOrder::OneFOneB).unwrap();
         let rh = crate::sim::run(&h.graph, &h.schedule, &c, CommMode::InterRvd).unwrap();
         let rm = crate::sim::run(&m.graph, &m.schedule, &c, CommMode::InterRvd).unwrap();
         let rel = (rh.makespan - rm.makespan).abs() / rm.makespan.max(1e-12);
@@ -630,7 +687,7 @@ mod tests {
     #[test]
     fn mixed_width_pipeline_builds_and_validates() {
         let out =
-            hetero(gpt3(0, 8, 256), 1, 4, &[StageSpec::tp(2), StageSpec::tp(1), StageSpec::tp(1)])
+            hetero(&gpt3(0, 8, 256), 1, 4, &[StageSpec::tp(2), StageSpec::tp(1), StageSpec::tp(1)])
                 .unwrap();
         let vs = validate(&out.graph, &out.schedule).expect("mixed hetero schedule valid");
         assert!(!vs.topo.is_empty());
@@ -645,9 +702,9 @@ mod tests {
         // Same 2-stage shape, second stage co-sharded: its device's peak
         // must drop vs. the plain variant (that is co-shard's whole point).
         let c = crate::cost::Cluster::v100(2);
-        let plain = hetero(gpt3(0, 4, 2048), 1, 2, &[StageSpec::tp(1), StageSpec::tp(1)]).unwrap();
+        let plain = hetero(&gpt3(0, 4, 2048), 1, 2, &[StageSpec::tp(1), StageSpec::tp(1)]).unwrap();
         let cs =
-            hetero(gpt3(0, 4, 2048), 1, 2, &[StageSpec::tp(1), StageSpec::coshard(4)]).unwrap();
+            hetero(&gpt3(0, 4, 2048), 1, 2, &[StageSpec::tp(1), StageSpec::coshard(4)]).unwrap();
         let rp = crate::sim::run(&plain.graph, &plain.schedule, &c, CommMode::InterRvd).unwrap();
         let rc = crate::sim::run(&cs.graph, &cs.schedule, &c, CommMode::InterRvd).unwrap();
         assert!(
@@ -661,7 +718,7 @@ mod tests {
     #[test]
     fn conflicting_stage_spec_is_rejected() {
         let bad = StageSpec { tp: 2, shards: 4, ..StageSpec::default() };
-        let err = hetero(gpt3(0, 8, 256), 1, 4, &[bad, StageSpec::tp(2)]).unwrap_err();
+        let err = hetero(&gpt3(0, 8, 256), 1, 4, &[bad, StageSpec::tp(2)]).unwrap_err();
         assert!(err.to_string().contains("mutually exclusive"), "{err}");
     }
 
@@ -688,7 +745,7 @@ mod tests {
 
     #[test]
     fn dp_replicated_hetero_builds_and_names_dp() {
-        let out = hetero(gpt3(0, 8, 256), 2, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+        let out = hetero(&gpt3(0, 8, 256), 2, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
         assert!(out.name.contains("dp2"), "{}", out.name);
         let vs = validate(&out.graph, &out.schedule).expect("dp hetero schedule valid");
         assert!(!vs.topo.is_empty());
@@ -696,6 +753,32 @@ mod tests {
         let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
         assert_eq!(r.per_device.len(), 8, "2 replicas x 4 devices");
         assert!(r.comm_bytes > 0, "cross-replica gradient sync must move bytes");
+    }
+
+    #[test]
+    fn stage_memoization_is_behavior_preserving() {
+        // The memoized inner-choice table must emit exactly the spec list
+        // the direct (re-ranked per stage slot) path emits...
+        let model = gpt3(0, 8, 256);
+        let cluster = crate::cost::Cluster::v100(8);
+        let memo = hetero_candidates_impl(&model, &cluster, true);
+        let plain = hetero_candidates_impl(&model, &cluster, false);
+        assert_eq!(memo, plain, "memoized candidate grid diverged from the unmemoized path");
+        assert!(!memo.is_empty());
+        // ...and building a memo-chosen spec is a pure function of the spec:
+        // two builds from the same borrowed model produce bitwise-identical
+        // simulated plans (the "cache and splice" path changes nothing).
+        let spec = memo.iter().find(|s| s.dp >= 2).expect("a replicated candidate");
+        let c = crate::cost::Cluster::v100(spec.devices());
+        let mk = || {
+            hetero(&model, spec.dp, spec.micro, spec.stages.as_deref().unwrap()).unwrap()
+        };
+        let (a, b) = (mk(), mk());
+        let ra = crate::sim::run(&a.graph, &a.schedule, &c, CommMode::InterRvd).unwrap();
+        let rb = crate::sim::run(&b.graph, &b.schedule, &c, CommMode::InterRvd).unwrap();
+        assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+        assert_eq!(ra.comm_bytes, rb.comm_bytes);
+        assert_eq!(ra.max_peak_mem(), rb.max_peak_mem());
     }
 
     #[test]

@@ -19,13 +19,14 @@ use crate::trans::{autograd, recompute};
 /// recompute behind the previous backward (the coarse "IL-block" baseline
 /// of Fig. 15 — SuperScaler's fine-grained dependencies leave it false).
 pub fn interlaced_pipeline(
-    mut model: Model,
+    model: &Model,
     s: usize,
     k: usize,
     layer_recompute: bool,
     block_recompute: bool,
 ) -> PlanResult {
-    let g = &mut model.graph;
+    let mut graph = model.graph.clone();
+    let g = &mut graph;
     let mut sched = Schedule::new();
     let emb_set: std::collections::HashSet<OpId> = model.emb_ops.iter().copied().collect();
 
@@ -164,7 +165,7 @@ pub fn interlaced_pipeline(
     }
 
     Ok(PlanOutput {
-        graph: model.graph,
+        graph,
         schedule: sched,
         name: format!(
             "interlaced-s{s}k{k}{}",
@@ -211,7 +212,7 @@ impl Planner for InterlacedPlanner {
             .collect()
     }
 
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
         interlaced_pipeline(
             model,
             spec.pp.max(1),
@@ -230,7 +231,7 @@ mod tests {
 
     #[test]
     fn interlaced_validates_and_shards_embedding() {
-        let out = interlaced_pipeline(mbart(0, 8, 128), 4, 4, false, false).unwrap();
+        let out = interlaced_pipeline(&mbart(0, 8, 128), 4, 4, false, false).unwrap();
         let c = crate::cost::Cluster::v100(4);
         let vs = crate::schedule::validate(&out.graph, &out.schedule).unwrap();
         let plan = crate::materialize::materialize(&out.graph, &vs, &c, CommMode::InterRvd);
@@ -253,8 +254,8 @@ mod tests {
         // Fig. 15: SuperScaler (fine deps) vs IL-block (coarse recompute
         // barrier) — the barrier adds bubble time.
         let c = crate::cost::Cluster::v100(4);
-        let fine = interlaced_pipeline(mbart(0, 8, 128), 4, 4, true, false).unwrap();
-        let block = interlaced_pipeline(mbart(0, 8, 128), 4, 4, true, true).unwrap();
+        let fine = interlaced_pipeline(&mbart(0, 8, 128), 4, 4, true, false).unwrap();
+        let block = interlaced_pipeline(&mbart(0, 8, 128), 4, 4, true, true).unwrap();
         let rf = crate::sim::run(&fine.graph, &fine.schedule, &c, CommMode::InterRvd).unwrap();
         let rb = crate::sim::run(&block.graph, &block.schedule, &c, CommMode::InterRvd).unwrap();
         // At this test scale the barrier binds only marginally; the

@@ -20,17 +20,20 @@ pub enum PipeOrder {
 }
 
 /// Build the Megatron plan. Requires `dp * pp * tp` devices; `k` is the
-/// micro-batch count per dp replica.
+/// micro-batch count per dp replica. The model is borrowed: the graph is
+/// cloned (it is what the transformation rewrites); layer lists and TP-dim
+/// metadata are read through the borrow.
 pub fn megatron(
-    mut model: Model,
+    model: &Model,
     dp: usize,
     pp: usize,
     tp: usize,
     k: usize,
     order: PipeOrder,
 ) -> PlanResult {
-    let tp_dim = model.tp_dim.clone();
-    let g = &mut model.graph;
+    let tp_dim = &model.tp_dim;
+    let mut graph = model.graph.clone();
+    let g = &mut graph;
     let mut sched = Schedule::new();
     let stages = balance_stages(g, &model.layers, pp);
     let stage_of_layer: HashMap<usize, usize> = stages
@@ -105,7 +108,7 @@ pub fn megatron(
     }
 
     Ok(PlanOutput {
-        graph: model.graph,
+        graph,
         schedule: sched,
         name: format!("megatron-dp{dp}pp{pp}tp{tp}k{k}-{order:?}"),
     })
@@ -152,7 +155,7 @@ impl Planner for MegatronPlanner {
         out
     }
 
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
         megatron(
             model,
             spec.dp.max(1),
@@ -187,7 +190,7 @@ impl Planner for TpPlanner {
         Vec::new()
     }
 
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
         megatron(
             model,
             spec.dp.max(1),
@@ -224,7 +227,7 @@ impl Planner for GPipePlanner {
             .collect()
     }
 
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
         megatron(
             model,
             spec.dp.max(1),
@@ -245,7 +248,7 @@ mod tests {
     #[test]
     fn tensor_parallel_only_runs_and_communicates() {
         let model = gpt3(0, 4, 256);
-        let out = megatron(model, 1, 1, 4, 1, PipeOrder::OneFOneB).unwrap();
+        let out = megatron(&model, 1, 1, 4, 1, PipeOrder::OneFOneB).unwrap();
         let c = crate::cost::Cluster::v100(4);
         let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
         assert!(r.comm_bytes > 0, "TP must communicate activations");
@@ -258,8 +261,8 @@ mod tests {
         // 1F1B's early backwards free activations sooner; with several
         // micro-batches its peak must be <= GPipe's.
         let c = crate::cost::Cluster::v100(4);
-        let a = megatron(gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::OneFOneB).unwrap();
-        let b = megatron(gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::GPipe).unwrap();
+        let a = megatron(&gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::OneFOneB).unwrap();
+        let b = megatron(&gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::GPipe).unwrap();
         let ra = crate::sim::run(&a.graph, &a.schedule, &c, CommMode::InterRvd).unwrap();
         let rb = crate::sim::run(&b.graph, &b.schedule, &c, CommMode::InterRvd).unwrap();
         assert!(
@@ -273,8 +276,8 @@ mod tests {
     #[test]
     fn pipeline_has_bubbles_dp_does_not() {
         let c = crate::cost::Cluster::v100(4);
-        let pp = megatron(gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::OneFOneB).unwrap();
-        let dp = megatron(gpt3(0, 8, 256), 4, 1, 1, 1, PipeOrder::OneFOneB).unwrap();
+        let pp = megatron(&gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::OneFOneB).unwrap();
+        let dp = megatron(&gpt3(0, 8, 256), 4, 1, 1, 1, PipeOrder::OneFOneB).unwrap();
         let rp = crate::sim::run(&pp.graph, &pp.schedule, &c, CommMode::InterRvd).unwrap();
         let rd = crate::sim::run(&dp.graph, &dp.schedule, &c, CommMode::InterRvd).unwrap();
         let (_, _, bub_p) = rp.breakdown();

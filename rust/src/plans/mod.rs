@@ -28,7 +28,13 @@
 //!   [`PlanSpec::parse`] inverts it with typed [`SpecParseError`]s.
 //! * [`Planner`] — the trait every sProgram implements: `name()`,
 //!   `applicable(&Model)`, `default_spec(...)`, `candidates(...)` (its
-//!   slice of the search grid) and `build(Model, &PlanSpec) -> PlanResult`.
+//!   slice of the search grid) and `build(&Model, &PlanSpec) -> PlanResult`.
+//!   `build` **borrows** the model: the search engine builds one probe
+//!   model per run and shares it read-only across all worker threads;
+//!   every plan function clones only the graph (the structure the
+//!   transformation rewrites) and reads layer/tp-dim/embedding metadata
+//!   through the borrow — nothing in the per-candidate path reconstructs
+//!   a model from its builder.
 //! * [`registry`] — the central table of all planners. The CLI, the
 //!   benches, the examples and the search engine ([`crate::search`]) all
 //!   resolve plan names here, so a new sProgram becomes visible everywhere

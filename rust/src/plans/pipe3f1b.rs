@@ -12,8 +12,9 @@ use crate::trans::autograd;
 /// The model must be built with recycled passes (ops of passes 0..n-1
 /// tagged `no_grad`, all passes sharing layer tags) — see
 /// [`crate::models::alphafold2`].
-pub fn pipeline_3f1b(mut model: Model, s: usize, k: usize) -> PlanResult {
-    let g = &mut model.graph;
+pub fn pipeline_3f1b(model: &Model, s: usize, k: usize) -> PlanResult {
+    let mut graph = model.graph.clone();
+    let g = &mut graph;
     let mut sched = Schedule::new();
     let stages = balance_stages(g, &model.layers, s);
 
@@ -97,7 +98,7 @@ pub fn pipeline_3f1b(mut model: Model, s: usize, k: usize) -> PlanResult {
     }
 
     Ok(PlanOutput {
-        graph: model.graph,
+        graph,
         schedule: sched,
         name: format!("3f1b-s{s}k{k}"),
     })
@@ -140,7 +141,7 @@ impl Planner for ThreeFOneBPlanner {
             .collect()
     }
 
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
         pipeline_3f1b(model, spec.pp.max(1), spec.micro.max(1))
     }
 }
@@ -153,7 +154,7 @@ mod tests {
 
     #[test]
     fn f3b1_runs_and_shards_weights_across_stages() {
-        let out = pipeline_3f1b(alphafold2(0, 8), 4, 4).unwrap();
+        let out = pipeline_3f1b(&alphafold2(0, 8), 4, 4).unwrap();
         let c = crate::cost::Cluster::v100(4);
         let vs = crate::schedule::validate(&out.graph, &out.schedule).unwrap();
         let plan = crate::materialize::materialize(&out.graph, &vs, &c, CommMode::InterRvd);
@@ -175,7 +176,7 @@ mod tests {
     fn f3b1_pipeline_comm_is_boundary_only() {
         // 3F1B communicates activations at stage boundaries only — far less
         // than the total activation volume.
-        let out = pipeline_3f1b(alphafold2(0, 8), 4, 4).unwrap();
+        let out = pipeline_3f1b(&alphafold2(0, 8), 4, 4).unwrap();
         let c = crate::cost::Cluster::v100(4);
         let r = crate::sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
         let act_bytes: u64 = out

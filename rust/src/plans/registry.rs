@@ -47,10 +47,12 @@ pub fn find(name: &str) -> Option<&'static dyn Planner> {
     all().iter().copied().find(|p| p.kind() == kind)
 }
 
-/// Build plan `name` from `spec`. Panics on an unregistered name — that is
-/// a programming error in the caller; user-facing code resolves names via
-/// [`find`] first and reports gracefully.
-pub fn build(name: &str, model: Model, spec: &PlanSpec) -> PlanResult {
+/// Build plan `name` from `spec`. The model is borrowed (see
+/// [`Planner::build`] — one probe model serves any number of builds).
+/// Panics on an unregistered name — that is a programming error in the
+/// caller; user-facing code resolves names via [`find`] first and reports
+/// gracefully.
+pub fn build(name: &str, model: &Model, spec: &PlanSpec) -> PlanResult {
     find(name)
         .unwrap_or_else(|| panic!("unregistered plan '{name}' (see `superscaler plans`)"))
         .build(model, spec)

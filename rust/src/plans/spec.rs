@@ -503,7 +503,16 @@ pub trait Planner: Sync {
     fn candidates(&self, model: &Model, cluster: &Cluster) -> Vec<PlanSpec>;
 
     /// Transform + schedule the model according to `spec`.
-    fn build(&self, model: Model, spec: &PlanSpec) -> PlanResult;
+    ///
+    /// The model is **borrowed**: one probe model built per search is
+    /// shared read-only across every candidate build (and across the
+    /// worker threads — the trait is `Sync` and so is [`Model`]). A
+    /// planner clones only the sub-structures it actually mutates — in
+    /// practice the graph, which every transformation rewrites — and reads
+    /// the layer/tp-dim/embedding metadata straight through the borrow.
+    /// This is what makes per-candidate evaluation zero-rebuild: nothing
+    /// ever reconstructs the model from its builder inside a search.
+    fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult;
 }
 
 #[cfg(test)]

@@ -16,9 +16,11 @@ use crate::models::Model;
 use crate::schedule::{Schedule, CPU_DEVICE};
 use crate::trans::{autograd, op_trans, TransformAlgo};
 
-/// `zero3(model, ndev, offload)`.
-pub fn zero3(mut model: Model, ndev: usize, offload: bool) -> PlanResult {
-    let g = &mut model.graph;
+/// `zero3(model, ndev, offload)`. Borrows the model; only the graph is
+/// cloned into the plan under construction.
+pub fn zero3(model: &Model, ndev: usize, offload: bool) -> PlanResult {
+    let mut graph = model.graph.clone();
+    let g = &mut graph;
     let mut sched = Schedule::new();
 
     let fwd_ops: Vec<_> = g.live_ops().filter(|o| o.is_forward).map(|o| o.id).collect();
@@ -65,7 +67,7 @@ pub fn zero3(mut model: Model, ndev: usize, offload: bool) -> PlanResult {
     }
 
     Ok(PlanOutput {
-        graph: model.graph,
+        graph,
         schedule: sched,
         name: format!("zero3{}{ndev}", if offload { "-offload" } else { "" }),
     })
@@ -98,7 +100,7 @@ impl super::Planner for Zero3Planner {
         vec![self.default_spec(cluster.num_gpus(), 1)]
     }
 
-    fn build(&self, model: Model, spec: &super::PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &super::PlanSpec) -> PlanResult {
         zero3(model, spec.dp.max(1), spec.offload)
     }
 }
@@ -128,7 +130,7 @@ impl super::Planner for Zero3OffloadPlanner {
         vec![self.default_spec(cluster.num_gpus(), 1)]
     }
 
-    fn build(&self, model: Model, spec: &super::PlanSpec) -> PlanResult {
+    fn build(&self, model: &Model, spec: &super::PlanSpec) -> PlanResult {
         // default_spec sets offload = true; honoring the field keeps
         // `--offload false` truthful instead of silently ignored.
         zero3(model, spec.dp.max(1), spec.offload)
@@ -145,8 +147,8 @@ mod tests {
     #[test]
     fn zero_shards_static_memory_vs_dp() {
         let c = crate::cost::Cluster::v100(4);
-        let z = zero3(gpt3(0, 8, 256), 4, false).unwrap();
-        let d = data_parallel(gpt3(0, 8, 256), 4).unwrap();
+        let z = zero3(&gpt3(0, 8, 256), 4, false).unwrap();
+        let d = data_parallel(&gpt3(0, 8, 256), 4).unwrap();
         let rz = crate::sim::run(&z.graph, &z.schedule, &c, CommMode::InterRvd).unwrap();
         let rd = crate::sim::run(&d.graph, &d.schedule, &c, CommMode::InterRvd).unwrap();
         // ZeRO's optimizer state is sharded 4 ways -> much smaller static
@@ -163,7 +165,7 @@ mod tests {
 
     #[test]
     fn offload_moves_optimizer_to_cpu() {
-        let z = zero3(gpt3(0, 4, 256), 2, true).unwrap();
+        let z = zero3(&gpt3(0, 4, 256), 2, true).unwrap();
         let opt_devices: Vec<_> = z
             .graph
             .live_ops()

@@ -8,6 +8,21 @@
 //! survivor in parallel on [`crate::util::pool`] worker threads and rank the
 //! results by iteration time.
 //!
+//! # Zero-rebuild evaluation
+//!
+//! The whole search runs off **one** borrowed probe model: [`search`]
+//! takes `&Model`, shares it read-only across the worker threads, and
+//! every candidate build clones only the graph inside
+//! [`Planner::build`](crate::plans::Planner::build) — nothing in the
+//! per-candidate path (or the DES re-rank) ever reconstructs the model
+//! from its builder. The `--fidelity des` re-rank is zero-rebuild too:
+//! evaluation keeps the `(Graph, TaskGraph, Plan)` artifacts of the
+//! current top [`SearchConfig::des_top`] list-ranked candidates in a
+//! bounded cache (memory stays O(des_top), not O(grid) — worse-ranked
+//! artifacts are evicted as better ones arrive) and feeds them straight
+//! to [`des::execute`], so the transform → validate → materialize
+//! pipeline runs exactly once per evaluated candidate.
+//!
 //! # Three-level search over replicated heterogeneous pipelines
 //!
 //! The engine (here) enumerates every registered planner's candidates —
@@ -56,14 +71,16 @@
 
 use crate::cost::{Cluster, ModelStats};
 use crate::des;
-use crate::materialize::{self, CommMode};
+use crate::graph::Graph;
+use crate::materialize::{self, CommMode, Plan};
 use crate::models::Model;
-use crate::plans::{registry, PlanSpec, Planner};
+use crate::plans::{registry, PlanOutput, PlanSpec, Planner};
 use crate::schedule;
 use crate::sim;
 use crate::util::pool;
 use crate::util::table::Table;
 use crate::util::{fmt_bytes, fmt_secs};
+use std::sync::Mutex;
 
 /// Which execution model scores (and finally ranks) the candidates.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -430,6 +447,14 @@ impl SearchReport {
             ],
         );
         let n = if top == 0 { self.ranked.len() } else { top };
+        // Failed rows share one shape (six dash columns + a status); build
+        // each row's strings once instead of per-arm duplicates.
+        let err_row = |t: &mut Table, rank: String, c: &Candidate, status: String| {
+            let mut row = vec![rank, c.planner.to_string(), c.spec.label()];
+            row.extend(std::iter::repeat_with(|| "-".to_string()).take(6));
+            row.push(status);
+            t.row(row);
+        };
         for (i, c) in self.ranked.iter().take(n).enumerate() {
             let rank = (i + 1).to_string();
             match &c.outcome {
@@ -451,65 +476,101 @@ impl SearchReport {
                         "ok".to_string()
                     },
                 ]),
-                Outcome::BuildError(e) => t.row([
-                    rank,
-                    c.planner.to_string(),
-                    c.spec.label(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    format!("invalid: {e}"),
-                ]),
-                Outcome::ScheduleError(e) => t.row([
-                    rank,
-                    c.planner.to_string(),
-                    c.spec.label(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    "-".to_string(),
-                    format!("deadlock: {e}"),
-                ]),
+                Outcome::BuildError(e) => err_row(&mut t, rank, c, format!("invalid: {e}")),
+                Outcome::ScheduleError(e) => err_row(&mut t, rank, c, format!("deadlock: {e}")),
             }
         }
         t
     }
 }
 
-fn evaluate<F: Fn() -> Model>(
-    build_model: &F,
+/// Evaluation artifacts kept for the DES re-rank: the transformed graph,
+/// the prepared task graph (serial hints included) and the materialized
+/// plan — exactly what [`des::execute`] consumes, so a re-score replays
+/// the candidate without re-running transform → validate → materialize.
+struct DesArtifacts {
+    graph: Graph,
+    tg: sim::TaskGraph,
+    plan: Plan,
+}
+
+/// Bounded best-k artifact cache, keyed by candidate identity and ordered
+/// by list makespan — the same primary key the ranking's class-0 head
+/// sorts by, so after evaluation it holds the artifacts of (up to) the
+/// `des_top` candidates the DES will re-score. Offers are made under a
+/// mutex from the worker threads; the final contents are the k smallest
+/// `(makespan, key)` pairs regardless of arrival order, which keeps
+/// `--fidelity des` searches deterministic under any worker count.
+struct ArtifactCache {
+    cap: usize,
+    inner: Mutex<Vec<(u64, String, DesArtifacts)>>,
+}
+
+impl ArtifactCache {
+    fn new(cap: usize) -> ArtifactCache {
+        ArtifactCache { cap: cap.max(1), inner: Mutex::new(Vec::new()) }
+    }
+
+    /// Keep `art` iff it ranks within the best `cap` offers so far; the
+    /// worst-ranked cached entry is evicted (memory stays O(cap)).
+    fn offer(&self, makespan: f64, key: String, art: DesArtifacts) {
+        let bits = makespan.to_bits(); // makespans are >= 0: bit order = numeric order
+        let mut v = self.inner.lock().unwrap();
+        if v.len() >= self.cap {
+            match v.last() {
+                Some(last) if (bits, key.as_str()) >= (last.0, last.1.as_str()) => return,
+                _ => {}
+            }
+        }
+        let pos = v.partition_point(|e| (e.0, e.1.as_str()) <= (bits, key.as_str()));
+        v.insert(pos, (bits, key, art));
+        v.truncate(self.cap);
+    }
+
+    fn take(&self, key: &str) -> Option<DesArtifacts> {
+        let mut v = self.inner.lock().unwrap();
+        let i = v.iter().position(|e| e.1 == key)?;
+        Some(v.remove(i).2)
+    }
+}
+
+/// Cache/identity key of one candidate: planner name + complete spec label.
+fn cand_key(planner: &str, spec: &PlanSpec) -> String {
+    format!("{planner}|{}", spec.label())
+}
+
+fn evaluate(
+    model: &Model,
     planner: &'static dyn Planner,
     spec: &PlanSpec,
     cluster: &Cluster,
     comm: CommMode,
+    cache: Option<&ArtifactCache>,
 ) -> Candidate {
-    let model = build_model();
-    match planner.build(model, spec) {
+    // One spec clone up front, moved into whichever outcome arm fires.
+    let spec = spec.clone();
+    match planner.build(model, &spec) {
         Err(e) => Candidate {
             planner: planner.name(),
-            spec: spec.clone(),
+            spec,
             plan_name: String::new(),
             outcome: Outcome::BuildError(e.to_string()),
         },
-        Ok(out) => match sim::run(&out.graph, &out.schedule, cluster, comm) {
-            Err(e) => Candidate {
-                planner: planner.name(),
-                spec: spec.clone(),
-                plan_name: out.name,
-                outcome: Outcome::ScheduleError(e.to_string()),
-            },
-            Ok(r) => {
-                let (_, _, bubble) = r.breakdown();
-                Candidate {
+        Ok(out) => {
+            let PlanOutput { graph, schedule, name } = out;
+            match schedule::validate(&graph, &schedule) {
+                Err(e) => Candidate {
                     planner: planner.name(),
-                    spec: spec.clone(),
-                    plan_name: out.name,
-                    outcome: Outcome::Ok(Metrics {
+                    spec,
+                    plan_name: name,
+                    outcome: Outcome::ScheduleError(e.to_string()),
+                },
+                Ok(vs) => {
+                    let plan = materialize::materialize(&graph, &vs, cluster, comm);
+                    let tg = sim::TaskGraph::prepare(&vs, &plan);
+                    let r = sim::simulate_prepared(&graph, &tg, &plan, cluster);
+                    let (_, _, bubble) = r.breakdown();
+                    let metrics = Metrics {
                         makespan: r.makespan,
                         des_makespan: None,
                         des_oom: false,
@@ -518,17 +579,36 @@ fn evaluate<F: Fn() -> Model>(
                         peak_mem: r.max_peak_mem(),
                         bubble_frac: bubble / r.makespan.max(1e-12),
                         oom: r.oom,
-                    }),
+                    };
+                    // Valid non-OOM candidates may reach the DES re-rank
+                    // head: hand the artifacts to the bounded cache instead
+                    // of rebuilding them there.
+                    if let Some(cache) = cache {
+                        if !r.oom {
+                            cache.offer(
+                                r.makespan,
+                                cand_key(planner.name(), &spec),
+                                DesArtifacts { graph, tg, plan },
+                            );
+                        }
+                    }
+                    Candidate {
+                        planner: planner.name(),
+                        spec,
+                        plan_name: name,
+                        outcome: Outcome::Ok(metrics),
+                    }
                 }
             }
-        },
+        }
     }
 }
 
 /// Run the full search: enumerate + prune the spec grid, dominance-prune
 /// against the analytic lower bound, evaluate every survivor in parallel
-/// (each worker rebuilds the model via `build_model` — plan construction
-/// consumes its model), rank deterministically.
+/// against the **borrowed** probe model (built exactly once by the caller;
+/// workers share it read-only and clone only the graph per build), rank
+/// deterministically.
 ///
 /// Dominance pruning is two-phase so it stays deterministic under any
 /// worker count: candidates are sorted by lower bound, the best-bounded
@@ -536,17 +616,12 @@ fn evaluate<F: Fn() -> Model>(
 /// are skipped iff their *bound* exceeds the best *simulated* seed time —
 /// such a candidate's true time can only be worse, so the optimum is never
 /// pruned.
-pub fn search<F>(build_model: F, cluster: &Cluster, cfg: &SearchConfig) -> SearchReport
-where
-    F: Fn() -> Model + Sync,
-{
+pub fn search(model: &Model, cluster: &Cluster, cfg: &SearchConfig) -> SearchReport {
     let t0 = std::time::Instant::now();
-    let probe = build_model();
-    let model_name = probe.name.clone();
-    let stats = ModelStats::of(&probe.graph);
+    let model_name = model.name.clone();
+    let stats = ModelStats::of(&model.graph);
     let (cands, pruned, excluded) =
-        enumerate_constrained(&probe, cluster, cfg.hetero, cfg.dp_min.max(1));
-    drop(probe);
+        enumerate_constrained(model, cluster, cfg.hetero, cfg.dp_min.max(1));
     // Sort by analytic lower bound (stable tie-break on the enumeration
     // order via sort_by's stability) so both the candidate cap and the
     // pruning seed keep the most promising specs.
@@ -566,9 +641,13 @@ where
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     };
     let comm = cfg.comm;
+    // The DES artifact cache only exists (and only costs memory) when a
+    // re-rank will consume it.
+    let cache =
+        if cfg.fidelity == Fidelity::Des { Some(ArtifactCache::new(cfg.des_top)) } else { None };
     let eval_at = |i: usize| -> Candidate {
         let (_, p, spec) = &cands[i];
-        evaluate(&build_model, *p, spec, cluster, comm)
+        evaluate(model, *p, spec, cluster, comm, cache.as_ref())
     };
 
     let seed_len = if cfg.prune { PRUNE_SEED.min(cands.len()) } else { cands.len() };
@@ -598,9 +677,12 @@ where
             .then_with(|| a.plan_name.cmp(&b.plan_name))
     });
     // ---- fidelity tier 3: DES re-rank of the top-k list candidates ----
-    // Re-building a candidate is cheap relative to simulating it, so the
-    // re-score runs the full transform → validate → materialize pipeline
-    // again rather than holding every evaluated plan in memory.
+    // Zero-rebuild: evaluation already cached the (graph, task graph,
+    // plan) artifacts of the top `des_top` list-ranked candidates, so the
+    // re-score feeds them straight to the discrete-event engine. A cache
+    // miss (possible only when candidates tie exactly in makespan at the
+    // cap boundary) falls back to rebuilding from the same borrowed model
+    // — deterministic either way, and still no model reconstruction.
     let mut des_rescored = 0usize;
     if cfg.fidelity == Fidelity::Des {
         let k = ranked
@@ -610,8 +692,14 @@ where
             .count();
         let des_of = |i: usize| -> Option<(f64, bool)> {
             let c = &ranked[i];
+            if let Some(art) =
+                cache.as_ref().and_then(|ch| ch.take(&cand_key(c.planner, &c.spec)))
+            {
+                let r = des::execute(&art.graph, &art.plan, cluster, &art.tg);
+                return Some((r.makespan, r.oom));
+            }
             let planner = registry::find(c.planner)?;
-            let out = planner.build(build_model(), &c.spec).ok()?;
+            let out = planner.build(model, &c.spec).ok()?;
             let vs = schedule::validate(&out.graph, &out.schedule).ok()?;
             let plan = materialize::materialize(&out.graph, &vs, cluster, comm);
             let r = des::simulate(&out.graph, &vs, &plan, cluster);

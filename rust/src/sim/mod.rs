@@ -42,12 +42,38 @@
 //! [`TaskGraph`] preparation (dependency DAG + per-device serial hints),
 //! so they disagree only where the execution *model* differs — never on
 //! which order the schedule asked for.
+//!
+//! # The zero-rebuild evaluation pipeline
+//!
+//! This simulator is the inner loop of the plan search, which evaluates
+//! thousands of candidates off **one** borrowed probe model (built once
+//! per [`crate::search::search`] run; planners clone only the graph).
+//! Correspondingly the hot paths here are allocation-lean: the scheduling
+//! loop resolves every task's device list once up front and indexes
+//! per-device state (availability, stats) by dense slot rather than hash
+//! map, task labels are interned `Arc<str>`s from materialization, and
+//! the `(Graph, TaskGraph, Plan)` triple of a top candidate is cached by
+//! the search (O(`des_top`) of them) so the DES re-rank replays it via
+//! [`crate::des::execute`] instead of re-running
+//! transform → validate → materialize.
 
 use crate::cost::Cluster;
 use crate::graph::{Graph, TensorKind};
 use crate::materialize::{Plan, Task, TaskId, TaskKind};
 use crate::schedule::{DeviceId, ValidatedSchedule, CPU_DEVICE};
 use std::collections::HashMap;
+
+/// Dense per-device state slot shared by BOTH execution engines (host = 0,
+/// GPU `d` = `d + 1`). One definition on purpose: the list scheduler and
+/// the DES must agree bitwise on identical plans, so their device indexing
+/// must be literally the same code.
+pub(crate) fn dev_slot(d: DeviceId) -> usize {
+    if d == CPU_DEVICE {
+        0
+    } else {
+        d + 1
+    }
+}
 
 /// Per-device simulation statistics.
 #[derive(Clone, Debug, Default)]
@@ -153,7 +179,7 @@ impl TaskGraph {
         if let Some(vs) = vs {
             for ops in vs.device_order.values() {
                 for w in ops.windows(2) {
-                    let (a, b) = (plan.task_of_op[&w[0]], plan.task_of_op[&w[1]]);
+                    let (a, b) = (plan.task_of_op[w[0]], plan.task_of_op[w[1]]);
                     consumers[a].push(b);
                     indeg[b] += 1;
                 }
@@ -342,32 +368,38 @@ pub fn simulate_prepared(g: &Graph, tg: &TaskGraph, plan: &Plan, cluster: &Clust
     // on the 100k-task Fig. 12 plans (see EXPERIMENTS.md §Perf).
     let mut finish = vec![0.0f64; n];
     let mut start = vec![0.0f64; n];
-    let mut dev_free: HashMap<DeviceId, f64> = HashMap::new();
-    let mut stats: HashMap<DeviceId, DeviceStat> = HashMap::new();
+    // Per-task device lists resolved ONCE: `Task::devices` allocates (and
+    // sorts) a fresh Vec per call, and the lazy heap below would otherwise
+    // re-ask it on every push, pop and re-push. Device state is densely
+    // indexed by slot (host = 0, GPU d = d + 1) instead of hashed.
+    let devs: Vec<Vec<DeviceId>> = plan.tasks.iter().map(|t| t.devices()).collect();
+    let max_gpu =
+        devs.iter().flatten().copied().filter(|&d| d != CPU_DEVICE).max().unwrap_or(0);
+    let slot = dev_slot;
+    let nslots = max_gpu + 2;
+    let mut dev_free = vec![0.0f64; nslots];
+    let mut stats: Vec<Option<DeviceStat>> = vec![None; nslots];
     // Min-heap keys: (est_bits, !is_comm, id). f64 >= 0 compares correctly
     // through its raw bit pattern.
     let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, bool, TaskId)>> =
         std::collections::BinaryHeap::new();
-    let est_of = |t: TaskId,
-                  finish: &[f64],
-                  dev_free: &HashMap<DeviceId, f64>,
-                  plan: &Plan| {
+    let est_of = |t: TaskId, finish: &[f64], dev_free: &[f64]| {
         let task = &plan.tasks[t];
         let mut est = task.deps.iter().map(|&d| finish[d]).fold(0.0f64, f64::max);
-        for d in task.devices() {
-            est = est.max(*dev_free.get(&d).unwrap_or(&0.0));
+        for &d in &devs[t] {
+            est = est.max(dev_free[slot(d)]);
         }
         est
     };
     for t in 0..n {
         if indeg[t] == 0 {
-            let est = est_of(t, &finish, &dev_free, plan);
+            let est = est_of(t, &finish, &dev_free);
             heap.push(std::cmp::Reverse((est.to_bits(), !plan.tasks[t].is_comm(), t)));
         }
     }
     let mut scheduled = 0usize;
     while let Some(std::cmp::Reverse((est_bits, _, t))) = heap.pop() {
-        let est_now = est_of(t, &finish, &dev_free, plan);
+        let est_now = est_of(t, &finish, &dev_free);
         if est_now.to_bits() > est_bits {
             // Stale: devices got busier since this entry was pushed.
             heap.push(std::cmp::Reverse((est_now.to_bits(), !plan.tasks[t].is_comm(), t)));
@@ -376,11 +408,10 @@ pub fn simulate_prepared(g: &Graph, tg: &TaskGraph, plan: &Plan, cluster: &Clust
         let task = &plan.tasks[t];
         start[t] = est_now;
         finish[t] = est_now + task.duration;
-        for d in task.devices() {
-            dev_free.insert(d, finish[t]);
-            let st = stats
-                .entry(d)
-                .or_insert_with(|| DeviceStat { device: d, ..Default::default() });
+        for &d in &devs[t] {
+            dev_free[slot(d)] = finish[t];
+            let st = stats[slot(d)]
+                .get_or_insert_with(|| DeviceStat { device: d, ..Default::default() });
             if task.is_comm() {
                 st.comm += task.duration;
             } else {
@@ -391,7 +422,7 @@ pub fn simulate_prepared(g: &Graph, tg: &TaskGraph, plan: &Plan, cluster: &Clust
         for &v in &consumers[t] {
             indeg[v] -= 1;
             if indeg[v] == 0 {
-                let est = est_of(v, &finish, &dev_free, plan);
+                let est = est_of(v, &finish, &dev_free);
                 heap.push(std::cmp::Reverse((est.to_bits(), !plan.tasks[v].is_comm(), v)));
             }
         }
@@ -402,6 +433,7 @@ pub fn simulate_prepared(g: &Graph, tg: &TaskGraph, plan: &Plan, cluster: &Clust
     // ---- memory watermark ----
     // Activation regions: live from producer start to last-consumer finish;
     // the shared event stream reduced to a per-device high-watermark.
+    // (Every event device produced a compute task above, so its slot fits.)
     for (dev, evs) in activation_events(g, plan, &start, &finish) {
         let mut cur: i64 = 0;
         let mut peak: i64 = 0;
@@ -409,23 +441,22 @@ pub fn simulate_prepared(g: &Graph, tg: &TaskGraph, plan: &Plan, cluster: &Clust
             cur += delta;
             peak = peak.max(cur);
         }
-        let st = stats
-            .entry(dev)
-            .or_insert_with(|| DeviceStat { device: dev, ..Default::default() });
+        let st = stats[slot(dev)]
+            .get_or_insert_with(|| DeviceStat { device: dev, ..Default::default() });
         st.peak_mem = peak as u64;
     }
     // Add static memory + OOM check.
     let cap = cluster.spec.mem_bytes;
-    for (dev, st) in stats.iter_mut() {
-        st.peak_mem += plan.static_mem.get(dev).copied().unwrap_or(0);
+    for st in stats.iter_mut().flatten() {
+        st.peak_mem += plan.static_mem.get(&st.device).copied().unwrap_or(0);
         st.bubble = (makespan - st.compute - st.comm).max(0.0);
-        if *dev != CPU_DEVICE {
+        if st.device != CPU_DEVICE {
             st.oom = st.peak_mem > cap;
         }
     }
 
     let total_flops = g.total_flops();
-    let mut per_device: Vec<DeviceStat> = stats.into_values().collect();
+    let mut per_device: Vec<DeviceStat> = stats.into_iter().flatten().collect();
     per_device.sort_by_key(|d| d.device);
     let ngpu = per_device.iter().filter(|d| d.device != CPU_DEVICE).count().max(1);
     let oom = per_device.iter().any(|d| d.oom);

@@ -65,7 +65,7 @@ fn zero_overlap_schedule_agrees_exactly_with_list_sim() {
 /// reports a strictly smaller makespan than the device-blocking list model.
 #[test]
 fn des_credits_overlap_on_gpt3_pipeline() {
-    let out = megatron(models::gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::OneFOneB).unwrap();
+    let out = megatron(&models::gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::OneFOneB).unwrap();
     let c = Cluster::v100(4);
     let vs = validate(&out.graph, &out.schedule).unwrap();
     let plan = materialize(&out.graph, &vs, &c, CommMode::InterRvd);
@@ -90,7 +90,7 @@ fn des_credits_overlap_on_gpt3_pipeline() {
 #[test]
 fn des_is_bitwise_deterministic_across_runs() {
     let run = || {
-        let out = megatron(models::gpt3(0, 8, 256), 2, 2, 1, 4, PipeOrder::OneFOneB).unwrap();
+        let out = megatron(&models::gpt3(0, 8, 256), 2, 2, 1, 4, PipeOrder::OneFOneB).unwrap();
         let c = Cluster::v100(4);
         let vs = validate(&out.graph, &out.schedule).unwrap();
         let plan = materialize(&out.graph, &vs, &c, CommMode::InterRvd);
@@ -118,8 +118,9 @@ fn des_search_deterministic_across_worker_pools() {
         hetero: false,
         ..SearchConfig::default()
     };
-    let a = search::search(|| models::gpt3(0, 8, 256), &cluster, &cfg(1));
-    let b = search::search(|| models::gpt3(0, 8, 256), &cluster, &cfg(8));
+    let model = models::gpt3(0, 8, 256);
+    let a = search::search(&model, &cluster, &cfg(1));
+    let b = search::search(&model, &cluster, &cfg(8));
     let (ba, bb) = (a.best().expect("best a"), b.best().expect("best b"));
     assert_eq!(ba.plan_name, bb.plan_name);
     let (ma, mb) = (ba.metrics().unwrap(), bb.metrics().unwrap());
@@ -131,8 +132,9 @@ fn des_search_deterministic_across_worker_pools() {
 #[test]
 fn search_fidelity_des_carries_both_scores() {
     let cluster = Cluster::v100(4);
+    let model = models::gpt3(0, 8, 256);
     let report = search::search(
-        || models::gpt3(0, 8, 256),
+        &model,
         &cluster,
         &SearchConfig {
             workers: 2,
@@ -167,7 +169,7 @@ fn search_fidelity_des_carries_both_scores() {
     assert!(rendered.contains("des-rescored"), "{rendered}");
     // List fidelity leaves tier 3 off.
     let list_report = search::search(
-        || models::gpt3(0, 8, 256),
+        &model,
         &cluster,
         &SearchConfig { workers: 2, ..SearchConfig::default() },
     );
@@ -201,7 +203,7 @@ fn dp_plans_des_makespan_between_bound_and_list() {
     let cases = [
         Case {
             name: "megatron dp2 tp2",
-            build: || megatron(models::gpt3(0, 8, 256), 2, 1, 2, 2, PipeOrder::OneFOneB).unwrap(),
+            build: || megatron(&models::gpt3(0, 8, 256), 2, 1, 2, 2, PipeOrder::OneFOneB).unwrap(),
             spec: PlanSpec {
                 dp: 2,
                 tp: 2,
@@ -214,7 +216,7 @@ fn dp_plans_des_makespan_between_bound_and_list() {
         Case {
             name: "hetero dp2 [tp2|tp2]",
             build: || {
-                hetero(models::gpt3(0, 8, 256), 2, 2, &[StageSpec::tp(2), StageSpec::tp(2)])
+                hetero(&models::gpt3(0, 8, 256), 2, 2, &[StageSpec::tp(2), StageSpec::tp(2)])
                     .unwrap()
             },
             spec: PlanSpec::hetero_dp(2, vec![StageSpec::tp(2), StageSpec::tp(2)], 2),
@@ -224,7 +226,7 @@ fn dp_plans_des_makespan_between_bound_and_list() {
         Case {
             name: "hetero dp4 [tp2|tp2] cross-server",
             build: || {
-                hetero(models::gpt3(0, 8, 256), 4, 2, &[StageSpec::tp(2), StageSpec::tp(2)])
+                hetero(&models::gpt3(0, 8, 256), 4, 2, &[StageSpec::tp(2), StageSpec::tp(2)])
                     .unwrap()
             },
             spec: PlanSpec::hetero_dp(4, vec![StageSpec::tp(2), StageSpec::tp(2)], 2),
@@ -267,7 +269,8 @@ fn dp_plans_des_makespan_between_bound_and_list() {
 /// visible in the exported Chrome trace as communication events.
 #[test]
 fn grad_sync_collectives_appear_in_chrome_trace() {
-    let out = hetero(models::gpt3(0, 8, 256), 4, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+    let out =
+        hetero(&models::gpt3(0, 8, 256), 4, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
     let c = Cluster::v100(16);
     let vs = validate(&out.graph, &out.schedule).unwrap();
     let plan = materialize(&out.graph, &vs, &c, CommMode::InterRvd);
@@ -303,7 +306,7 @@ fn concurrent_grad_sync_collectives_fair_share_nics() {
         kind: TaskKind::Collective { kind: CollKind::AllReduce, group, bytes: 1 << 20, ptensor: 0 },
         deps: vec![],
         duration: dur,
-        label: format!("dp-sync all-reduce:{id}"),
+        label: format!("dp-sync all-reduce:{id}").into(),
     };
     let dur = c.collective_time(CollKind::AllReduce, &[0, 8], 1 << 20);
     // Solo run: exactly the modeled duration.
@@ -329,7 +332,7 @@ fn concurrent_grad_sync_collectives_fair_share_nics() {
 
 #[test]
 fn memory_timeline_is_consistent_with_peaks_and_returns_to_static() {
-    let out = megatron(models::gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::OneFOneB).unwrap();
+    let out = megatron(&models::gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::OneFOneB).unwrap();
     let c = Cluster::v100(4);
     let vs = validate(&out.graph, &out.schedule).unwrap();
     let plan = materialize(&out.graph, &vs, &c, CommMode::InterRvd);

@@ -19,7 +19,7 @@ use superscaler::sim;
 #[test]
 fn dp_replicated_hetero_builds_validates_and_simulates() {
     let out = hetero(
-        models::gpt3(0, 8, 256),
+        &models::gpt3(0, 8, 256),
         2,
         2,
         &[StageSpec::tp(2), StageSpec { recompute: true, ..StageSpec::tp(2) }],
@@ -66,7 +66,7 @@ fn search_enumerates_dp_replicas_with_exact_device_accounting() {
 fn dp_space_optimum_no_worse_than_dp1_restriction() {
     let cluster = Cluster::v100(4);
     let report = search::search(
-        || models::gpt3(0, 8, 256),
+        &models::gpt3(0, 8, 256),
         &cluster,
         &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
     );
@@ -96,14 +96,14 @@ fn dp_space_optimum_no_worse_than_dp1_restriction() {
 #[test]
 fn prune_on_off_agree_over_dp_grid() {
     let cluster = Cluster::v100(4);
-    let mk = || models::gpt3(0, 8, 256);
+    let model = models::gpt3(0, 8, 256);
     let on = search::search(
-        mk,
+        &model,
         &cluster,
         &SearchConfig { workers: 2, prune: true, ..SearchConfig::default() },
     );
     let off = search::search(
-        mk,
+        &model,
         &cluster,
         &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
     );
@@ -124,7 +124,7 @@ fn prune_on_off_agree_over_dp_grid() {
 fn dp_min_restricts_the_grid_to_replicated_plans() {
     let cluster = Cluster::v100(4);
     let report = search::search(
-        || models::gpt3(0, 8, 256),
+        &models::gpt3(0, 8, 256),
         &cluster,
         &SearchConfig { workers: 2, dp_min: 2, ..SearchConfig::default() },
     );
@@ -150,7 +150,7 @@ fn lower_bound_sound_for_dp_hetero_plans() {
     for (dp, stages, micro, gpus) in cases {
         let c = Cluster::v100(gpus);
         let spec = PlanSpec::hetero_dp(dp, stages.clone(), micro);
-        let out = registry::build("hetero", models::gpt3(0, 8, 256), &spec).unwrap();
+        let out = registry::build("hetero", &models::gpt3(0, 8, 256), &spec).unwrap();
         let r = sim::run(&out.graph, &out.schedule, &c, CommMode::InterRvd).unwrap();
         let lb = c.plan_time_lower_bound(&spec, &stats);
         assert!(lb > 0.0);
@@ -166,7 +166,8 @@ fn lower_bound_sound_for_dp_hetero_plans() {
 fn dp_grad_sync_rvd_decomposes_across_servers_only() {
     // dp = 4 over 16 GPUs: replicas 0,1 on server 0, replicas 2,3 on
     // server 1, so every gradient's dp group has two members per server.
-    let out = hetero(models::gpt3(0, 8, 256), 4, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+    let out =
+        hetero(&models::gpt3(0, 8, 256), 4, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
     let c = Cluster::v100(16);
     let vs = validate(&out.graph, &out.schedule).unwrap();
     let plan = materialize(&out.graph, &vs, &c, CommMode::InterRvd);
@@ -179,7 +180,8 @@ fn dp_grad_sync_rvd_decomposes_across_servers_only() {
     assert!(has_kind(CollKind::AllReduce), "missing cross-server all-reduce");
     assert!(has_kind(CollKind::AllGather), "missing intra-server all-gather");
     // Same-server replicas (dp = 2 on one 8-GPU server): flat form.
-    let out = hetero(models::gpt3(0, 8, 256), 2, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
+    let out =
+        hetero(&models::gpt3(0, 8, 256), 2, 2, &[StageSpec::tp(2), StageSpec::tp(2)]).unwrap();
     let c8 = Cluster::v100(8);
     let vs = validate(&out.graph, &out.schedule).unwrap();
     let plan = materialize(&out.graph, &vs, &c8, CommMode::InterRvd);

@@ -121,21 +121,21 @@ fn synthetic_trace() -> (des::DesReport, Plan) {
         kind: TaskKind::Compute { op: 0, device: 0 },
         deps: vec![],
         duration: 1.0,
-        label: "c0".to_string(),
+        label: "c0".into(),
     });
     plan.tasks.push(Task {
         id: 1,
         kind: TaskKind::P2P { from: 0, to: 8, bytes: 1 << 20, ptensor: 0 },
         deps: vec![0],
         duration: 2.0,
-        label: "x1".to_string(),
+        label: "x1".into(),
     });
     plan.tasks.push(Task {
         id: 2,
         kind: TaskKind::Compute { op: 1, device: 8 },
         deps: vec![1],
         duration: 1.0,
-        label: "c2".to_string(),
+        label: "c2".into(),
     });
     let c = Cluster::v100(16);
     let tg = TaskGraph::of_plan(&plan);

@@ -21,7 +21,7 @@ fn hetero_roundtrip_via_registry() {
     let spec = p.default_spec(4, 4);
     assert_eq!(spec.kind, PlanKind::Hetero);
     assert_eq!(spec.devices(), 4);
-    let out = p.build(model, &spec).expect("hetero default spec builds");
+    let out = p.build(&model, &spec).expect("hetero default spec builds");
     assert!(out.name.starts_with("hetero"), "{}", out.name);
     let vs = validate(&out.graph, &out.schedule).expect("hetero schedule validates");
     assert!(!vs.topo.is_empty());
@@ -66,7 +66,7 @@ fn stage_spec_feasibility_errors() {
 
     // And the build itself reports a stage conflict when called directly.
     let p = registry::find("hetero").unwrap();
-    let err = p.build(models::gpt3(0, 8, 256), &conflict).unwrap_err();
+    let err = p.build(&models::gpt3(0, 8, 256), &conflict).unwrap_err();
     assert!(err.to_string().contains("mutually exclusive"), "{err}");
 }
 
@@ -77,14 +77,14 @@ fn stage_spec_feasibility_errors() {
 #[test]
 fn dominance_pruning_never_prunes_the_optimum() {
     let cluster = Cluster::v100(4);
-    let mk = || models::gpt3(0, 8, 256);
+    let model = models::gpt3(0, 8, 256);
     let on = search::search(
-        mk,
+        &model,
         &cluster,
         &SearchConfig { workers: 2, prune: true, ..SearchConfig::default() },
     );
     let off = search::search(
-        mk,
+        &model,
         &cluster,
         &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
     );
@@ -114,7 +114,7 @@ fn dominance_pruning_never_prunes_the_optimum() {
 fn hetero_best_not_worse_than_homogeneous_pipeline() {
     let cluster = Cluster::v100(4);
     let report = search::search(
-        || models::gpt3(0, 8, 256),
+        &models::gpt3(0, 8, 256),
         &cluster,
         &SearchConfig { workers: 2, prune: false, hetero: true, ..SearchConfig::default() },
     );
@@ -145,7 +145,7 @@ fn hetero_best_not_worse_than_homogeneous_pipeline() {
 fn report_table_carries_prune_accounting() {
     let cluster = Cluster::v100(4);
     let report = search::search(
-        || models::gpt3(0, 8, 256),
+        &models::gpt3(0, 8, 256),
         &cluster,
         &SearchConfig { workers: 2, ..SearchConfig::default() },
     );

@@ -58,7 +58,7 @@ fn registry_roundtrip_every_planner_builds_and_validates() {
         let spec = p.default_spec(4, 4);
         assert_eq!(spec.kind, p.kind(), "{}: default_spec kind mismatch", p.name());
         let out = p
-            .build(mk(), &spec)
+            .build(&mk(), &spec)
             .unwrap_or_else(|e| panic!("{}: build failed: {e}", p.name()));
         assert!(!out.name.is_empty());
         let vs = validate(&out.graph, &out.schedule)
@@ -124,7 +124,8 @@ fn feasibility_prunes_batch_and_memory_bounds() {
 fn search_is_deterministic() {
     let cluster = Cluster::v100(4);
     let cfg = SearchConfig { workers: 2, ..Default::default() };
-    let run = || search::search(|| models::gpt3(0, 8, 256), &cluster, &cfg);
+    let model = models::gpt3(0, 8, 256);
+    let run = || search::search(&model, &cluster, &cfg);
     let a = run();
     let b = run();
     assert_eq!(a.evaluated, b.evaluated);
@@ -142,12 +143,13 @@ fn search_is_deterministic() {
 fn search_top_plan_not_slower_than_megatron_baseline() {
     let gpus = 4;
     let cluster = Cluster::v100(gpus);
-    let report = search::search(|| models::gpt3(0, 8, 512), &cluster, &SearchConfig::default());
+    let report =
+        search::search(&models::gpt3(0, 8, 512), &cluster, &SearchConfig::default());
     let best = report.best().expect("search found no valid plan");
     let bm = best.metrics().unwrap();
 
     let base =
-        plans::megatron(models::gpt3(0, 8, 512), 1, gpus, 1, 4, PipeOrder::OneFOneB).unwrap();
+        plans::megatron(&models::gpt3(0, 8, 512), 1, gpus, 1, 4, PipeOrder::OneFOneB).unwrap();
     let rb = sim::run(&base.graph, &base.schedule, &cluster, CommMode::InterRvd).unwrap();
     assert!(
         bm.makespan <= rb.makespan * 1.0001,

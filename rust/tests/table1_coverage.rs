@@ -21,45 +21,45 @@ fn runs(out: PlanResult, gpus: usize) -> bool {
 
 #[test]
 fn table1_data_parallelism() {
-    assert!(runs(data_parallel(gpt3(0, 8, 256), 4), 4));
+    assert!(runs(data_parallel(&gpt3(0, 8, 256), 4), 4));
 }
 
 #[test]
 fn table1_transformer_tensor_parallelism() {
-    assert!(runs(megatron(gpt3(0, 4, 256), 1, 1, 4, 1, PipeOrder::OneFOneB), 4));
+    assert!(runs(megatron(&gpt3(0, 4, 256), 1, 1, 4, 1, PipeOrder::OneFOneB), 4));
 }
 
 #[test]
 fn table1_sequence_parallelism() {
     // Sequence parallelism = splitting the "s" dim — DAP's plan does exactly
     // this for the non-attention ops.
-    assert!(runs(dap_dp(alphafold2(0, 8), 4, 1), 4));
+    assert!(runs(dap_dp(&alphafold2(0, 8), 4, 1), 4));
 }
 
 #[test]
 fn table1_dap() {
-    assert!(runs(dap_dp(alphafold2(0, 8), 2, 2), 4));
+    assert!(runs(dap_dp(&alphafold2(0, 8), 2, 2), 4));
 }
 
 #[test]
 fn table1_zero() {
-    assert!(runs(zero3(gpt3(0, 8, 256), 4, false), 4));
+    assert!(runs(zero3(&gpt3(0, 8, 256), 4, false), 4));
 }
 
 #[test]
 fn table1_swap_offload() {
     // Swap: optimizer state assigned to the CPU device.
-    assert!(runs(zero3(gpt3(0, 8, 256), 4, true), 4));
+    assert!(runs(zero3(&gpt3(0, 8, 256), 4, true), 4));
 }
 
 #[test]
 fn table1_1f1b() {
-    assert!(runs(megatron(gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::OneFOneB), 4));
+    assert!(runs(megatron(&gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::OneFOneB), 4));
 }
 
 #[test]
 fn table1_gpipe() {
-    assert!(runs(megatron(gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::GPipe), 4));
+    assert!(runs(megatron(&gpt3(0, 8, 256), 1, 4, 1, 4, PipeOrder::GPipe), 4));
 }
 
 #[test]
@@ -67,37 +67,37 @@ fn table1_chimera_like_bidirectional() {
     // Chimera's bidirectional pipeline = two 1F1B pipelines with reversed
     // stage order; expressible as two megatron grids — here we validate the
     // reversed-stage grid also schedules cleanly.
-    assert!(runs(megatron(gpt3(0, 8, 256), 2, 2, 1, 4, PipeOrder::OneFOneB), 4));
+    assert!(runs(megatron(&gpt3(0, 8, 256), 2, 2, 1, 4, PipeOrder::OneFOneB), 4));
 }
 
 #[test]
 fn table1_gradient_accumulation() {
     // Micro-batching without a pipeline = gradient accumulation.
-    assert!(runs(megatron(gpt3(0, 8, 256), 1, 1, 1, 4, PipeOrder::OneFOneB), 1));
+    assert!(runs(megatron(&gpt3(0, 8, 256), 1, 1, 1, 4, PipeOrder::OneFOneB), 1));
 }
 
 #[test]
 fn table1_recompute() {
-    assert!(runs(coshard(gpt3(0, 8, 256), 2, 1, None), 2)); // recompute path
+    assert!(runs(coshard(&gpt3(0, 8, 256), 2, 1, None), 2)); // recompute path
 }
 
 #[test]
 fn table1_chain_recompute_coshard() {
-    assert!(runs(coshard(gpt3(0, 8, 256), 2, 4, None), 2));
+    assert!(runs(coshard(&gpt3(0, 8, 256), 2, 4, None), 2));
 }
 
 #[test]
 fn table1_flexible_tensor_parallel() {
     // Different tp dims per op (attention "a" vs ffn "n"/"k") in one plan.
-    assert!(runs(megatron(swin_transformer(0, 8, 512), 1, 1, 4, 1, PipeOrder::OneFOneB), 4));
+    assert!(runs(megatron(&swin_transformer(0, 8, 512), 1, 1, 4, 1, PipeOrder::OneFOneB), 4));
 }
 
 #[test]
 fn table1_interlaced_new_plan() {
-    assert!(runs(interlaced_pipeline(mbart(0, 8, 128), 4, 4, true, false), 4));
+    assert!(runs(interlaced_pipeline(&mbart(0, 8, 128), 4, 4, true, false), 4));
 }
 
 #[test]
 fn table1_3f1b_new_plan() {
-    assert!(runs(pipeline_3f1b(alphafold2(0, 8), 4, 4), 4));
+    assert!(runs(pipeline_3f1b(&alphafold2(0, 8), 4, 4), 4));
 }
