@@ -1,0 +1,430 @@
+//! Incremental DES replay: checkpoint the engine at periodic event epochs
+//! during a base run, and re-execute a mutated plan from the latest
+//! checkpoint the mutation provably cannot have perturbed.
+//!
+//! # Design
+//!
+//! A [`BaseRun`] captures, for every task, a structural signature
+//! ([`TaskSig`]): kind (comm/compute), duration bits, occupied devices,
+//! dense link indices, and the sorted predecessor multiset. Two plans
+//! whose task `t` carries equal signatures schedule `t` identically *if*
+//! the rest of the executed prefix is also identical — so the **dirty
+//! set** of a mutation is exactly the tasks whose signatures differ.
+//!
+//! A checkpoint at `e` executed finish events is valid for replay iff
+//! every dirty task, at that checkpoint, (a) has not started, (b) still
+//! has at least one unfinished predecessor *under the new edge set*, and
+//! (c) is not parked on any stream's waiter queue. Condition (b) is the
+//! load-bearing one: `done` sets only grow over a run, so a dirty task
+//! with an unfinished new-predecessor at the checkpoint was never ready
+//! at any earlier point — the executed prefix is therefore bitwise
+//! identical between the old and new plans, and resuming from the clone
+//! reproduces the from-scratch run exactly. When no checkpoint after
+//! event 0 is valid (the dirty horizon spans the timeline), replay
+//! degrades to a full re-execution — correctness never depends on the
+//! epoch granularity.
+//!
+//! Checkpoint geometry (stream slots, link registry width, stat slots)
+//! may differ between plans; the restore path resizes those dense arrays
+//! to the new geometry. This is safe because any index whose meaning
+//! changed can only be referenced by a dirty task, and valid checkpoints
+//! contain no trace of dirty tasks (unstarted, no stats, not in flight —
+//! signature equality of clean tasks pins their link indices to the same
+//! registry mapping).
+//!
+//! [`BaseRun::replay`] also *promotes* the mutated plan to a new
+//! `BaseRun`: checkpoints at or before the resume point are carried over
+//! (re-based onto the new geometry), and the replayed suffix records
+//! fresh ones — an accepted MCMC move costs no extra full run.
+
+use super::{Engine, EngineState};
+use crate::cost::Cluster;
+use crate::graph::Graph;
+use crate::materialize::{Plan, TaskId};
+use crate::schedule::DeviceId;
+use crate::sim::TaskGraph;
+use std::collections::BTreeSet;
+
+use super::DesReport;
+
+/// Default number of checkpoint epochs per base run. More epochs means a
+/// finer dirty-horizon resolution (less replayed work per mutation) at
+/// the cost of more clones held in memory.
+pub const DEFAULT_EPOCHS: usize = 16;
+
+/// Structural signature of one task; two tasks with equal signatures are
+/// scheduled identically given an identical executed prefix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct TaskSig {
+    comm: bool,
+    dur_bits: u64,
+    devices: Vec<DeviceId>,
+    /// Dense link indices — numeric equality across two engines implies
+    /// the same `LinkId` ↔ index mapping for every link this task uses.
+    links: Vec<usize>,
+    /// Sorted predecessor multiset (duplicates kept: `indeg` counts edge
+    /// multiplicity, so the signature must too).
+    preds: Vec<TaskId>,
+}
+
+/// Accounting for one replay: how many finish events were re-executed
+/// out of the full run's total.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplayStats {
+    pub replayed: usize,
+    pub total: usize,
+    /// True when the replay fell back to a from-scratch execution.
+    pub full: bool,
+}
+
+/// A completed DES run plus everything needed to incrementally replay a
+/// mutated sibling plan: per-task signatures and periodic checkpoints.
+pub struct BaseRun {
+    sigs: Vec<TaskSig>,
+    /// `(events executed, engine state clone)`, ascending; entry 0 is the
+    /// pristine pre-seed state (always a valid resume point).
+    snaps: Vec<(usize, EngineState)>,
+    interval: usize,
+    n: usize,
+}
+
+/// Invert `consumers` into a sorted predecessor multiset per task.
+fn preds_of(tg: &TaskGraph, n: usize) -> Vec<Vec<TaskId>> {
+    let mut preds: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for (t, cs) in tg.consumers.iter().enumerate() {
+        for &c in cs {
+            preds[c].push(t);
+        }
+    }
+    for p in &mut preds {
+        p.sort_unstable();
+    }
+    preds
+}
+
+fn sigs_of(eng: &Engine<'_>, plan: &Plan, tg: &TaskGraph) -> Vec<TaskSig> {
+    let n = plan.tasks.len();
+    let preds = preds_of(tg, n);
+    (0..n)
+        .map(|t| TaskSig {
+            comm: plan.tasks[t].is_comm(),
+            dur_bits: plan.tasks[t].duration.to_bits(),
+            devices: eng.devices[t].clone(),
+            links: eng.links_of[t].clone(),
+            preds: preds[t].clone(),
+        })
+        .collect()
+}
+
+/// Drive the event loop to completion, cloning the state every
+/// `interval` finish events (skipping the final, fully-drained state —
+/// resuming there would replay nothing).
+fn run_with_capture(
+    eng: &mut Engine<'_>,
+    n: usize,
+    interval: usize,
+    snaps: &mut Vec<(usize, EngineState)>,
+) {
+    while eng.step() {
+        if eng.st.events % interval == 0 && eng.st.completed < n {
+            snaps.push((eng.st.events, eng.st.clone()));
+        }
+    }
+}
+
+/// Resize the dense per-slot arrays of a checkpoint to a (possibly
+/// different) engine geometry, then re-derive dirty tasks' indegrees
+/// under the new edge set and this checkpoint's `done` front.
+fn rebase(
+    st: &mut EngineState,
+    nslots: usize,
+    nlinks: usize,
+    dirty: &[TaskId],
+    sigs: &[TaskSig],
+) {
+    st.busy.resize(2 * nslots, None);
+    st.waiters.resize_with(2 * nslots, BTreeSet::new);
+    st.slot_stats.resize(nslots, None);
+    st.link_active.resize_with(nlinks, BTreeSet::new);
+    for &t in dirty {
+        st.indeg[t] = sigs[t].preds.iter().filter(|&&p| !st.done[p]).count();
+    }
+}
+
+impl BaseRun {
+    /// Execute `plan` from scratch, capturing checkpoints at `epochs`
+    /// evenly spaced event counts.
+    pub fn capture(
+        g: &Graph,
+        plan: &Plan,
+        cluster: &Cluster,
+        tg: &TaskGraph,
+        epochs: usize,
+    ) -> (BaseRun, DesReport) {
+        let n = plan.tasks.len();
+        let interval = (n / epochs.max(1)).max(1);
+        let mut eng = Engine::new(plan, cluster, tg);
+        let mut snaps = vec![(0usize, eng.st.clone())];
+        eng.seed();
+        run_with_capture(&mut eng, n, interval, &mut snaps);
+        let report = eng.finalize(g, cluster);
+        let sigs = sigs_of(&eng, plan, tg);
+        (BaseRun { sigs, snaps, interval, n }, report)
+    }
+
+    /// Execute a mutated sibling of this base's plan, resuming from the
+    /// latest checkpoint the mutation cannot have perturbed. Returns the
+    /// report (bitwise identical to a from-scratch [`super::execute`]),
+    /// replay accounting, and the mutated plan promoted to a new base.
+    pub fn replay(
+        &self,
+        g: &Graph,
+        plan: &Plan,
+        cluster: &Cluster,
+        tg: &TaskGraph,
+    ) -> (DesReport, ReplayStats, BaseRun) {
+        let n = plan.tasks.len();
+        let mut eng = Engine::new(plan, cluster, tg);
+        let new_sigs = sigs_of(&eng, plan, tg);
+        let interval =
+            if n == self.n { self.interval } else { (n / DEFAULT_EPOCHS).max(1) };
+
+        let dirty: Vec<TaskId> = if n == self.n {
+            (0..n).filter(|&t| new_sigs[t] != self.sigs[t]).collect()
+        } else {
+            Vec::new() // geometry changed wholesale: force the full path
+        };
+        let ok_at = |snap: &&(usize, EngineState)| -> bool {
+            if snap.0 == 0 {
+                return true;
+            }
+            dirty.iter().all(|&t| {
+                !snap.1.started[t]
+                    && new_sigs[t].preds.iter().any(|&p| !snap.1.done[p])
+                    && !snap.1.waiters.iter().any(|w| {
+                        w.contains(&(true, t)) || w.contains(&(false, t))
+                    })
+            })
+        };
+        let ev0 = if n == self.n {
+            self.snaps.iter().rev().find(ok_at).map(|s| s.0).unwrap_or(0)
+        } else {
+            0
+        };
+
+        let pristine = eng.st.clone();
+        let nlinks = pristine.link_active.len();
+        let mut snaps = vec![(0usize, pristine)];
+        if ev0 == 0 {
+            // Dirty horizon spans the whole timeline: full re-execution.
+            eng.seed();
+        } else {
+            let base = &self.snaps.iter().find(|s| s.0 == ev0).unwrap().1;
+            let mut st = base.clone();
+            rebase(&mut st, eng.nslots, nlinks, &dirty, &new_sigs);
+            eng.st = st;
+            // Carry earlier checkpoints into the promoted base — they are
+            // valid for the new plan by the same prefix argument.
+            for (e, s) in &self.snaps {
+                if *e > 0 && *e <= ev0 {
+                    let mut s2 = s.clone();
+                    rebase(&mut s2, eng.nslots, nlinks, &dirty, &new_sigs);
+                    snaps.push((*e, s2));
+                }
+            }
+        }
+        run_with_capture(&mut eng, n, interval, &mut snaps);
+        let report = eng.finalize(g, cluster);
+        let stats = ReplayStats { replayed: n - ev0, total: n, full: ev0 == 0 };
+        (report, stats, BaseRun { sigs: new_sigs, snaps, interval, n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::materialize::{Task, TaskKind};
+    use crate::util::rng::Rng;
+
+    fn dummy_graph(n: usize) -> Graph {
+        let mut g = Graph::new();
+        for i in 0..n {
+            g.add_op(&format!("op{i}"), OpKind::Identity, vec![], vec![], 0.0, None, true, 0);
+        }
+        g
+    }
+
+    fn compute_task(id: TaskId, device: DeviceId, dur: f64, deps: Vec<TaskId>) -> Task {
+        Task {
+            id,
+            kind: TaskKind::Compute { op: id, device },
+            deps,
+            duration: dur,
+            label: format!("c{id}").into(),
+        }
+    }
+
+    fn p2p_task(id: TaskId, from: DeviceId, to: DeviceId, dur: f64, deps: Vec<TaskId>) -> Task {
+        Task {
+            id,
+            kind: TaskKind::P2P { from, to, bytes: 1 << 20, ptensor: 0 },
+            deps,
+            duration: dur,
+            label: format!("x{id}").into(),
+        }
+    }
+
+    /// Random layered plan: compute tasks spread over devices with
+    /// forward dependencies, cross-server transfers sprinkled in.
+    fn random_plan(rng: &mut Rng, n: usize) -> Plan {
+        let mut plan = Plan::default();
+        for id in 0..n {
+            let mut deps = Vec::new();
+            if id > 0 {
+                deps.push(id - 1);
+                if id > 3 && rng.f64() < 0.4 {
+                    deps.push(rng.range(0, id - 1));
+                }
+            }
+            let dur = 0.5 + rng.f64();
+            if id > 0 && rng.f64() < 0.25 {
+                let from = rng.range(0, 8);
+                plan.tasks.push(p2p_task(id, from, from + 8, dur, deps));
+            } else {
+                plan.tasks.push(compute_task(id, rng.range(0, 16), dur, deps));
+            }
+        }
+        plan
+    }
+
+    fn reports_bitwise_equal(a: &DesReport, b: &DesReport) {
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "makespan");
+        assert_eq!(a.spans.len(), b.spans.len());
+        for (sa, sb) in a.spans.iter().zip(&b.spans) {
+            assert_eq!(sa.start.to_bits(), sb.start.to_bits(), "task {} start", sa.task);
+            assert_eq!(sa.finish.to_bits(), sb.finish.to_bits(), "task {} finish", sa.task);
+        }
+        assert_eq!(a.per_device.len(), b.per_device.len());
+        for (da, db) in a.per_device.iter().zip(&b.per_device) {
+            assert_eq!(da.device, db.device);
+            assert_eq!(da.compute.to_bits(), db.compute.to_bits(), "dev {} compute", da.device);
+            assert_eq!(da.comm.to_bits(), db.comm.to_bits(), "dev {} comm", da.device);
+            assert_eq!(da.peak_mem, db.peak_mem, "dev {} peak", da.device);
+        }
+        for (ma, mb) in a.mem.iter().zip(&b.mem) {
+            assert_eq!(ma.peak, mb.peak, "mem peak dev {}", ma.device);
+        }
+    }
+
+    #[test]
+    fn replay_matches_fresh_execute_for_random_perturbations() {
+        let cluster = Cluster::v100(16);
+        let mut rng = Rng::new(0xde17a);
+        for trial in 0..20 {
+            let n = 24 + rng.range(0, 40);
+            let plan = random_plan(&mut rng, n);
+            let g = dummy_graph(n);
+            let tg = TaskGraph::of_plan(&plan);
+            let (base, _) = BaseRun::capture(&g, &plan, &cluster, &tg, 4);
+
+            let mut plan2 = plan.clone();
+            let victim = rng.range(n / 2, n);
+            match rng.range(0, 3) {
+                0 => plan2.tasks[victim].duration *= 1.0 + rng.f64(),
+                1 => {
+                    if let TaskKind::Compute { device, .. } = &mut plan2.tasks[victim].kind {
+                        *device = (*device + 1) % 16;
+                    } else {
+                        plan2.tasks[victim].duration += 0.25;
+                    }
+                }
+                _ => {
+                    let extra = rng.range(0, victim);
+                    if !plan2.tasks[victim].deps.contains(&extra) {
+                        plan2.tasks[victim].deps.push(extra);
+                    } else {
+                        plan2.tasks[victim].duration += 0.125;
+                    }
+                }
+            }
+            let tg2 = TaskGraph::of_plan(&plan2);
+            let (rep, stats, _) = base.replay(&g, &plan2, &cluster, &tg2);
+            let fresh = super::super::execute(&g, &plan2, &cluster, &tg2);
+            reports_bitwise_equal(&rep, &fresh);
+            assert!(stats.replayed <= stats.total, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn late_perturbation_replays_partial_suffix() {
+        let cluster = Cluster::v100(16);
+        let n = 64;
+        // A strict chain so the dirty horizon of a late mutation is late.
+        let mut plan = Plan::default();
+        for id in 0..n {
+            let deps = if id == 0 { vec![] } else { vec![id - 1] };
+            plan.tasks.push(compute_task(id, id % 4, 1.0, deps));
+        }
+        let g = dummy_graph(n);
+        let tg = TaskGraph::of_plan(&plan);
+        let (base, _) = BaseRun::capture(&g, &plan, &cluster, &tg, 8);
+        let mut plan2 = plan.clone();
+        plan2.tasks[n - 2].duration = 3.0;
+        let tg2 = TaskGraph::of_plan(&plan2);
+        let (rep, stats, _) = base.replay(&g, &plan2, &cluster, &tg2);
+        let fresh = super::super::execute(&g, &plan2, &cluster, &tg2);
+        reports_bitwise_equal(&rep, &fresh);
+        assert!(!stats.full, "late single-task mutation must not force full replay");
+        assert!(
+            stats.replayed * 2 < stats.total,
+            "expected <50% replay, got {}/{}",
+            stats.replayed,
+            stats.total
+        );
+    }
+
+    #[test]
+    fn task_count_change_falls_back_to_full_replay() {
+        let cluster = Cluster::v100(16);
+        let n = 16;
+        let mut plan = Plan::default();
+        for id in 0..n {
+            let deps = if id == 0 { vec![] } else { vec![id - 1] };
+            plan.tasks.push(compute_task(id, id % 2, 1.0, deps));
+        }
+        let g = dummy_graph(n + 1);
+        let tg = TaskGraph::of_plan(&plan);
+        let (base, _) = BaseRun::capture(&g, &plan, &cluster, &tg, 4);
+        let mut plan2 = plan.clone();
+        plan2.tasks.push(compute_task(n, 3, 1.0, vec![n - 1]));
+        let tg2 = TaskGraph::of_plan(&plan2);
+        let (rep, stats, _) = base.replay(&g, &plan2, &cluster, &tg2);
+        let fresh = super::super::execute(&g, &plan2, &cluster, &tg2);
+        reports_bitwise_equal(&rep, &fresh);
+        assert!(stats.full);
+        assert_eq!(stats.replayed, stats.total);
+    }
+
+    #[test]
+    fn promoted_base_replays_correctly() {
+        let cluster = Cluster::v100(16);
+        let mut rng = Rng::new(7);
+        let n = 48;
+        let plan = random_plan(&mut rng, n);
+        let g = dummy_graph(n);
+        let tg = TaskGraph::of_plan(&plan);
+        let (base, _) = BaseRun::capture(&g, &plan, &cluster, &tg, 6);
+        // Chain two mutations through promoted bases.
+        let mut plan2 = plan.clone();
+        plan2.tasks[n - 4].duration *= 2.0;
+        let tg2 = TaskGraph::of_plan(&plan2);
+        let (_, _, base2) = base.replay(&g, &plan2, &cluster, &tg2);
+        let mut plan3 = plan2.clone();
+        plan3.tasks[n - 6].duration *= 1.5;
+        let tg3 = TaskGraph::of_plan(&plan3);
+        let (rep, _, _) = base2.replay(&g, &plan3, &cluster, &tg3);
+        let fresh = super::super::execute(&g, &plan3, &cluster, &tg3);
+        reports_bitwise_equal(&rep, &fresh);
+    }
+}

@@ -43,7 +43,21 @@
 //! chain) the DES and the list scheduler agree exactly, because both add
 //! the same task durations along the same critical path; the DES differs
 //! only where overlap or contention exists to model.
+//!
+//! # Snapshotable engine state and delta replay
+//!
+//! All mutable execution state (event heap, stream cursors, link registry
+//! occupancy, transfer fair-sharing state, per-slot stats) lives in one
+//! [`EngineState`] struct rather than loop locals, separated from the
+//! borrowed plan and the derived static tables. Cloning that struct at an
+//! event count is a resumable checkpoint: [`delta`] captures checkpoints
+//! at periodic epochs during a base run and, when a plan mutation leaves a
+//! prefix of the event timeline untouched, restores the latest checkpoint
+//! the mutation cannot have perturbed and re-executes only the suffix —
+//! the incremental re-simulation that makes MCMC plan refinement
+//! ([`crate::search::refine`]) tractable.
 
+pub mod delta;
 pub mod trace;
 
 use crate::cost::{Cluster, LinkId};
@@ -130,18 +144,14 @@ struct Xfer {
     last: f64,
 }
 
-struct Engine<'a> {
-    plan: &'a Plan,
-    consumers: &'a [Vec<TaskId>],
+/// Every mutable value of one engine run — what the event loop reads and
+/// writes, with the borrowed plan and the derived static tables kept apart
+/// on [`Engine`]. A clone of this struct is a resumable checkpoint of the
+/// simulation at `events` executed finish events; [`delta`] snapshots it at
+/// periodic epochs so plan mutations replay only the perturbed suffix.
+#[derive(Clone, Debug)]
+pub(crate) struct EngineState {
     indeg: Vec<usize>,
-    /// Per-task occupied devices, resolved once (`Task::devices` allocates
-    /// and sorts a fresh Vec per call — far too hot for the event loop).
-    devices: Vec<Vec<DeviceId>>,
-    /// Per-task dense stream indices (see [`compute_stream`]/[`comm_stream`]).
-    streams_of: Vec<Vec<usize>>,
-    /// Per-task dense link indices into `link_active` (the [`LinkId`] →
-    /// index registry is built once in [`Engine::new`]).
-    links_of: Vec<Vec<usize>>,
     start: Vec<f64>,
     finish: Vec<f64>,
     started: Vec<bool>,
@@ -162,13 +172,33 @@ struct Engine<'a> {
     /// Link slot -> transfers currently crossing it (the sets stay ordered
     /// by task id, which is what keeps repricing deterministic).
     link_active: Vec<BTreeSet<TaskId>>,
-    /// Device slots in use (`busy.len() / 2`).
-    nslots: usize,
     completed: usize,
+    /// Dense per-slot device stats, accumulated at every finish event;
+    /// converted to the device-keyed map once, in [`Engine::finalize`].
+    slot_stats: Vec<Option<DeviceStat>>,
+    /// Finish events executed so far — the snapshot epoch coordinate.
+    events: usize,
+}
+
+pub(crate) struct Engine<'a> {
+    plan: &'a Plan,
+    consumers: &'a [Vec<TaskId>],
+    /// Per-task occupied devices, resolved once (`Task::devices` allocates
+    /// and sorts a fresh Vec per call — far too hot for the event loop).
+    devices: Vec<Vec<DeviceId>>,
+    /// Per-task dense stream indices (see [`compute_stream`]/[`comm_stream`]).
+    streams_of: Vec<Vec<usize>>,
+    /// Per-task dense link indices into `link_active` (the [`LinkId`] →
+    /// index registry is built once in [`Engine::new`]).
+    links_of: Vec<Vec<usize>>,
+    /// Device slots in use (`st.busy.len() / 2`).
+    nslots: usize,
+    /// The snapshotable mutable state (see [`EngineState`]).
+    st: EngineState,
 }
 
 impl<'a> Engine<'a> {
-    fn new(plan: &'a Plan, cluster: &Cluster, tg: &'a TaskGraph) -> Engine<'a> {
+    pub(crate) fn new(plan: &'a Plan, cluster: &Cluster, tg: &'a TaskGraph) -> Engine<'a> {
         let n = plan.tasks.len();
         let devices: Vec<Vec<DeviceId>> = plan.tasks.iter().map(|t| t.devices()).collect();
         let max_gpu =
@@ -221,36 +251,72 @@ impl<'a> Engine<'a> {
         Engine {
             plan,
             consumers: &tg.consumers,
-            indeg: tg.indeg.clone(),
             devices,
             streams_of,
             links_of,
-            start: vec![0.0; n],
-            finish: vec![0.0; n],
-            started: vec![false; n],
-            done: vec![false; n],
-            version: vec![0; n],
-            seq: 0,
-            heap: BinaryHeap::new(),
-            busy: vec![None; 2 * nslots],
-            waiters: vec![BTreeSet::new(); 2 * nslots],
-            xfers: vec![None; n],
-            link_active: vec![BTreeSet::new(); nlinks],
             nslots,
-            completed: 0,
+            st: EngineState {
+                indeg: tg.indeg.clone(),
+                start: vec![0.0; n],
+                finish: vec![0.0; n],
+                started: vec![false; n],
+                done: vec![false; n],
+                version: vec![0; n],
+                seq: 0,
+                heap: BinaryHeap::new(),
+                busy: vec![None; 2 * nslots],
+                waiters: vec![BTreeSet::new(); 2 * nslots],
+                xfers: vec![None; n],
+                link_active: vec![BTreeSet::new(); nlinks],
+                completed: 0,
+                slot_stats: vec![None; nslots],
+                events: 0,
+            },
         }
     }
 
+    /// Dispatch the initial ready set (indegree-0 tasks) at time 0, in
+    /// (comm-first, id) order.
+    pub(crate) fn seed(&mut self) {
+        let mut initial: BTreeSet<(bool, TaskId)> = BTreeSet::new();
+        for t in 0..self.plan.tasks.len() {
+            if self.st.indeg[t] == 0 {
+                initial.insert((!self.plan.tasks[t].is_comm(), t));
+            }
+        }
+        for (_, t) in initial {
+            self.try_start(t, 0.0);
+        }
+    }
+
+    /// Execute the next finish event, skipping stale re-pricings. Returns
+    /// false once the heap drains (the run is over).
+    pub(crate) fn step(&mut self) -> bool {
+        while let Some(Reverse((time_bits, _, t, v))) = self.st.heap.pop() {
+            if v != self.st.version[t] || self.st.done[t] {
+                continue; // stale re-pricing
+            }
+            let now = f64::from_bits(time_bits);
+            self.finish_task(t, now);
+            return true;
+        }
+        false
+    }
+
+    pub(crate) fn run(&mut self) {
+        while self.step() {}
+    }
+
     fn push_finish(&mut self, time: f64, t: TaskId) {
-        self.seq += 1;
-        self.heap.push(Reverse((time.to_bits(), self.seq, t, self.version[t])));
+        self.st.seq += 1;
+        self.st.heap.push(Reverse((time.to_bits(), self.st.seq, t, self.st.version[t])));
     }
 
     /// Fair-share rate of transfer `t`: 1 / (most crowded link it crosses).
     fn rate_of(&self, t: TaskId) -> f64 {
         let mut widest = 1usize;
         for &l in &self.links_of[t] {
-            widest = widest.max(self.link_active[l].len());
+            widest = widest.max(self.st.link_active[l].len());
         }
         1.0 / widest as f64
     }
@@ -263,12 +329,12 @@ impl<'a> Engine<'a> {
     fn reprice_sharers(&mut self, t: TaskId, now: f64) {
         let mut affected: BTreeSet<TaskId> = BTreeSet::new();
         for &l in &self.links_of[t] {
-            affected.extend(self.link_active[l].iter().copied());
+            affected.extend(self.st.link_active[l].iter().copied());
         }
         affected.remove(&t);
         for u in affected {
             let new_rate = self.rate_of(u);
-            let x = self.xfers[u].as_mut().expect("active transfer has state");
+            let x = self.st.xfers[u].as_mut().expect("active transfer has state");
             if new_rate == x.rate {
                 continue;
             }
@@ -277,7 +343,7 @@ impl<'a> Engine<'a> {
             x.last = now;
             x.rate = new_rate;
             let fin = now + x.remaining / new_rate;
-            self.version[u] += 1;
+            self.st.version[u] += 1;
             self.push_finish(fin, u);
         }
     }
@@ -285,70 +351,72 @@ impl<'a> Engine<'a> {
     /// Start `t` at `now` if every stream it needs is free; otherwise park
     /// it on its busy streams' waiter queues. Returns whether it started.
     fn try_start(&mut self, t: TaskId, now: f64) -> bool {
-        if self.started[t] {
+        if self.st.started[t] {
             return true;
         }
         let blocked: Vec<usize> = self.streams_of[t]
             .iter()
             .copied()
-            .filter(|&s| self.busy[s].is_some())
+            .filter(|&s| self.st.busy[s].is_some())
             .collect();
         if !blocked.is_empty() {
             let key = (!self.plan.tasks[t].is_comm(), t);
             for s in blocked {
-                self.waiters[s].insert(key);
+                self.st.waiters[s].insert(key);
             }
             return false;
         }
-        self.started[t] = true;
-        self.start[t] = now;
+        self.st.started[t] = true;
+        self.st.start[t] = now;
         for &s in &self.streams_of[t] {
-            self.busy[s] = Some(t);
+            self.st.busy[s] = Some(t);
         }
         let dur = self.plan.tasks[t].duration;
-        self.version[t] += 1;
+        self.st.version[t] += 1;
         if self.links_of[t].is_empty() {
             // Compute, or link-free local communication: fixed duration.
             self.push_finish(now + dur, t);
         } else {
             for &l in &self.links_of[t] {
-                self.link_active[l].insert(t);
+                self.st.link_active[l].insert(t);
             }
             let rate = self.rate_of(t);
-            self.xfers[t] = Some(Xfer { remaining: dur, rate, last: now });
+            self.st.xfers[t] = Some(Xfer { remaining: dur, rate, last: now });
             self.push_finish(now + dur / rate, t);
             self.reprice_sharers(t, now);
         }
         true
     }
 
-    fn finish_task(&mut self, t: TaskId, now: f64, stats: &mut [Option<DeviceStat>]) {
-        self.done[t] = true;
-        self.completed += 1;
-        self.finish[t] = now;
-        let task = &self.plan.tasks[t];
-        let elapsed = now - self.start[t];
-        for &d in &self.devices[t] {
-            if task.is_comm() && d == CPU_DEVICE {
+    fn finish_task(&mut self, t: TaskId, now: f64) {
+        self.st.done[t] = true;
+        self.st.completed += 1;
+        self.st.events += 1;
+        self.st.finish[t] = now;
+        let is_comm = self.plan.tasks[t].is_comm();
+        let elapsed = now - self.st.start[t];
+        for i in 0..self.devices[t].len() {
+            let d = self.devices[t][i];
+            if is_comm && d == CPU_DEVICE {
                 // The host has no serializing comm stream (per-GPU PCIe
                 // lanes carry offload traffic in parallel), so charging it
                 // per-transfer elapsed time would exceed wall-clock.
                 continue;
             }
-            let st = stats[dev_slot(d)]
+            let st = self.st.slot_stats[dev_slot(d)]
                 .get_or_insert_with(|| DeviceStat { device: d, ..Default::default() });
-            if task.is_comm() {
+            if is_comm {
                 st.comm += elapsed;
             } else {
                 st.compute += elapsed;
             }
         }
         for &s in &self.streams_of[t] {
-            self.busy[s] = None;
+            self.st.busy[s] = None;
         }
-        if self.xfers[t].take().is_some() {
+        if self.st.xfers[t].take().is_some() {
             for &l in &self.links_of[t] {
-                self.link_active[l].remove(&t);
+                self.st.link_active[l].remove(&t);
             }
             self.reprice_sharers(t, now);
         }
@@ -358,19 +426,116 @@ impl<'a> Engine<'a> {
         let mut cands: BTreeSet<(bool, TaskId)> = BTreeSet::new();
         for i in 0..self.consumers[t].len() {
             let c = self.consumers[t][i];
-            self.indeg[c] -= 1;
-            if self.indeg[c] == 0 {
+            self.st.indeg[c] -= 1;
+            if self.st.indeg[c] == 0 {
                 cands.insert((!self.plan.tasks[c].is_comm(), c));
             }
         }
         for i in 0..self.streams_of[t].len() {
             let s = self.streams_of[t][i];
-            cands.extend(std::mem::take(&mut self.waiters[s]));
+            cands.extend(std::mem::take(&mut self.st.waiters[s]));
         }
         for (_, c) in cands {
-            if !self.done[c] && !self.started[c] {
+            if !self.st.done[c] && !self.st.started[c] {
                 self.try_start(c, now);
             }
+        }
+    }
+
+    /// Convert the drained engine state into a [`DesReport`] — the
+    /// once-per-run reporting pass (memory timelines, bubble accounting).
+    pub(crate) fn finalize(&self, g: &Graph, cluster: &Cluster) -> DesReport {
+        let plan = self.plan;
+        let n = plan.tasks.len();
+        assert_eq!(
+            self.st.completed, n,
+            "DES deadlock — TaskGraph::prepare guarantees acyclicity"
+        );
+        let makespan = self.st.finish.iter().copied().fold(0.0, f64::max);
+        let mut stats: HashMap<DeviceId, DeviceStat> =
+            self.st.slot_stats.iter().flatten().cloned().map(|s| (s.device, s)).collect();
+
+        // ---- time-resolved memory ----
+        // Activations from the shared event stream, *plus* gradient-buffer
+        // liveness: the DES baseline is the static bytes minus the gradient
+        // share, and each gradient region is allocated when its backward
+        // producer starts and freed when its last local toucher (optimizer /
+        // sync collective) finishes. A plan therefore OOMs under the DES only
+        // if gradient buffers are live *at the same time* as the activation
+        // peak — the timeline admission the list scheduler's always-resident
+        // watermark cannot express (dp replicas shift when gradients are live).
+        let acts = activation_events(g, plan, &self.st.start, &self.st.finish);
+        let grads = gradient_events(g, plan, &self.st.start, &self.st.finish);
+        let mut devs: BTreeSet<DeviceId> = stats.keys().copied().collect();
+        devs.extend(acts.keys().copied());
+        devs.extend(grads.keys().copied());
+        devs.extend(plan.static_mem.keys().copied());
+        let mut mem: Vec<MemTimeline> = Vec::new();
+        for d in devs {
+            let static_total = plan.static_mem.get(&d).copied().unwrap_or(0);
+            let grad_share = plan.static_grad_mem.get(&d).copied().unwrap_or(0);
+            let base = static_total.saturating_sub(grad_share) as i64;
+            let mut evs: Vec<(f64, i64)> = acts.get(&d).cloned().unwrap_or_default();
+            if let Some(ge) = grads.get(&d) {
+                evs.extend(ge.iter().copied());
+                evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            }
+            let mut points: Vec<(f64, u64)> = vec![(0.0, base.max(0) as u64)];
+            let mut cur = base;
+            let mut peak = base;
+            let mut i = 0;
+            while i < evs.len() {
+                let t0 = evs[i].0;
+                while i < evs.len() && evs[i].0 == t0 {
+                    cur += evs[i].1;
+                    i += 1;
+                }
+                peak = peak.max(cur);
+                points.push((t0, cur.max(0) as u64));
+            }
+            let peak = peak.max(0) as u64;
+            match stats.entry(d) {
+                std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().peak_mem = peak,
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    // A device with memory traffic but no tasks still reports
+                    // (mirrors the list scheduler's accounting).
+                    if acts.contains_key(&d) || grads.contains_key(&d) {
+                        e.insert(DeviceStat { device: d, peak_mem: peak, ..Default::default() });
+                    }
+                }
+            }
+            mem.push(MemTimeline { device: d, points, peak });
+        }
+
+        let cap = cluster.spec.mem_bytes;
+        for (dev, st) in stats.iter_mut() {
+            st.bubble = (makespan - st.compute - st.comm).max(0.0);
+            if *dev != CPU_DEVICE {
+                st.oom = st.peak_mem > cap;
+            }
+        }
+        let total_flops = g.total_flops();
+        let mut per_device: Vec<DeviceStat> = stats.into_values().collect();
+        per_device.sort_by_key(|d| d.device);
+        let ngpu = per_device.iter().filter(|d| d.device != CPU_DEVICE).count().max(1);
+        let oom = per_device.iter().any(|d| d.oom);
+        let spans = (0..n)
+            .map(|t| TaskSpan { task: t, start: self.st.start[t], finish: self.st.finish[t] })
+            .collect();
+        DesReport {
+            makespan,
+            per_device,
+            spans,
+            mem,
+            total_flops,
+            aggregate_tflops: if makespan > 0.0 { total_flops / makespan / 1e12 } else { 0.0 },
+            tflops_per_gpu: if makespan > 0.0 {
+                total_flops / makespan / 1e12 / ngpu as f64
+            } else {
+                0.0
+            },
+            comm_bytes: plan.comm_bytes,
+            oom,
         }
     }
 }
@@ -378,115 +543,10 @@ impl<'a> Engine<'a> {
 /// Execute `plan` against an already-prepared [`TaskGraph`]. Low-level
 /// entry point shared by [`simulate`] and the synthetic-plan tests.
 pub fn execute(g: &Graph, plan: &Plan, cluster: &Cluster, tg: &TaskGraph) -> DesReport {
-    let n = plan.tasks.len();
     let mut eng = Engine::new(plan, cluster, tg);
-    // Dense per-slot stats during the event loop; converted to the
-    // device-keyed map the (once-per-run) reporting section reads below.
-    let mut slot_stats: Vec<Option<DeviceStat>> = vec![None; eng.nslots];
-
-    let mut initial: BTreeSet<(bool, TaskId)> = BTreeSet::new();
-    for t in 0..n {
-        if eng.indeg[t] == 0 {
-            initial.insert((!plan.tasks[t].is_comm(), t));
-        }
-    }
-    for (_, t) in initial {
-        eng.try_start(t, 0.0);
-    }
-    while let Some(Reverse((time_bits, _, t, v))) = eng.heap.pop() {
-        if v != eng.version[t] || eng.done[t] {
-            continue; // stale re-pricing
-        }
-        let now = f64::from_bits(time_bits);
-        eng.finish_task(t, now, &mut slot_stats);
-    }
-    assert_eq!(eng.completed, n, "DES deadlock — TaskGraph::prepare guarantees acyclicity");
-    let makespan = eng.finish.iter().copied().fold(0.0, f64::max);
-    let mut stats: HashMap<DeviceId, DeviceStat> =
-        slot_stats.into_iter().flatten().map(|s| (s.device, s)).collect();
-
-    // ---- time-resolved memory ----
-    // Activations from the shared event stream, *plus* gradient-buffer
-    // liveness: the DES baseline is the static bytes minus the gradient
-    // share, and each gradient region is allocated when its backward
-    // producer starts and freed when its last local toucher (optimizer /
-    // sync collective) finishes. A plan therefore OOMs under the DES only
-    // if gradient buffers are live *at the same time* as the activation
-    // peak — the timeline admission the list scheduler's always-resident
-    // watermark cannot express (dp replicas shift when gradients are live).
-    let acts = activation_events(g, plan, &eng.start, &eng.finish);
-    let grads = gradient_events(g, plan, &eng.start, &eng.finish);
-    let mut devs: BTreeSet<DeviceId> = stats.keys().copied().collect();
-    devs.extend(acts.keys().copied());
-    devs.extend(grads.keys().copied());
-    devs.extend(plan.static_mem.keys().copied());
-    let mut mem: Vec<MemTimeline> = Vec::new();
-    for d in devs {
-        let static_total = plan.static_mem.get(&d).copied().unwrap_or(0);
-        let grad_share = plan.static_grad_mem.get(&d).copied().unwrap_or(0);
-        let base = static_total.saturating_sub(grad_share) as i64;
-        let mut evs: Vec<(f64, i64)> = acts.get(&d).cloned().unwrap_or_default();
-        if let Some(ge) = grads.get(&d) {
-            evs.extend(ge.iter().copied());
-            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-        }
-        let mut points: Vec<(f64, u64)> = vec![(0.0, base.max(0) as u64)];
-        let mut cur = base;
-        let mut peak = base;
-        let mut i = 0;
-        while i < evs.len() {
-            let t0 = evs[i].0;
-            while i < evs.len() && evs[i].0 == t0 {
-                cur += evs[i].1;
-                i += 1;
-            }
-            peak = peak.max(cur);
-            points.push((t0, cur.max(0) as u64));
-        }
-        let peak = peak.max(0) as u64;
-        match stats.entry(d) {
-            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().peak_mem = peak,
-            std::collections::hash_map::Entry::Vacant(e) => {
-                // A device with memory traffic but no tasks still reports
-                // (mirrors the list scheduler's accounting).
-                if acts.contains_key(&d) || grads.contains_key(&d) {
-                    e.insert(DeviceStat { device: d, peak_mem: peak, ..Default::default() });
-                }
-            }
-        }
-        mem.push(MemTimeline { device: d, points, peak });
-    }
-
-    let cap = cluster.spec.mem_bytes;
-    for (dev, st) in stats.iter_mut() {
-        st.bubble = (makespan - st.compute - st.comm).max(0.0);
-        if *dev != CPU_DEVICE {
-            st.oom = st.peak_mem > cap;
-        }
-    }
-    let total_flops = g.total_flops();
-    let mut per_device: Vec<DeviceStat> = stats.into_values().collect();
-    per_device.sort_by_key(|d| d.device);
-    let ngpu = per_device.iter().filter(|d| d.device != CPU_DEVICE).count().max(1);
-    let oom = per_device.iter().any(|d| d.oom);
-    let spans = (0..n)
-        .map(|t| TaskSpan { task: t, start: eng.start[t], finish: eng.finish[t] })
-        .collect();
-    DesReport {
-        makespan,
-        per_device,
-        spans,
-        mem,
-        total_flops,
-        aggregate_tflops: if makespan > 0.0 { total_flops / makespan / 1e12 } else { 0.0 },
-        tflops_per_gpu: if makespan > 0.0 {
-            total_flops / makespan / 1e12 / ngpu as f64
-        } else {
-            0.0
-        },
-        comm_bytes: plan.comm_bytes,
-        oom,
-    }
+    eng.seed();
+    eng.run();
+    eng.finalize(g, cluster)
 }
 
 /// Discrete-event execution of one iteration of `plan`, sharing the list

@@ -62,6 +62,8 @@ fn usage() {
                                 [--fidelity list|des] [--des-top K] [--trace FILE]\n\
                                 [--baseline FILE] [--write-baseline] [--tol F]\n\
                                 [--bench-json FILE]\n\
+                                [--refine] [--refine-iters N] [--refine-seed S]\n\
+                                [--refine-top K] [--gap-target F] [--gap-ceiling F]\n\
                                   enumerate the feasible PlanSpec grid (--hetero\n\
                                   adds heterogeneous per-stage pipelines),\n\
                                   dominance-prune against the analytic cost\n\
@@ -87,8 +89,21 @@ fn usage() {
                                   --bench-json writes the search-throughput\n\
                                   trajectory artifact (wall_secs, evaluated,\n\
                                   pruned counts, des_rescored, best list\n\
-                                  makespan) — CI uploads it as\n\
-                                  BENCH_search.json\n\
+                                  makespan, refine_iters, refine_accepted,\n\
+                                  delta_replay_frac, best_gap) — CI uploads it\n\
+                                  as BENCH_search.json.\n\
+                                  --refine runs a seeded MCMC/hill-climbing\n\
+                                  pass over the top --refine-top candidates\n\
+                                  (stage-boundary moves, recompute/offload\n\
+                                  toggles, widen/narrow, micro resize, op\n\
+                                  swaps), re-scoring mutations by incremental\n\
+                                  DES delta replay; --refine-iters bounds the\n\
+                                  mutation budget per chain, --refine-seed\n\
+                                  fixes the RNG, --gap-target stops a chain\n\
+                                  once its optimality-gap certificate (vs the\n\
+                                  analytic lower bound) is small enough, and\n\
+                                  --gap-ceiling exits 3 when the refined\n\
+                                  winner's gap exceeds it (the CI gate)\n\
            superscaler rvd      --from 'R(r)V(v)D(k1,k2)' --to '...' [--gpus N]\n\
                                 [--src-gpus N] [--dst-gpus N] [--mb MB]\n\
            superscaler train    [--devices N] [--steps N] [--lr F] [--artifacts DIR]\n\
@@ -247,6 +262,15 @@ fn search_cmd(args: &Args) {
         prune: !args.has("no-prune"),
         fidelity: fidelity(args),
         des_top: args.usize("des-top", 8),
+        refine: (args.has("refine") || args.has("refine-iters")).then(|| {
+            let d = search::RefineConfig::default();
+            search::RefineConfig {
+                iters: args.usize("refine-iters", d.iters),
+                seed: args.usize("refine-seed", d.seed as usize) as u64,
+                top: args.usize("refine-top", d.top),
+                gap_target: args.f64("gap-target", d.gap_target),
+            }
+        }),
     };
     // One model build per search run: the engine borrows it for every
     // candidate evaluation, the DES re-rank and the winner's trace replay.
@@ -257,6 +281,59 @@ fn search_cmd(args: &Args) {
     t.write_csv("bench_results/search.csv").ok();
     if let Some(path) = args.get("bench-json") {
         write_bench_json(path, &report);
+    }
+    if let Some(rs) = &report.refine {
+        println!(
+            "refine: {} chains, {} mutations ({} accepted), delta replay {}, best gap {}",
+            rs.chains,
+            rs.iters,
+            rs.accepted,
+            rs.delta_replay_frac()
+                .map(|f| format!("{:.1}%", 100.0 * f))
+                .unwrap_or_else(|| "-".to_string()),
+            rs.best_gap.map(|g| format!("{:.2}%", 100.0 * g)).unwrap_or_else(|| "-".to_string()),
+        );
+        // The refinement invariant: every chain's best starts at its seed
+        // score, so the refined winner can never be worse than the grid
+        // winner it started from. A violation is an engine bug, not a
+        // perf regression — fail loudly (same exit-3 convention as the
+        // perf gates).
+        if let (Some(start), Some(best)) = (rs.start_best, rs.best) {
+            if best > start * (1.0 + 1e-9) {
+                eprintln!(
+                    "REFINE GATE FAILED: refined best {} worse than grid-search best {}",
+                    fmt_secs(best),
+                    fmt_secs(start)
+                );
+                std::process::exit(3);
+            }
+        }
+        // --gap-ceiling: CI asserts the refined winner's optimality-gap
+        // certificate stays under a conservative ceiling.
+        if let Some(ceil) = args.get("gap-ceiling").map(|s| {
+            s.parse::<f64>().unwrap_or_else(|_| {
+                eprintln!("--gap-ceiling expects a number, got '{s}'");
+                std::process::exit(2);
+            })
+        }) {
+            match rs.best_gap {
+                Some(g) if g <= ceil => {
+                    println!("gap gate ok: {:.2}% <= ceiling {:.2}%", 100.0 * g, 100.0 * ceil)
+                }
+                Some(g) => {
+                    eprintln!(
+                        "GAP GATE FAILED: best gap {:.2}% exceeds ceiling {:.2}%",
+                        100.0 * g,
+                        100.0 * ceil
+                    );
+                    std::process::exit(3);
+                }
+                None => {
+                    eprintln!("GAP GATE FAILED: refinement produced no gap certificate");
+                    std::process::exit(3);
+                }
+            }
+        }
     }
     match report.best() {
         Some(best) => {
@@ -351,6 +428,32 @@ fn write_bench_json(path: &str, report: &search::SearchReport) {
         (
             "best_list_makespan",
             report.best_list_makespan().map(Value::from).unwrap_or(Value::Null),
+        ),
+        (
+            "refine_iters",
+            report.refine.as_ref().map(|r| Value::from(r.iters)).unwrap_or(Value::Null),
+        ),
+        (
+            "refine_accepted",
+            report.refine.as_ref().map(|r| Value::from(r.accepted)).unwrap_or(Value::Null),
+        ),
+        (
+            "delta_replay_frac",
+            report
+                .refine
+                .as_ref()
+                .and_then(|r| r.delta_replay_frac())
+                .map(Value::from)
+                .unwrap_or(Value::Null),
+        ),
+        (
+            "best_gap",
+            report
+                .refine
+                .as_ref()
+                .and_then(|r| r.best_gap)
+                .map(Value::from)
+                .unwrap_or(Value::Null),
         ),
     ]);
     if let Some(dir) = std::path::Path::new(path).parent() {

@@ -38,9 +38,29 @@ use crate::schedule::CPU_DEVICE;
 use crate::trans::autograd::BWD_FLOP_RATIO;
 use crate::trans::{autograd, recompute, TransError};
 
+/// Layer partition from explicit per-stage `layers` counts. `Some` only
+/// when every stage sets one and they sum to the model's layer count;
+/// otherwise the caller falls back to the FLOP-balanced split. This is the
+/// re-materialization path for the refinement loop's stage-boundary moves.
+fn explicit_partition(layers: &[Vec<OpId>], stages: &[StageSpec]) -> Option<Vec<Vec<usize>>> {
+    if stages.iter().any(|s| s.layers == 0)
+        || stages.iter().map(|s| s.layers).sum::<usize>() != layers.len()
+    {
+        return None;
+    }
+    let mut out = Vec::with_capacity(stages.len());
+    let mut next = 0usize;
+    for s in stages {
+        out.push((next..next + s.layers).collect());
+        next += s.layers;
+    }
+    Some(out)
+}
+
 /// Build a heterogeneous pipeline: `dp` replicas of a `stages.len()`-stage
 /// pipeline with `k` micro-batches, where stage `s` applies `stages[s]`'s
-/// intra-stage transformation. Layers are FLOP-balanced across stages; a
+/// intra-stage transformation. Layers are FLOP-balanced across stages
+/// (unless every stage pins an explicit [`StageSpec::layers`] count); a
 /// stage of width `w` occupies `w` consecutive devices.
 ///
 /// The model is borrowed (only the graph is cloned), and the transform is
@@ -75,7 +95,8 @@ pub fn hetero(model: &Model, dp: usize, k: usize, stages: &[StageSpec]) -> PlanR
     let mut graph = model.graph.clone();
     let g = &mut graph;
     let mut sched = Schedule::new();
-    let layer_stages = balance_stages(g, &model.layers, pp);
+    let layer_stages = explicit_partition(&model.layers, stages)
+        .unwrap_or_else(|| balance_stages(g, &model.layers, pp));
     let stage_of_layer: HashMap<usize, usize> = layer_stages
         .iter()
         .enumerate()
@@ -779,6 +800,33 @@ mod tests {
         assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
         assert_eq!(ra.comm_bytes, rb.comm_bytes);
         assert_eq!(ra.max_peak_mem(), rb.max_peak_mem());
+    }
+
+    #[test]
+    fn explicit_layer_split_overrides_balanced_partition() {
+        let model = gpt3(0, 8, 256);
+        let c = crate::cost::Cluster::v100(2);
+        let auto = [StageSpec::tp(1), StageSpec::tp(1)];
+        // 26 layer groups (embed + 24 + head): force a heavily skewed 4|22
+        // split that no FLOP-balanced partition would pick.
+        let skew = [
+            StageSpec { layers: 4, ..StageSpec::tp(1) },
+            StageSpec { layers: 22, ..StageSpec::tp(1) },
+        ];
+        let a = hetero(&model, 1, 2, &auto).unwrap();
+        let s = hetero(&model, 1, 2, &skew).unwrap();
+        let ra = crate::sim::run(&a.graph, &a.schedule, &c, CommMode::InterRvd).unwrap();
+        let rs = crate::sim::run(&s.graph, &s.schedule, &c, CommMode::InterRvd).unwrap();
+        assert_ne!(
+            ra.makespan.to_bits(),
+            rs.makespan.to_bits(),
+            "a skewed explicit partition must change the pipeline timeline"
+        );
+        // An incomplete/inconsistent explicit split falls back to balanced.
+        let partial = [StageSpec { layers: 2, ..StageSpec::tp(1) }, StageSpec::tp(1)];
+        let p = hetero(&model, 1, 2, &partial).unwrap();
+        let rp = crate::sim::run(&p.graph, &p.schedule, &c, CommMode::InterRvd).unwrap();
+        assert_eq!(ra.makespan.to_bits(), rp.makespan.to_bits());
     }
 
     #[test]

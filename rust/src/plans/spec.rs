@@ -99,11 +99,16 @@ pub struct StageSpec {
     pub recompute: bool,
     /// Offload this stage's optimizer state to the host over PCIe.
     pub offload: bool,
+    /// Explicit layer count for this stage (`0` = auto FLOP-balanced
+    /// split). When every stage of a hetero spec sets it, the partition
+    /// replaces [`crate::plans::balance_stages`] — this is how the MCMC
+    /// refinement's stage-boundary moves re-materialize.
+    pub layers: usize,
 }
 
 impl Default for StageSpec {
     fn default() -> Self {
-        StageSpec { tp: 1, shards: 1, recompute: false, offload: false }
+        StageSpec { tp: 1, shards: 1, recompute: false, offload: false, layers: 0 }
     }
 }
 
@@ -123,11 +128,15 @@ impl StageSpec {
         self.tp.max(1)
     }
 
-    /// Compact label: width + shard/flag suffixes, e.g. `tp4`, `x8`, `tp2r`.
+    /// Compact label: width + layer/shard/flag suffixes, e.g. `tp4`,
+    /// `x8`, `tp2l3r` (`l{n}` = explicit layer count).
     pub fn label(&self) -> String {
         let mut s = format!("tp{}", self.tp.max(1));
         if self.shards.max(1) > 1 {
             s = format!("x{}", self.shards);
+        }
+        if self.layers > 0 {
+            s.push_str(&format!("l{}", self.layers));
         }
         if self.recompute {
             s.push('r');
@@ -167,6 +176,12 @@ impl StageSpec {
             Ok(n) if n >= 1 => Ok(n),
             _ => Err(bad()),
         };
+        // Explicit layer-count suffix `l{n}` (the base `tp{n}`/`x{n}` forms
+        // contain no 'l', so the rightmost 'l' is unambiguous).
+        if let Some(i) = rest.rfind('l') {
+            st.layers = num(&rest[i + 1..])?;
+            rest = &rest[..i];
+        }
         if let Some(n) = rest.strip_prefix("tp") {
             st.tp = num(n)?;
         } else if let Some(n) = rest.strip_prefix('x') {
@@ -694,6 +709,7 @@ mod tests {
                         };
                         st.recompute = g.bool();
                         st.offload = g.bool();
+                        st.layers = if g.bool() { g.int(1, 6) } else { 0 };
                         st
                     })
                     .collect();
@@ -716,7 +732,7 @@ mod tests {
     #[test]
     fn prop_spec_parse_never_panics_on_garbage() {
         crate::util::prop::check("spec-parse-fuzz", 500, |g| {
-            const ALPHABET: &[u8] = b"dpthexko 0123456789[]|rLzc-";
+            const ALPHABET: &[u8] = b"dpthexkol 0123456789[]|rLzc-";
             let len = g.int(0, 24);
             let s: String = (0..len)
                 .map(|_| ALPHABET[g.int(0, ALPHABET.len())] as char)

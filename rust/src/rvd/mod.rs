@@ -614,6 +614,29 @@ pub fn p2p_baseline_time(
     cross_time(cluster, src_group, dst_group, total)
 }
 
+/// Modeled time to hand one stage's boundary activation (`bytes` total)
+/// from a `src_group`-wide stage to a `dst_group`-wide stage: both sides
+/// are dim-partitioned across their group width (the hetero planner's
+/// tp layout), and the cost is the RVD-synthesized conversion path, with
+/// the naive gather/transfer baseline as fallback when the synthesis has
+/// no route. Used by the refinement loop's RVD-aware stage-boundary moves
+/// to prefer cuts whose redistribution is cheap.
+pub fn stage_conversion_time(
+    cluster: &Cluster,
+    src_group: &[DeviceId],
+    dst_group: &[DeviceId],
+    bytes: u64,
+) -> f64 {
+    if src_group.is_empty() || dst_group.is_empty() || bytes == 0 {
+        return 0.0;
+    }
+    let from = Rvd::new(1, 1, &[src_group.len()]);
+    let to = Rvd::new(1, 1, &[dst_group.len()]);
+    search_inter(cluster, src_group, dst_group, bytes, &from, &to)
+        .map(|p| p.time)
+        .unwrap_or_else(|| p2p_baseline_time(cluster, src_group, dst_group, bytes, &to))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -656,6 +679,21 @@ mod tests {
         // reduce-scatter of the same payload.
         let rs = c.collective_time(CollKind::ReduceScatter, &group[..2], (1 << 24) / 4);
         assert!(p.time >= rs * 0.5);
+    }
+
+    #[test]
+    fn stage_conversion_time_is_finite_and_layout_sensitive() {
+        let c = cluster32();
+        // Same-width neighbour stages on one server vs a cut that crosses
+        // servers: both finite, the cross-server cut strictly costlier.
+        let local = stage_conversion_time(&c, &[0, 1], &[2, 3], 1 << 24);
+        let cross = stage_conversion_time(&c, &[6, 7], &[8, 9], 1 << 24);
+        assert!(local > 0.0 && local.is_finite());
+        assert!(cross > 0.0 && cross.is_finite());
+        assert!(cross > local, "cross-server cut {cross} must beat intra {local}");
+        // Degenerate inputs are free, not a panic.
+        assert_eq!(stage_conversion_time(&c, &[], &[0], 1 << 20), 0.0);
+        assert_eq!(stage_conversion_time(&c, &[0], &[1], 0), 0.0);
     }
 
     #[test]

@@ -65,9 +65,29 @@
 //! [`Metrics`] (`makespan` = list, `des_makespan` = DES), so the overlap
 //! headroom the cheaper tier missed is auditable per candidate.
 //!
+//! # MCMC refinement with optimality-gap certificates
+//!
+//! With [`SearchConfig::refine`] set, a fourth tier runs after the DES
+//! re-rank: each of the top-k grid candidates seeds a deterministic
+//! Metropolis chain over plan mutations — stage-boundary moves (biased by
+//! the RVD conversion cost of the new cut,
+//! [`crate::rvd::stage_conversion_time`]), recompute/offload toggles on
+//! one stage, widen/narrow of one stage, micro-batch rescaling, and
+//! adjacent-op swaps in one device's serial order — accepted or rejected
+//! on DES makespan via incremental delta replay
+//! ([`crate::des::delta::BaseRun`]), which re-executes only the event
+//! suffix a mutation perturbs. Every refined candidate carries a `gap`
+//! certificate: its DES makespan relative to the analytic lower bound
+//! [`Cluster::plan_time_lower_bound`], so "best found" comes with
+//! "provably within X% of optimal". See [`refine`] for the loop.
+//!
 //! Entry points: [`search`] (used by `superscaler search` and
 //! `examples/plan_explorer.rs`), [`enumerate`] + [`feasibility`] for callers
 //! that want the grid without evaluating it.
+
+pub mod refine;
+
+pub use refine::{RefineConfig, RefineSummary};
 
 use crate::cost::{Cluster, ModelStats};
 use crate::des;
@@ -130,6 +150,9 @@ pub struct SearchConfig {
     /// How many top list-ranked candidates the DES re-scores when
     /// `fidelity` is [`Fidelity::Des`].
     pub des_top: usize,
+    /// Run the MCMC refinement tier over the top grid candidates
+    /// (`None` = grid search only). See [`refine`].
+    pub refine: Option<RefineConfig>,
 }
 
 impl Default for SearchConfig {
@@ -143,6 +166,7 @@ impl Default for SearchConfig {
             prune: true,
             fidelity: Fidelity::List,
             des_top: 8,
+            refine: None,
         }
     }
 }
@@ -170,6 +194,9 @@ pub enum Infeasible {
     StageConflict { stage: usize, tp: usize, shards: usize },
     /// A hetero spec whose `pp` disagrees with its stage-list length.
     StageArity { pp: usize, stages: usize },
+    /// A hetero spec's explicit per-stage layer counts are incomplete or
+    /// do not sum to the model's layer count.
+    StageLayerSplit { assigned: usize, layers: usize },
 }
 
 impl std::fmt::Display for Infeasible {
@@ -195,6 +222,9 @@ impl std::fmt::Display for Infeasible {
             }
             Infeasible::StageArity { pp, stages } => {
                 write!(f, "pp {pp} disagrees with {stages} stage specs")
+            }
+            Infeasible::StageLayerSplit { assigned, layers } => {
+                write!(f, "stage layer split assigns {assigned} layers, model has {layers}")
             }
         }
     }
@@ -227,6 +257,15 @@ pub fn feasibility(spec: &PlanSpec, model: &Model, cluster: &Cluster) -> Result<
         for (i, st) in stages.iter().enumerate() {
             if st.tp.max(1) > 1 && st.shards.max(1) > 1 {
                 return Err(Infeasible::StageConflict { stage: i, tp: st.tp, shards: st.shards });
+            }
+        }
+        // Explicit layer counts are all-or-nothing and must tile the model
+        // exactly (a partial split would silently fall back to balanced).
+        let with_layers = stages.iter().filter(|s| s.layers > 0).count();
+        if with_layers > 0 {
+            let assigned: usize = stages.iter().map(|s| s.layers).sum();
+            if with_layers != stages.len() || assigned != layers {
+                return Err(Infeasible::StageLayerSplit { assigned, layers });
             }
         }
     }
@@ -317,6 +356,10 @@ pub struct Metrics {
     /// Mean bubble fraction of the iteration.
     pub bubble_frac: f64,
     pub oom: bool,
+    /// Optimality-gap certificate vs [`Cluster::plan_time_lower_bound`]:
+    /// `des_makespan / lower_bound - 1`, clamped at 0. `Some` only for
+    /// candidates the refinement tier scored.
+    pub gap: Option<f64>,
 }
 
 /// What happened to one candidate.
@@ -385,6 +428,11 @@ pub struct SearchReport {
     /// Candidates re-scored by the discrete-event engine (0 under
     /// [`Fidelity::List`]).
     pub des_rescored: usize,
+    /// Candidates refined by the MCMC tier (0 without
+    /// [`SearchConfig::refine`]).
+    pub refined: usize,
+    /// Aggregate refinement accounting (`None` without the refine tier).
+    pub refine: Option<RefineSummary>,
     /// Wall-clock search time, seconds.
     pub wall_secs: f64,
 }
@@ -430,7 +478,8 @@ impl SearchReport {
         let mut t = Table::new(
             &format!(
                 "plan search: {} on {} GPUs — {} specs simulated, {} infeasible, \
-                 {} dp-excluded, {} capped, {} cost-dominated, {} des-rescored, {}",
+                 {} dp-excluded, {} capped, {} cost-dominated, {} des-rescored, \
+                 {} refined, {}",
                 self.model,
                 self.gpus,
                 self.evaluated,
@@ -439,19 +488,20 @@ impl SearchReport {
                 self.capped,
                 self.pruned_bound,
                 self.des_rescored,
+                self.refined,
                 fmt_secs(self.wall_secs)
             ),
             &[
                 "#", "plan", "spec", "iteration", "DES", "TFLOPS", "comm", "peak mem", "bubble%",
-                "status",
+                "gap", "status",
             ],
         );
         let n = if top == 0 { self.ranked.len() } else { top };
-        // Failed rows share one shape (six dash columns + a status); build
+        // Failed rows share one shape (seven dash columns + a status); build
         // each row's strings once instead of per-arm duplicates.
         let err_row = |t: &mut Table, rank: String, c: &Candidate, status: String| {
             let mut row = vec![rank, c.planner.to_string(), c.spec.label()];
-            row.extend(std::iter::repeat_with(|| "-".to_string()).take(6));
+            row.extend(std::iter::repeat_with(|| "-".to_string()).take(7));
             row.push(status);
             t.row(row);
         };
@@ -468,6 +518,7 @@ impl SearchReport {
                     fmt_bytes(m.comm_bytes),
                     fmt_bytes(m.peak_mem),
                     format!("{:.0}%", 100.0 * m.bubble_frac),
+                    m.gap.map(|g| format!("{:.1}%", 100.0 * g)).unwrap_or_else(|| "-".to_string()),
                     if m.oom {
                         "OOM".to_string()
                     } else if m.des_oom {
@@ -539,6 +590,29 @@ fn cand_key(planner: &str, spec: &PlanSpec) -> String {
     format!("{planner}|{}", spec.label())
 }
 
+/// Re-order a DES-scored head slice: DES-OOM plans last, then by DES time;
+/// entries without a DES score fall back to their list makespan so they
+/// keep the list ranking rather than drifting alphabetically. Shared by
+/// the `--fidelity des` re-rank and the refinement tier (which rewrites
+/// `des_makespan` with each chain's best).
+fn sort_des_head(head: &mut [Candidate]) {
+    head.sort_by(|a, b| {
+        let key = |c: &Candidate| {
+            let m = c.metrics();
+            (
+                m.map(|m| m.des_oom).unwrap_or(true),
+                m.and_then(|m| m.des_makespan).unwrap_or(f64::INFINITY),
+                m.map(|m| m.makespan).unwrap_or(f64::INFINITY),
+            )
+        };
+        let (ka, kb) = (key(a), key(b));
+        ka.0.cmp(&kb.0)
+            .then_with(|| ka.1.partial_cmp(&kb.1).unwrap_or(std::cmp::Ordering::Equal))
+            .then_with(|| ka.2.partial_cmp(&kb.2).unwrap_or(std::cmp::Ordering::Equal))
+            .then_with(|| a.plan_name.cmp(&b.plan_name))
+    });
+}
+
 fn evaluate(
     model: &Model,
     planner: &'static dyn Planner,
@@ -579,6 +653,7 @@ fn evaluate(
                         peak_mem: r.max_peak_mem(),
                         bubble_frac: bubble / r.makespan.max(1e-12),
                         oom: r.oom,
+                        gap: None,
                     };
                     // Valid non-OOM candidates may reach the DES re-rank
                     // head: hand the artifacts to the bounded cache instead
@@ -717,21 +792,15 @@ pub fn search(model: &Model, cluster: &Cluster, cfg: &SearchConfig) -> SearchRep
         // time; entries whose re-score failed (or tied) fall back to their
         // list makespan, so they keep the list ranking rather than
         // drifting alphabetically. The tail keeps the list ranking.
-        ranked[..k].sort_by(|a, b| {
-            let key = |c: &Candidate| {
-                let m = c.metrics();
-                (
-                    m.map(|m| m.des_oom).unwrap_or(true),
-                    m.and_then(|m| m.des_makespan).unwrap_or(f64::INFINITY),
-                    m.map(|m| m.makespan).unwrap_or(f64::INFINITY),
-                )
-            };
-            let (ka, kb) = (key(a), key(b));
-            ka.0.cmp(&kb.0)
-                .then_with(|| ka.1.partial_cmp(&kb.1).unwrap_or(std::cmp::Ordering::Equal))
-                .then_with(|| ka.2.partial_cmp(&kb.2).unwrap_or(std::cmp::Ordering::Equal))
-                .then_with(|| a.plan_name.cmp(&b.plan_name))
-        });
+        sort_des_head(&mut ranked[..k]);
+    }
+    // ---- tier 4: seeded MCMC refinement over the top candidates ----
+    let mut refined = 0usize;
+    let mut refine_summary: Option<RefineSummary> = None;
+    if let Some(rcfg) = &cfg.refine {
+        let s = refine::refine(model, cluster, comm, workers, rcfg, &mut ranked);
+        refined = s.refined;
+        refine_summary = Some(s);
     }
     SearchReport {
         model: model_name,
@@ -744,6 +813,8 @@ pub fn search(model: &Model, cluster: &Cluster, cfg: &SearchConfig) -> SearchRep
         evaluated,
         fidelity: cfg.fidelity,
         des_rescored,
+        refined,
+        refine: refine_summary,
         wall_secs: t0.elapsed().as_secs_f64(),
     }
 }

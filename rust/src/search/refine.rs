@@ -1,0 +1,678 @@
+//! Seeded MCMC/hill-climbing refinement over the grid search's top
+//! candidates (FlexFlow-style delta simulation, arXiv 1807.05358, adapted
+//! to the SuperScaler plan space).
+//!
+//! Each of the top-k feasible candidates seeds one independent Markov
+//! chain. A chain proposes a small plan mutation, re-scores it under the
+//! discrete-event engine via [`BaseRun::replay`] (re-executing only the
+//! event suffix the mutation can affect), and accepts/rejects with a
+//! Metropolis criterion on DES makespan. Chains are deterministic given
+//! `(seed, chain index)` and independent of the worker count.
+//!
+//! # Mutation set
+//!
+//! * **Stage-boundary move** — shift one pipeline-stage boundary by one
+//!   layer. Directions are biased 3:1 toward the side whose inter-stage
+//!   activation handoff is cheaper under [`rvd::stage_conversion_time`],
+//!   so boundary moves are RVD-conversion-cost-aware.
+//! * **Recompute / offload toggle** — flip one stage's flag.
+//! * **Widen/narrow** — move half of one stage's devices to its neighbor
+//!   (total device count preserved; co-shard stages are skipped).
+//! * **Micro-batch resize** — double or halve `micro`.
+//! * **Adjacent-op swap** — swap two neighboring ops in one device's
+//!   serial order (a micro-batch slot swap). This mutates the schedule,
+//!   not the spec, so it replays against the *current* base run and
+//!   usually touches only a short event suffix.
+//!
+//! Spec-level mutations re-materialize the whole plan from the mutated
+//! [`PlanSpec`] (boundary moves write an explicit per-stage layer
+//! partition, closing the balanced-split-only debt from the hetero
+//! planner). Accepting a spec mutation therefore discards any accumulated
+//! op swaps — the chain's best score is still valid, but a swap-improved
+//! winner is not re-materializable from its spec label alone; the summary
+//! reports scores, not re-buildable artifacts.
+//!
+//! # Optimality-gap certificates
+//!
+//! Every accepted state is certified against the analytic
+//! [`Cluster::plan_time_lower_bound`]; a chain terminates early once its
+//! best gap falls under [`RefineConfig::gap_target`]. The per-candidate
+//! gap lands in [`Metrics::gap`] (the `gap` table column) and the best
+//! across chains in [`RefineSummary::best_gap`].
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::{feasibility, sort_des_head, Candidate, Outcome};
+use crate::cost::{Cluster, ModelStats};
+use crate::des::delta::{BaseRun, DEFAULT_EPOCHS};
+use crate::graph::TensorKind;
+use crate::materialize::{self, CommMode, Plan};
+use crate::models::Model;
+use crate::plans::{balance_stages, registry, PlanSpec};
+use crate::schedule::{self, DeviceId, ValidatedSchedule};
+use crate::sim::TaskGraph;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// Metropolis temperature as a fraction of the current makespan: an
+/// uphill move costing 3% of the iteration time is accepted with
+/// probability `1/e`.
+const T_FRAC: f64 = 0.03;
+
+/// Configuration of the refinement tier (`search --refine`).
+#[derive(Clone, Debug)]
+pub struct RefineConfig {
+    /// Mutation budget per chain.
+    pub iters: usize,
+    /// Base RNG seed; chain `i` derives its own stream from `(seed, i)`.
+    pub seed: u64,
+    /// Number of top candidates refined (capped by the feasible head).
+    pub top: usize,
+    /// A chain stops early once its best gap certificate is at or under
+    /// this fraction (0.01 = within 1% of the lower bound).
+    pub gap_target: f64,
+}
+
+impl Default for RefineConfig {
+    fn default() -> Self {
+        RefineConfig { iters: 64, seed: 0x5ca1e, top: 4, gap_target: 0.01 }
+    }
+}
+
+/// Aggregate accounting of one refinement pass, reported in
+/// [`super::SearchReport::refine`] and the bench JSON.
+#[derive(Clone, Debug, Default)]
+pub struct RefineSummary {
+    /// Chains launched (top candidates eligible for refinement).
+    pub chains: usize,
+    /// Chains that completed and wrote refined metrics back.
+    pub refined: usize,
+    /// Total mutations proposed across chains.
+    pub iters: usize,
+    /// Total mutations accepted across chains.
+    pub accepted: usize,
+    /// Events actually re-executed by delta replays.
+    pub replayed_events: usize,
+    /// Events a from-scratch run of every evaluated proposal would have
+    /// executed (the delta-replay denominator).
+    pub full_events: usize,
+    /// Best (smallest) gap certificate across chains after refinement.
+    pub best_gap: Option<f64>,
+    /// Best non-OOM DES makespan of the chain seeds (the grid winners).
+    pub start_best: Option<f64>,
+    /// Best non-OOM DES makespan after refinement; never worse than
+    /// [`RefineSummary::start_best`] because each chain's best starts at
+    /// its seed score.
+    pub best: Option<f64>,
+}
+
+impl RefineSummary {
+    /// Fraction of events delta replay actually re-executed, vs full
+    /// re-simulation of every evaluated proposal. `None` before any
+    /// proposal was scored.
+    pub fn delta_replay_frac(&self) -> Option<f64> {
+        (self.full_events > 0).then(|| self.replayed_events as f64 / self.full_events as f64)
+    }
+}
+
+/// `(oom, makespan)` — OOM states always rank behind non-OOM ones.
+type Score = (bool, f64);
+
+fn score_lt(a: Score, b: Score) -> bool {
+    match (a.0, b.0) {
+        (false, true) => true,
+        (true, false) => false,
+        _ => a.1 < b.1,
+    }
+}
+
+struct ChainResult {
+    start: Score,
+    best: Score,
+    gap: f64,
+    iters: usize,
+    accepted: usize,
+    replayed: usize,
+    full_events: usize,
+}
+
+/// Everything needed to score (and keep mutating) one plan instance.
+struct Artifacts {
+    graph: crate::graph::Graph,
+    vs: ValidatedSchedule,
+    plan: Plan,
+    tg: TaskGraph,
+}
+
+fn build_artifacts(
+    model: &Model,
+    cluster: &Cluster,
+    comm: CommMode,
+    planner: &str,
+    spec: &PlanSpec,
+) -> Option<Artifacts> {
+    let p = registry::find(planner)?;
+    let out = p.build(model, spec).ok()?;
+    let vs = schedule::validate(&out.graph, &out.schedule).ok()?;
+    let plan = materialize::materialize(&out.graph, &vs, cluster, comm);
+    let tg = TaskGraph::prepare(&vs, &plan);
+    Some(Artifacts { graph: out.graph, vs, plan, tg })
+}
+
+/// Refine the head of `ranked` in place: each eligible candidate's DES
+/// metrics are replaced by its chain's best, `gap` certificates are
+/// attached, and the head is re-sorted so the refined winner leads.
+pub fn refine(
+    model: &Model,
+    cluster: &Cluster,
+    comm: CommMode,
+    workers: usize,
+    cfg: &RefineConfig,
+    ranked: &mut [Candidate],
+) -> RefineSummary {
+    let k = ranked
+        .iter()
+        .take(cfg.top.max(1))
+        .take_while(|c| c.rank_class() == 0)
+        .count();
+    let mut sum = RefineSummary { chains: k, ..RefineSummary::default() };
+    if k == 0 {
+        return sum;
+    }
+    let stats = ModelStats::of(&model.graph);
+    let act_bytes = layer_act_bytes(model);
+    let results: Vec<Option<ChainResult>> = {
+        let head = &*ranked;
+        pool::par_map(k, workers, |i| {
+            run_chain(model, cluster, comm, &stats, &act_bytes, cfg, &head[i], i)
+        })
+    };
+    let fold_min = |slot: &mut Option<f64>, s: Score| {
+        if !s.0 && slot.map(|v| s.1 < v).unwrap_or(true) {
+            *slot = Some(s.1);
+        }
+    };
+    for (i, r) in results.into_iter().enumerate() {
+        let Some(r) = r else { continue };
+        if let Outcome::Ok(m) = &mut ranked[i].outcome {
+            m.des_makespan = Some(r.best.1);
+            m.des_oom = r.best.0;
+            m.gap = Some(r.gap);
+        }
+        sum.refined += 1;
+        sum.iters += r.iters;
+        sum.accepted += r.accepted;
+        sum.replayed_events += r.replayed;
+        sum.full_events += r.full_events;
+        fold_min(&mut sum.start_best, r.start);
+        fold_min(&mut sum.best, r.best);
+    }
+    sort_des_head(&mut ranked[..k]);
+    sum.best_gap = ranked.first().and_then(|c| c.metrics()).and_then(|m| m.gap);
+    sum
+}
+
+fn gap_of(cluster: &Cluster, stats: &ModelStats, spec: &PlanSpec, makespan: f64) -> f64 {
+    let lb = cluster.plan_time_lower_bound(spec, stats).max(1e-12);
+    (makespan / lb - 1.0).max(0.0)
+}
+
+fn metropolis(rng: &mut Rng, cur: Score, new: Score) -> bool {
+    match (cur.0, new.0) {
+        (false, true) => false,
+        (true, false) => true,
+        (true, true) => new.1 <= cur.1,
+        (false, false) => {
+            new.1 <= cur.1
+                || rng.f64() < (-(new.1 - cur.1) / (T_FRAC * cur.1.max(1e-12))).exp()
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_chain(
+    model: &Model,
+    cluster: &Cluster,
+    comm: CommMode,
+    stats: &ModelStats,
+    act_bytes: &[u64],
+    cfg: &RefineConfig,
+    cand: &Candidate,
+    index: usize,
+) -> Option<ChainResult> {
+    let mut rng = Rng::new(cfg.seed.wrapping_add((index as u64).wrapping_mul(0x9E3779B97F4A7C15)));
+    let mut spec = cand.spec.clone();
+    let mut art = build_artifacts(model, cluster, comm, cand.planner, &spec)?;
+    let (mut base, rep) = BaseRun::capture(&art.graph, &art.plan, cluster, &art.tg, DEFAULT_EPOCHS);
+    let mut cur: Score = (rep.oom, rep.makespan);
+    let start = cur;
+    let mut best = cur;
+    let mut best_gap = gap_of(cluster, stats, &spec, cur.1);
+    // Proposal score memo: revisited states (flag toggles, micro
+    // oscillation) cost zero replayed events.
+    let mut memo: HashMap<u64, Score> = HashMap::new();
+    let hetero = spec.stages.is_some();
+    let (mut iters, mut accepted, mut replayed, mut full_events) = (0usize, 0usize, 0usize, 0usize);
+    for _ in 0..cfg.iters {
+        if best_gap <= cfg.gap_target {
+            break;
+        }
+        iters += 1;
+        let r = rng.below(100);
+        let want_swap = if hetero { r < 40 } else { r < 60 };
+        if want_swap && art.tg.serial_hints {
+            let Some((d, pos)) = propose_swap(&art.vs, &mut rng) else { continue };
+            let mut vs2 = art.vs.clone();
+            vs2.device_order.get_mut(&d).unwrap().swap(pos, pos + 1);
+            let tg2 = TaskGraph::prepare(&vs2, &art.plan);
+            if !tg2.serial_hints {
+                // The swapped order is cyclic against data deps; prepare
+                // dropped the hints, so this is not the proposed state.
+                continue;
+            }
+            let key = swap_key(&spec, &vs2);
+            let hit = memo.get(&key).copied();
+            let (score, ran_base) = match hit {
+                Some(s) => (s, None),
+                None => {
+                    let (rep2, rs, base2) = base.replay(&art.graph, &art.plan, cluster, &tg2);
+                    replayed += rs.replayed;
+                    full_events += rs.total;
+                    let s = (rep2.oom, rep2.makespan);
+                    memo.insert(key, s);
+                    (s, Some(base2))
+                }
+            };
+            if metropolis(&mut rng, cur, score) {
+                let base2 = match ran_base {
+                    Some(b) => b,
+                    None => {
+                        // Memo hit told us the score; re-run the replay to
+                        // obtain the promoted base for further mutations.
+                        let (_, rs, b) = base.replay(&art.graph, &art.plan, cluster, &tg2);
+                        replayed += rs.replayed;
+                        full_events += rs.total;
+                        b
+                    }
+                };
+                art.vs = vs2;
+                art.tg = tg2;
+                base = base2;
+                cur = score;
+                accepted += 1;
+                if score_lt(score, best) {
+                    best = score;
+                    best_gap = gap_of(cluster, stats, &spec, score.1);
+                }
+            }
+        } else {
+            let prop = if hetero {
+                if r < 58 || want_swap {
+                    mutate_boundary(model, cluster, act_bytes, &spec, &mut rng)
+                } else if r < 68 {
+                    mutate_flag(&spec, &mut rng, false)
+                } else if r < 76 {
+                    mutate_flag(&spec, &mut rng, true)
+                } else if r < 88 {
+                    mutate_width(&spec, &mut rng)
+                } else {
+                    Some(mutate_micro(&spec, &mut rng))
+                }
+            } else {
+                Some(mutate_micro(&spec, &mut rng))
+            };
+            let Some(s2) = prop else { continue };
+            if s2 == spec || feasibility(&s2, model, cluster).is_err() {
+                continue;
+            }
+            let key = spec_key(cand.planner, &s2);
+            let hit = memo.get(&key).copied();
+            let (score, built) = match hit {
+                Some(s) => (s, None),
+                None => {
+                    let Some(art2) = build_artifacts(model, cluster, comm, cand.planner, &s2)
+                    else {
+                        continue;
+                    };
+                    let (rep2, rs, base2) = base.replay(&art2.graph, &art2.plan, cluster, &art2.tg);
+                    replayed += rs.replayed;
+                    full_events += rs.total;
+                    let s = (rep2.oom, rep2.makespan);
+                    memo.insert(key, s);
+                    (s, Some((art2, base2)))
+                }
+            };
+            if metropolis(&mut rng, cur, score) {
+                let (art2, base2) = match built {
+                    Some(ab) => ab,
+                    None => {
+                        let art2 = build_artifacts(model, cluster, comm, cand.planner, &s2)?;
+                        let (_, rs, base2) =
+                            base.replay(&art2.graph, &art2.plan, cluster, &art2.tg);
+                        replayed += rs.replayed;
+                        full_events += rs.total;
+                        (art2, base2)
+                    }
+                };
+                // Rebuilding from the spec discards any accumulated op
+                // swaps — the chain restarts schedule-space exploration
+                // from the canonical order of the new spec.
+                art = art2;
+                base = base2;
+                spec = s2;
+                cur = score;
+                accepted += 1;
+                if score_lt(score, best) {
+                    best = score;
+                    best_gap = gap_of(cluster, stats, &spec, score.1);
+                }
+            }
+        }
+    }
+    Some(ChainResult { start, best, gap: best_gap, iters, accepted, replayed, full_events })
+}
+
+// ---- mutations --------------------------------------------------------
+
+/// Move one stage boundary by one layer, 3:1 biased toward the direction
+/// whose inter-stage RVD conversion is cheaper. Writes the full explicit
+/// layer partition into the mutated spec so the hetero planner reproduces
+/// exactly this split.
+fn mutate_boundary(
+    model: &Model,
+    cluster: &Cluster,
+    act_bytes: &[u64],
+    spec: &PlanSpec,
+    rng: &mut Rng,
+) -> Option<PlanSpec> {
+    let stages = spec.stages.as_ref()?;
+    let pp = stages.len();
+    let nlayers = model.layers.len();
+    if pp < 2 || nlayers < pp {
+        return None;
+    }
+    let explicit = stages.iter().all(|s| s.layers > 0)
+        && stages.iter().map(|s| s.layers).sum::<usize>() == nlayers;
+    let mut sizes: Vec<usize> = if explicit {
+        stages.iter().map(|s| s.layers).collect()
+    } else {
+        balance_stages(&model.graph, &model.layers, pp)
+            .iter()
+            .map(|v| v.len())
+            .collect()
+    };
+    let b = rng.range(0, pp - 1);
+    // First layer index of stage b+1 — the cut this move shifts.
+    let cut: usize = sizes[..=b].iter().sum();
+    let widths: Vec<usize> = stages.iter().map(|s| s.width()).collect();
+    let groups = stage_groups(&widths);
+    let handoff = |cut_new: usize| {
+        crate::rvd::stage_conversion_time(
+            cluster,
+            &groups[b],
+            &groups[b + 1],
+            act_bytes.get(cut_new.wrapping_sub(1)).copied().unwrap_or(0),
+        )
+    };
+    let left_ok = sizes[b] > 1;
+    let right_ok = sizes[b + 1] > 1;
+    let dir: i64 = match (left_ok, right_ok) {
+        (false, false) => return None,
+        (true, false) => -1,
+        (false, true) => 1,
+        (true, true) => {
+            let cheaper = if handoff(cut - 1) <= handoff(cut + 1) { -1 } else { 1 };
+            if rng.below(4) < 3 {
+                cheaper
+            } else {
+                -cheaper
+            }
+        }
+    };
+    if dir < 0 {
+        sizes[b] -= 1;
+        sizes[b + 1] += 1;
+    } else {
+        sizes[b] += 1;
+        sizes[b + 1] -= 1;
+    }
+    let mut out = spec.clone();
+    for (st, &sz) in out.stages.as_mut().unwrap().iter_mut().zip(&sizes) {
+        st.layers = sz;
+    }
+    Some(out)
+}
+
+/// Move half of one stage's devices to an adjacent stage (widen one,
+/// narrow the other; total device count is preserved so the spec keeps
+/// matching the cluster). Co-shard stages are skipped.
+fn mutate_width(spec: &PlanSpec, rng: &mut Rng) -> Option<PlanSpec> {
+    let stages = spec.stages.as_ref()?;
+    let pp = stages.len();
+    if pp < 2 {
+        return None;
+    }
+    let b = rng.range(0, pp - 1);
+    if stages[b].shards.max(1) > 1 || stages[b + 1].shards.max(1) > 1 {
+        return None;
+    }
+    let (w1, w2) = (stages[b].width(), stages[b + 1].width());
+    let mut opts: Vec<(usize, usize)> = Vec::new();
+    if w1 >= 2 {
+        opts.push((w1 - w1 / 2, w2 + w1 / 2));
+    }
+    if w2 >= 2 {
+        opts.push((w1 + w2 / 2, w2 - w2 / 2));
+    }
+    if opts.is_empty() {
+        return None;
+    }
+    let (nw1, nw2) = *rng.choose(&opts);
+    let mut out = spec.clone();
+    let st = out.stages.as_mut().unwrap();
+    st[b].tp = nw1;
+    st[b + 1].tp = nw2;
+    Some(out)
+}
+
+/// Toggle one stage's recompute (`offload == false`) or offload flag.
+fn mutate_flag(spec: &PlanSpec, rng: &mut Rng, offload: bool) -> Option<PlanSpec> {
+    let mut out = spec.clone();
+    let stages = out.stages.as_mut()?;
+    let i = rng.range(0, stages.len());
+    if offload {
+        stages[i].offload = !stages[i].offload;
+    } else {
+        stages[i].recompute = !stages[i].recompute;
+    }
+    Some(out)
+}
+
+/// Double or halve the micro-batch count; infeasible values (micro beyond
+/// the batch) are rejected by the caller's feasibility check.
+fn mutate_micro(spec: &PlanSpec, rng: &mut Rng) -> PlanSpec {
+    let mut out = spec.clone();
+    if rng.f64() < 0.5 && out.micro >= 2 {
+        out.micro /= 2;
+    } else {
+        out.micro = out.micro.max(1) * 2;
+    }
+    out
+}
+
+/// Pick a device with ≥ 2 serially-ordered ops and an adjacent position
+/// pair to swap.
+fn propose_swap(vs: &ValidatedSchedule, rng: &mut Rng) -> Option<(DeviceId, usize)> {
+    let mut devs: Vec<DeviceId> = vs
+        .device_order
+        .iter()
+        .filter(|(_, ops)| ops.len() >= 2)
+        .map(|(&d, _)| d)
+        .collect();
+    if devs.is_empty() {
+        return None;
+    }
+    devs.sort_unstable();
+    let d = *rng.choose(&devs);
+    let len = vs.device_order[&d].len();
+    Some((d, rng.range(0, len - 1)))
+}
+
+// ---- helpers ----------------------------------------------------------
+
+/// Consecutive device groups of a stage-width vector (data-parallel
+/// replica 0) — the groups the hetero planner assigns.
+fn stage_groups(widths: &[usize]) -> Vec<Vec<DeviceId>> {
+    let mut out = Vec::with_capacity(widths.len());
+    let mut next = 0usize;
+    for &w in widths {
+        out.push((next..next + w).collect());
+        next += w;
+    }
+    out
+}
+
+/// Per-layer activation bytes of the untransformed model: the payload a
+/// stage boundary placed after that layer must hand to the next stage.
+fn layer_act_bytes(model: &Model) -> Vec<u64> {
+    model
+        .layers
+        .iter()
+        .map(|ops| {
+            let mut seen = BTreeSet::new();
+            let mut total = 0u64;
+            for &op in ops {
+                for &v in &model.graph.op(op).outputs {
+                    let pt = model.graph.vtensor(v).ptensor;
+                    if model.graph.ptensor(pt).kind == TensorKind::Activation && seen.insert(pt) {
+                        total += model.graph.ptensor(pt).bytes();
+                    }
+                }
+            }
+            total
+        })
+        .collect()
+}
+
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100000001b3);
+    }
+}
+
+/// Memo key of a spec-level proposal: scores of rebuilt specs depend only
+/// on the spec itself, never on the chain's current state.
+fn spec_key(planner: &str, spec: &PlanSpec) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    fnv(&mut h, b"spec|");
+    fnv(&mut h, planner.as_bytes());
+    fnv(&mut h, spec.label().as_bytes());
+    h
+}
+
+/// Memo key of a schedule-swap proposal: the full device order matters
+/// (and the spec it materialized from), since swap scores are relative to
+/// the current plan.
+fn swap_key(spec: &PlanSpec, vs: &ValidatedSchedule) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    fnv(&mut h, b"swap|");
+    fnv(&mut h, spec.label().as_bytes());
+    let mut devs: Vec<DeviceId> = vs.device_order.keys().copied().collect();
+    devs.sort_unstable();
+    for d in devs {
+        fnv(&mut h, &d.to_le_bytes());
+        for &op in &vs.device_order[&d] {
+            fnv(&mut h, &op.to_le_bytes());
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::plans::{PlanKind, StageSpec};
+
+    fn hetero_spec() -> PlanSpec {
+        PlanSpec {
+            pp: 2,
+            micro: 2,
+            stages: Some(vec![StageSpec::tp(2), StageSpec::tp(2)]),
+            ..PlanSpec::new(PlanKind::Hetero)
+        }
+    }
+
+    #[test]
+    fn boundary_move_writes_a_complete_explicit_partition() {
+        let model = models::gpt3(0, 8, 256);
+        let cluster = Cluster::v100(4);
+        let act = layer_act_bytes(&model);
+        let spec = hetero_spec();
+        let mut rng = Rng::new(7);
+        let m = mutate_boundary(&model, &cluster, &act, &spec, &mut rng)
+            .expect("boundary move applies to a 2-stage spec");
+        let stages = m.stages.as_ref().unwrap();
+        assert!(stages.iter().all(|s| s.layers > 0));
+        assert_eq!(
+            stages.iter().map(|s| s.layers).sum::<usize>(),
+            model.layers.len(),
+            "partition must cover every layer exactly once"
+        );
+        // A second move from the mutated spec starts from its explicit
+        // partition, not the balanced one.
+        let m2 = mutate_boundary(&model, &cluster, &act, &m, &mut rng).unwrap();
+        assert_eq!(
+            m2.stages.as_ref().unwrap().iter().map(|s| s.layers).sum::<usize>(),
+            model.layers.len()
+        );
+    }
+
+    #[test]
+    fn width_move_preserves_total_device_count() {
+        let spec = hetero_spec();
+        let mut rng = Rng::new(11);
+        for _ in 0..32 {
+            if let Some(m) = mutate_width(&spec, &mut rng) {
+                assert_eq!(m.devices(), spec.devices());
+            }
+        }
+    }
+
+    #[test]
+    fn micro_mutation_oscillates_between_feasible_neighbors() {
+        let spec = hetero_spec();
+        let mut rng = Rng::new(3);
+        let mut seen = BTreeSet::new();
+        for _ in 0..64 {
+            seen.insert(mutate_micro(&spec, &mut rng).micro);
+        }
+        assert!(seen.contains(&1) && seen.contains(&4), "halve and double both reachable");
+    }
+
+    #[test]
+    fn chain_is_deterministic_for_a_fixed_seed() {
+        let model = models::gpt3(0, 8, 256);
+        let cluster = Cluster::v100(4);
+        let stats = ModelStats::of(&model.graph);
+        let act = layer_act_bytes(&model);
+        let cfg = RefineConfig { iters: 8, ..RefineConfig::default() };
+        let cand = Candidate {
+            planner: "hetero",
+            spec: hetero_spec(),
+            plan_name: String::new(),
+            outcome: Outcome::BuildError(String::new()),
+        };
+        let a = run_chain(&model, &cluster, CommMode::InterRvd, &stats, &act, &cfg, &cand, 0)
+            .expect("chain runs");
+        let b = run_chain(&model, &cluster, CommMode::InterRvd, &stats, &act, &cfg, &cand, 0)
+            .expect("chain runs");
+        assert_eq!(a.best.1.to_bits(), b.best.1.to_bits());
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.replayed, b.replayed);
+        assert!(a.best.1 <= a.start.1 || a.start.0, "best never regresses past the seed");
+        assert!(a.gap.is_finite());
+    }
+}

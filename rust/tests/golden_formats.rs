@@ -31,6 +31,7 @@ fn synthetic_report() -> SearchReport {
             peak_mem: 2 * (1u64 << 30),
             bubble_frac: 0.25,
             oom: false,
+            gap: Some(0.04),
         }),
     };
     let oom = Candidate {
@@ -46,6 +47,7 @@ fn synthetic_report() -> SearchReport {
             peak_mem: 1u64 << 30,
             bubble_frac: 0.5,
             oom: true,
+            gap: None,
         }),
     };
     let failed = Candidate {
@@ -65,6 +67,8 @@ fn synthetic_report() -> SearchReport {
         evaluated: 3,
         fidelity: Fidelity::Des,
         des_rescored: 1,
+        refined: 1,
+        refine: None,
         wall_secs: 1.5,
     }
 }
@@ -77,7 +81,7 @@ fn search_report_table_csv_matches_golden() {
     assert_eq!(
         table.title,
         "plan search: gpt3-0 on 8 GPUs — 3 specs simulated, 3 infeasible, \
-         0 dp-excluded, 1 capped, 2 cost-dominated, 1 des-rescored, 1.500 s"
+         0 dp-excluded, 1 capped, 2 cost-dominated, 1 des-rescored, 1 refined, 1.500 s"
     );
     let path = std::env::temp_dir().join("superscaler_golden_search_table.csv");
     table.write_csv(&path).unwrap();
@@ -97,7 +101,8 @@ fn search_report_render_keeps_column_set() {
     // set and the per-row status strings without pinning column widths.
     let rendered = synthetic_report().to_table(0).render();
     let cols = [
-        "#", "plan", "spec", "iteration", "DES", "TFLOPS", "comm", "peak mem", "bubble%", "status",
+        "#", "plan", "spec", "iteration", "DES", "TFLOPS", "comm", "peak mem", "bubble%", "gap",
+        "status",
     ];
     for col in cols {
         assert!(rendered.contains(col), "missing column '{col}' in:\n{rendered}");
