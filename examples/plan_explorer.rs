@@ -44,21 +44,21 @@ fn main() {
         }
     };
 
-    let cfg = SearchConfig {
-        workers: args.usize("workers", 0),
-        hetero: !args.has("no-hetero"),
-        dp_min: args.usize("dp-min", 1),
-        prune: !args.has("no-prune"),
-        fidelity: {
-            let s = args.str("fidelity", "list");
-            superscaler::search::Fidelity::parse(s).unwrap_or_else(|| {
-                eprintln!("--fidelity expects 'list' or 'des', got '{s}'");
-                std::process::exit(2);
-            })
-        },
-        des_top: args.usize("des-top", 8),
-        ..SearchConfig::default()
+    let fidelity = {
+        let s = args.str("fidelity", "list");
+        superscaler::search::Fidelity::parse(s).unwrap_or_else(|| {
+            eprintln!("--fidelity expects 'list' or 'des', got '{s}'");
+            std::process::exit(2);
+        })
     };
+    let cfg = SearchConfig::builder()
+        .workers(args.usize("workers", 0))
+        .hetero(!args.has("no-hetero"))
+        .dp_min(args.usize("dp-min", 1))
+        .prune(!args.has("no-prune"))
+        .fidelity(fidelity)
+        .des_top(args.usize("des-top", 8))
+        .build();
     // One model build per run — the search borrows it for every candidate.
     let model = build();
     let report = search::search(&model, &cluster, &cfg);

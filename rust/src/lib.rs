@@ -43,6 +43,16 @@
 //! candidates are re-scored by the discrete-event engine, so schedules
 //! that overlap communication with compute are credited for it.
 //!
+//! Pipeline *schedules* are data too ([`schedule::dsl`]): a
+//! [`schedule::ScheduleSpec`] lists each stage's ordered
+//! (micro × F/B/W) slots, named builders cover sync/1F1B/interlaced/
+//! zero-bubble/V-shape, and a `sched{...}` token in the spec label makes
+//! the temporal discipline the search's fourth axis alongside
+//! dp × pp × tp.
+//!
+//! Downstream users should start from [`prelude`], which re-exports the
+//! handful of types nearly every integration touches.
+//!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! measured results.
 
@@ -63,3 +73,21 @@ pub mod util;
 
 pub use graph::{Graph, Op, OpId, OpKind, PTensor, VTensor};
 pub use schedule::Schedule;
+
+/// The crate's front door: one `use superscaler::prelude::*;` brings in
+/// the types nearly every integration needs — the plan vocabulary
+/// ([`plans::Planner`], [`plans::PlanSpec`], [`plans::registry`]), the
+/// schedule vocabulary ([`schedule::ScheduleSpec`] and friends), the
+/// modeled cluster, and the search entry points. Everything here is a
+/// re-export; the defining modules stay the source of truth.
+pub mod prelude {
+    pub use crate::cost::Cluster;
+    pub use crate::graph::Graph;
+    pub use crate::materialize::CommMode;
+    pub use crate::models::Model;
+    pub use crate::plans::{
+        registry, PlanKind, PlanSpec, Planner, SchedName, SchedSpec, SpecParseError, StageSpec,
+    };
+    pub use crate::schedule::{Schedule, ScheduleSpec};
+    pub use crate::search::{self, Fidelity, Metrics, RefineConfig, SearchConfig, SearchReport};
+}

@@ -61,9 +61,8 @@ fn usage() {
                                 [--dp-min D]\n\
                                 [--fidelity list|des] [--des-top K] [--trace FILE]\n\
                                 [--baseline FILE] [--write-baseline] [--tol F]\n\
-                                [--bench-json FILE]\n\
-                                [--refine] [--refine-iters N] [--refine-seed S]\n\
-                                [--refine-top K] [--gap-target F] [--gap-ceiling F]\n\
+                                [--bench-json FILE] [--schedule NAME|sched{{...}}]\n\
+                                [refine flags — see REFINE below]\n\
                                   enumerate the feasible PlanSpec grid (--hetero\n\
                                   adds heterogeneous per-stage pipelines),\n\
                                   dominance-prune against the analytic cost\n\
@@ -88,22 +87,32 @@ fn usage() {
                                   refreshes both.\n\
                                   --bench-json writes the search-throughput\n\
                                   trajectory artifact (wall_secs, evaluated,\n\
-                                  pruned counts, des_rescored, best list\n\
-                                  makespan, refine_iters, refine_accepted,\n\
+                                  pruned counts, des_rescored, best list and\n\
+                                  DES makespans, refine_iters, refine_accepted,\n\
                                   delta_replay_frac, best_gap) — CI uploads it\n\
                                   as BENCH_search.json.\n\
-                                  --refine runs a seeded MCMC/hill-climbing\n\
-                                  pass over the top --refine-top candidates\n\
-                                  (stage-boundary moves, recompute/offload\n\
-                                  toggles, widen/narrow, micro resize, op\n\
-                                  swaps), re-scoring mutations by incremental\n\
-                                  DES delta replay; --refine-iters bounds the\n\
-                                  mutation budget per chain, --refine-seed\n\
-                                  fixes the RNG, --gap-target stops a chain\n\
-                                  once its optimality-gap certificate (vs the\n\
-                                  analytic lower bound) is small enough, and\n\
-                                  --gap-ceiling exits 3 when the refined\n\
-                                  winner's gap exceeds it (the CI gate)\n\
+                                  --schedule pins every candidate to one\n\
+                                  pipeline schedule — the fourth search axis:\n\
+                                  a name (sync|1f1b|interlaced|zb|vshape) or\n\
+                                  an explicit sched{{...}} row token. Without\n\
+                                  it planners contribute their own schedule\n\
+                                  points (megatron emits each pipelined grid\n\
+                                  under 1F1B and zero-bubble).\n\
+           REFINE (superscaler search flag group):\n\
+             --refine            run the seeded MCMC/hill-climbing tier over\n\
+                                 the top grid candidates (stage-boundary\n\
+                                 moves, recompute/offload toggles,\n\
+                                 widen/narrow, micro resize, schedule-row\n\
+                                 permutations, op swaps), re-scoring each\n\
+                                 mutation by incremental DES delta replay\n\
+             --refine-iters N    mutation budget per chain (implies --refine)\n\
+             --refine-seed S     fix the chains' RNG seed\n\
+             --refine-top K      how many top candidates seed chains\n\
+             --gap-target F      stop a chain once its optimality-gap\n\
+                                 certificate (vs the analytic lower bound) is\n\
+                                 at or under F\n\
+             --gap-ceiling F     exit 3 when the refined winner's gap exceeds\n\
+                                 F (the CI gate)\n\
            superscaler rvd      --from 'R(r)V(v)D(k1,k2)' --to '...' [--gpus N]\n\
                                 [--src-gpus N] [--dst-gpus N] [--mb MB]\n\
            superscaler train    [--devices N] [--steps N] [--lr F] [--artifacts DIR]\n\
@@ -148,6 +157,70 @@ fn fidelity(args: &Args) -> search::Fidelity {
         eprintln!("--fidelity expects 'list' or 'des', got '{s}'");
         std::process::exit(2);
     })
+}
+
+/// `--schedule`: a named pipeline schedule (`sync`, `1f1b`, `interlaced`,
+/// `zb`, `vshape` or an alias) or a full `sched{...}` row token — pins the
+/// search's fourth axis. `None` when the flag is absent.
+fn schedule(args: &Args) -> Option<plans::SchedSpec> {
+    let s = args.get("schedule")?;
+    let parsed = plans::SchedSpec::parse_token(&format!("sched{{{s}}}"))
+        .or_else(|| plans::SchedSpec::parse_token(s));
+    match parsed {
+        Some(sp) => Some(sp),
+        None => {
+            eprintln!(
+                "--schedule expects a name (sync|1f1b|interlaced|zb|vshape) or a \
+                 sched{{...}} token, got '{s}'"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// The refine CLI flag group (`--refine`, `--refine-iters`,
+/// `--refine-seed`, `--refine-top`, `--gap-target`, `--gap-ceiling` —
+/// documented under REFINE in the usage text), parsed once and routed as
+/// one value instead of six ad-hoc lookups spread over `search_cmd`.
+struct RefineOpts {
+    /// `--refine` (or any budget flag that implies it).
+    enabled: bool,
+    iters: usize,
+    seed: u64,
+    top: usize,
+    gap_target: f64,
+    /// `--gap-ceiling`: the CI gate on the refined winner's certificate —
+    /// checked by `search_cmd` after the run, not part of [`RefineConfig`].
+    gap_ceiling: Option<f64>,
+}
+
+impl RefineOpts {
+    fn from_args(args: &Args) -> RefineOpts {
+        let d = search::RefineConfig::default();
+        RefineOpts {
+            enabled: args.has("refine") || args.has("refine-iters"),
+            iters: args.usize("refine-iters", d.iters),
+            seed: args.usize("refine-seed", d.seed as usize) as u64,
+            top: args.usize("refine-top", d.top),
+            gap_target: args.f64("gap-target", d.gap_target),
+            gap_ceiling: args.get("gap-ceiling").map(|s| {
+                s.parse::<f64>().unwrap_or_else(|_| {
+                    eprintln!("--gap-ceiling expects a number, got '{s}'");
+                    std::process::exit(2);
+                })
+            }),
+        }
+    }
+
+    /// The engine-facing tier config; `None` when the tier is off.
+    fn config(&self) -> Option<search::RefineConfig> {
+        self.enabled.then(|| search::RefineConfig {
+            iters: self.iters,
+            seed: self.seed,
+            top: self.top,
+            gap_target: self.gap_target,
+        })
+    }
 }
 
 /// The planner's canonical spec for this GPU count, overridden by whatever
@@ -253,25 +326,19 @@ fn search_cmd(args: &Args) {
     }
     let top = args.usize("top", 10);
     let cluster = Cluster::v100(gpus);
-    let cfg = search::SearchConfig {
-        workers: args.usize("workers", 0),
-        comm: comm_mode(args),
-        max_candidates: args.usize("max-candidates", 256),
-        hetero: args.has("hetero"),
-        dp_min: args.usize("dp-min", 1),
-        prune: !args.has("no-prune"),
-        fidelity: fidelity(args),
-        des_top: args.usize("des-top", 8),
-        refine: (args.has("refine") || args.has("refine-iters")).then(|| {
-            let d = search::RefineConfig::default();
-            search::RefineConfig {
-                iters: args.usize("refine-iters", d.iters),
-                seed: args.usize("refine-seed", d.seed as usize) as u64,
-                top: args.usize("refine-top", d.top),
-                gap_target: args.f64("gap-target", d.gap_target),
-            }
-        }),
-    };
+    let refine_opts = RefineOpts::from_args(args);
+    let cfg = search::SearchConfig::builder()
+        .workers(args.usize("workers", 0))
+        .comm(comm_mode(args))
+        .max_candidates(args.usize("max-candidates", 256))
+        .hetero(args.has("hetero"))
+        .dp_min(args.usize("dp-min", 1))
+        .prune(!args.has("no-prune"))
+        .fidelity(fidelity(args))
+        .des_top(args.usize("des-top", 8))
+        .refine(refine_opts.config())
+        .schedule(schedule(args))
+        .build();
     // One model build per search run: the engine borrows it for every
     // candidate evaluation, the DES re-rank and the winner's trace replay.
     let model = build_model(args);
@@ -310,12 +377,7 @@ fn search_cmd(args: &Args) {
         }
         // --gap-ceiling: CI asserts the refined winner's optimality-gap
         // certificate stays under a conservative ceiling.
-        if let Some(ceil) = args.get("gap-ceiling").map(|s| {
-            s.parse::<f64>().unwrap_or_else(|_| {
-                eprintln!("--gap-ceiling expects a number, got '{s}'");
-                std::process::exit(2);
-            })
-        }) {
+        if let Some(ceil) = refine_opts.gap_ceiling {
             match rs.best_gap {
                 Some(g) if g <= ceil => {
                     println!("gap gate ok: {:.2}% <= ceiling {:.2}%", 100.0 * g, 100.0 * ceil)
@@ -428,6 +490,15 @@ fn write_bench_json(path: &str, report: &search::SearchReport) {
         (
             "best_list_makespan",
             report.best_list_makespan().map(Value::from).unwrap_or(Value::Null),
+        ),
+        (
+            "best_des_makespan",
+            report
+                .best()
+                .and_then(|c| c.metrics())
+                .and_then(|m| m.des_makespan)
+                .map(Value::from)
+                .unwrap_or(Value::Null),
         ),
         (
             "refine_iters",

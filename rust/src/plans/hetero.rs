@@ -31,6 +31,13 @@
 //! [`crate::rvd::grad_sync_plan`]) whenever the dp group spans servers, so
 //! the simulators watch sync traffic contend on real links instead of one
 //! flat group-wide collective.
+//!
+//! Temporal ordering rides the shared [`order_1f1b`] helper, which since
+//! the schedule DSL landed is itself a lowering of
+//! [`crate::schedule::ScheduleSpec::one_f_one_b`] rows — hetero pipelines
+//! therefore emit the same edge stream as before, and the `sched{...}`
+//! search axis is restricted to 1F1B for this family (per-stage backward
+//! splitting under mixed intra-stage transforms is future work).
 
 use super::*;
 use crate::cost::{Cluster, ModelStats};

@@ -11,13 +11,16 @@
 //! (`ShardEmbedAlgo`), interleaving with pipeline steps on the same GPUs.
 
 use super::*;
-use crate::trans::{autograd, recompute};
+use crate::trans::{autograd, recompute, TransError};
 
 /// `interlaced_pipeline(model, s, k, block_recompute)`: `s` stages =
 /// devices, `k` micro-batches. `layer_recompute` enables per-layer
 /// recompute; `block_recompute` additionally serializes each micro-batch's
 /// recompute behind the previous backward (the coarse "IL-block" baseline
 /// of Fig. 15 — SuperScaler's fine-grained dependencies leave it false).
+///
+/// Uses the default 1F1B schedule; [`interlaced_sched`] accepts any W-free
+/// [`SchedSpec`] for the transformer-pipeline part.
 pub fn interlaced_pipeline(
     model: &Model,
     s: usize,
@@ -25,6 +28,41 @@ pub fn interlaced_pipeline(
     layer_recompute: bool,
     block_recompute: bool,
 ) -> PlanResult {
+    interlaced_sched(model, s, k, layer_recompute, block_recompute, None)
+}
+
+/// [`interlaced_pipeline`] under an explicit schedule. The schedule drives
+/// only the transformer pipeline (embedding shards interleave through data
+/// dependencies, as before). W slots are rejected with a typed error: the
+/// vocab-sharded embedding backward is not split here, so there is no
+/// weight-grad work to place.
+pub fn interlaced_sched(
+    model: &Model,
+    s: usize,
+    k: usize,
+    layer_recompute: bool,
+    block_recompute: bool,
+    sched_spec: Option<&SchedSpec>,
+) -> PlanResult {
+    let rows = match sched_spec {
+        Some(sp) => {
+            let rows = sp.resolve(s, k);
+            if rows.rows.len() != s {
+                return Err(TransError::Invalid(format!(
+                    "schedule has {} stage rows, pipeline has {s}",
+                    rows.rows.len()
+                )));
+            }
+            if rows.uses_wgrad() {
+                return Err(TransError::Invalid(
+                    "interlaced pipeline does not support W-slot schedules".into(),
+                ));
+            }
+            rows.check(k).map_err(|e| TransError::Invalid(format!("schedule: {e}")))?;
+            rows
+        }
+        None => ScheduleSpec::one_f_one_b(s, k),
+    };
     let mut graph = model.graph.clone();
     let g = &mut graph;
     let mut sched = Schedule::new();
@@ -147,7 +185,8 @@ pub fn interlaced_pipeline(
             fwd_spans.push(span(&fops));
             bwd_spans.push(span(&bops));
         }
-        order_1f1b(&mut sched, si, s, k, &fwd_spans, &bwd_spans);
+        dsl::lower_row(&mut sched, si, &rows.rows[si], &fwd_spans, &bwd_spans, &[])
+            .map_err(|e| TransError::Invalid(format!("schedule lowering: {e}")))?;
         // IL-block: recompute of micro-batch m may only start after the
         // previous backward fully drains (coarse scheduling).
         if block_recompute {
@@ -164,11 +203,17 @@ pub fn interlaced_pipeline(
         }
     }
 
+    // Named schedules keep the legacy name (1F1B is interlaced's native
+    // discipline); explicit (e.g. refine-mutated) row sets are flagged.
+    let sched_suffix = match sched_spec {
+        Some(SchedSpec::Explicit(_)) => "-custom",
+        _ => "",
+    };
     Ok(PlanOutput {
         graph,
         schedule: sched,
         name: format!(
-            "interlaced-s{s}k{k}{}",
+            "interlaced-s{s}k{k}{}{sched_suffix}",
             if block_recompute { "-block" } else { "" }
         ),
     })
@@ -213,12 +258,13 @@ impl Planner for InterlacedPlanner {
     }
 
     fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
-        interlaced_pipeline(
+        interlaced_sched(
             model,
             spec.pp.max(1),
             spec.micro.max(1),
             spec.recompute,
             spec.block_recompute,
+            spec.sched.as_ref(),
         )
     }
 }
@@ -247,6 +293,26 @@ mod tests {
                 "device {dev} holds {bytes} of {total} static bytes"
             );
         }
+    }
+
+    #[test]
+    fn explicit_1f1b_schedule_matches_the_default_bitwise() {
+        // The DSL path must emit the same edge stream as the legacy
+        // planner-coded 1F1B when handed equivalent rows.
+        let model = mbart(0, 8, 128);
+        let a = interlaced_pipeline(&model, 4, 4, false, false).unwrap();
+        let spec = SchedSpec::Explicit(ScheduleSpec::one_f_one_b(4, 4));
+        let b = interlaced_sched(&model, 4, 4, false, false, Some(&spec)).unwrap();
+        assert_eq!(a.schedule.order_edges(), b.schedule.order_edges());
+        assert!(b.name.ends_with("-custom"), "name: {}", b.name);
+    }
+
+    #[test]
+    fn w_slot_schedules_are_rejected() {
+        let model = mbart(0, 8, 128);
+        let spec = SchedSpec::Named(SchedName::ZeroBubble);
+        let err = interlaced_sched(&model, 4, 4, false, false, Some(&spec)).unwrap_err();
+        assert!(format!("{err}").contains("W-slot"), "got: {err}");
     }
 
     #[test]

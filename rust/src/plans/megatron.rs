@@ -10,19 +10,21 @@
 //! is the point of the unified abstraction.
 
 use super::*;
-use crate::trans::autograd;
+use crate::trans::{autograd, TransError};
 
-/// Micro-batch ordering discipline for the pipeline.
+/// Micro-batch ordering discipline for the pipeline. Kept for API
+/// compatibility; each variant is now just a name for a [`SchedSpec`]
+/// ([`megatron`] delegates to [`megatron_sched`]).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum PipeOrder {
     GPipe,
     OneFOneB,
 }
 
-/// Build the Megatron plan. Requires `dp * pp * tp` devices; `k` is the
-/// micro-batch count per dp replica. The model is borrowed: the graph is
-/// cloned (it is what the transformation rewrites); layer lists and TP-dim
-/// metadata are read through the borrow.
+/// Build the Megatron plan under a legacy [`PipeOrder`] — a thin wrapper
+/// selecting the equivalent named [`SchedSpec`] (1F1B or sync). The
+/// generated schedules are bitwise-identical to the pre-DSL hand-rolled
+/// ordering loops.
 pub fn megatron(
     model: &Model,
     dp: usize,
@@ -31,6 +33,53 @@ pub fn megatron(
     k: usize,
     order: PipeOrder,
 ) -> PlanResult {
+    let sched_spec = match order {
+        PipeOrder::OneFOneB => SchedSpec::Named(SchedName::OneFOneB),
+        PipeOrder::GPipe => SchedSpec::Named(SchedName::Sync),
+    };
+    megatron_sched(model, dp, pp, tp, k, &sched_spec)
+}
+
+/// Human tag a schedule contributes to the plan name (legacy names — used
+/// in golden CSVs and baselines — are preserved for the two disciplines
+/// that predate the DSL).
+fn sched_tag(sched_spec: &SchedSpec) -> &'static str {
+    match sched_spec {
+        SchedSpec::Named(SchedName::OneFOneB) => "OneFOneB",
+        SchedSpec::Named(SchedName::Sync) => "GPipe",
+        SchedSpec::Named(n) => n.as_str(),
+        SchedSpec::Explicit(_) => "custom",
+    }
+}
+
+/// Build the Megatron plan under an arbitrary schedule. Requires
+/// `dp * pp * tp` devices; `k` is the micro-batch count per dp replica.
+/// The model is borrowed: the graph is cloned (it is what the
+/// transformation rewrites); layer lists and TP-dim metadata are read
+/// through the borrow.
+///
+/// The schedule resolves to per-stage slot rows ([`SchedSpec::resolve`])
+/// which are structurally checked up front — an infeasible schedule is a
+/// typed [`TransError::Invalid`], not a downstream deadlock. Schedules
+/// that use W slots (zero-bubble) split every two-class backward op into
+/// B/W halves ([`autograd::split_bw`]) so weight-grad work can fill
+/// pipeline bubbles.
+pub fn megatron_sched(
+    model: &Model,
+    dp: usize,
+    pp: usize,
+    tp: usize,
+    k: usize,
+    sched_spec: &SchedSpec,
+) -> PlanResult {
+    let rows = sched_spec.resolve(pp, k);
+    if rows.rows.len() != pp {
+        return Err(TransError::Invalid(format!(
+            "schedule has {} stage rows, pipeline has {pp}",
+            rows.rows.len()
+        )));
+    }
+    rows.check(k).map_err(|e| TransError::Invalid(format!("schedule: {e}")))?;
     let tp_dim = &model.tp_dim;
     let mut graph = model.graph.clone();
     let g = &mut graph;
@@ -60,7 +109,14 @@ pub fn megatron(
         }
     }
 
-    let ag = autograd::complete(g);
+    let mut ag = autograd::complete(g);
+    // W-slot schedules need the backward split into B (activation-grad,
+    // critical path) and W (weight-grad, bubble filler) halves.
+    let wmap = if rows.uses_wgrad() {
+        autograd::split_bw(g, &mut ag)
+    } else {
+        HashMap::new()
+    };
 
     // ---- spatial assignment ----
     for (&(li, dpg, _mi), ops) in &pieces {
@@ -73,6 +129,9 @@ pub fn megatron(
             if let Some(&b) = ag.bwd_of.get(&op) {
                 sched.assign(b, device(dpg, s, t));
             }
+            if let Some(&w) = wmap.get(&op) {
+                sched.assign(w, device(dpg, s, t));
+            }
         }
     }
     align_optimizers(g);
@@ -83,6 +142,7 @@ pub fn megatron(
         for (s, ls) in stages.iter().enumerate() {
             let mut fwd_spans = Vec::with_capacity(k);
             let mut bwd_spans = Vec::with_capacity(k);
+            let mut w_spans: Vec<Option<(OpId, OpId)>> = Vec::with_capacity(k);
             for m in 0..k {
                 let fops: Vec<OpId> = ls
                     .iter()
@@ -95,14 +155,14 @@ pub fn megatron(
                 if fops.is_empty() || bops.is_empty() {
                     continue;
                 }
+                let wops: Vec<OpId> = fops.iter().filter_map(|op| wmap.get(op).copied()).collect();
                 fwd_spans.push(span(&fops));
                 bwd_spans.push(span(&bops));
+                w_spans.push((!wops.is_empty()).then(|| span(&wops)));
             }
             if fwd_spans.len() == k {
-                match order {
-                    PipeOrder::OneFOneB => order_1f1b(&mut sched, s, pp, k, &fwd_spans, &bwd_spans),
-                    PipeOrder::GPipe => order_gpipe(&mut sched, &fwd_spans, &bwd_spans),
-                }
+                dsl::lower_row(&mut sched, s, &rows.rows[s], &fwd_spans, &bwd_spans, &w_spans)
+                    .map_err(|e| TransError::Invalid(format!("schedule lowering: {e}")))?;
             }
         }
     }
@@ -110,7 +170,7 @@ pub fn megatron(
     Ok(PlanOutput {
         graph,
         schedule: sched,
-        name: format!("megatron-dp{dp}pp{pp}tp{tp}k{k}-{order:?}"),
+        name: format!("megatron-dp{dp}pp{pp}tp{tp}k{k}-{}", sched_tag(sched_spec)),
     })
 }
 
@@ -150,19 +210,32 @@ impl Planner for MegatronPlanner {
             let micros: &[usize] = if pp > 1 { &[1, 2, 4, 8, 16] } else { &[1] };
             for &k in micros {
                 out.push(PlanSpec { dp, pp, tp, micro: k, ..PlanSpec::new(PlanKind::Megatron) });
+                // Fourth axis: the same spatial grid under a zero-bubble
+                // schedule (only meaningful with a pipeline and >1 micro).
+                if pp > 1 && k > 1 {
+                    out.push(PlanSpec {
+                        dp,
+                        pp,
+                        tp,
+                        micro: k,
+                        sched: Some(SchedSpec::Named(SchedName::ZeroBubble)),
+                        ..PlanSpec::new(PlanKind::Megatron)
+                    });
+                }
             }
         }
         out
     }
 
     fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
-        megatron(
+        let sched = spec.sched.clone().unwrap_or(SchedSpec::Named(SchedName::OneFOneB));
+        megatron_sched(
             model,
             spec.dp.max(1),
             spec.pp.max(1),
             spec.tp.max(1),
             spec.micro.max(1),
-            PipeOrder::OneFOneB,
+            &sched,
         )
     }
 }
@@ -191,13 +264,14 @@ impl Planner for TpPlanner {
     }
 
     fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
-        megatron(
+        let sched = spec.sched.clone().unwrap_or(SchedSpec::Named(SchedName::OneFOneB));
+        megatron_sched(
             model,
             spec.dp.max(1),
             spec.pp.max(1),
             spec.tp.max(1),
             spec.micro.max(1),
-            PipeOrder::OneFOneB,
+            &sched,
         )
     }
 }
@@ -228,13 +302,14 @@ impl Planner for GPipePlanner {
     }
 
     fn build(&self, model: &Model, spec: &PlanSpec) -> PlanResult {
-        megatron(
+        let sched = spec.sched.clone().unwrap_or(SchedSpec::Named(SchedName::Sync));
+        megatron_sched(
             model,
             spec.dp.max(1),
             spec.pp.max(1),
             spec.tp.max(1),
             spec.micro.max(1),
-            PipeOrder::GPipe,
+            &sched,
         )
     }
 }
@@ -271,6 +346,49 @@ mod tests {
             ra.max_peak_mem(),
             rb.max_peak_mem()
         );
+    }
+
+    #[test]
+    fn zero_bubble_validates_and_beats_1f1b_on_des() {
+        // ZB-H1: halving the critical-path backward and filling bubbles
+        // with W work must not lose to 1F1B under the high-fidelity DES.
+        let c = crate::cost::Cluster::v100(4);
+        let model = gpt3(0, 8, 256);
+        let zb = megatron_sched(&model, 1, 4, 1, 8, &SchedSpec::Named(SchedName::ZeroBubble))
+            .unwrap();
+        let fb = megatron_sched(&model, 1, 4, 1, 8, &SchedSpec::Named(SchedName::OneFOneB))
+            .unwrap();
+        assert!(zb.name.ends_with("-zb"), "name: {}", zb.name);
+        assert!(fb.name.ends_with("-OneFOneB"), "legacy name preserved: {}", fb.name);
+        let vz = crate::schedule::validate(&zb.graph, &zb.schedule).unwrap();
+        let vf = crate::schedule::validate(&fb.graph, &fb.schedule).unwrap();
+        let pz = crate::materialize::materialize(&zb.graph, &vz, &c, CommMode::InterRvd);
+        let pf = crate::materialize::materialize(&fb.graph, &vf, &c, CommMode::InterRvd);
+        let rz = crate::des::simulate(&zb.graph, &vz, &pz, &c);
+        let rf = crate::des::simulate(&fb.graph, &vf, &pf, &c);
+        assert!(!rz.oom && !rf.oom);
+        assert!(
+            rz.makespan <= rf.makespan * 1.0001,
+            "zb makespan {} vs 1f1b {}",
+            rz.makespan,
+            rf.makespan
+        );
+    }
+
+    #[test]
+    fn megatron_sched_rejects_malformed_schedules_with_typed_errors() {
+        let model = gpt3(0, 4, 256);
+        // Wrong row arity: 2 stage rows against a pp=4 pipeline.
+        let two_rows = SchedSpec::Explicit(crate::schedule::ScheduleSpec::one_f_one_b(2, 4));
+        let err = megatron_sched(&model, 1, 4, 1, 4, &two_rows).unwrap_err();
+        assert!(format!("{err}").contains("stage rows"), "got: {err}");
+        // Structurally broken row set: B before its F deadlocks stage 0.
+        use crate::schedule::Slot;
+        let stuck = SchedSpec::Explicit(crate::schedule::ScheduleSpec {
+            rows: vec![vec![Slot::b(0), Slot::f(0)], vec![Slot::f(0), Slot::b(0)]],
+        });
+        let err = megatron_sched(&model, 1, 2, 1, 1, &stuck).unwrap_err();
+        assert!(format!("{err}").contains("schedule"), "got: {err}");
     }
 
     #[test]

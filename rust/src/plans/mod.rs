@@ -24,6 +24,11 @@
 //!   gradients synchronize through RVD-decomposed collectives
 //!   ([`crate::rvd::grad_sync_plan`]) — the search over this space is
 //!   three-level: dp × stage-width composition × per-stage choice.
+//!   A spec may also carry a [`SchedSpec`] — the pipeline schedule as
+//!   data (`sched{zb}`, `sched{f0b0;f0b0}` label tokens): named
+//!   disciplines or explicit per-stage slot rows from
+//!   [`crate::schedule::dsl`], making the temporal ordering the fourth
+//!   searchable axis instead of a per-planner hard-coding.
 //!   Labels round-trip: [`PlanSpec::label`] is complete and
 //!   [`PlanSpec::parse`] inverts it with typed [`SpecParseError`]s.
 //! * [`Planner`] — the trait every sProgram implements: `name()`,
@@ -65,9 +70,13 @@ pub use pipe3f1b::{pipeline_3f1b, ThreeFOneBPlanner};
 pub use spec::{factorizations, PlanKind, PlanSpec, Planner, SpecParseError, StageSpec};
 pub use zero::{zero3, Zero3OffloadPlanner, Zero3Planner};
 
+// The schedule vocabulary is part of the spec grammar (`sched{...}`
+// tokens), so the plan layer re-exports it alongside `PlanSpec`.
+pub use crate::schedule::{SchedName, SchedSpec, ScheduleSpec};
+
 use crate::graph::{Graph, OpId, OpKind, PTensorId, TensorKind};
 use crate::models::Model;
-use crate::schedule::{DeviceId, Schedule};
+use crate::schedule::{dsl, DeviceId, Schedule};
 use crate::trans::{op_trans, TransformAlgo};
 use std::collections::HashMap;
 
@@ -332,6 +341,11 @@ pub fn balance_stages(g: &Graph, layers: &[Vec<OpId>], s: usize) -> Vec<Vec<usiz
 /// drains. Emits `op-order` edges between consecutive tasks via their
 /// representative ops. `fwd[m]` / `bwd[m]` are the (first, last) ops of
 /// micro-batch `m`'s forward / backward work on this stage.
+///
+/// Since the schedule DSL landed this is a thin wrapper over
+/// [`dsl::row_1f1b`] + [`dsl::lower_row`]: the row builder emits the same
+/// slot sequence this function used to hand-roll, so the generated edges
+/// are bitwise-identical (pinned by tests in `schedule::dsl`).
 pub fn order_1f1b(
     sched: &mut Schedule,
     s: usize,
@@ -340,31 +354,16 @@ pub fn order_1f1b(
     fwd: &[(OpId, OpId)],
     bwd: &[(OpId, OpId)],
 ) {
-    let warmup = (n_stages - s).min(k);
-    let mut seq: Vec<(OpId, OpId)> = Vec::new();
-    for m in 0..warmup {
-        seq.push(fwd[m]);
-    }
-    let mut next_f = warmup;
-    for m in 0..k {
-        seq.push(bwd[m]);
-        if next_f < k {
-            seq.push(fwd[next_f]);
-            next_f += 1;
-        }
-    }
-    for w in seq.windows(2) {
-        sched.order(w[0].1, w[1].0);
-    }
+    let row = dsl::row_1f1b(s, n_stages, k);
+    dsl::lower_row(sched, s, &row, fwd, bwd, &[]).expect("1f1b row spans k micro-batches");
 }
 
 /// GPipe order (paper Fig. 1 middle): all forwards, then all backwards.
+/// Thin wrapper over [`dsl::row_sync`] + [`dsl::lower_row`] (same edges as
+/// the legacy hand-rolled loop).
 pub fn order_gpipe(sched: &mut Schedule, fwd: &[(OpId, OpId)], bwd: &[(OpId, OpId)]) {
-    let mut seq: Vec<(OpId, OpId)> = fwd.to_vec();
-    seq.extend_from_slice(bwd);
-    for w in seq.windows(2) {
-        sched.order(w[0].1, w[1].0);
-    }
+    let row = dsl::row_sync(fwd.len().max(bwd.len()));
+    dsl::lower_row(sched, 0, &row, fwd, bwd, &[]).expect("sync row spans all micro-batches");
 }
 
 /// Concrete size of a signature dim on an op (looked up through its

@@ -4,6 +4,12 @@
 //! scheduling it is just a different `op-order` pattern: each micro-batch's
 //! three forward transits and single backward transit interleave across
 //! stages like virtual micro-batches.
+//!
+//! This family is the deliberate exception to the schedule DSL
+//! ([`crate::schedule::dsl`]): its recycling passes give each micro-batch
+//! *three* F transits, which the (micro × F/B/W) slot vocabulary cannot
+//! name, so the ordering below stays bespoke and the `sched{...}` search
+//! axis rejects [`PlanKind::ThreeFOneB`].
 
 use super::*;
 use crate::trans::autograd;

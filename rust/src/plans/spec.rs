@@ -11,6 +11,7 @@
 use super::PlanResult;
 use crate::cost::Cluster;
 use crate::models::Model;
+use crate::schedule::{SchedName, SchedSpec};
 
 /// Which sProgram family a [`PlanSpec`] selects.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
@@ -206,6 +207,9 @@ pub enum SpecParseError {
     BadToken(String),
     /// A stage token inside `[...]` is malformed.
     BadStage(String),
+    /// A `sched{...}` token names no known schedule and is not a
+    /// well-formed explicit row encoding.
+    BadSched(String),
 }
 
 impl std::fmt::Display for SpecParseError {
@@ -215,6 +219,7 @@ impl std::fmt::Display for SpecParseError {
             SpecParseError::UnknownKind(k) => write!(f, "unknown plan kind '{k}'"),
             SpecParseError::BadToken(t) => write!(f, "bad spec token '{t}'"),
             SpecParseError::BadStage(t) => write!(f, "bad stage spec '{t}'"),
+            SpecParseError::BadSched(t) => write!(f, "bad schedule token '{t}'"),
         }
     }
 }
@@ -246,6 +251,11 @@ pub struct PlanSpec {
     pub block_recompute: bool,
     /// Coshard: restrict co-sharding to the first N layers (`None` = all).
     pub coshard_layers: Option<usize>,
+    /// Pipeline schedule — the fourth search axis. `None` keeps the
+    /// planner's historical default (1F1B for megatron/hetero, sync for
+    /// GPipe); `Some` selects a named discipline or explicit slot rows
+    /// (see [`crate::schedule::dsl`]). Labeled as a `sched{...}` token.
+    pub sched: Option<SchedSpec>,
     /// Hetero: per-stage intra-stage transformations. `Some` implies
     /// `kind == Hetero` and `pp == stages.len()`; the stage widths replace
     /// `tp` in the device count.
@@ -266,6 +276,7 @@ impl Default for PlanSpec {
             recompute: false,
             block_recompute: false,
             coshard_layers: None,
+            sched: None,
             stages: None,
         }
     }
@@ -389,6 +400,10 @@ impl PlanSpec {
         if let Some(n) = self.coshard_layers {
             s.push_str(&format!(" L{n}"));
         }
+        if let Some(sched) = &self.sched {
+            s.push(' ');
+            s.push_str(&sched.token());
+        }
         if let Some(stages) = &self.stages {
             let inner: Vec<String> = stages.iter().map(|st| st.label()).collect();
             s.push_str(&format!(" [{}]", inner.join("|")));
@@ -402,7 +417,7 @@ impl PlanSpec {
     ///
     /// ```text
     /// <kind> [dpN] [ppN] [tpN] [kN] [xN] [offload] [zero] [rc] [block]
-    ///        [LN] [[stage|stage|...]]
+    ///        [LN] [sched{name|rows}] [[stage|stage|...]]
     /// ```
     ///
     /// Absent tokens keep their defaults (degree 1 / flag off). A stage
@@ -449,6 +464,11 @@ impl PlanSpec {
                         spec.shards = num(r)?;
                     } else if let Some(r) = tok.strip_prefix('L') {
                         spec.coshard_layers = Some(num(r)?);
+                    } else if tok.starts_with("sched{") {
+                        spec.sched = Some(
+                            SchedSpec::parse_token(tok)
+                                .ok_or_else(|| SpecParseError::BadSched(tok.to_string()))?,
+                        );
                     } else {
                         return Err(SpecParseError::BadToken(tok.to_string()));
                     }
@@ -622,6 +642,19 @@ mod tests {
                 micro: 4,
                 ..PlanSpec::new(PlanKind::Interlaced)
             },
+            PlanSpec {
+                dp: 2,
+                pp: 4,
+                micro: 8,
+                sched: Some(SchedSpec::Named(SchedName::ZeroBubble)),
+                ..PlanSpec::new(PlanKind::Megatron)
+            },
+            PlanSpec {
+                pp: 2,
+                micro: 2,
+                sched: Some(SchedSpec::Explicit(crate::schedule::ScheduleSpec::one_f_one_b(2, 2))),
+                ..PlanSpec::new(PlanKind::Megatron)
+            },
             PlanSpec::hetero(vec![StageSpec::tp(4), StageSpec::coshard(8)], 4),
             PlanSpec::hetero_dp(
                 2,
@@ -664,6 +697,24 @@ mod tests {
             PlanSpec::parse("hetero [tp2|zz]"),
             Err(SpecParseError::BadStage("zz".into()))
         );
+        assert_eq!(
+            PlanSpec::parse("megatron pp2 k2 sched{nope}"),
+            Err(SpecParseError::BadSched("sched{nope}".into()))
+        );
+        assert_eq!(
+            PlanSpec::parse("megatron sched{f0b0;}"),
+            Err(SpecParseError::BadSched("sched{f0b0;}".into()))
+        );
+        assert_eq!(
+            PlanSpec::parse("megatron sched{f0b0"),
+            Err(SpecParseError::BadSched("sched{f0b0".into()))
+        );
+        // Canonical named tokens round-trip; aliases normalize.
+        let s = PlanSpec::parse("megatron pp2 k4 sched{zb}").unwrap();
+        assert_eq!(s.sched, Some(SchedSpec::Named(SchedName::ZeroBubble)));
+        assert_eq!(PlanSpec::parse(&s.label()).unwrap(), s);
+        let alias = PlanSpec::parse("megatron pp2 k4 sched{gpipe}").unwrap();
+        assert_eq!(alias.sched, Some(SchedSpec::Named(SchedName::Sync)));
         // An explicit pp disagreeing with the stage arity parses — the
         // typed StageArity rejection is feasibility's job, not the parser's.
         let s = PlanSpec::parse("hetero pp3 [tp2|tp2]").unwrap();
@@ -720,6 +771,21 @@ mod tests {
                 spec.tp = g.pow2(8);
                 spec.shards = g.pow2(8);
             }
+            if g.bool() {
+                let names = [
+                    SchedName::Sync,
+                    SchedName::OneFOneB,
+                    SchedName::Interlaced,
+                    SchedName::ZeroBubble,
+                    SchedName::VShape,
+                ];
+                spec.sched = Some(if g.bool() {
+                    SchedSpec::Named(*g.rng.choose(&names))
+                } else {
+                    let rows = g.rng.choose(&names).rows(g.int(1, 5), g.int(1, 6));
+                    SchedSpec::Explicit(rows)
+                });
+            }
             let lbl = spec.label();
             match PlanSpec::parse(&lbl) {
                 Ok(back) if back == spec => Ok(()),
@@ -732,7 +798,7 @@ mod tests {
     #[test]
     fn prop_spec_parse_never_panics_on_garbage() {
         crate::util::prop::check("spec-parse-fuzz", 500, |g| {
-            const ALPHABET: &[u8] = b"dpthexkol 0123456789[]|rLzc-";
+            const ALPHABET: &[u8] = b"dpthexkol 0123456789[]|rLzc-sfbw{};";
             let len = g.int(0, 24);
             let s: String = (0..len)
                 .map(|_| ALPHABET[g.int(0, ALPHABET.len())] as char)

@@ -1,0 +1,716 @@
+//! Schedules as data — the programmable pipeline-schedule DSL.
+//!
+//! The paper's central claim (§3.2) is that *space-time scheduling* is a
+//! free axis decoupled from model transformation, yet pipeline orderings
+//! used to be hard-coded inside individual planners. This module makes the
+//! temporal axis declarative: a [`ScheduleSpec`] is a per-stage list of
+//! [`Slot`]s over (micro-batch × {forward, backward, weight-grad}) — plain
+//! data that can be named in a `PlanSpec` label (`sched{zb}`,
+//! `sched{f0b0;f0b0}`), enumerated by the search grid, permuted by the
+//! refinement tier, and lowered to ordinary [`Schedule::order`] edges.
+//! The existing [`super::validate`] cycle/producer resolution then checks
+//! the lowered result against the real data dependencies, so an infeasible
+//! schedule surfaces as a typed error ([`DslError`] structurally,
+//! [`super::ScheduleError`] against the graph) — never as a silent
+//! deadlock. (Grounded in "A Flexible Programmable Pipeline Parallelism
+//! Framework", arXiv 2510.05112.)
+//!
+//! Named builders cover the schedules the planners used to hard-code —
+//! [`ScheduleSpec::sync`] (GPipe), [`ScheduleSpec::one_f_one_b`],
+//! [`ScheduleSpec::interlaced`] — plus the ones the DSL unlocks:
+//! [`ScheduleSpec::zero_bubble`] (backward split into B/activation-grad
+//! and W/weight-grad tasks, with W work filling the drain bubbles) and
+//! [`ScheduleSpec::v_shape`] (depth-skewed warmup). The 1F1B and sync
+//! builders reproduce the legacy `order_1f1b` / `order_gpipe` edge
+//! sequences exactly — the planners now *delegate* to this module, so
+//! equivalence holds by construction and is pinned by tests.
+
+use super::Schedule;
+use crate::graph::OpId;
+
+/// Task class of one schedule slot.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum SlotKind {
+    /// Forward pass of one micro-batch through this stage.
+    F,
+    /// Backward activation-gradient task — the cross-stage critical path.
+    /// Before the B/W split this is the whole backward op.
+    B,
+    /// Backward weight-gradient task. Only exists on split graphs
+    /// (`trans::autograd::split_bw`); has no cross-stage consumers, so it
+    /// is free to fill pipeline bubbles.
+    W,
+}
+
+impl SlotKind {
+    fn ch(self) -> char {
+        match self {
+            SlotKind::F => 'f',
+            SlotKind::B => 'b',
+            SlotKind::W => 'w',
+        }
+    }
+}
+
+/// One scheduled unit: a task class applied to one micro-batch.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Slot {
+    pub micro: usize,
+    pub kind: SlotKind,
+}
+
+impl Slot {
+    pub fn f(micro: usize) -> Slot {
+        Slot { micro, kind: SlotKind::F }
+    }
+    pub fn b(micro: usize) -> Slot {
+        Slot { micro, kind: SlotKind::B }
+    }
+    pub fn w(micro: usize) -> Slot {
+        Slot { micro, kind: SlotKind::W }
+    }
+}
+
+/// Structural schedule failures, surfaced *before* any graph work.
+///
+/// [`ScheduleSpec::check`] rejects rows that could never lower to an
+/// acyclic order, so planner/search callers get a typed diagnosis instead
+/// of a [`super::ScheduleError::Deadlock`] cycle dump downstream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DslError {
+    /// No stage rows, or zero micro-batches.
+    Empty,
+    /// A slot names a micro-batch outside `0..k`.
+    MicroOutOfRange { stage: usize, kind: SlotKind, micro: usize, k: usize },
+    /// The same (kind, micro) slot appears twice in one stage row.
+    Duplicate { stage: usize, kind: SlotKind, micro: usize },
+    /// A row schedules B before its own F, or W before its own B.
+    OutOfOrder { stage: usize, kind: SlotKind, micro: usize },
+    /// A row never runs a required F or B slot for some micro-batch.
+    Missing { stage: usize, kind: SlotKind, micro: usize },
+    /// The rows deadlock against cross-stage dataflow (F needs the
+    /// upstream stage's F, B needs the downstream stage's B): the
+    /// fixed-point replay got stuck at this slot.
+    Stuck { stage: usize, kind: SlotKind, micro: usize },
+    /// Lowering found no ops for a slot the row demands.
+    NoWork { stage: usize, kind: SlotKind, micro: usize },
+}
+
+impl std::fmt::Display for DslError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DslError::Empty => write!(f, "schedule has no stage rows or no micro-batches"),
+            DslError::MicroOutOfRange { stage, kind, micro, k } => {
+                write!(f, "stage {stage}: slot {kind:?}{micro} outside 0..{k} micro-batches")
+            }
+            DslError::Duplicate { stage, kind, micro } => {
+                write!(f, "stage {stage}: slot {kind:?}{micro} scheduled twice")
+            }
+            DslError::OutOfOrder { stage, kind, micro } => {
+                write!(f, "stage {stage}: slot {kind:?}{micro} before its prerequisite task")
+            }
+            DslError::Missing { stage, kind, micro } => {
+                write!(f, "stage {stage}: required slot {kind:?}{micro} never scheduled")
+            }
+            DslError::Stuck { stage, kind, micro } => {
+                write!(
+                    f,
+                    "cross-stage deadlock: stage {stage} waits forever at slot {kind:?}{micro}"
+                )
+            }
+            DslError::NoWork { stage, kind, micro } => {
+                write!(f, "stage {stage}: slot {kind:?}{micro} has no ops to schedule")
+            }
+        }
+    }
+}
+impl std::error::Error for DslError {}
+
+/// A pipeline schedule as data: `rows[stage]` is that stage's ordered slot
+/// sequence. Construct via the named builders, [`ScheduleSpec::decode`],
+/// or directly; run [`ScheduleSpec::check`] before lowering.
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
+pub struct ScheduleSpec {
+    pub rows: Vec<Vec<Slot>>,
+}
+
+/// The 1F1B row for one stage: warmup forwards, then strict B/F
+/// alternation until both drain. With `warmup = n_stages - s` this is
+/// exactly the slot sequence the legacy `order_1f1b` chained.
+pub fn row_1f1b(s: usize, n_stages: usize, k: usize) -> Vec<Slot> {
+    row_alternating((n_stages - s).min(k), k)
+}
+
+/// The synchronous (GPipe) row: all forwards, then all backwards —
+/// exactly the legacy `order_gpipe` sequence.
+pub fn row_sync(k: usize) -> Vec<Slot> {
+    let mut row: Vec<Slot> = (0..k).map(Slot::f).collect();
+    row.extend((0..k).map(Slot::b));
+    row
+}
+
+/// Warmup-then-alternate skeleton shared by 1F1B and V-shape.
+fn row_alternating(warmup: usize, k: usize) -> Vec<Slot> {
+    let warmup = warmup.clamp(1, k.max(1));
+    let mut row: Vec<Slot> = (0..warmup).map(Slot::f).collect();
+    let mut next_f = warmup;
+    for m in 0..k {
+        row.push(Slot::b(m));
+        if next_f < k {
+            row.push(Slot::f(next_f));
+            next_f += 1;
+        }
+    }
+    row
+}
+
+/// The zero-bubble row: 1F1B's warmup and steady state, but once forwards
+/// are exhausted each drain step runs a W (weight-grad) task instead of
+/// idling, with any remainder appended at the end. Requires a B/W-split
+/// graph to change anything (W slots lower to nothing otherwise).
+fn row_zero_bubble(s: usize, n_stages: usize, k: usize) -> Vec<Slot> {
+    let warmup = (n_stages - s).min(k).max(1);
+    let mut row: Vec<Slot> = (0..warmup).map(Slot::f).collect();
+    let mut next_f = warmup;
+    let mut next_w = 0;
+    for m in 0..k {
+        row.push(Slot::b(m));
+        if next_f < k {
+            row.push(Slot::f(next_f));
+            next_f += 1;
+        } else {
+            row.push(Slot::w(next_w));
+            next_w += 1;
+        }
+    }
+    row.extend((next_w..k).map(Slot::w));
+    row
+}
+
+impl ScheduleSpec {
+    /// Synchronous / GPipe: every stage runs all forwards then all
+    /// backwards.
+    pub fn sync(n_stages: usize, k: usize) -> ScheduleSpec {
+        ScheduleSpec { rows: (0..n_stages.max(1)).map(|_| row_sync(k)).collect() }
+    }
+
+    /// 1F1B: depth-proportional warmup, then one-forward-one-backward
+    /// steady state. Caps in-flight micro-batches at the stage's depth.
+    pub fn one_f_one_b(n_stages: usize, k: usize) -> ScheduleSpec {
+        let s = n_stages.max(1);
+        ScheduleSpec { rows: (0..s).map(|si| row_1f1b(si, s, k)).collect() }
+    }
+
+    /// The interlaced plan's schedule. Its novelty is *spatial* (the
+    /// vocab-sharded embedding interleaved across pipeline devices); its
+    /// temporal rows are 1F1B.
+    pub fn interlaced(n_stages: usize, k: usize) -> ScheduleSpec {
+        ScheduleSpec::one_f_one_b(n_stages, k)
+    }
+
+    /// Zero-bubble (ZB-H1 style): backward is split into B
+    /// (activation-grad, stays on the critical path at 1× forward cost)
+    /// and W (weight-grad, 1× forward cost, no cross-stage consumers);
+    /// W tasks fill the drain bubbles 1F1B leaves idle.
+    pub fn zero_bubble(n_stages: usize, k: usize) -> ScheduleSpec {
+        let s = n_stages.max(1);
+        ScheduleSpec { rows: (0..s).map(|si| row_zero_bubble(si, s, k)).collect() }
+    }
+
+    /// V-shape: 1F1B alternation under a depth-skewed warmup
+    /// (`2·depth − 1` in-flight micro-batches at the deepest stage),
+    /// trading activation memory for earlier downstream starts.
+    pub fn v_shape(n_stages: usize, k: usize) -> ScheduleSpec {
+        let s = n_stages.max(1);
+        ScheduleSpec {
+            rows: (0..s).map(|si| row_alternating((2 * (s - si)).saturating_sub(1), k)).collect(),
+        }
+    }
+
+    /// Whether any row schedules a split weight-grad task.
+    pub fn uses_wgrad(&self) -> bool {
+        self.rows.iter().flatten().any(|s| s.kind == SlotKind::W)
+    }
+
+    /// Compact row encoding for `sched{...}` label tokens: each slot is
+    /// `[fbw]<micro>`, rows joined by `;` — e.g. two-stage 1F1B over two
+    /// micro-batches is `f0f1b0b1;f0b0f1b1`. Inverse of
+    /// [`ScheduleSpec::decode`].
+    pub fn encode(&self) -> String {
+        self.rows
+            .iter()
+            .map(|row| row.iter().map(|s| format!("{}{}", s.kind.ch(), s.micro)).collect())
+            .collect::<Vec<String>>()
+            .join(";")
+    }
+
+    /// Parse an [`ScheduleSpec::encode`]d row string. `None` on any
+    /// malformed input (unknown slot char, missing micro index, empty
+    /// row) — the spec layer maps that to a typed `SpecParseError`.
+    pub fn decode(s: &str) -> Option<ScheduleSpec> {
+        if s.is_empty() {
+            return None;
+        }
+        let mut rows = Vec::new();
+        for part in s.split(';') {
+            let bytes = part.as_bytes();
+            let mut row = Vec::new();
+            let mut i = 0;
+            while i < bytes.len() {
+                let kind = match bytes[i] {
+                    b'f' => SlotKind::F,
+                    b'b' => SlotKind::B,
+                    b'w' => SlotKind::W,
+                    _ => return None,
+                };
+                i += 1;
+                let start = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let micro = part[start..i].parse::<usize>().ok()?;
+                row.push(Slot { micro, kind });
+            }
+            if row.is_empty() {
+                return None;
+            }
+            rows.push(row);
+        }
+        Some(ScheduleSpec { rows })
+    }
+
+    /// Structural validation against a micro-batch count, *before* any
+    /// graph exists.
+    ///
+    /// Per row: every slot's micro in range, no duplicates, each micro's
+    /// F and B both present exactly once, B after its F and W after its B
+    /// (W slots are optional — a partial or empty W set is fine). Across
+    /// rows: a fixed-point replay under the pipeline dataflow (F(s,m)
+    /// needs F(s−1,m); B(s,m) needs B(s+1,m)) must drain every row, else
+    /// the stuck slot is reported. Rows that pass here can still fail
+    /// [`super::validate`] against a concrete graph, but never the other
+    /// way around for pure pipeline dependencies.
+    pub fn check(&self, k: usize) -> Result<(), DslError> {
+        let s = self.rows.len();
+        if s == 0 || k == 0 {
+            return Err(DslError::Empty);
+        }
+        for (si, row) in self.rows.iter().enumerate() {
+            let mut seen = vec![vec![false; k]; 3];
+            for slot in row {
+                let (kind, m) = (slot.kind, slot.micro);
+                if m >= k {
+                    return Err(DslError::MicroOutOfRange { stage: si, kind, micro: m, k });
+                }
+                if seen[kind as usize][m] {
+                    return Err(DslError::Duplicate { stage: si, kind, micro: m });
+                }
+                let in_order = match kind {
+                    SlotKind::F => true,
+                    SlotKind::B => seen[SlotKind::F as usize][m],
+                    SlotKind::W => seen[SlotKind::B as usize][m],
+                };
+                if !in_order {
+                    return Err(DslError::OutOfOrder { stage: si, kind, micro: m });
+                }
+                seen[kind as usize][m] = true;
+            }
+            for m in 0..k {
+                for kind in [SlotKind::F, SlotKind::B] {
+                    if !seen[kind as usize][m] {
+                        return Err(DslError::Missing { stage: si, kind, micro: m });
+                    }
+                }
+            }
+        }
+        // Cross-stage feasibility: replay all rows to a fixed point under
+        // the pipeline deps. In-row prerequisites are already guaranteed
+        // above, so only cross-stage readiness is simulated.
+        let mut pos = vec![0usize; s];
+        let mut done = vec![vec![vec![false; k]; 3]; s];
+        loop {
+            let mut progressed = false;
+            let mut remaining = false;
+            for si in 0..s {
+                while pos[si] < self.rows[si].len() {
+                    let slot = self.rows[si][pos[si]];
+                    let m = slot.micro;
+                    let ready = match slot.kind {
+                        SlotKind::F => si == 0 || done[si - 1][SlotKind::F as usize][m],
+                        SlotKind::B => si + 1 == s || done[si + 1][SlotKind::B as usize][m],
+                        SlotKind::W => true,
+                    };
+                    if !ready {
+                        break;
+                    }
+                    done[si][slot.kind as usize][m] = true;
+                    pos[si] += 1;
+                    progressed = true;
+                }
+                remaining |= pos[si] < self.rows[si].len();
+            }
+            if !remaining {
+                return Ok(());
+            }
+            if !progressed {
+                for si in 0..s {
+                    if pos[si] < self.rows[si].len() {
+                        let slot = self.rows[si][pos[si]];
+                        return Err(DslError::Stuck {
+                            stage: si,
+                            kind: slot.kind,
+                            micro: slot.micro,
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Schedule names usable in a `sched{...}` label token, resolved to
+/// concrete rows per pipeline shape by [`SchedSpec::resolve`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum SchedName {
+    Sync,
+    OneFOneB,
+    Interlaced,
+    ZeroBubble,
+    VShape,
+}
+
+impl SchedName {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedName::Sync => "sync",
+            SchedName::OneFOneB => "1f1b",
+            SchedName::Interlaced => "interlaced",
+            SchedName::ZeroBubble => "zb",
+            SchedName::VShape => "vshape",
+        }
+    }
+
+    /// Parse a schedule name (accepts aliases; labels always emit the
+    /// canonical [`SchedName::as_str`] form, so round-trips are exact at
+    /// the value level).
+    pub fn parse(s: &str) -> Option<SchedName> {
+        Some(match s {
+            "sync" | "gpipe" => SchedName::Sync,
+            "1f1b" => SchedName::OneFOneB,
+            "interlaced" => SchedName::Interlaced,
+            "zb" | "zero-bubble" => SchedName::ZeroBubble,
+            "vshape" | "v-shape" => SchedName::VShape,
+            _ => return None,
+        })
+    }
+
+    /// Materialize the named schedule for a pipeline shape.
+    pub fn rows(&self, n_stages: usize, k: usize) -> ScheduleSpec {
+        match self {
+            SchedName::Sync => ScheduleSpec::sync(n_stages, k),
+            SchedName::OneFOneB => ScheduleSpec::one_f_one_b(n_stages, k),
+            SchedName::Interlaced => ScheduleSpec::interlaced(n_stages, k),
+            SchedName::ZeroBubble => ScheduleSpec::zero_bubble(n_stages, k),
+            SchedName::VShape => ScheduleSpec::v_shape(n_stages, k),
+        }
+    }
+}
+
+/// The schedule choice a `PlanSpec` carries — the fourth search axis.
+/// Either a named discipline (resolved per pipeline shape, so one spec
+/// label works across pp/micro mutations) or explicit rows (how a
+/// refine-accepted permutation persists in a label).
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
+pub enum SchedSpec {
+    Named(SchedName),
+    Explicit(ScheduleSpec),
+}
+
+impl SchedSpec {
+    /// The `sched{...}` label token (no internal whitespace).
+    pub fn token(&self) -> String {
+        match self {
+            SchedSpec::Named(n) => format!("sched{{{}}}", n.as_str()),
+            SchedSpec::Explicit(s) => format!("sched{{{}}}", s.encode()),
+        }
+    }
+
+    /// Inverse of [`SchedSpec::token`]: `None` when `tok` is not of the
+    /// `sched{...}` shape or the body is neither a known name nor a
+    /// well-formed row encoding.
+    pub fn parse_token(tok: &str) -> Option<SchedSpec> {
+        let inner = tok.strip_prefix("sched{")?.strip_suffix('}')?;
+        if let Some(name) = SchedName::parse(inner) {
+            return Some(SchedSpec::Named(name));
+        }
+        ScheduleSpec::decode(inner).map(SchedSpec::Explicit)
+    }
+
+    /// Concrete rows for a pipeline shape: named schedules materialize,
+    /// explicit rows pass through (their arity is checked by the caller
+    /// via [`ScheduleSpec::check`] and a row-count comparison).
+    pub fn resolve(&self, n_stages: usize, k: usize) -> ScheduleSpec {
+        match self {
+            SchedSpec::Named(n) => n.rows(n_stages, k),
+            SchedSpec::Explicit(s) => s.clone(),
+        }
+    }
+
+    /// Whether this schedule wants the backward pass split into B/W tasks.
+    pub fn uses_wgrad(&self) -> bool {
+        match self {
+            SchedSpec::Named(n) => *n == SchedName::ZeroBubble,
+            SchedSpec::Explicit(s) => s.uses_wgrad(),
+        }
+    }
+}
+
+/// Lower one stage row to [`Schedule::order`] edges: each slot resolves to
+/// its op span `(first, last)` and consecutive resolved spans chain
+/// `prev.last → next.first` — exactly the edge stream the legacy
+/// `seq.windows(2)` loops emitted.
+///
+/// `fwd`/`bwd` are indexed by micro-batch; `wgrad[m]` is `None` when micro
+/// `m` has no split W task (un-split graph, or a stage without weights) —
+/// such W slots are skipped, degrading gracefully to the plain B chain. A
+/// missing F or B span is a typed error: the row demands work the stage
+/// does not have.
+pub fn lower_row(
+    sched: &mut Schedule,
+    stage: usize,
+    row: &[Slot],
+    fwd: &[(OpId, OpId)],
+    bwd: &[(OpId, OpId)],
+    wgrad: &[Option<(OpId, OpId)>],
+) -> Result<(), DslError> {
+    let missing = |slot: &Slot| DslError::NoWork { stage, kind: slot.kind, micro: slot.micro };
+    let mut prev: Option<(OpId, OpId)> = None;
+    for slot in row {
+        let span = match slot.kind {
+            SlotKind::F => Some(*fwd.get(slot.micro).ok_or_else(|| missing(slot))?),
+            SlotKind::B => Some(*bwd.get(slot.micro).ok_or_else(|| missing(slot))?),
+            SlotKind::W => wgrad.get(slot.micro).copied().flatten(),
+        };
+        let Some(span) = span else { continue };
+        if let Some(p) = prev {
+            sched.order(p.1, span.0);
+        }
+        prev = Some(span);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans(base: usize, k: usize) -> Vec<(OpId, OpId)> {
+        (0..k).map(|m| (base + 2 * m, base + 2 * m + 1)).collect()
+    }
+
+    /// The legacy `order_1f1b` loop, verbatim, as the equivalence oracle.
+    fn legacy_1f1b_edges(
+        s: usize,
+        n_stages: usize,
+        k: usize,
+        fwd: &[(OpId, OpId)],
+        bwd: &[(OpId, OpId)],
+    ) -> Vec<(OpId, OpId)> {
+        let warmup = (n_stages - s).min(k);
+        let mut seq: Vec<(OpId, OpId)> = Vec::new();
+        for m in 0..warmup {
+            seq.push(fwd[m]);
+        }
+        let mut next_f = warmup;
+        for m in 0..k {
+            seq.push(bwd[m]);
+            if next_f < k {
+                seq.push(fwd[next_f]);
+                next_f += 1;
+            }
+        }
+        seq.windows(2).map(|w| (w[0].1, w[1].0)).collect()
+    }
+
+    #[test]
+    fn one_f_one_b_rows_lower_to_the_legacy_edge_stream() {
+        for (n_stages, k) in [(2, 2), (4, 8), (4, 2), (3, 5), (1, 4)] {
+            let spec = ScheduleSpec::one_f_one_b(n_stages, k);
+            spec.check(k).unwrap();
+            for s in 0..n_stages {
+                let fwd = spans(100, k);
+                let bwd = spans(500, k);
+                let mut sched = Schedule::new();
+                lower_row(&mut sched, s, &spec.rows[s], &fwd, &bwd, &[]).unwrap();
+                assert_eq!(
+                    sched.order_edges(),
+                    legacy_1f1b_edges(s, n_stages, k, &fwd, &bwd),
+                    "stage {s} of {n_stages}, k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sync_rows_lower_to_the_legacy_gpipe_edge_stream() {
+        let k = 4;
+        let spec = ScheduleSpec::sync(3, k);
+        spec.check(k).unwrap();
+        let fwd = spans(10, k);
+        let bwd = spans(90, k);
+        // Legacy order_gpipe: all fwd then all bwd, windows(2).
+        let mut seq = fwd.clone();
+        seq.extend_from_slice(&bwd);
+        let want: Vec<(OpId, OpId)> = seq.windows(2).map(|w| (w[0].1, w[1].0)).collect();
+        let mut sched = Schedule::new();
+        lower_row(&mut sched, 0, &spec.rows[0], &fwd, &bwd, &[]).unwrap();
+        assert_eq!(sched.order_edges(), want);
+    }
+
+    #[test]
+    fn named_builders_all_pass_check() {
+        for (n_stages, k) in [(1, 1), (2, 2), (4, 8), (8, 4), (3, 7)] {
+            for name in [
+                SchedName::Sync,
+                SchedName::OneFOneB,
+                SchedName::Interlaced,
+                SchedName::ZeroBubble,
+                SchedName::VShape,
+            ] {
+                let spec = name.rows(n_stages, k);
+                assert_eq!(spec.rows.len(), n_stages);
+                spec.check(k).unwrap_or_else(|e| {
+                    panic!("{} rows invalid for {n_stages}x{k}: {e}", name.as_str())
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn zero_bubble_schedules_every_w_exactly_once() {
+        let (n_stages, k) = (4, 8);
+        let spec = ScheduleSpec::zero_bubble(n_stages, k);
+        assert!(spec.uses_wgrad());
+        for row in &spec.rows {
+            let mut w = vec![0usize; k];
+            for slot in row {
+                if slot.kind == SlotKind::W {
+                    w[slot.micro] += 1;
+                }
+            }
+            assert!(w.iter().all(|&c| c == 1), "each micro's W once: {w:?}");
+            // Total row length: k F + k B + k W.
+            assert_eq!(row.len(), 3 * k);
+        }
+    }
+
+    #[test]
+    fn zero_bubble_fills_bubbles_before_the_drain() {
+        // Stage 3 of 4, k=8: warmup 1, so after F7 the 1F1B drain would
+        // idle between backwards; ZB must interleave W there, not only
+        // append at the end.
+        let spec = ScheduleSpec::zero_bubble(4, 8);
+        let row = &spec.rows[0]; // deepest warmup: stage 0 has warmup 4
+        let first_w = row.iter().position(|s| s.kind == SlotKind::W).unwrap();
+        let last_b = row.iter().rposition(|s| s.kind == SlotKind::B).unwrap();
+        assert!(first_w < last_b, "W work must start before the final B drains");
+    }
+
+    #[test]
+    fn check_rejects_structurally_bad_rows() {
+        let k = 2;
+        // B before F.
+        let spec =
+            ScheduleSpec { rows: vec![vec![Slot::b(0), Slot::f(0), Slot::f(1), Slot::b(1)]] };
+        assert!(matches!(spec.check(k), Err(DslError::OutOfOrder { .. })));
+        // Missing B1.
+        let spec = ScheduleSpec { rows: vec![vec![Slot::f(0), Slot::f(1), Slot::b(0)]] };
+        assert!(matches!(spec.check(k), Err(DslError::Missing { .. })));
+        // Duplicate F0.
+        let spec =
+            ScheduleSpec { rows: vec![vec![Slot::f(0), Slot::f(0), Slot::b(0), Slot::b(1)]] };
+        assert!(matches!(spec.check(k), Err(DslError::Duplicate { .. })));
+        // Micro out of range.
+        let spec = ScheduleSpec { rows: vec![vec![Slot::f(7), Slot::b(7)]] };
+        assert!(matches!(spec.check(k), Err(DslError::MicroOutOfRange { .. })));
+        // Empty.
+        assert!(matches!(ScheduleSpec { rows: vec![] }.check(k), Err(DslError::Empty)));
+    }
+
+    #[test]
+    fn check_detects_cross_stage_deadlock() {
+        // Stage 0 runs B0 before F1; stage 1 runs F1 before B0. Each row
+        // is locally fine, but together they deadlock: stage 0's B0 waits
+        // on stage 1's B0, which comes after stage 1's F1, which waits on
+        // stage 0's F1, which comes after stage 0's B0.
+        let spec = ScheduleSpec {
+            rows: vec![
+                vec![Slot::f(0), Slot::b(0), Slot::f(1), Slot::b(1)],
+                vec![Slot::f(0), Slot::f(1), Slot::b(0), Slot::b(1)],
+            ],
+        };
+        assert!(matches!(spec.check(2), Err(DslError::Stuck { .. })));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for (n_stages, k) in [(2, 2), (4, 8), (3, 5)] {
+            for name in [SchedName::OneFOneB, SchedName::ZeroBubble, SchedName::VShape] {
+                let spec = name.rows(n_stages, k);
+                let enc = spec.encode();
+                assert_eq!(ScheduleSpec::decode(&enc), Some(spec), "{enc}");
+            }
+        }
+        assert_eq!(ScheduleSpec::decode(""), None);
+        assert_eq!(ScheduleSpec::decode("f0b0;"), None);
+        assert_eq!(ScheduleSpec::decode("x0"), None);
+        assert_eq!(ScheduleSpec::decode("f"), None);
+        assert_eq!(ScheduleSpec::decode("fb0"), None);
+    }
+
+    #[test]
+    fn sched_tokens_roundtrip_named_and_explicit() {
+        let cases = [
+            SchedSpec::Named(SchedName::ZeroBubble),
+            SchedSpec::Named(SchedName::Sync),
+            SchedSpec::Explicit(ScheduleSpec::one_f_one_b(2, 2)),
+        ];
+        for s in cases {
+            let tok = s.token();
+            assert!(tok.starts_with("sched{") && tok.ends_with('}'));
+            assert_eq!(SchedSpec::parse_token(&tok), Some(s), "{tok}");
+        }
+        assert_eq!(SchedSpec::parse_token("sched{}"), None);
+        assert_eq!(SchedSpec::parse_token("sched{nope}"), None);
+        assert_eq!(SchedSpec::parse_token("sched{f0b0"), None);
+        assert_eq!(SchedSpec::parse_token("zb"), None);
+    }
+
+    #[test]
+    fn w_slots_skip_gracefully_without_split_spans() {
+        // A zb row lowered with no W spans must produce exactly the 1f1b
+        // edge stream: W slots vanish, F/B chain intact.
+        let (n_stages, k) = (3, 4);
+        let zb = ScheduleSpec::zero_bubble(n_stages, k);
+        let fwd = spans(10, k);
+        let bwd = spans(200, k);
+        for s in 0..n_stages {
+            let mut with_none = Schedule::new();
+            let empty_w = vec![None; k];
+            lower_row(&mut with_none, s, &zb.rows[s], &fwd, &bwd, &empty_w).unwrap();
+            let mut legacy = Schedule::new();
+            let fb: Vec<Slot> =
+                zb.rows[s].iter().copied().filter(|sl| sl.kind != SlotKind::W).collect();
+            lower_row(&mut legacy, s, &fb, &fwd, &bwd, &[]).unwrap();
+            assert_eq!(with_none.order_edges(), legacy.order_edges());
+        }
+    }
+
+    #[test]
+    fn lower_row_reports_missing_work_as_typed_error() {
+        let mut sched = Schedule::new();
+        let row = vec![Slot::f(0), Slot::f(1), Slot::b(0), Slot::b(1)];
+        let err = lower_row(&mut sched, 2, &row, &spans(0, 1), &spans(10, 1), &[]).unwrap_err();
+        assert_eq!(err, DslError::NoWork { stage: 2, kind: SlotKind::F, micro: 1 });
+    }
+}

@@ -14,6 +14,17 @@
 //! 3. completes ambiguous per-device orders with a deterministic topological
 //!    sort (Kahn, smallest-op-id first) and returns the per-device serial
 //!    execution order used by the simulator and the real executor.
+//!
+//! The *shape* of those order edges is itself data: [`dsl`] defines
+//! [`ScheduleSpec`] — per-stage slot rows over (micro-batch ×
+//! fwd/bwd/W-grad) — with named builders (`sync`, `1f1b`, `interlaced`,
+//! zero-bubble, V-shape) that lower to `Schedule::order` edges. Planners
+//! select a [`SchedSpec`] instead of hard-coding ordering loops, which is
+//! what lets the search treat the schedule as a fourth axis.
+
+pub mod dsl;
+
+pub use dsl::{lower_row, DslError, SchedName, SchedSpec, ScheduleSpec, Slot, SlotKind};
 
 use crate::graph::{Graph, OpId, PTensorId};
 use std::collections::{BinaryHeap, HashMap, HashSet};

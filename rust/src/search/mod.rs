@@ -81,6 +81,21 @@
 //! [`Cluster::plan_time_lower_bound`], so "best found" comes with
 //! "provably within X% of optimal". See [`refine`] for the loop.
 //!
+//! # The fourth axis: schedules as data
+//!
+//! Pipeline schedules are [`SchedSpec`] values carried in
+//! [`PlanSpec::sched`] (the `sched{...}` label token), so the temporal
+//! discipline is searched alongside dp × pp × tp instead of being a
+//! planner constant: the megatron grid contributes each pipelined point
+//! under 1F1B *and* zero-bubble, [`feasibility`] gates tokens against the
+//! plan family (hetero is 1F1B-only, 3F1B's recycling passes are outside
+//! the slot vocabulary) and structurally checks the resolved rows, and
+//! [`SearchConfig::schedule`] pins the whole grid to one schedule
+//! (incompatible candidates count as excluded, duplicates collapse). The
+//! refinement tier mutates along this axis too — see
+//! [`refine::mutate_schedule`] — and an accepted permutation survives in
+//! the winner's spec label, re-materializable from the label alone.
+//!
 //! Entry points: [`search`] (used by `superscaler search` and
 //! `examples/plan_explorer.rs`), [`enumerate`] + [`feasibility`] for callers
 //! that want the grid without evaluating it.
@@ -94,8 +109,8 @@ use crate::des;
 use crate::graph::Graph;
 use crate::materialize::{self, CommMode, Plan};
 use crate::models::Model;
-use crate::plans::{registry, PlanOutput, PlanSpec, Planner};
-use crate::schedule;
+use crate::plans::{registry, PlanKind, PlanOutput, PlanSpec, Planner};
+use crate::schedule::{self, SchedName, SchedSpec};
 use crate::sim;
 use crate::util::pool;
 use crate::util::table::Table;
@@ -153,6 +168,12 @@ pub struct SearchConfig {
     /// Run the MCMC refinement tier over the top grid candidates
     /// (`None` = grid search only). See [`refine`].
     pub refine: Option<RefineConfig>,
+    /// Pin every candidate to one pipeline schedule (the fourth search
+    /// axis): each grid spec is re-labeled with this `sched{...}` token,
+    /// schedule-incompatible candidates are dropped (counted in
+    /// [`SearchReport::excluded`]) and duplicates collapse. `None` lets
+    /// every planner contribute its own schedule points.
+    pub schedule: Option<SchedSpec>,
 }
 
 impl Default for SearchConfig {
@@ -167,7 +188,90 @@ impl Default for SearchConfig {
             fidelity: Fidelity::List,
             des_top: 8,
             refine: None,
+            schedule: None,
         }
+    }
+}
+
+impl SearchConfig {
+    /// Start a [`SearchConfigBuilder`] from the defaults — the supported
+    /// way to construct a config (field-by-field struct literals break
+    /// every time the search grows an axis; the builder defaults every
+    /// knob and call sites set only what they mean).
+    pub fn builder() -> SearchConfigBuilder {
+        SearchConfigBuilder::default()
+    }
+}
+
+/// Fluent constructor for [`SearchConfig`]; see [`SearchConfig::builder`].
+#[derive(Clone, Debug, Default)]
+pub struct SearchConfigBuilder {
+    cfg: SearchConfig,
+}
+
+impl SearchConfigBuilder {
+    /// See [`SearchConfig::workers`].
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// See [`SearchConfig::comm`].
+    pub fn comm(mut self, comm: CommMode) -> Self {
+        self.cfg.comm = comm;
+        self
+    }
+
+    /// See [`SearchConfig::max_candidates`].
+    pub fn max_candidates(mut self, cap: usize) -> Self {
+        self.cfg.max_candidates = cap;
+        self
+    }
+
+    /// See [`SearchConfig::hetero`].
+    pub fn hetero(mut self, hetero: bool) -> Self {
+        self.cfg.hetero = hetero;
+        self
+    }
+
+    /// See [`SearchConfig::dp_min`].
+    pub fn dp_min(mut self, dp_min: usize) -> Self {
+        self.cfg.dp_min = dp_min;
+        self
+    }
+
+    /// See [`SearchConfig::prune`].
+    pub fn prune(mut self, prune: bool) -> Self {
+        self.cfg.prune = prune;
+        self
+    }
+
+    /// See [`SearchConfig::fidelity`].
+    pub fn fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.cfg.fidelity = fidelity;
+        self
+    }
+
+    /// See [`SearchConfig::des_top`].
+    pub fn des_top(mut self, des_top: usize) -> Self {
+        self.cfg.des_top = des_top;
+        self
+    }
+
+    /// See [`SearchConfig::refine`].
+    pub fn refine(mut self, refine: Option<RefineConfig>) -> Self {
+        self.cfg.refine = refine;
+        self
+    }
+
+    /// See [`SearchConfig::schedule`].
+    pub fn schedule(mut self, schedule: Option<SchedSpec>) -> Self {
+        self.cfg.schedule = schedule;
+        self
+    }
+
+    pub fn build(self) -> SearchConfig {
+        self.cfg
     }
 }
 
@@ -197,6 +301,10 @@ pub enum Infeasible {
     /// A hetero spec's explicit per-stage layer counts are incomplete or
     /// do not sum to the model's layer count.
     StageLayerSplit { assigned: usize, layers: usize },
+    /// The spec carries a `sched{...}` token its plan family cannot honor,
+    /// or the resolved schedule rows are structurally unsound for the
+    /// spec's (pp, micro) shape.
+    ScheduleUnsupported { kind: PlanKind, why: String },
 }
 
 impl std::fmt::Display for Infeasible {
@@ -226,8 +334,49 @@ impl std::fmt::Display for Infeasible {
             Infeasible::StageLayerSplit { assigned, layers } => {
                 write!(f, "stage layer split assigns {assigned} layers, model has {layers}")
             }
+            Infeasible::ScheduleUnsupported { kind, why } => {
+                write!(f, "schedule unsupported for {kind:?}: {why}")
+            }
         }
     }
+}
+
+/// Schedule-axis compatibility (see the module doc): which plan families
+/// can honor a `sched{...}` token, and whether the resolved rows are
+/// structurally sound for the spec's (pp, micro) shape. Run as part of
+/// [`feasibility`] so an incompatible (family, schedule) pair is pruned
+/// before any graph work.
+fn sched_feasibility(spec: &PlanSpec, sched: &SchedSpec) -> Result<(), Infeasible> {
+    let kind = spec.kind;
+    let reject = |why: &str| Err(Infeasible::ScheduleUnsupported { kind, why: why.to_string() });
+    let wgrad_ok = match kind {
+        // The megatron family splits backwards for W slots.
+        PlanKind::Megatron | PlanKind::GPipe | PlanKind::Tp => true,
+        // Interlaced lowers W-free rows only (embedding backward unsplit).
+        PlanKind::Interlaced => false,
+        // Hetero pipelines hard-code 1F1B ordering per stage.
+        PlanKind::Hetero => {
+            if *sched != SchedSpec::Named(SchedName::OneFOneB) {
+                return reject("hetero pipelines support only the 1f1b schedule");
+            }
+            false
+        }
+        // Everything else (dp, 3F1B's recycling passes, ...) has no
+        // (micro × F/B/W) pipeline the slot vocabulary can describe.
+        _ => return reject("plan family has no schedulable pipeline"),
+    };
+    let (pp, k) = (spec.pp.max(1), spec.micro.max(1));
+    let rows = sched.resolve(pp, k);
+    if rows.rows.len() != pp {
+        return reject("schedule row arity disagrees with pipeline depth");
+    }
+    if rows.uses_wgrad() && !wgrad_ok {
+        return reject("W slots unsupported for this plan family");
+    }
+    if let Err(e) = rows.check(k) {
+        return reject(&e.to_string());
+    }
+    Ok(())
 }
 
 /// Cheap feasibility check run before any graph transformation: degree
@@ -268,6 +417,9 @@ pub fn feasibility(spec: &PlanSpec, model: &Model, cluster: &Cluster) -> Result<
                 return Err(Infeasible::StageLayerSplit { assigned, layers });
             }
         }
+    }
+    if let Some(sched) = &spec.sched {
+        sched_feasibility(spec, sched)?;
     }
     let need = spec.static_bytes_lower_bound(model.graph.weight_bytes());
     let cap = cluster.spec.mem_bytes;
@@ -695,8 +847,29 @@ pub fn search(model: &Model, cluster: &Cluster, cfg: &SearchConfig) -> SearchRep
     let t0 = std::time::Instant::now();
     let model_name = model.name.clone();
     let stats = ModelStats::of(&model.graph);
-    let (cands, pruned, excluded) =
+    let (cands, pruned, mut excluded) =
         enumerate_constrained(model, cluster, cfg.hetero, cfg.dp_min.max(1));
+    // ---- fourth axis: pin the grid to one schedule ----
+    // Every spec is re-labeled with the pinned `sched{...}` token; pins a
+    // family cannot honor count as config exclusions (not infeasibility),
+    // and specs that collapse to the same (planner, label) dedup.
+    let cands = if let Some(s) = &cfg.schedule {
+        let mut seen = std::collections::HashSet::new();
+        let mut pinned: Vec<(&'static dyn Planner, PlanSpec)> = Vec::new();
+        for (p, mut spec) in cands {
+            spec.sched = Some(s.clone());
+            if feasibility(&spec, model, cluster).is_err()
+                || !seen.insert(cand_key(p.name(), &spec))
+            {
+                excluded += 1;
+                continue;
+            }
+            pinned.push((p, spec));
+        }
+        pinned
+    } else {
+        cands
+    };
     // Sort by analytic lower bound (stable tie-break on the enumeration
     // order via sort_by's stability) so both the candidate cap and the
     // pruning seed keep the most promising specs.
@@ -864,5 +1037,63 @@ mod tests {
         let cluster = Cluster::v100(4);
         let spec = PlanSpec { pp: 4, micro: 4, ..PlanSpec::new(PlanKind::Megatron) };
         assert_eq!(feasibility(&spec, &model, &cluster), Ok(()));
+    }
+
+    #[test]
+    fn feasibility_gates_the_schedule_axis() {
+        let model = models::gpt3(0, 8, 256);
+        let cluster = Cluster::v100(4);
+        // Zero-bubble on a megatron pipeline is a legal fourth-axis point.
+        let ok = PlanSpec {
+            pp: 4,
+            micro: 4,
+            sched: Some(SchedSpec::Named(SchedName::ZeroBubble)),
+            ..PlanSpec::new(PlanKind::Megatron)
+        };
+        assert_eq!(feasibility(&ok, &model, &cluster), Ok(()));
+        // A schedule token on a pipeline-free family is rejected, typed.
+        let dp = PlanSpec {
+            dp: 4,
+            sched: Some(SchedSpec::Named(SchedName::OneFOneB)),
+            ..PlanSpec::new(PlanKind::Dp)
+        };
+        assert!(matches!(
+            feasibility(&dp, &model, &cluster),
+            Err(Infeasible::ScheduleUnsupported { .. })
+        ));
+        // Explicit rows whose arity disagrees with pp are rejected, typed.
+        let bad = PlanSpec {
+            pp: 4,
+            micro: 4,
+            sched: Some(SchedSpec::Explicit(crate::schedule::ScheduleSpec::one_f_one_b(2, 4))),
+            ..PlanSpec::new(PlanKind::Megatron)
+        };
+        assert!(matches!(
+            feasibility(&bad, &model, &cluster),
+            Err(Infeasible::ScheduleUnsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn pinned_schedule_restricts_and_relabels_the_grid() {
+        let model = models::gpt3(0, 16, 256);
+        let cluster = Cluster::v100(4);
+        let cfg = SearchConfig::builder()
+            .workers(2)
+            .hetero(false)
+            .fidelity(Fidelity::Des)
+            .des_top(2)
+            .schedule(Some(SchedSpec::Named(SchedName::ZeroBubble)))
+            .build();
+        let report = search(&model, &cluster, &cfg);
+        assert!(report.evaluated > 0, "zb-pinned grid must keep pipelined candidates");
+        assert!(report.excluded > 0, "schedule-incompatible specs must be counted");
+        for c in &report.ranked {
+            assert_eq!(c.spec.sched, Some(SchedSpec::Named(SchedName::ZeroBubble)));
+            let label = c.spec.label();
+            assert!(label.contains("sched{zb}"), "label carries the axis: {label}");
+            let back = PlanSpec::parse(&label).unwrap();
+            assert_eq!(back.sched, c.spec.sched);
+        }
     }
 }

@@ -19,6 +19,11 @@
 //! * **Widen/narrow** — move half of one stage's devices to its neighbor
 //!   (total device count preserved; co-shard stages are skipped).
 //! * **Micro-batch resize** — double or halve `micro`.
+//! * **Schedule-row permutation** — swap two adjacent (micro × F/B/W)
+//!   slots in one stage's schedule row, keeping the row set structurally
+//!   valid ([`mutate_schedule`]). The permuted rows are written back into
+//!   the spec as an explicit [`SchedSpec`], so an accepted ordering
+//!   survives in the `sched{...}` label token.
 //! * **Adjacent-op swap** — swap two neighboring ops in one device's
 //!   serial order (a micro-batch slot swap). This mutates the schedule,
 //!   not the spec, so it replays against the *current* base run and
@@ -27,10 +32,12 @@
 //! Spec-level mutations re-materialize the whole plan from the mutated
 //! [`PlanSpec`] (boundary moves write an explicit per-stage layer
 //! partition, closing the balanced-split-only debt from the hetero
-//! planner). Accepting a spec mutation therefore discards any accumulated
-//! op swaps — the chain's best score is still valid, but a swap-improved
-//! winner is not re-materializable from its spec label alone; the summary
-//! reports scores, not re-buildable artifacts.
+//! planner; schedule permutations write an explicit `sched{...}` row
+//! set). Accepting a spec mutation discards any accumulated raw op
+//! swaps, but since the schedule DSL landed an ordering improvement no
+//! longer dies with them: a permutation the chain accepts is
+//! spec-encodable data, and the winner re-materializes from its spec
+//! label alone.
 //!
 //! # Optimality-gap certificates
 //!
@@ -48,8 +55,8 @@ use crate::des::delta::{BaseRun, DEFAULT_EPOCHS};
 use crate::graph::TensorKind;
 use crate::materialize::{self, CommMode, Plan};
 use crate::models::Model;
-use crate::plans::{balance_stages, registry, PlanSpec};
-use crate::schedule::{self, DeviceId, ValidatedSchedule};
+use crate::plans::{balance_stages, registry, PlanKind, PlanSpec};
+use crate::schedule::{self, DeviceId, SchedName, SchedSpec, ValidatedSchedule};
 use crate::sim::TaskGraph;
 use crate::util::pool;
 use crate::util::rng::Rng;
@@ -318,8 +325,10 @@ fn run_chain(
                 } else {
                     Some(mutate_micro(&spec, &mut rng))
                 }
-            } else {
+            } else if r < 80 {
                 Some(mutate_micro(&spec, &mut rng))
+            } else {
+                mutate_schedule(&spec, &mut rng)
             };
             let Some(s2) = prop else { continue };
             if s2 == spec || feasibility(&s2, model, cluster).is_err() {
@@ -488,6 +497,46 @@ fn mutate_flag(spec: &PlanSpec, rng: &mut Rng, offload: bool) -> Option<PlanSpec
     Some(out)
 }
 
+/// Permute one stage's schedule row: swap two adjacent (micro × F/B/W)
+/// slots, keeping the row set structurally valid
+/// ([`crate::schedule::ScheduleSpec::check`]). The permuted rows are
+/// written back as an explicit [`SchedSpec`], so an accepted ordering is
+/// part of the spec label (`sched{...}`) and re-materializes from the
+/// label alone — unlike raw device-order swaps, which mutate the built
+/// schedule but not the spec.
+pub fn mutate_schedule(spec: &PlanSpec, rng: &mut Rng) -> Option<PlanSpec> {
+    if spec.stages.is_some() {
+        return None; // hetero pipelines are 1F1B-only (see sched_feasibility)
+    }
+    let (pp, k) = (spec.pp.max(1), spec.micro.max(1));
+    if pp < 2 || k < 2 {
+        return None;
+    }
+    // The family's planner default when the spec carries no token yet.
+    let default = match spec.kind {
+        PlanKind::GPipe => SchedName::Sync,
+        _ => SchedName::OneFOneB,
+    };
+    let base = spec.sched.clone().unwrap_or(SchedSpec::Named(default)).resolve(pp, k);
+    for _ in 0..8 {
+        let s = rng.range(0, pp);
+        let row_len = base.rows[s].len();
+        if row_len < 2 {
+            continue;
+        }
+        let pos = rng.range(0, row_len - 1);
+        let mut rows = base.clone();
+        rows.rows[s].swap(pos, pos + 1);
+        if rows.rows[s] == base.rows[s] || rows.check(k).is_err() {
+            continue;
+        }
+        let mut out = spec.clone();
+        out.sched = Some(SchedSpec::Explicit(rows));
+        return Some(out);
+    }
+    None
+}
+
 /// Double or halve the micro-batch count; infeasible values (micro beyond
 /// the batch) are rejected by the caller's feasibility check.
 fn mutate_micro(spec: &PlanSpec, rng: &mut Rng) -> PlanSpec {
@@ -649,6 +698,45 @@ mod tests {
             seen.insert(mutate_micro(&spec, &mut rng).micro);
         }
         assert!(seen.contains(&1) && seen.contains(&4), "halve and double both reachable");
+    }
+
+    #[test]
+    fn accepted_schedule_permutations_rematerialize_from_the_label() {
+        // The PR-6 debt, closed: a schedule-order mutation is spec data,
+        // so the mutated winner rebuilds from its label alone.
+        let model = models::gpt3(0, 8, 256);
+        let cluster = Cluster::v100(4);
+        let spec = PlanSpec { pp: 4, micro: 4, ..PlanSpec::new(PlanKind::Megatron) };
+        let mut rng = Rng::new(5);
+        let mut found = None;
+        for _ in 0..32 {
+            if let Some(m) = mutate_schedule(&spec, &mut rng) {
+                found = Some(m);
+                break;
+            }
+        }
+        let m = found.expect("a valid adjacent-slot permutation of 1F1B exists");
+        let sched = m.sched.as_ref().expect("mutation writes an explicit schedule");
+        assert!(matches!(sched, SchedSpec::Explicit(_)));
+        let label = m.label();
+        assert!(label.contains("sched{"), "label carries the permutation: {label}");
+        let back = PlanSpec::parse(&label).unwrap();
+        assert_eq!(back, m, "value-level round-trip through the label");
+        assert_eq!(feasibility(&back, &model, &cluster), Ok(()));
+        let art = build_artifacts(&model, &cluster, CommMode::InterRvd, "megatron", &back);
+        assert!(art.is_some(), "permuted schedule must rebuild and validate from the label");
+    }
+
+    #[test]
+    fn schedule_mutation_skips_unschedulable_specs() {
+        let mut rng = Rng::new(9);
+        // Hetero (stage-list) specs are 1F1B-only.
+        assert!(mutate_schedule(&hetero_spec(), &mut rng).is_none());
+        // No pipeline / single micro-batch: nothing to permute.
+        let dp = PlanSpec { dp: 4, ..PlanSpec::new(PlanKind::Dp) };
+        assert!(mutate_schedule(&dp, &mut rng).is_none());
+        let one = PlanSpec { pp: 4, micro: 1, ..PlanSpec::new(PlanKind::Megatron) };
+        assert!(mutate_schedule(&one, &mut rng).is_none());
     }
 
     #[test]

@@ -143,6 +143,73 @@ pub fn complete(g: &mut Graph) -> Autograd {
     Autograd { bwd_of, grad_of }
 }
 
+/// Split every backward op with both gradient classes into a **B** task
+/// (activation gradients — the cross-stage critical path) and a **W** task
+/// (weight gradients — consumed only by the optimizer, so free to fill
+/// pipeline bubbles). This is the zero-bubble decomposition (ZB-H1): each
+/// half costs `flops / 2` (= 1× the forward work under
+/// [`BWD_FLOP_RATIO`] = 2), so splitting halves the backward critical path
+/// without changing total per-device work.
+///
+/// Backward ops producing only one gradient class are left whole. Both
+/// halves keep all stashed inputs (output-grad + forward inputs): B needs
+/// the weights, W needs the activations, and the shared upstream gradient
+/// feeds both — neither half depends on the other, which is exactly what
+/// lets a schedule defer W.
+///
+/// `ag.bwd_of` is updated to point at the B half; the returned map gives
+/// `forward op -> W op` for the ops that were split.
+pub fn split_bw(g: &mut Graph, ag: &mut Autograd) -> HashMap<OpId, OpId> {
+    let mut wmap: HashMap<OpId, OpId> = HashMap::new();
+    let mut pairs: Vec<(OpId, OpId)> = ag.bwd_of.iter().map(|(&f, &b)| (f, b)).collect();
+    pairs.sort_unstable(); // deterministic id allocation
+    for (f, b) in pairs {
+        let probe = g.op(b).clone();
+        let mut act_outs = Vec::new();
+        let mut w_outs = Vec::new();
+        for &ov in &probe.outputs {
+            let vt = g.vtensor(ov).clone();
+            if g.ptensor(vt.ptensor).kind == TensorKind::Gradient {
+                w_outs.push(vt);
+            } else {
+                act_outs.push(vt);
+            }
+        }
+        if act_outs.is_empty() || w_outs.is_empty() {
+            continue; // single-class backward: nothing to split
+        }
+        let old = g.remove_op(b);
+        let clone_inputs = |g: &mut Graph| -> Vec<VTensorId> {
+            old.inputs
+                .iter()
+                .map(|&v| {
+                    let vt = g.vtensor(v).clone();
+                    g.add_vtensor(vt.ptensor, vt.mask)
+                })
+                .collect()
+        };
+        let b_inputs = clone_inputs(g);
+        let w_inputs = clone_inputs(g);
+        let mut bop = old.clone();
+        bop.id = 0;
+        bop.inputs = b_inputs;
+        bop.outputs =
+            act_outs.iter().map(|vt| g.add_vtensor(vt.ptensor, vt.mask.clone())).collect();
+        bop.flops = old.flops / 2.0;
+        let bid = g.insert_op(bop);
+        let mut wop = old.clone();
+        wop.id = 0;
+        wop.name = format!("{}.w", old.name);
+        wop.inputs = w_inputs;
+        wop.outputs = w_outs.iter().map(|vt| g.add_vtensor(vt.ptensor, vt.mask.clone())).collect();
+        wop.flops = old.flops / 2.0;
+        let wid = g.insert_op(wop);
+        ag.bwd_of.insert(f, bid);
+        wmap.insert(f, wid);
+    }
+    wmap
+}
+
 fn ensure_grad(
     g: &mut Graph,
     grad_of: &mut HashMap<PTensorId, PTensorId>,
@@ -283,6 +350,66 @@ mod tests {
         assert_eq!(g.ptensor(ygrad).name, "y.grad");
         // Activation gradient: transient like an activation.
         assert_eq!(g.ptensor(ygrad).kind, TensorKind::Activation);
+    }
+
+    #[test]
+    fn split_bw_halves_flops_and_separates_gradient_classes() {
+        // Two chained linears: lin2's backward emits h.grad (activation
+        // class) AND w2.grad (weight class), so it must split; lin1's
+        // backward emits only w1.grad (x is Input) and stays whole.
+        let mut g = Graph::new();
+        let x = g.add_ptensor("x", &[4, 8, 16], DType::F32, TensorKind::Input);
+        let w1 = g.add_ptensor("w1", &[16, 16], DType::F32, TensorKind::Weight);
+        let w2 = g.add_ptensor("w2", &[16, 32], DType::F32, TensorKind::Weight);
+        let w2g = g.add_ptensor("w2.grad", &[16, 32], DType::F32, TensorKind::Gradient);
+        let h = g.add_ptensor("h", &[4, 8, 16], DType::F32, TensorKind::Activation);
+        let y = g.add_ptensor("y", &[4, 8, 32], DType::F32, TensorKind::Activation);
+        let (xv, w1v, hv) = (g.full_view(x), g.full_view(w1), g.full_view(h));
+        let lin1 =
+            g.add_op("lin1", OpKind::Matmul, vec![xv, w1v], vec![hv], 1000.0, None, true, 0);
+        let (hv2, w2v, yv) = (g.full_view(h), g.full_view(w2), g.full_view(y));
+        let lin2 =
+            g.add_op("lin2", OpKind::Matmul, vec![hv2, w2v], vec![yv], 1000.0, None, true, 0);
+        let mut ag = complete(&mut g);
+        let whole1 = ag.bwd_of[&lin1];
+        let whole2 = ag.bwd_of[&lin2];
+        let whole_flops = g.op(whole2).flops;
+        let wmap = split_bw(&mut g, &mut ag);
+        assert!(!wmap.contains_key(&lin1), "single-class backward stays whole");
+        assert_eq!(ag.bwd_of[&lin1], whole1);
+        let b = ag.bwd_of[&lin2];
+        let w = wmap[&lin2];
+        assert_ne!(b, whole2, "bwd_of must point at the new B half");
+        let b_op = g.op(b).clone();
+        let w_op = g.op(w).clone();
+        assert!((b_op.flops - whole_flops / 2.0).abs() < 1e-9);
+        assert!((w_op.flops - whole_flops / 2.0).abs() < 1e-9);
+        assert!(w_op.name.ends_with(".w"));
+        assert!(!b_op.is_forward && !w_op.is_forward);
+        // W emits only weight-grad outputs (incl. the eager w2.grad); B
+        // emits only activation grads.
+        for &ov in &w_op.outputs {
+            assert_eq!(g.ptensor(g.vtensor(ov).ptensor).kind, TensorKind::Gradient);
+        }
+        for &ov in &b_op.outputs {
+            assert_ne!(g.ptensor(g.vtensor(ov).ptensor).kind, TensorKind::Gradient);
+        }
+        assert!(w_op.outputs.iter().any(|&ov| g.vtensor(ov).ptensor == w2g));
+    }
+
+    #[test]
+    fn split_bw_leaves_single_class_backwards_whole() {
+        // An op whose backward has only activation grads must not split.
+        let mut g = Graph::new();
+        let a = g.add_ptensor("a", &[4], DType::F32, TensorKind::Activation);
+        let b = g.add_ptensor("b", &[4], DType::F32, TensorKind::Activation);
+        let (av, bv) = (g.full_view(a), g.full_view(b));
+        let id = g.add_op("copy", OpKind::Identity, vec![av], vec![bv], 1.0, None, true, 0);
+        let mut ag = complete(&mut g);
+        let before = ag.bwd_of[&id];
+        let wmap = split_bw(&mut g, &mut ag);
+        assert!(wmap.is_empty());
+        assert_eq!(ag.bwd_of[&id], before);
     }
 
     #[test]

@@ -111,12 +111,13 @@ fn des_is_bitwise_deterministic_across_runs() {
 #[test]
 fn des_search_deterministic_across_worker_pools() {
     let cluster = Cluster::v100(4);
-    let cfg = |workers| SearchConfig {
-        workers,
-        fidelity: Fidelity::Des,
-        des_top: 4,
-        hetero: false,
-        ..SearchConfig::default()
+    let cfg = |workers| {
+        SearchConfig::builder()
+            .workers(workers)
+            .fidelity(Fidelity::Des)
+            .des_top(4)
+            .hetero(false)
+            .build()
     };
     let model = models::gpt3(0, 8, 256);
     let a = search::search(&model, &cluster, &cfg(1));
@@ -136,12 +137,7 @@ fn search_fidelity_des_carries_both_scores() {
     let report = search::search(
         &model,
         &cluster,
-        &SearchConfig {
-            workers: 2,
-            fidelity: Fidelity::Des,
-            des_top: 4,
-            ..SearchConfig::default()
-        },
+        &SearchConfig::builder().workers(2).fidelity(Fidelity::Des).des_top(4).build(),
     );
     assert!(report.des_rescored > 0, "some candidates must be DES-rescored");
     let best = report.best().expect("search found a plan");
@@ -168,11 +164,8 @@ fn search_fidelity_des_carries_both_scores() {
     assert!(rendered.contains("DES"), "{rendered}");
     assert!(rendered.contains("des-rescored"), "{rendered}");
     // List fidelity leaves tier 3 off.
-    let list_report = search::search(
-        &model,
-        &cluster,
-        &SearchConfig { workers: 2, ..SearchConfig::default() },
-    );
+    let list_report =
+        search::search(&model, &cluster, &SearchConfig::builder().workers(2).build());
     assert_eq!(list_report.des_rescored, 0);
     assert!(list_report
         .ranked

@@ -68,7 +68,7 @@ fn dp_space_optimum_no_worse_than_dp1_restriction() {
     let report = search::search(
         &models::gpt3(0, 8, 256),
         &cluster,
-        &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
+        &SearchConfig::builder().workers(2).prune(false).build(),
     );
     let best_hetero = |pred: &dyn Fn(&PlanSpec) -> bool| {
         report
@@ -97,16 +97,10 @@ fn dp_space_optimum_no_worse_than_dp1_restriction() {
 fn prune_on_off_agree_over_dp_grid() {
     let cluster = Cluster::v100(4);
     let model = models::gpt3(0, 8, 256);
-    let on = search::search(
-        &model,
-        &cluster,
-        &SearchConfig { workers: 2, prune: true, ..SearchConfig::default() },
-    );
-    let off = search::search(
-        &model,
-        &cluster,
-        &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
-    );
+    let on =
+        search::search(&model, &cluster, &SearchConfig::builder().workers(2).prune(true).build());
+    let off =
+        search::search(&model, &cluster, &SearchConfig::builder().workers(2).prune(false).build());
     assert_eq!(on.evaluated + on.pruned_bound, off.evaluated);
     let (tb, tf) = (on.best().unwrap(), off.best().unwrap());
     let (mb, mf) = (tb.metrics().unwrap().makespan, tf.metrics().unwrap().makespan);
@@ -126,7 +120,7 @@ fn dp_min_restricts_the_grid_to_replicated_plans() {
     let report = search::search(
         &models::gpt3(0, 8, 256),
         &cluster,
-        &SearchConfig { workers: 2, dp_min: 2, ..SearchConfig::default() },
+        &SearchConfig::builder().workers(2).dp_min(2).build(),
     );
     assert!(!report.ranked.is_empty());
     assert!(report.ranked.iter().all(|c| c.spec.dp >= 2), "dp < 2 spec leaked through --dp-min");

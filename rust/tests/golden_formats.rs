@@ -9,7 +9,8 @@ use superscaler::cost::Cluster;
 use superscaler::des;
 use superscaler::graph::{Graph, OpKind};
 use superscaler::materialize::{Plan, Task, TaskKind};
-use superscaler::plans::{PlanKind, PlanSpec, StageSpec};
+use superscaler::plans::{PlanKind, PlanSpec, SchedName, SchedSpec, StageSpec};
+use superscaler::schedule::ScheduleSpec;
 use superscaler::search::{Candidate, Fidelity, Metrics, Outcome, SearchReport};
 use superscaler::sim::TaskGraph;
 use superscaler::util::json;
@@ -110,6 +111,57 @@ fn search_report_render_keeps_column_set() {
     assert!(rendered.contains("52.500 ms") && rendered.contains("50.000 ms"));
     assert!(rendered.contains("OOM"));
     assert!(rendered.contains("invalid: stage 0 conflicts"));
+}
+
+/// `sched{...}` tokens flow through the report's spec column: a candidate
+/// carrying a schedule renders its token into the table row, and the
+/// rendered label parses back to the same spec — the fourth search axis is
+/// CSV-round-trippable like the other three. (A separate report keeps the
+/// pinned `search_table.csv` golden untouched.)
+#[test]
+fn sched_tokens_round_trip_through_report_labels() {
+    let named = PlanSpec {
+        pp: 4,
+        micro: 8,
+        sched: Some(SchedSpec::Named(SchedName::ZeroBubble)),
+        ..PlanSpec::new(PlanKind::Megatron)
+    };
+    // Explicit row sets — the form refine's permutation mutation writes —
+    // must survive the same surface.
+    let explicit = PlanSpec {
+        pp: 2,
+        micro: 2,
+        sched: Some(SchedSpec::Explicit(ScheduleSpec::one_f_one_b(2, 2))),
+        ..PlanSpec::new(PlanKind::Megatron)
+    };
+    for spec in [named, explicit] {
+        let label = spec.label();
+        assert!(label.contains("sched{"), "{label}");
+        assert_eq!(PlanSpec::parse(&label).unwrap(), spec, "label '{label}' must round-trip");
+        let report = SearchReport {
+            ranked: vec![Candidate {
+                planner: "megatron",
+                spec: spec.clone(),
+                plan_name: "megatron-sched".to_string(),
+                outcome: Outcome::Ok(Metrics {
+                    makespan: 0.05,
+                    des_makespan: None,
+                    des_oom: false,
+                    aggregate_tflops: 100.0,
+                    comm_bytes: 1u64 << 30,
+                    peak_mem: 1u64 << 30,
+                    bubble_frac: 0.1,
+                    oom: false,
+                    gap: None,
+                }),
+            }],
+            ..synthetic_report()
+        };
+        let row = &report.to_table(0).rows[0];
+        let rendered_spec = &row[2];
+        assert_eq!(rendered_spec, &label, "spec column must carry the sched token verbatim");
+        assert_eq!(PlanSpec::parse(rendered_spec).unwrap().sched, spec.sched);
+    }
 }
 
 /// Tiny deterministic DES run: one compute task per server bridged by a

@@ -78,16 +78,10 @@ fn stage_spec_feasibility_errors() {
 fn dominance_pruning_never_prunes_the_optimum() {
     let cluster = Cluster::v100(4);
     let model = models::gpt3(0, 8, 256);
-    let on = search::search(
-        &model,
-        &cluster,
-        &SearchConfig { workers: 2, prune: true, ..SearchConfig::default() },
-    );
-    let off = search::search(
-        &model,
-        &cluster,
-        &SearchConfig { workers: 2, prune: false, ..SearchConfig::default() },
-    );
+    let on =
+        search::search(&model, &cluster, &SearchConfig::builder().workers(2).prune(true).build());
+    let off =
+        search::search(&model, &cluster, &SearchConfig::builder().workers(2).prune(false).build());
     assert_eq!(off.pruned_bound, 0, "prune-off must simulate everything");
     assert_eq!(
         on.evaluated + on.pruned_bound,
@@ -116,7 +110,7 @@ fn hetero_best_not_worse_than_homogeneous_pipeline() {
     let report = search::search(
         &models::gpt3(0, 8, 256),
         &cluster,
-        &SearchConfig { workers: 2, prune: false, hetero: true, ..SearchConfig::default() },
+        &SearchConfig::builder().workers(2).prune(false).hetero(true).build(),
     );
     let best_of = |pred: &dyn Fn(&search::Candidate) -> bool| {
         report
@@ -147,7 +141,7 @@ fn report_table_carries_prune_accounting() {
     let report = search::search(
         &models::gpt3(0, 8, 256),
         &cluster,
-        &SearchConfig { workers: 2, ..SearchConfig::default() },
+        &SearchConfig::builder().workers(2).build(),
     );
     // Every enumerated spec is either simulated, infeasible or
     // cost-dominated — nothing disappears from the accounting.

@@ -165,15 +165,14 @@ fn refined_search_is_deterministic_across_worker_counts() {
     let model = models::gpt3(0, 8, 256);
     let cluster = Cluster::v100(4);
     let run = |workers: usize| {
-        let cfg = SearchConfig {
-            workers,
-            hetero: true,
-            max_candidates: 16,
-            fidelity: Fidelity::Des,
-            des_top: 4,
-            refine: Some(RefineConfig { iters: 8, ..RefineConfig::default() }),
-            ..SearchConfig::default()
-        };
+        let cfg = SearchConfig::builder()
+            .workers(workers)
+            .hetero(true)
+            .max_candidates(16)
+            .fidelity(Fidelity::Des)
+            .des_top(4)
+            .refine(Some(RefineConfig { iters: 8, ..RefineConfig::default() }))
+            .build();
         search::search(&model, &cluster, &cfg)
     };
     let a = run(1);

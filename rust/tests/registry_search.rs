@@ -123,7 +123,7 @@ fn feasibility_prunes_batch_and_memory_bounds() {
 #[test]
 fn search_is_deterministic() {
     let cluster = Cluster::v100(4);
-    let cfg = SearchConfig { workers: 2, ..Default::default() };
+    let cfg = SearchConfig::builder().workers(2).build();
     let model = models::gpt3(0, 8, 256);
     let run = || search::search(&model, &cluster, &cfg);
     let a = run();

@@ -22,7 +22,7 @@ fn repeated_searches_on_one_borrowed_model_render_identical_rows() {
     let model = models::gpt3(0, 8, 256);
     let cluster = Cluster::v100(4);
     let rows = |workers: usize| {
-        let cfg = SearchConfig { workers, ..SearchConfig::default() };
+        let cfg = SearchConfig::builder().workers(workers).build();
         search::search(&model, &cluster, &cfg).to_table(0).rows
     };
     let a = rows(1);
@@ -39,7 +39,7 @@ fn prune_on_off_agree_on_the_winning_row() {
     let model = models::gpt3(0, 8, 256);
     let cluster = Cluster::v100(4);
     let run = |prune: bool| {
-        let cfg = SearchConfig { workers: 2, prune, ..SearchConfig::default() };
+        let cfg = SearchConfig::builder().workers(2).prune(prune).build();
         search::search(&model, &cluster, &cfg)
     };
     let (on, off) = (run(true), run(false));
@@ -58,7 +58,7 @@ fn des_rerank_does_not_move_the_list_gate_measurement() {
     let model = models::gpt3(0, 8, 256);
     let cluster = Cluster::v100(4);
     let run = |fidelity| {
-        let cfg = SearchConfig { workers: 2, fidelity, des_top: 4, ..SearchConfig::default() };
+        let cfg = SearchConfig::builder().workers(2).fidelity(fidelity).des_top(4).build();
         search::search(&model, &cluster, &cfg)
     };
     let (list, d) = (run(Fidelity::List), run(Fidelity::Des));
@@ -80,12 +80,7 @@ fn cached_des_rerank_matches_from_scratch_rebuild() {
     let report = search::search(
         &model,
         &cluster,
-        &SearchConfig {
-            workers: 2,
-            fidelity: Fidelity::Des,
-            des_top: 4,
-            ..SearchConfig::default()
-        },
+        &SearchConfig::builder().workers(2).fidelity(Fidelity::Des).des_top(4).build(),
     );
     let mut checked = 0usize;
     for c in &report.ranked {
