@@ -1,0 +1,162 @@
+//! Fabric scaling bench: route resolution, link-set construction, DES
+//! contention replay and plan search at 1k–10k devices across the three
+//! topology families. The numbers to watch are routes/sec and
+//! group_links/sec (both must stay allocation-free and flat across cluster
+//! size — the spine table is O(tiers²), not O(devices²)) and the DES/search
+//! walls at 1024+ GPUs (what CI's scale-smoke job gates end-to-end).
+//!
+//! `cargo bench --bench scale_topo [-- --max-gpus 10240] [--search]`
+
+use superscaler::cost::Cluster;
+use superscaler::des;
+use superscaler::materialize::{Plan, Task, TaskKind};
+use superscaler::models::gpt3;
+use superscaler::search::{self, Fidelity, SearchConfig};
+use superscaler::sim::TaskGraph;
+use superscaler::topo::build_cluster;
+use superscaler::util::cli::Args;
+use superscaler::util::table::{time_it, Table};
+use superscaler::Graph;
+
+/// Deterministic device scatter: pairs spread across servers/racks/rails.
+fn pair(i: usize, n: usize) -> (usize, usize) {
+    (i % n, (i * 257 + 31) % n)
+}
+
+fn bench_routing(t: &mut Table, gpus: usize, topology: &str) {
+    let c = build_cluster(gpus, None, topology, None).unwrap();
+    const ROUTES: usize = 100_000;
+    let mut buf = Vec::new();
+    let mut touched = 0usize;
+    let (mean, _) = time_it(1, 3, || {
+        touched = 0;
+        for i in 0..ROUTES {
+            let (a, b) = pair(i, gpus);
+            c.topo.route_into(a, b, &mut buf);
+            touched += buf.len();
+        }
+    });
+    let routes_per_sec = ROUTES as f64 / mean;
+
+    // Link sets for dp-style groups (one member per server, 8 groups).
+    let n_servers = c.n_servers;
+    let groups: Vec<Vec<usize>> = (0..8)
+        .map(|g| (0..n_servers).map(|s| s * c.gpus_per_server + g % c.gpus_per_server).collect())
+        .collect();
+    let mut links = 0usize;
+    let (gmean, _) = time_it(1, 3, || {
+        links = 0;
+        for grp in &groups {
+            links += c.group_links(grp).len();
+        }
+    });
+    let groups_per_sec = groups.len() as f64 / gmean;
+
+    t.row([
+        gpus.to_string(),
+        topology.to_string(),
+        format!("{:.2e}", routes_per_sec),
+        format!("{touched}"),
+        format!("{:.2e}", groups_per_sec),
+        format!("{links}"),
+    ]);
+}
+
+/// A synthetic contention storm: one cross-fabric transfer per server,
+/// all concurrent — the DES fair-shares every route hop.
+fn bench_des(t: &mut Table, gpus: usize, topology: &str) {
+    let c = build_cluster(gpus, None, topology, None).unwrap();
+    let n = c.n_servers;
+    let mut plan = Plan::default();
+    for s in 0..n {
+        let from = s * c.gpus_per_server;
+        let to = ((s + n / 2) % n) * c.gpus_per_server;
+        if c.server_of(from) == c.server_of(to) {
+            continue;
+        }
+        plan.tasks.push(Task {
+            id: plan.tasks.len(),
+            kind: TaskKind::P2P { from, to, bytes: 1 << 24, ptensor: 0 },
+            deps: vec![],
+            duration: c.p2p_time(from, to, 1 << 24),
+            label: "storm".into(),
+        });
+    }
+    let tasks = plan.tasks.len();
+    let tg = TaskGraph::of_plan(&plan);
+    let mut makespan = 0.0;
+    let (mean, _) = time_it(1, 3, || {
+        makespan = des::execute(&Graph::new(), &plan, &c, &tg).makespan;
+    });
+    t.row([
+        gpus.to_string(),
+        topology.to_string(),
+        tasks.to_string(),
+        format!("{:.3}", mean * 1e3),
+        format!("{:.2e}", makespan),
+    ]);
+}
+
+fn bench_search(t: &mut Table, gpus: usize, topology: &str) {
+    let c = build_cluster(gpus, None, topology, None).unwrap();
+    let model = gpt3(0, 1024, 128);
+    let cfg = SearchConfig::builder()
+        .workers(0)
+        .hetero(false)
+        .max_candidates(12)
+        .fidelity(Fidelity::List)
+        .build();
+    let report = search::search(&model, &c, &cfg);
+    t.row([
+        gpus.to_string(),
+        topology.to_string(),
+        report.evaluated.to_string(),
+        format!("{:.2}", report.wall_secs),
+    ]);
+}
+
+fn main() {
+    let args = Args::parse_env();
+    std::fs::create_dir_all("bench_results").ok();
+    let max_gpus = args.usize("max-gpus", 10240);
+    let sizes: Vec<usize> = [1024usize, 4096, 10240].into_iter().filter(|&g| g <= max_gpus).collect();
+    let topologies = ["flat", "fat-tree:8", "rail:4"];
+
+    let mut t = Table::new(
+        "fabric scaling: route resolution + link sets (per-call cost flat in cluster size)",
+        &["gpus", "topology", "routes/s", "hops", "group_links/s", "links"],
+    );
+    for &g in &sizes {
+        for topo in topologies {
+            bench_routing(&mut t, g, topo);
+        }
+    }
+    t.print();
+    t.write_csv("bench_results/scale_topo_routing.csv").ok();
+
+    let mut t = Table::new(
+        "DES contention storm: one cross-fabric transfer per server, all concurrent",
+        &["gpus", "topology", "tasks", "wall_ms", "makespan_s"],
+    );
+    for &g in &sizes {
+        for topo in topologies {
+            bench_des(&mut t, g, topo);
+        }
+    }
+    t.print();
+    t.write_csv("bench_results/scale_topo_des.csv").ok();
+
+    // Full plan search at 1k devices (the CI scale-smoke shape). Gated
+    // behind --search: it dominates the bench wall.
+    if args.has("search") {
+        let mut t = Table::new(
+            "plan search at scale (gpt3, list fidelity, 12-candidate cap)",
+            &["gpus", "topology", "evaluated", "wall_s"],
+        );
+        for topo in topologies {
+            bench_search(&mut t, 1024, topo);
+        }
+        t.print();
+        t.write_csv("bench_results/scale_topo_search.csv").ok();
+    }
+}

@@ -1,4 +1,4 @@
-//! Cost model: devices, cluster topology, collective communication costs.
+//! Cost model: devices, cluster fabric, collective communication costs.
 //!
 //! This substitutes for the paper's testbed (32× V100-32GB, 8 GPUs/server
 //! on NVLink, servers on 100 Gbps InfiniBand — §6.1). All evaluation
@@ -7,16 +7,33 @@
 //! on the ratios encoded here — compute throughput vs. NVLink vs. IB — not
 //! on absolute silicon speed.
 //!
+//! Bandwidth lookup is **topology-backed**: every path query
+//! ([`Cluster::link`], [`Cluster::group_link`], [`Cluster::group_links`])
+//! consults the cluster's [`crate::topo::Topology`] for the fabric
+//! structure (which rack/rail a device injects into, whether a path
+//! crosses the spine) while the *rates* stay here. A path is priced by its
+//! **slowest hop** (bottleneck bandwidth, with per-hop shares for group
+//! transfers) and its summed switch latency; cross-rack fat-tree and
+//! cross-rail paths pay one extra hop of α. The `flat` topology takes the
+//! exact legacy arithmetic branches, so the pre-topology model is
+//! reproduced bitwise. Heterogeneous fleets route per-device pricing
+//! through [`Cluster::device_spec`] / [`Cluster::mem_capacity`].
+//!
 //! Collective costs use the standard ring α–β model; `α` (latency) comes
 //! from the slowest link in the group, `β` (inverse bandwidth) from the
 //! bottleneck link. Compute costs use a saturation-efficiency curve: small
 //! kernels run far from peak (this is what makes co-shard's smaller
 //! operators slightly slower — Fig. 13's latency panel — while still
 //! winning on memory).
+//!
+//! The analytic lower bound stays sound on any fabric by bounding from the
+//! optimistic side: comm at the fastest link (`nvlink_bw`), compute at the
+//! fastest device kind ([`Cluster::max_effective_flops`]).
 
 use crate::graph::{CollKind, Graph, TensorKind};
 use crate::plans::{PlanKind, PlanSpec};
 use crate::schedule::{DeviceId, CPU_DEVICE};
+use crate::topo::{DeviceKind, TopoKind, Topology};
 use crate::trans::autograd::BWD_FLOP_RATIO;
 
 /// One contended physical transport of the cluster — the unit of the
@@ -33,6 +50,12 @@ pub enum LinkId {
     Nic(usize),
     /// A device's PCIe lane to the host (offload/swap traffic).
     Pcie(DeviceId),
+    /// A rack's fat-tree uplink to the spine (cross-rack traffic). Shared
+    /// by every transfer leaving or entering the rack.
+    Up(usize),
+    /// A rail switch's backbone in a rail-optimized pod. Same-rail traffic
+    /// crosses one; cross-rail traffic bridges two.
+    Rail(usize),
 }
 
 /// Per-device compute/memory characteristics (defaults: V100-ish).
@@ -75,8 +98,10 @@ impl DeviceSpec {
     }
 }
 
-/// Cluster topology: `n_servers × gpus_per_server` homogeneous devices,
-/// NVLink within a server, InfiniBand across.
+/// Cluster model: `n_servers × gpus_per_server` devices on a fabric
+/// [`Topology`] (flat by default), NVLink within a server. An empty
+/// `server_kind` fleet means every device runs `spec`; a non-empty fleet
+/// assigns one [`DeviceKind`] per server row.
 #[derive(Clone, Debug)]
 pub struct Cluster {
     pub n_servers: usize,
@@ -93,6 +118,11 @@ pub struct Cluster {
     pub ib_lat: f64,
     /// Host<->device (PCIe) bandwidth for swap/offload, bytes/s.
     pub pcie_bw: f64,
+    /// Fabric structure: which rack/rail each device injects into and
+    /// which links a path crosses. Flat by default (legacy model).
+    pub topo: Topology,
+    /// Per-server device kinds; empty ⇒ homogeneous fleet of `spec`.
+    pub server_kind: Vec<DeviceKind>,
 }
 
 impl Cluster {
@@ -101,8 +131,15 @@ impl Cluster {
     pub fn v100(n_gpus: usize) -> Cluster {
         let gpus_per_server = n_gpus.min(8);
         assert!(n_gpus % gpus_per_server == 0, "gpu count must tile servers");
+        Self::with_shape(n_gpus / gpus_per_server, gpus_per_server)
+    }
+
+    /// V100 rates over an explicit `n_servers × gpus_per_server` shape,
+    /// flat fabric, homogeneous fleet. The base every topology/fleet
+    /// customization starts from (see [`crate::topo::build_cluster`]).
+    pub fn with_shape(n_servers: usize, gpus_per_server: usize) -> Cluster {
         Cluster {
-            n_servers: n_gpus / gpus_per_server,
+            n_servers,
             gpus_per_server,
             spec: DeviceSpec::default(),
             cpu_spec: DeviceSpec {
@@ -117,11 +154,59 @@ impl Cluster {
             nvlink_lat: 3e-6,
             ib_lat: 12e-6,
             pcie_bw: 12e9,
+            topo: Topology::flat(n_servers, gpus_per_server),
+            server_kind: Vec::new(),
         }
     }
 
     pub fn num_gpus(&self) -> usize {
         self.n_servers * self.gpus_per_server
+    }
+
+    /// The CLI-facing fabric name (`flat`, `fat-tree:K`, `rail:R`).
+    pub fn topology_label(&self) -> String {
+        self.topo.label()
+    }
+
+    /// Compute/memory spec of a device: the CPU spec for the host, the
+    /// server row's [`DeviceKind`] on heterogeneous fleets, `spec`
+    /// otherwise.
+    pub fn device_spec(&self, d: DeviceId) -> &DeviceSpec {
+        if d == CPU_DEVICE {
+            return &self.cpu_spec;
+        }
+        if self.server_kind.is_empty() {
+            return &self.spec;
+        }
+        &self.server_kind[self.server_of(d)].spec
+    }
+
+    /// Memory capacity of a device (per-kind on heterogeneous fleets).
+    pub fn mem_capacity(&self, d: DeviceId) -> u64 {
+        self.device_spec(d).mem_bytes
+    }
+
+    /// Largest device memory anywhere in the fleet — the optimistic
+    /// capacity the search's feasibility pre-filter must use: a plan is
+    /// provably infeasible only if its static footprint exceeds even the
+    /// biggest device (per-device placement is checked downstream).
+    pub fn max_mem_bytes(&self) -> u64 {
+        self.server_kind
+            .iter()
+            .map(|k| k.spec.mem_bytes)
+            .max()
+            .unwrap_or(self.spec.mem_bytes)
+    }
+
+    /// Fastest sustained FLOP rate of any device kind in the fleet
+    /// (`peak_flops × max_util`). The lower bound's compute denominator:
+    /// no kernel anywhere runs faster, so dividing mean per-device work by
+    /// this stays an underestimate on heterogeneous fleets.
+    pub fn max_effective_flops(&self) -> f64 {
+        self.server_kind
+            .iter()
+            .map(|k| k.spec.peak_flops * k.spec.max_util)
+            .fold(self.spec.peak_flops * self.spec.max_util, f64::max)
     }
 
     /// Server index of a device. The host CPU counts as its own "server"
@@ -138,7 +223,10 @@ impl Cluster {
         self.server_of(a) == self.server_of(b)
     }
 
-    /// (bandwidth, latency) of the path between two devices.
+    /// (bandwidth, latency) of the path between two devices: bottleneck
+    /// bandwidth of the slowest hop on the resolved route, summed switch
+    /// latency. Cross-rack / cross-rail paths pay one extra hop of α; on a
+    /// flat fabric this is exactly the legacy two-case arithmetic.
     pub fn link(&self, a: DeviceId, b: DeviceId) -> (f64, f64) {
         if a == CPU_DEVICE || b == CPU_DEVICE {
             (self.pcie_bw, 10e-6)
@@ -146,6 +234,8 @@ impl Cluster {
             (f64::INFINITY, 0.0)
         } else if self.same_server(a, b) {
             (self.nvlink_bw, self.nvlink_lat)
+        } else if self.topo.cross_tier(a, b) {
+            (self.ib_bw, 2.0 * self.ib_lat)
         } else {
             (self.ib_bw, self.ib_lat)
         }
@@ -163,8 +253,12 @@ impl Cluster {
 
     /// Bottleneck (bandwidth, latency) within a device group: IB if the
     /// group spans servers, NVLink otherwise. Inter-server collectives are
-    /// additionally constrained by the per-server NIC being shared by the
-    /// group members on that server.
+    /// constrained by whichever fabric hop is most shared by the group —
+    /// the per-server NIC on flat fabrics, additionally the per-rack spine
+    /// uplink on fat-trees (every cross-rack member in a rack shares its
+    /// uplink), the per-rail switch on rail fabrics (where per-device NICs
+    /// remove the server bottleneck). Cross-tier groups pay one extra hop
+    /// of α.
     pub fn group_link(&self, group: &[DeviceId]) -> (f64, f64) {
         assert!(!group.is_empty());
         if group.contains(&CPU_DEVICE) {
@@ -172,25 +266,60 @@ impl Cluster {
         }
         let s0 = self.server_of(group[0]);
         if group.iter().all(|&d| self.server_of(d) == s0) {
-            (self.nvlink_bw, self.nvlink_lat)
-        } else {
-            // Members per server share the NIC.
-            let mut per_server = std::collections::HashMap::new();
+            return (self.nvlink_bw, self.nvlink_lat);
+        }
+        // Widest share of any fabric hop on the group's routes.
+        let hop_share = |tier_of: &dyn Fn(DeviceId) -> usize| -> usize {
+            let mut per_tier = std::collections::HashMap::new();
             for &d in group {
-                *per_server.entry(self.server_of(d)).or_insert(0usize) += 1;
+                *per_tier.entry(tier_of(d)).or_insert(0usize) += 1;
             }
-            let max_share = *per_server.values().max().unwrap() as f64;
-            (self.ib_bw / max_share, self.ib_lat)
+            *per_tier.values().max().unwrap()
+        };
+        match self.topo.kind() {
+            TopoKind::Flat => {
+                // Members per server share the NIC (legacy arithmetic).
+                let share = hop_share(&|d| self.server_of(d)) as f64;
+                (self.ib_bw / share, self.ib_lat)
+            }
+            TopoKind::FatTree { .. } => {
+                let nic_share = hop_share(&|d| self.server_of(d));
+                let t0 = self.topo.rack_of(self.server_of(group[0]));
+                let cross =
+                    group.iter().any(|&d| self.topo.rack_of(self.server_of(d)) != t0);
+                if cross {
+                    // Rack members funnel through their rack's uplink, which
+                    // can only be more shared than any single NIC in it.
+                    let up_share = hop_share(&|d| self.topo.rack_of(self.server_of(d)));
+                    let share = nic_share.max(up_share) as f64;
+                    (self.ib_bw / share, 2.0 * self.ib_lat)
+                } else {
+                    (self.ib_bw / nic_share as f64, self.ib_lat)
+                }
+            }
+            TopoKind::Rail { .. } => {
+                // Per-device NICs: members sharing a rail share its switch.
+                let share = hop_share(&|d| self.topo.rail_of(d)) as f64;
+                let r0 = self.topo.rail_of(group[0]);
+                let cross = group.iter().any(|&d| self.topo.rail_of(d) != r0);
+                let lat = if cross { 2.0 * self.ib_lat } else { self.ib_lat };
+                (self.ib_bw / share, lat)
+            }
         }
     }
 
     /// Physical links a transfer among `group` occupies, deduplicated and
-    /// sorted: PCIe lanes when the host participates, the spanned servers'
-    /// NICs when the group crosses servers, the members' NVLink ports
-    /// otherwise. A single-device "group" crosses nothing. This is the
-    /// per-link capacity accounting the DES fair-shares: two concurrent
-    /// transfers whose link sets intersect split the shared link's
-    /// bandwidth, so each runs at `1/n` of its solo rate while contended.
+    /// sorted: PCIe lanes when the host participates, the members' NVLink
+    /// ports within a server, and — via the fabric [`Topology`] — every
+    /// fabric hop on the group's resolved routes when it crosses servers:
+    /// the spanned servers' NICs (flat/fat-tree), the spanned racks' spine
+    /// uplinks (cross-rack fat-tree), the members' rail switches (rail
+    /// fabrics). A single-device "group" crosses nothing. This is the
+    /// per-link capacity accounting the DES fair-shares: a transfer holds
+    /// *every* link on its route, so two concurrent transfers whose link
+    /// sets intersect anywhere — same NIC, same rack uplink, same rail —
+    /// split the shared link's bandwidth and each runs at `1/n` of its solo
+    /// rate while contended.
     pub fn group_links(&self, group: &[DeviceId]) -> Vec<LinkId> {
         let mut devs: Vec<DeviceId> = group.to_vec();
         devs.sort_unstable();
@@ -207,10 +336,9 @@ impl Cluster {
             if devs.iter().all(|&d| self.server_of(d) == s0) {
                 devs.iter().map(|&d| LinkId::NvLink(d)).collect()
             } else {
-                let mut servers: Vec<usize> = devs.iter().map(|&d| self.server_of(d)).collect();
-                servers.sort_unstable();
-                servers.dedup();
-                servers.into_iter().map(LinkId::Nic).collect()
+                let mut links = Vec::with_capacity(devs.len() * 2);
+                self.topo.group_fabric_links(&devs, &mut links);
+                links
             }
         };
         out.sort_unstable();
@@ -305,9 +433,11 @@ impl Cluster {
     ///
     /// * compute: the forward + backward FLOPs must execute somewhere; the
     ///   busiest device carries at least the mean share, and no kernel runs
-    ///   faster than `peak_flops × max_util` (the saturation curve's ceiling).
-    ///   Recompute, replication, optimizer work and kernel-launch overheads
-    ///   only add to the true time and are ignored.
+    ///   faster than the *fastest fleet kind's* `peak_flops × max_util`
+    ///   ([`Cluster::max_effective_flops`] — the saturation curve's ceiling,
+    ///   kept optimistic on heterogeneous fleets). Recompute, replication,
+    ///   optimizer work and kernel-launch overheads only add to the true
+    ///   time and are ignored.
     /// * communication: a data-parallel plan must synchronize each replica's
     ///   gradient shard; the simulator's synchronous-collective model blocks
     ///   every group member for the ring all-reduce, costed here at NVLink
@@ -317,7 +447,7 @@ impl Cluster {
     pub fn plan_time_lower_bound(&self, spec: &PlanSpec, stats: &ModelStats) -> f64 {
         let devices = spec.devices().max(1) as f64;
         let work = stats.fwd_flops + BWD_FLOP_RATIO * stats.grad_fwd_flops;
-        let compute = work / devices / (self.spec.peak_flops * self.spec.max_util);
+        let compute = work / devices / self.max_effective_flops();
         let dp = spec.dp.max(1);
         let comm = if dp > 1 {
             // Per-device gradient bytes that cross the DP group. Grid plans
@@ -477,6 +607,93 @@ mod tests {
         // megatron grid (uneven stage weights must never make it unsound).
         let mg = PlanSpec { dp: 2, pp: 2, tp: 2, micro: 2, ..PlanSpec::new(PlanKind::Megatron) };
         assert!(br <= c.plan_time_lower_bound(&mg, &stats));
+    }
+
+    #[test]
+    fn fat_tree_reprices_cross_rack_paths() {
+        // 4 servers × 4 GPUs, 2 servers per rack.
+        let mut c = Cluster::with_shape(4, 4);
+        c.topo = Topology::fat_tree(4, 4, 2).unwrap();
+        // Point-to-point: cross-rack pays the extra switch hop of α.
+        let (_, lat_in) = c.link(0, 4); // s0 -> s1, same rack
+        let (_, lat_x) = c.link(0, 8); // s0 -> s2, cross rack
+        assert_eq!(lat_x, 2.0 * lat_in);
+        // Collective: a cross-rack group is slower than an equal-size
+        // in-rack group (uplink sharing + extra α).
+        let in_rack: Vec<usize> = (0..8).collect(); // racks {s0,s1}
+        let cross: Vec<usize> = (0..4).chain(8..12).collect(); // s0 + s2
+        let t_in = c.collective_time(CollKind::AllReduce, &in_rack, 1 << 26);
+        let t_x = c.collective_time(CollKind::AllReduce, &cross, 1 << 26);
+        assert!(t_x > t_in, "cross-rack all-reduce must cost more: {t_x} vs {t_in}");
+        // Link sets: cross-rack transfers hold both racks' uplinks.
+        assert_eq!(
+            c.group_links(&[0, 8]),
+            vec![LinkId::Nic(0), LinkId::Nic(2), LinkId::Up(0), LinkId::Up(1)]
+        );
+        // In-rack transfers never touch the spine.
+        assert_eq!(c.group_links(&[0, 4]), vec![LinkId::Nic(0), LinkId::Nic(1)]);
+    }
+
+    #[test]
+    fn rail_fabric_replaces_nics_with_rails() {
+        let mut c = Cluster::with_shape(2, 4);
+        c.topo = Topology::rail_optimized(2, 4, 2).unwrap();
+        // Same-rail inter-server transfer crosses one rail switch.
+        assert_eq!(c.group_links(&[0, 4]), vec![LinkId::Rail(0)]);
+        // Cross-rail bridges both rails.
+        assert_eq!(c.group_links(&[0, 5]), vec![LinkId::Rail(0), LinkId::Rail(1)]);
+        // Rail sharing: 2 members on rail 0 halve its bandwidth.
+        let (bw_two, _) = c.group_link(&[0, 4]);
+        let (bw_four, _) = c.group_link(&[0, 2, 4, 6]); // all on rail 0
+        assert!((bw_two / bw_four - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_topology_is_bitwise_legacy() {
+        // with_shape + flat topo must reproduce v100's link sets and rates
+        // exactly (the golden-fixture guarantee).
+        let c = Cluster::v100(16);
+        assert!(c.topo.is_flat());
+        assert_eq!(c.topology_label(), "flat");
+        for (a, b) in [(0, 1), (0, 8), (3, CPU_DEVICE), (5, 5)] {
+            let (bw, lat) = c.link(a, b);
+            let expect = if a == b {
+                (f64::INFINITY, 0.0)
+            } else if b == CPU_DEVICE {
+                (c.pcie_bw, 10e-6)
+            } else if a / 8 == b / 8 {
+                (c.nvlink_bw, c.nvlink_lat)
+            } else {
+                (c.ib_bw, c.ib_lat)
+            };
+            assert_eq!((bw, lat), expect, "link({a},{b})");
+        }
+    }
+
+    #[test]
+    fn hetero_fleet_prices_per_device() {
+        let c = crate::topo::build_cluster(16, None, "flat", Some("v100:8,h100:8")).unwrap();
+        // Server 0 is V100, server 1 is H100.
+        assert!(c.device_spec(12).peak_flops > c.device_spec(4).peak_flops * 5.0);
+        assert_eq!(c.mem_capacity(4), 32 * (1 << 30) as u64);
+        assert_eq!(c.mem_capacity(12), 80 * (1 << 30) as u64);
+        assert_eq!(c.max_mem_bytes(), 80 * (1 << 30) as u64);
+        // The bound's compute ceiling follows the fastest kind.
+        let hom = Cluster::v100(16);
+        assert!(c.max_effective_flops() > hom.max_effective_flops() * 5.0);
+        // CPU stays the CPU.
+        assert_eq!(c.device_spec(CPU_DEVICE).peak_flops, c.cpu_spec.peak_flops);
+    }
+
+    #[test]
+    fn hetero_lower_bound_stays_below_fastest_device_time() {
+        // On a mixed fleet the bound divides by the fastest kind's rate —
+        // it must only ever shrink vs the homogeneous bound (soundness).
+        let stats = ModelStats::of(&crate::models::gpt3(0, 8, 256).graph);
+        let spec = PlanSpec { dp: 2, tp: 2, ..PlanSpec::new(PlanKind::Megatron) };
+        let hom = Cluster::v100(16);
+        let het = crate::topo::build_cluster(16, None, "flat", Some("v100:8,h100:8")).unwrap();
+        assert!(het.plan_time_lower_bound(&spec, &stats) <= hom.plan_time_lower_bound(&spec, &stats));
     }
 
     #[test]

@@ -16,14 +16,20 @@
 //!   links named by [`Cluster::group_links`]; `k` concurrent transfers
 //!   sharing a link each progress at `1/k` of their solo rate,
 //!   re-evaluated at every transfer start/finish event (the dslab
-//!   shared-throughput discipline). In practice the *NIC* is the link
-//!   that fair-shares: a server's 8 GPUs funnel through one IB port, so
-//!   independent inter-server transfers out of the same server contend.
-//!   NVLink ports and PCIe lanes belong to a single device, so their
-//!   exclusivity is already enforced by that device's communication
-//!   stream — two transfers touching the same port serialize rather than
-//!   degrade, and transfers on disjoint ports/lanes (including concurrent
-//!   host offloads from different GPUs) run at full rate in parallel;
+//!   shared-throughput discipline). The links that fair-share are the
+//!   *shared fabric hops* on a transfer's resolved route
+//!   ([`crate::topo::Topology`]): the per-server NIC (a server's 8 GPUs
+//!   funnel through one IB port), and on multi-tier fabrics also the rack's
+//!   spine uplink (every cross-rack transfer in/out of the rack contends
+//!   for it) or the rail switch (rail-optimized pods). A transfer holds
+//!   every link on its route, so cross-rack traffic fair-shares at *both*
+//!   racks' uplinks — the mechanism by which a fat-tree reprices a
+//!   cross-rack collective slower than an in-rack one. NVLink ports and
+//!   PCIe lanes belong to a single device, so their exclusivity is already
+//!   enforced by that device's communication stream — two transfers
+//!   touching the same port serialize rather than degrade, and transfers
+//!   on disjoint ports/lanes (including concurrent host offloads from
+//!   different GPUs) run at full rate in parallel;
 //! * **time-resolved memory** — the full per-device resident-bytes
 //!   timeline ([`MemTimeline`]), not just the high-watermark, so
 //!   offload/recompute plans are judged on *when* memory peaks. Gradient
@@ -507,11 +513,10 @@ impl<'a> Engine<'a> {
             mem.push(MemTimeline { device: d, points, peak });
         }
 
-        let cap = cluster.spec.mem_bytes;
         for (dev, st) in stats.iter_mut() {
             st.bubble = (makespan - st.compute - st.comm).max(0.0);
             if *dev != CPU_DEVICE {
-                st.oom = st.peak_mem > cap;
+                st.oom = st.peak_mem > cluster.mem_capacity(*dev);
             }
         }
         let total_flops = g.total_flops();

@@ -68,6 +68,7 @@ pub mod rvd;
 pub mod schedule;
 pub mod search;
 pub mod sim;
+pub mod topo;
 pub mod trans;
 pub mod util;
 
@@ -90,4 +91,5 @@ pub mod prelude {
     };
     pub use crate::schedule::{Schedule, ScheduleSpec};
     pub use crate::search::{self, Fidelity, Metrics, RefineConfig, SearchConfig, SearchReport};
+    pub use crate::topo::{build_cluster, ClusterShapeError, DeviceKind, TopoKind, Topology};
 }

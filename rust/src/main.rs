@@ -47,7 +47,9 @@ fn usage() {
                                 [--gpus N] [--scale 0..3] [--batch B] [--seq S]\n\
                                 [--tp T] [--pp P] [--dp D] [--micro K] [--shards C]\n\
                                 [--comm p2p|intra|inter] [--fidelity list|des]\n\
-                                [--trace FILE]\n\
+                                [--trace FILE] [--servers N]\n\
+                                [--topology flat|fat-tree:K|rail:R]\n\
+                                [--device-mix kind:count,...]\n\
                                   --fidelity des additionally executes the plan\n\
                                   on the discrete-event engine (per-device\n\
                                   compute+comm streams, fair-shared link\n\
@@ -62,7 +64,20 @@ fn usage() {
                                 [--fidelity list|des] [--des-top K] [--trace FILE]\n\
                                 [--baseline FILE] [--write-baseline] [--tol F]\n\
                                 [--bench-json FILE] [--schedule NAME|sched{{...}}]\n\
+                                [--servers N] [--topology flat|fat-tree:K|rail:R]\n\
+                                [--device-mix kind:count,...]\n\
                                 [refine flags — see REFINE below]\n\
+                                  --topology models the cluster fabric: flat\n\
+                                  (one NIC/server, legacy), fat-tree:K (K\n\
+                                  servers per rack, cross-rack traffic shares\n\
+                                  per-rack spine uplinks) or rail:R (R rail\n\
+                                  switches, per-GPU NICs). --servers overrides\n\
+                                  the 8-GPU server shape; --device-mix (e.g.\n\
+                                  a100:8,h100:8) assigns device kinds to\n\
+                                  server rows for heterogeneous fleets. All\n\
+                                  shape combinations are validated up front\n\
+                                  (typed error + exit 2 when they don't\n\
+                                  divide evenly).\n\
                                   enumerate the feasible PlanSpec grid (--hetero\n\
                                   adds heterogeneous per-stage pipelines),\n\
                                   dominance-prune against the analytic cost\n\
@@ -258,6 +273,28 @@ fn spec_from_args(planner: &dyn Planner, args: &Args, gpus: usize) -> PlanSpec {
     spec
 }
 
+/// Build the modeled cluster from the CLI shape flags (`--gpus`,
+/// `--servers`, `--topology`, `--device-mix`). Every divisibility
+/// constraint is validated up front; a combination that doesn't divide
+/// evenly exits 2 with the typed [`superscaler::topo::ClusterShapeError`]
+/// instead of panicking or silently truncating the fleet.
+fn cluster_from_args(args: &Args, gpus: usize) -> Cluster {
+    let servers = args.get("servers").map(|s| {
+        s.parse::<usize>().unwrap_or_else(|_| {
+            eprintln!("--servers expects an integer, got '{s}'");
+            std::process::exit(2);
+        })
+    });
+    let topology = args.str("topology", "flat");
+    match superscaler::topo::build_cluster(gpus, servers, topology, args.get("device-mix")) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("invalid cluster shape: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn simulate(args: &Args) {
     let gpus = args.usize("gpus", 4);
     let model = build_model(args);
@@ -266,12 +303,12 @@ fn simulate(args: &Args) {
         eprintln!("unknown plan '{plan_name}' (see `superscaler plans`)");
         std::process::exit(2);
     };
+    let cluster = cluster_from_args(args, gpus);
     let spec = spec_from_args(planner, args, gpus);
     let out = planner.build(&model, &spec).unwrap_or_else(|e| {
         eprintln!("plan construction failed: {e}");
         std::process::exit(1);
     });
-    let cluster = Cluster::v100(gpus);
     let vs = match superscaler::schedule::validate(&out.graph, &out.schedule) {
         Ok(vs) => vs,
         Err(e) => {
@@ -320,12 +357,8 @@ fn simulate(args: &Args) {
 
 fn search_cmd(args: &Args) {
     let gpus = args.usize("gpus", 8);
-    if gpus == 0 || (gpus > 8 && gpus % 8 != 0) {
-        eprintln!("--gpus must be 1..=8 or a multiple of 8 (servers hold 8 GPUs)");
-        std::process::exit(2);
-    }
     let top = args.usize("top", 10);
-    let cluster = Cluster::v100(gpus);
+    let cluster = cluster_from_args(args, gpus);
     let refine_opts = RefineOpts::from_args(args);
     let cfg = search::SearchConfig::builder()
         .workers(args.usize("workers", 0))
@@ -480,6 +513,11 @@ fn write_bench_json(path: &str, report: &search::SearchReport) {
     let v = Value::obj([
         ("model", report.model.clone().into()),
         ("gpus", report.gpus.into()),
+        // `devices`/`topology`: the scaling axes — they distinguish a
+        // 16-GPU smoke run from a 1k-device fat-tree scaling run in the
+        // accumulated trajectory.
+        ("devices", report.gpus.into()),
+        ("topology", report.topology.clone().into()),
         ("wall_secs", report.wall_secs.into()),
         ("evaluated", report.evaluated.into()),
         ("pruned_infeasible", report.pruned.into()),

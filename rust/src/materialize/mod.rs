@@ -184,12 +184,9 @@ pub fn materialize(g: &Graph, vs: &ValidatedSchedule, cluster: &Cluster, mode: C
     for &op in &vs.topo {
         let device = dev_of(op);
         let flops = g.op(op).flops;
-        let spec = if device == crate::schedule::CPU_DEVICE {
-            &cluster.cpu_spec
-        } else {
-            &cluster.spec
-        };
-        let dur = spec.compute_time(flops);
+        // Per-device spec: mixed fleets price each op by its server row's
+        // device kind (CPU ops by the host spec).
+        let dur = cluster.device_spec(device).compute_time(flops);
         let id = plan.push(
             TaskKind::Compute { op, device },
             Vec::new(),
@@ -542,8 +539,14 @@ fn synthesize_component(
 
     // Generic Fig. 8 fallback: per consumer, fetch every overlapping
     // producer piece; reduces/concats are local (free). One interned label
-    // serves every transfer of this pTensor.
+    // serves every transfer of this pTensor. A (producer op, destination
+    // device, overlap) triple is materialized ONCE and shared by every
+    // consumer on that device: zero-bubble's B and W halves both list the
+    // upstream gradient as an input, but the stage receives it over the
+    // wire once — without this the cross-stage dy transfer is charged
+    // twice (the PR 7 carried debt).
     let p2p_label: Arc<str> = format!("p2p:{}", g.ptensor(pt).name).into();
+    let mut shared: Vec<(OpId, DeviceId, Mask, TaskId)> = Vec::new();
     for c in unresolved {
         plan.n_p2p += 1;
         let mut fetched = Vec::new();
@@ -558,6 +561,13 @@ fn synthesize_component(
                     }
                     continue;
                 }
+                if let Some(&(.., t)) = shared
+                    .iter()
+                    .find(|(po, d, m, _)| *po == p.op && *d == c.device && *m == ov)
+                {
+                    fetched.push(t);
+                    continue;
+                }
                 let deps = if cross_iter { vec![] } else { vec![plan.task_of_op[p.op]] };
                 let dur = cluster.p2p_time(p.device, c.device, bytes);
                 let t = plan.push(
@@ -566,6 +576,7 @@ fn synthesize_component(
                     dur,
                     p2p_label.clone(),
                 );
+                shared.push((p.op, c.device, ov, t));
                 fetched.push(t);
             }
         }
@@ -1026,5 +1037,50 @@ mod tests {
             }
         }
         assert_eq!(seen, n, "cyclic task plan");
+    }
+
+    #[test]
+    fn zero_bubble_shares_the_cross_stage_dy_recv() {
+        // Zero-bubble splits backward into B/W halves that BOTH list the
+        // upstream gradient as an input; the stage must still receive it
+        // over the wire once. At micro=1 every legitimate P2P transfer of
+        // a pipeline has a distinct (from, to, bytes, ptensor) key, so any
+        // duplicate is a double-charged recv.
+        use crate::plans::{registry, PlanKind, PlanSpec, SchedName, SchedSpec};
+        let model = crate::models::gpt3(0, 8, 256);
+        let cluster = Cluster::v100(2);
+        let build = |sched: SchedName| {
+            let spec = PlanSpec {
+                pp: 2,
+                micro: 1,
+                sched: Some(SchedSpec::Named(sched)),
+                ..PlanSpec::new(PlanKind::Megatron)
+            };
+            let out = registry::build("megatron", &model, &spec).unwrap();
+            let vs = validate(&out.graph, &out.schedule).unwrap();
+            materialize(&out.graph, &vs, &cluster, CommMode::InterRvd)
+        };
+        let zb = build(SchedName::ZeroBubble);
+        let mut keys: Vec<(DeviceId, DeviceId, u64, PTensorId)> = zb
+            .tasks
+            .iter()
+            .filter_map(|t| match t.kind {
+                TaskKind::P2P { from, to, bytes, ptensor } => Some((from, to, bytes, ptensor)),
+                _ => None,
+            })
+            .collect();
+        let n = keys.len();
+        assert!(n > 0, "a 2-stage pipeline must ship cross-stage tensors");
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate cross-stage P2P transfer survived dedup");
+        // The B/W split may not inflate wire traffic vs plain 1F1B.
+        let base = build(SchedName::OneFOneB);
+        assert!(
+            zb.comm_bytes <= base.comm_bytes,
+            "zb wire bytes {} exceed 1f1b's {}",
+            zb.comm_bytes,
+            base.comm_bytes
+        );
     }
 }

@@ -546,7 +546,9 @@ fn hetero_candidates_impl(model: &Model, cluster: &Cluster, memoize: bool) -> Ve
     }
     let stats = ModelStats::of(&model.graph);
     let can_coshard = !model.coshard_dim.is_empty();
-    let cap = cluster.spec.mem_bytes;
+    // Rank against the roomiest device kind: candidate generation must not
+    // discard shapes a mixed fleet's larger devices could still hold.
+    let cap = cluster.max_mem_bytes();
     let micros = [1usize, 2, 4, 8, 16];
     let mut out: Vec<PlanSpec> = Vec::new();
     for dp in (1..=n.min(batch).min(MAX_DP)).filter(|d| n % d == 0) {

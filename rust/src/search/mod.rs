@@ -421,8 +421,10 @@ pub fn feasibility(spec: &PlanSpec, model: &Model, cluster: &Cluster) -> Result<
     if let Some(sched) = &spec.sched {
         sched_feasibility(spec, sched)?;
     }
+    // Optimistic capacity: on mixed fleets a plan is provably infeasible
+    // only if even the largest device kind cannot hold its static share.
     let need = spec.static_bytes_lower_bound(model.graph.weight_bytes());
-    let cap = cluster.spec.mem_bytes;
+    let cap = cluster.max_mem_bytes();
     if need > cap {
         return Err(Infeasible::MemoryBound { need, cap });
     }
@@ -558,6 +560,8 @@ impl Candidate {
 pub struct SearchReport {
     pub model: String,
     pub gpus: usize,
+    /// Fabric the cluster was modeled on (`flat`, `fat-tree:K`, `rail:R`).
+    pub topology: String,
     /// All evaluated candidates: valid non-OOM by iteration time, then OOM,
     /// then failures. Deterministic for identical inputs.
     pub ranked: Vec<Candidate>,
@@ -978,6 +982,7 @@ pub fn search(model: &Model, cluster: &Cluster, cfg: &SearchConfig) -> SearchRep
     SearchReport {
         model: model_name,
         gpus: cluster.num_gpus(),
+        topology: cluster.topology_label(),
         ranked,
         pruned,
         excluded,

@@ -445,13 +445,13 @@ pub fn simulate_prepared(g: &Graph, tg: &TaskGraph, plan: &Plan, cluster: &Clust
             .get_or_insert_with(|| DeviceStat { device: dev, ..Default::default() });
         st.peak_mem = peak as u64;
     }
-    // Add static memory + OOM check.
-    let cap = cluster.spec.mem_bytes;
+    // Add static memory + OOM check (per-device capacity: mixed fleets
+    // give each server row its own limit).
     for st in stats.iter_mut().flatten() {
         st.peak_mem += plan.static_mem.get(&st.device).copied().unwrap_or(0);
         st.bubble = (makespan - st.compute - st.comm).max(0.0);
         if st.device != CPU_DEVICE {
-            st.oom = st.peak_mem > cap;
+            st.oom = st.peak_mem > cluster.mem_capacity(st.device);
         }
     }
 

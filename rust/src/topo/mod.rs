@@ -1,0 +1,647 @@
+//! Cluster fabric topology: switch/link graphs, deterministic routing and
+//! heterogeneous device fleets.
+//!
+//! The seed cluster model was flat — `n_servers × gpus_per_server` uniform
+//! devices, one NIC per server, every inter-server path identical. Real
+//! fleets are multi-tier fabrics (leaf/spine fat-trees, rail-optimized
+//! GPU pods) with mixed device generations. This module makes the fabric
+//! explicit while keeping the flat model bitwise-intact:
+//!
+//! * [`Topology`] is the fabric graph: named builders for [`Topology::flat`]
+//!   (exactly the legacy link sets), [`Topology::fat_tree`] (`k` servers per
+//!   rack switch, racks joined by per-rack spine uplinks —
+//!   [`LinkId::Up`]) and [`Topology::rail_optimized`] (`r` rail switches per
+//!   pod; GPU `i` of every server injects into rail `i mod r` through its
+//!   own NIC — [`LinkId::Rail`]).
+//! * [`Topology::route`] resolves the deterministic link path between two
+//!   devices. Routes only *vary* at the tier granularity (rack pair /
+//!   rail pair) — endpoint ports (`NvLink`/`Nic`/`Pcie`) are O(1) arithmetic
+//!   on the device index — so the cached dense route table is the **spine
+//!   table**: a `Vec` CSR indexed by tier-pair slot (`ta * n_tiers + tb`).
+//!   A full device-pair table at 10k devices would be 10⁸ slots of pure
+//!   redundancy; the tier-pair table is `racks²`/`rails²` entries and
+//!   [`Topology::route_into`] composes a route with zero allocation.
+//! * [`DeviceKind`] carries per-device-type compute/memory specs
+//!   (V100/A100/H100) so a server row can be heterogeneous;
+//!   `--device-mix a100:8,h100:8` assigns kinds to servers in order.
+//! * [`ClusterShapeError`] is the typed rejection for CLI shapes that don't
+//!   divide evenly (`--gpus`/`--servers`/`--topology`/`--device-mix`),
+//!   replacing panics and silent truncation.
+//!
+//! # How each fidelity tier consumes routes
+//!
+//! * **analytic** ([`crate::cost`]): `Cluster::link`/`group_link` price a
+//!   path by its slowest hop (bottleneck bandwidth, with per-hop shares for
+//!   collectives) and its summed switch latency — cross-rack/cross-rail
+//!   paths cost 2× the α of an in-rack path. The plan lower bound keeps
+//!   using the fastest link and fastest device kind, so dominance pruning
+//!   stays sound on any fabric.
+//! * **list scheduler** ([`crate::sim`]): inherits the analytic per-task
+//!   durations; heterogeneous kinds price each compute task by its
+//!   device's spec.
+//! * **DES** ([`crate::des`]): `Cluster::group_links` returns every link on
+//!   a transfer's resolved route — NICs *and* the spanned rack uplinks /
+//!   rails — so a transfer holds its whole route and concurrent transfers
+//!   sharing any hop fair-share it (repriced at start/finish, as before).
+
+use crate::cost::{Cluster, DeviceSpec, LinkId};
+use crate::schedule::{DeviceId, CPU_DEVICE};
+
+/// The fabric family of a [`Topology`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TopoKind {
+    /// Legacy single-tier fabric: one NIC per server, all NICs on one
+    /// non-blocking switch. Bitwise-identical to the pre-topology model.
+    Flat,
+    /// Leaf/spine fat-tree: `k` servers per rack (leaf) switch; racks are
+    /// joined through per-rack spine uplinks ([`LinkId::Up`]). In-rack
+    /// traffic behaves exactly like [`TopoKind::Flat`]; cross-rack traffic
+    /// additionally crosses both racks' uplinks (shared by every member in
+    /// the rack) and pays one extra switch hop of latency.
+    FatTree { k: usize },
+    /// Rail-optimized pod: `rails` rail switches; GPU `i` of every server
+    /// has its own NIC into rail `i mod rails` ([`LinkId::Rail`]), so
+    /// inter-server traffic bypasses the per-server NIC bottleneck.
+    /// Same-rail traffic crosses one rail switch; cross-rail traffic
+    /// bridges two rails and pays one extra hop of latency.
+    Rail { rails: usize },
+}
+
+/// A fabric graph of switches and links over `n_servers × gpus_per_server`
+/// devices, with deterministic route resolution. Construction validates the
+/// shape (typed [`ClusterShapeError`]s) and precomputes the dense spine
+/// route table; all queries afterwards are allocation-free O(1) lookups
+/// plus O(route length) copies.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    kind: TopoKind,
+    n_servers: usize,
+    gpus_per_server: usize,
+    /// Tier count: racks (fat-tree), rails (rail), 1 (flat).
+    n_tiers: usize,
+    /// Dense CSR spine table indexed by tier-pair slot `ta * n_tiers + tb`:
+    /// the fabric hops between tier `ta` and tier `tb` are
+    /// `spine_links[spine_off[slot] .. spine_off[slot + 1]]`.
+    spine_off: Vec<u32>,
+    spine_links: Vec<LinkId>,
+}
+
+impl Topology {
+    /// The legacy single-tier fabric (bitwise-equivalent link sets).
+    pub fn flat(n_servers: usize, gpus_per_server: usize) -> Topology {
+        Self::build(TopoKind::Flat, n_servers, gpus_per_server, 1)
+    }
+
+    /// Fat-tree with `k` servers per rack switch. `k` must divide
+    /// `n_servers` evenly.
+    pub fn fat_tree(
+        n_servers: usize,
+        gpus_per_server: usize,
+        k: usize,
+    ) -> Result<Topology, ClusterShapeError> {
+        if k == 0 || n_servers % k != 0 {
+            return Err(ClusterShapeError::RackMismatch { servers: n_servers, k });
+        }
+        Ok(Self::build(TopoKind::FatTree { k }, n_servers, gpus_per_server, n_servers / k))
+    }
+
+    /// Rail-optimized pod with `rails` rail switches. `rails` must divide
+    /// `gpus_per_server` evenly (each local GPU index maps to one rail).
+    pub fn rail_optimized(
+        n_servers: usize,
+        gpus_per_server: usize,
+        rails: usize,
+    ) -> Result<Topology, ClusterShapeError> {
+        if rails == 0 || gpus_per_server % rails != 0 {
+            return Err(ClusterShapeError::RailMismatch { gpus_per_server, rails });
+        }
+        Ok(Self::build(TopoKind::Rail { rails }, n_servers, gpus_per_server, rails))
+    }
+
+    /// Parse a `--topology` argument: `flat`, `fat-tree:K` or `rail:R`.
+    pub fn parse(
+        s: &str,
+        n_servers: usize,
+        gpus_per_server: usize,
+    ) -> Result<Topology, ClusterShapeError> {
+        let bad = || ClusterShapeError::BadTopology(s.to_string());
+        if s == "flat" {
+            return Ok(Self::flat(n_servers, gpus_per_server));
+        }
+        let (family, param) = s.split_once(':').ok_or_else(bad)?;
+        let n: usize = param.parse().map_err(|_| bad())?;
+        match family {
+            "fat-tree" => Self::fat_tree(n_servers, gpus_per_server, n),
+            "rail" => Self::rail_optimized(n_servers, gpus_per_server, n),
+            _ => Err(bad()),
+        }
+    }
+
+    /// Build the dense spine table: every tier pair's fabric segment, laid
+    /// out as CSR so a route lookup is two `Vec` index operations.
+    fn build(kind: TopoKind, n_servers: usize, gpus_per_server: usize, n_tiers: usize) -> Topology {
+        let mut off: Vec<u32> = Vec::with_capacity(n_tiers * n_tiers + 1);
+        let mut links: Vec<LinkId> = Vec::new();
+        off.push(0);
+        for ta in 0..n_tiers {
+            for tb in 0..n_tiers {
+                match kind {
+                    TopoKind::Flat => {}
+                    TopoKind::FatTree { .. } => {
+                        if ta != tb {
+                            links.push(LinkId::Up(ta));
+                            links.push(LinkId::Up(tb));
+                        }
+                    }
+                    TopoKind::Rail { .. } => {
+                        links.push(LinkId::Rail(ta));
+                        if ta != tb {
+                            links.push(LinkId::Rail(tb));
+                        }
+                    }
+                }
+                off.push(links.len() as u32);
+            }
+        }
+        Topology { kind, n_servers, gpus_per_server, n_tiers, spine_off: off, spine_links: links }
+    }
+
+    pub fn kind(&self) -> TopoKind {
+        self.kind
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.n_servers
+    }
+
+    pub fn gpus_per_server(&self) -> usize {
+        self.gpus_per_server
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.kind == TopoKind::Flat
+    }
+
+    /// The CLI-facing name: `flat`, `fat-tree:K` or `rail:R`.
+    pub fn label(&self) -> String {
+        match self.kind {
+            TopoKind::Flat => "flat".to_string(),
+            TopoKind::FatTree { k } => format!("fat-tree:{k}"),
+            TopoKind::Rail { rails } => format!("rail:{rails}"),
+        }
+    }
+
+    /// Rack index of a server (0 outside fat-trees).
+    pub fn rack_of(&self, server: usize) -> usize {
+        match self.kind {
+            TopoKind::FatTree { k } => server / k,
+            _ => 0,
+        }
+    }
+
+    /// Rail index of a device (0 outside rail fabrics).
+    pub fn rail_of(&self, d: DeviceId) -> usize {
+        match self.kind {
+            TopoKind::Rail { rails } => (d % self.gpus_per_server) % rails,
+            _ => 0,
+        }
+    }
+
+    /// Fabric tier a device injects into: its rack (fat-tree), its rail
+    /// (rail), 0 (flat).
+    fn tier_of(&self, d: DeviceId) -> usize {
+        match self.kind {
+            TopoKind::Flat => 0,
+            TopoKind::FatTree { k } => d / self.gpus_per_server / k,
+            TopoKind::Rail { rails } => (d % self.gpus_per_server) % rails,
+        }
+    }
+
+    /// Whether an inter-server path between GPUs `a` and `b` crosses the
+    /// spine (cross-rack / cross-rail) and therefore pays the extra switch
+    /// hop. Always false on flat fabrics.
+    pub fn cross_tier(&self, a: DeviceId, b: DeviceId) -> bool {
+        !self.is_flat() && self.tier_of(a) != self.tier_of(b)
+    }
+
+    /// The cached spine segment between two fabric tiers.
+    fn spine(&self, ta: usize, tb: usize) -> &[LinkId] {
+        let slot = ta * self.n_tiers + tb;
+        let lo = self.spine_off[slot] as usize;
+        let hi = self.spine_off[slot + 1] as usize;
+        &self.spine_links[lo..hi]
+    }
+
+    /// Deterministic route between two devices, as the ordered link path
+    /// src-port → fabric → dst-port. Same-device routes are empty; host
+    /// routes cross the GPU's PCIe lane; intra-server routes cross both
+    /// NVLink ports; inter-server routes cross the injection ports plus the
+    /// cached spine segment. Allocates the result — use
+    /// [`Topology::route_into`] on hot paths.
+    pub fn route(&self, src: DeviceId, dst: DeviceId) -> Vec<LinkId> {
+        let mut out = Vec::with_capacity(4);
+        self.route_into(src, dst, &mut out);
+        out
+    }
+
+    /// [`Topology::route`] into a caller-owned buffer (cleared first): no
+    /// per-call allocation once the buffer has grown to the longest route.
+    pub fn route_into(&self, src: DeviceId, dst: DeviceId, out: &mut Vec<LinkId>) {
+        out.clear();
+        if src == dst {
+            return;
+        }
+        if src == CPU_DEVICE || dst == CPU_DEVICE {
+            let gpu = if src == CPU_DEVICE { dst } else { src };
+            if gpu != CPU_DEVICE {
+                out.push(LinkId::Pcie(gpu));
+            }
+            return;
+        }
+        let (sa, sb) = (src / self.gpus_per_server, dst / self.gpus_per_server);
+        if sa == sb {
+            out.push(LinkId::NvLink(src));
+            out.push(LinkId::NvLink(dst));
+            return;
+        }
+        match self.kind {
+            // Rail fabrics give every GPU its own NIC into its rail: the
+            // spine segment *is* the route (per-device injection ports are
+            // serialized by the device's comm stream, like NVLink ports).
+            TopoKind::Rail { .. } => {
+                out.extend_from_slice(self.spine(self.tier_of(src), self.tier_of(dst)));
+            }
+            _ => {
+                out.push(LinkId::Nic(sa));
+                out.extend_from_slice(self.spine(self.tier_of(src), self.tier_of(dst)));
+                out.push(LinkId::Nic(sb));
+            }
+        }
+    }
+
+    /// Fabric links occupied by an inter-server group transfer (callers
+    /// guarantee: ≥ 2 sorted deduped GPU members spanning ≥ 2 servers).
+    /// The union of every member's injection path: per-server NICs, plus
+    /// the spanned rack uplinks when a fat-tree group crosses racks, or the
+    /// members' rails on a rail fabric. Output order is arbitrary —
+    /// [`Cluster::group_links`] sorts and dedups.
+    pub fn group_fabric_links(&self, devs: &[DeviceId], out: &mut Vec<LinkId>) {
+        match self.kind {
+            TopoKind::Flat | TopoKind::FatTree { .. } => {
+                for &d in devs {
+                    out.push(LinkId::Nic(d / self.gpus_per_server));
+                }
+                if let TopoKind::FatTree { .. } = self.kind {
+                    let t0 = self.tier_of(devs[0]);
+                    if devs.iter().any(|&d| self.tier_of(d) != t0) {
+                        for &d in devs {
+                            out.push(LinkId::Up(self.tier_of(d)));
+                        }
+                    }
+                }
+            }
+            TopoKind::Rail { .. } => {
+                for &d in devs {
+                    out.push(LinkId::Rail(self.rail_of(d)));
+                }
+            }
+        }
+    }
+}
+
+/// A device generation: a named [`DeviceSpec`]. A [`Cluster`]'s fleet maps
+/// each server row to one kind, so A100 and H100 rows can coexist; every
+/// fidelity tier prices compute and memory per device through
+/// `Cluster::device_spec`.
+#[derive(Clone, Debug)]
+pub struct DeviceKind {
+    pub name: String,
+    pub spec: DeviceSpec,
+}
+
+impl DeviceKind {
+    /// The seed default (the paper's testbed generation).
+    pub fn v100() -> DeviceKind {
+        DeviceKind { name: "v100".to_string(), spec: DeviceSpec::default() }
+    }
+
+    /// A100-40GB-ish: ~2.8× V100 tensor throughput, 40 GiB.
+    pub fn a100() -> DeviceKind {
+        DeviceKind {
+            name: "a100".to_string(),
+            spec: DeviceSpec {
+                peak_flops: 312e12,
+                mem_bytes: 40 * (1 << 30) as u64,
+                kernel_overhead: 8e-6,
+                sat_knee_flops: 4e9,
+                max_util: 0.65,
+            },
+        }
+    }
+
+    /// H100-80GB-ish: ~9× V100 tensor throughput, 80 GiB.
+    pub fn h100() -> DeviceKind {
+        DeviceKind {
+            name: "h100".to_string(),
+            spec: DeviceSpec {
+                peak_flops: 989e12,
+                mem_bytes: 80 * (1 << 30) as u64,
+                kernel_overhead: 8e-6,
+                sat_knee_flops: 8e9,
+                max_util: 0.7,
+            },
+        }
+    }
+
+    /// Look a kind up by its `--device-mix` name.
+    pub fn named(name: &str) -> Option<DeviceKind> {
+        match name {
+            "v100" => Some(Self::v100()),
+            "a100" => Some(Self::a100()),
+            "h100" => Some(Self::h100()),
+            _ => None,
+        }
+    }
+}
+
+/// Typed rejection of a cluster shape the CLI cannot honor: every variant
+/// names the numbers that failed to divide, so `--gpus`/`--servers`/
+/// `--topology`/`--device-mix` mistakes fail with an actionable message
+/// instead of a panic or a silently truncated fleet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClusterShapeError {
+    ZeroGpus,
+    ZeroServers,
+    /// `--servers` does not divide `--gpus`.
+    ServersDontDivide { gpus: usize, servers: usize },
+    /// `--gpus` does not tile whole servers (without `--servers`, servers
+    /// hold `min(gpus, 8)` GPUs — so 1..=8 or a multiple of 8).
+    UnevenServers { gpus: usize, gpus_per_server: usize },
+    /// Unparsable `--topology` argument.
+    BadTopology(String),
+    /// Fat-tree rack size `k` does not divide the server count.
+    RackMismatch { servers: usize, k: usize },
+    /// Rail count does not divide the per-server GPU count.
+    RailMismatch { gpus_per_server: usize, rails: usize },
+    /// Unparsable `--device-mix` argument.
+    BadDeviceMix(String),
+    /// `--device-mix` counts do not sum to `--gpus`.
+    MixSumMismatch { mix_gpus: usize, gpus: usize },
+    /// A `--device-mix` count does not tile whole server rows.
+    MixNotServerAligned { name: String, count: usize, gpus_per_server: usize },
+}
+
+impl std::fmt::Display for ClusterShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterShapeError::ZeroGpus => write!(f, "--gpus must be at least 1"),
+            ClusterShapeError::ZeroServers => write!(f, "--servers must be at least 1"),
+            ClusterShapeError::ServersDontDivide { gpus, servers } => {
+                write!(f, "--servers {servers} does not divide --gpus {gpus} evenly")
+            }
+            ClusterShapeError::UnevenServers { gpus, gpus_per_server } => write!(
+                f,
+                "--gpus {gpus} does not tile {gpus_per_server}-GPU servers \
+                 (use 1..=8, a multiple of 8, or pass --servers)"
+            ),
+            ClusterShapeError::BadTopology(s) => {
+                write!(f, "--topology expects flat, fat-tree:K or rail:R, got '{s}'")
+            }
+            ClusterShapeError::RackMismatch { servers, k } => {
+                write!(f, "fat-tree rack size {k} does not divide {servers} servers evenly")
+            }
+            ClusterShapeError::RailMismatch { gpus_per_server, rails } => {
+                write!(f, "rail count {rails} does not divide {gpus_per_server} GPUs/server")
+            }
+            ClusterShapeError::BadDeviceMix(s) => write!(
+                f,
+                "--device-mix expects comma-separated kind:count pairs \
+                 (kinds: v100, a100, h100), got '{s}'"
+            ),
+            ClusterShapeError::MixSumMismatch { mix_gpus, gpus } => {
+                write!(f, "--device-mix counts sum to {mix_gpus} GPUs but --gpus is {gpus}")
+            }
+            ClusterShapeError::MixNotServerAligned { name, count, gpus_per_server } => write!(
+                f,
+                "--device-mix {name}:{count} does not tile whole {gpus_per_server}-GPU \
+                 server rows (servers are homogeneous)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ClusterShapeError {}
+
+/// Parse a `--device-mix` argument (`a100:8,h100:8`, counts in GPUs) into
+/// the per-server kind assignment. Counts are assigned to server rows in
+/// order and must tile whole rows; the total must equal `gpus`.
+pub fn parse_device_mix(
+    mix: &str,
+    gpus: usize,
+    gpus_per_server: usize,
+) -> Result<Vec<DeviceKind>, ClusterShapeError> {
+    let mut per_server: Vec<DeviceKind> = Vec::with_capacity(gpus / gpus_per_server.max(1));
+    let mut total = 0usize;
+    for part in mix.split(',') {
+        let bad = || ClusterShapeError::BadDeviceMix(mix.to_string());
+        let (name, count) = part.split_once(':').ok_or_else(bad)?;
+        let count: usize = count.parse().map_err(|_| bad())?;
+        let kind = DeviceKind::named(name).ok_or_else(bad)?;
+        if count == 0 || count % gpus_per_server != 0 {
+            return Err(ClusterShapeError::MixNotServerAligned {
+                name: name.to_string(),
+                count,
+                gpus_per_server,
+            });
+        }
+        total += count;
+        for _ in 0..count / gpus_per_server {
+            per_server.push(kind.clone());
+        }
+    }
+    if total != gpus {
+        return Err(ClusterShapeError::MixSumMismatch { mix_gpus: total, gpus });
+    }
+    Ok(per_server)
+}
+
+/// Build a [`Cluster`] from the CLI shape flags, with every divisibility
+/// constraint validated up front. `servers: None` keeps the legacy shape
+/// (`min(gpus, 8)` GPUs per server); `topology` is a
+/// `flat|fat-tree:K|rail:R` string; `device_mix` assigns [`DeviceKind`]s to
+/// server rows.
+pub fn build_cluster(
+    gpus: usize,
+    servers: Option<usize>,
+    topology: &str,
+    device_mix: Option<&str>,
+) -> Result<Cluster, ClusterShapeError> {
+    if gpus == 0 {
+        return Err(ClusterShapeError::ZeroGpus);
+    }
+    let gpus_per_server = match servers {
+        Some(0) => return Err(ClusterShapeError::ZeroServers),
+        Some(s) => {
+            if gpus % s != 0 {
+                return Err(ClusterShapeError::ServersDontDivide { gpus, servers: s });
+            }
+            gpus / s
+        }
+        None => gpus.min(8),
+    };
+    if gpus % gpus_per_server != 0 {
+        return Err(ClusterShapeError::UnevenServers { gpus, gpus_per_server });
+    }
+    let n_servers = gpus / gpus_per_server;
+    let mut c = Cluster::with_shape(n_servers, gpus_per_server);
+    c.topo = Topology::parse(topology, n_servers, gpus_per_server)?;
+    if let Some(mix) = device_mix {
+        c.server_kind = parse_device_mix(mix, gpus, gpus_per_server)?;
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_routes_match_legacy_link_sets() {
+        let t = Topology::flat(2, 8);
+        assert_eq!(t.route(0, 3), vec![LinkId::NvLink(0), LinkId::NvLink(3)]);
+        assert_eq!(t.route(0, 8), vec![LinkId::Nic(0), LinkId::Nic(1)]);
+        assert_eq!(t.route(4, CPU_DEVICE), vec![LinkId::Pcie(4)]);
+        assert!(t.route(5, 5).is_empty());
+    }
+
+    #[test]
+    fn fat_tree_routes_cross_rack_uplinks() {
+        // 4 servers × 4 GPUs, 2 servers per rack.
+        let t = Topology::fat_tree(4, 4, 2).unwrap();
+        // In-rack inter-server: NICs only, like flat.
+        assert_eq!(t.route(0, 4), vec![LinkId::Nic(0), LinkId::Nic(1)]);
+        // Cross-rack: NICs plus both racks' spine uplinks.
+        assert_eq!(
+            t.route(0, 8),
+            vec![LinkId::Nic(0), LinkId::Up(0), LinkId::Up(1), LinkId::Nic(2)]
+        );
+        assert!(t.cross_tier(0, 8));
+        assert!(!t.cross_tier(0, 4));
+    }
+
+    #[test]
+    fn rail_routes_use_rails_not_nics() {
+        // 2 servers × 4 GPUs, 2 rails: local GPUs 0,2 → rail 0; 1,3 → rail 1.
+        let t = Topology::rail_optimized(2, 4, 2).unwrap();
+        assert_eq!(t.route(0, 6), vec![LinkId::Rail(0)]); // same rail
+        assert_eq!(t.route(0, 5), vec![LinkId::Rail(0), LinkId::Rail(1)]); // cross
+        assert!(t.cross_tier(0, 5));
+        // Intra-server stays NVLink regardless of rails.
+        assert_eq!(t.route(0, 1), vec![LinkId::NvLink(0), LinkId::NvLink(1)]);
+    }
+
+    #[test]
+    fn parse_accepts_the_cli_grammar() {
+        assert!(Topology::parse("flat", 2, 8).unwrap().is_flat());
+        assert_eq!(Topology::parse("fat-tree:2", 4, 8).unwrap().label(), "fat-tree:2");
+        assert_eq!(Topology::parse("rail:4", 2, 8).unwrap().label(), "rail:4");
+        for bad in ["mesh", "fat-tree", "fat-tree:x", "rail:", ""] {
+            assert!(Topology::parse(bad, 4, 8).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_typed() {
+        assert_eq!(build_cluster(0, None, "flat", None).unwrap_err(), ClusterShapeError::ZeroGpus);
+        assert!(matches!(
+            build_cluster(12, None, "flat", None).unwrap_err(),
+            ClusterShapeError::UnevenServers { gpus: 12, .. }
+        ));
+        assert!(matches!(
+            build_cluster(12, Some(5), "flat", None).unwrap_err(),
+            ClusterShapeError::ServersDontDivide { gpus: 12, servers: 5 }
+        ));
+        assert!(matches!(
+            build_cluster(32, None, "fat-tree:3", None).unwrap_err(),
+            ClusterShapeError::RackMismatch { servers: 4, k: 3 }
+        ));
+        assert!(matches!(
+            build_cluster(16, None, "rail:3", None).unwrap_err(),
+            ClusterShapeError::RailMismatch { gpus_per_server: 8, rails: 3 }
+        ));
+        assert!(matches!(
+            build_cluster(16, None, "flat", Some("a100:8")).unwrap_err(),
+            ClusterShapeError::MixSumMismatch { mix_gpus: 8, gpus: 16 }
+        ));
+        assert!(matches!(
+            build_cluster(16, None, "flat", Some("a100:12,h100:4")).unwrap_err(),
+            ClusterShapeError::MixNotServerAligned { .. }
+        ));
+        assert!(matches!(
+            build_cluster(16, None, "flat", Some("b200:16")).unwrap_err(),
+            ClusterShapeError::BadDeviceMix(_)
+        ));
+    }
+
+    #[test]
+    fn build_cluster_assigns_kinds_per_server_row() {
+        let c = build_cluster(16, None, "flat", Some("a100:8,h100:8")).unwrap();
+        assert_eq!(c.n_servers, 2);
+        assert_eq!(c.server_kind.len(), 2);
+        assert_eq!(c.server_kind[0].name, "a100");
+        assert_eq!(c.server_kind[1].name, "h100");
+        assert_eq!(c.device_spec(0).peak_flops, DeviceKind::a100().spec.peak_flops);
+        assert_eq!(c.device_spec(8).mem_bytes, DeviceKind::h100().spec.mem_bytes);
+        // Narrow servers via --servers.
+        let c = build_cluster(8, Some(4), "rail:2", None).unwrap();
+        assert_eq!((c.n_servers, c.gpus_per_server), (4, 2));
+        assert_eq!(c.topo.label(), "rail:2");
+    }
+
+    #[test]
+    fn route_into_reuses_the_buffer() {
+        let t = Topology::fat_tree(8, 8, 2).unwrap();
+        let mut buf = Vec::new();
+        t.route_into(0, 63, &mut buf);
+        let cap = buf.capacity();
+        assert_eq!(buf.len(), 4);
+        for dst in 8..64 {
+            t.route_into(0, dst, &mut buf);
+            assert!(!buf.is_empty());
+        }
+        assert_eq!(buf.capacity(), cap, "steady-state routing must not reallocate");
+    }
+
+    #[test]
+    fn prop_every_pair_routes_and_is_symmetric() {
+        crate::util::prop::check("topo-route-pairs", 200, |g| {
+            let gps = *g.rng.choose(&[2usize, 4, 8]);
+            let servers = *g.rng.choose(&[1usize, 2, 4, 8]);
+            let t = match g.int(0, 3) {
+                0 => Topology::flat(servers, gps),
+                1 => {
+                    let k = *g.rng.choose(&[1usize, 2]);
+                    if servers % k != 0 {
+                        return Ok(());
+                    }
+                    Topology::fat_tree(servers, gps, k).unwrap()
+                }
+                _ => Topology::rail_optimized(servers, gps, *g.rng.choose(&[1usize, 2])).unwrap(),
+            };
+            let n = servers * gps;
+            let a = g.int(0, n);
+            let b = g.int(0, n);
+            let (fwd, mut rev) = (t.route(a, b), t.route(b, a));
+            if a != b && fwd.is_empty() {
+                return Err(format!("{} -> {} resolved no route", a, b));
+            }
+            let mut fwd = fwd;
+            fwd.sort_unstable();
+            rev.sort_unstable();
+            if fwd != rev {
+                return Err(format!("route {a}<->{b} not symmetric: {fwd:?} vs {rev:?}"));
+            }
+            Ok(())
+        });
+    }
+}

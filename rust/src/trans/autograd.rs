@@ -155,7 +155,11 @@ pub fn complete(g: &mut Graph) -> Autograd {
 /// halves keep all stashed inputs (output-grad + forward inputs): B needs
 /// the weights, W needs the activations, and the shared upstream gradient
 /// feeds both — neither half depends on the other, which is exactly what
-/// lets a schedule defer W.
+/// lets a schedule defer W. The double-listed upstream gradient does NOT
+/// double its wire cost: `materialize`'s generic-P2P tier shares one recv
+/// per (producer, destination device, overlap) among all consumers, so a
+/// cross-stage dy lands once and both halves depend on that single
+/// transfer.
 ///
 /// `ag.bwd_of` is updated to point at the B half; the returned map gives
 /// `forward op -> W op` for the ops that were split.

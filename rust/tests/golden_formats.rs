@@ -60,6 +60,7 @@ fn synthetic_report() -> SearchReport {
     SearchReport {
         model: "gpt3-0".to_string(),
         gpus: 8,
+        topology: "flat".to_string(),
         ranked: vec![ok, oom, failed],
         pruned: 3,
         excluded: 0,
