@@ -1,0 +1,186 @@
+//! Cost-model calibration from reference-executor measurements.
+//!
+//! The reference executor ([`crate::exec::reference`]) records, for every
+//! task it runs, the measured CPU wall duration next to the analytic
+//! prediction the materializer priced the task at (V100-profile compute
+//! and NVLink/IB transfer times). This module aggregates those pairs into
+//! per-task-kind ratios — the error bar the ROADMAP's "close the
+//! sim-vs-real gap" track asks for.
+//!
+//! Interpretation note: the measured tier is a single-threaded-per-device
+//! CPU interpreter and the analytic tier prices datacenter GPUs, so the
+//! absolute `ratio` (measured / predicted) is expected to be large; the
+//! signal is its *consistency*. `log_sigma` reports the standard deviation
+//! of `ln(measured/predicted)` within a kind: a small sigma means the
+//! analytic model ranks tasks of that kind faithfully (durations are off
+//! by one multiplicative constant), which is exactly what plan *search*
+//! needs from a cost model.
+
+use crate::util::json::Value;
+
+/// One executed task's (measured, predicted) duration pair.
+#[derive(Clone, Debug)]
+pub struct TaskSample {
+    /// Task-kind tag: `compute:<op-kind>`, `p2p`, `collective:allreduce`.
+    pub kind: String,
+    /// The task's trace label (op name / transfer name).
+    pub label: String,
+    /// Measured wall duration, seconds.
+    pub measured: f64,
+    /// Analytic `cost::` prediction, seconds.
+    pub predicted: f64,
+}
+
+/// Aggregated measured-vs-analytic comparison for one task kind.
+#[derive(Clone, Debug)]
+pub struct KindRow {
+    pub kind: String,
+    pub n: usize,
+    pub measured_total: f64,
+    pub predicted_total: f64,
+    /// measured_total / predicted_total (the calibration constant).
+    pub ratio: f64,
+    /// Std-dev of per-task `ln(measured/predicted)` — the model's
+    /// within-kind consistency (0 = perfectly proportional).
+    pub log_sigma: f64,
+}
+
+/// The calibration report `verify-exec` emits.
+#[derive(Clone, Debug, Default)]
+pub struct CalibrationReport {
+    pub rows: Vec<KindRow>,
+    pub n_samples: usize,
+    pub measured_total: f64,
+    pub predicted_total: f64,
+    pub overall_ratio: f64,
+}
+
+/// Aggregate task samples into per-kind calibration rows.
+pub fn calibrate(samples: &[TaskSample]) -> CalibrationReport {
+    let mut kinds: Vec<String> = samples.iter().map(|s| s.kind.clone()).collect();
+    kinds.sort();
+    kinds.dedup();
+    let mut rows = Vec::new();
+    let (mut mt, mut pt) = (0.0, 0.0);
+    for kind in kinds {
+        let of_kind: Vec<&TaskSample> = samples.iter().filter(|s| s.kind == kind).collect();
+        let measured: f64 = of_kind.iter().map(|s| s.measured).sum();
+        let predicted: f64 = of_kind.iter().map(|s| s.predicted).sum();
+        mt += measured;
+        pt += predicted;
+        let logs: Vec<f64> = of_kind
+            .iter()
+            .filter(|s| s.measured > 0.0 && s.predicted > 0.0)
+            .map(|s| (s.measured / s.predicted).ln())
+            .collect();
+        let log_sigma = if logs.len() > 1 {
+            let mean = logs.iter().sum::<f64>() / logs.len() as f64;
+            (logs.iter().map(|l| (l - mean).powi(2)).sum::<f64>() / logs.len() as f64).sqrt()
+        } else {
+            0.0
+        };
+        rows.push(KindRow {
+            kind,
+            n: of_kind.len(),
+            measured_total: measured,
+            predicted_total: predicted,
+            ratio: if predicted > 0.0 { measured / predicted } else { f64::INFINITY },
+            log_sigma,
+        });
+    }
+    CalibrationReport {
+        rows,
+        n_samples: samples.len(),
+        measured_total: mt,
+        predicted_total: pt,
+        overall_ratio: if pt > 0.0 { mt / pt } else { f64::INFINITY },
+    }
+}
+
+impl CalibrationReport {
+    /// Human-readable table for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<24} {:>6} {:>12} {:>12} {:>10} {:>9}\n",
+            "task kind", "n", "measured s", "analytic s", "ratio", "log_sigma"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<24} {:>6} {:>12.6} {:>12.6} {:>10.2} {:>9.3}\n",
+                r.kind, r.n, r.measured_total, r.predicted_total, r.ratio, r.log_sigma
+            ));
+        }
+        out.push_str(&format!(
+            "{:<24} {:>6} {:>12.6} {:>12.6} {:>10.2}\n",
+            "total", self.n_samples, self.measured_total, self.predicted_total, self.overall_ratio
+        ));
+        out
+    }
+
+    /// JSON shape carried in `BENCH_exec.json`.
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("n_samples", Value::Num(self.n_samples as f64)),
+            ("measured_total", Value::Num(self.measured_total)),
+            ("predicted_total", Value::Num(self.predicted_total)),
+            ("overall_ratio", Value::Num(self.overall_ratio)),
+            (
+                "kinds",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Value::obj([
+                                ("kind", Value::Str(r.kind.clone())),
+                                ("n", Value::Num(r.n as f64)),
+                                ("measured_total", Value::Num(r.measured_total)),
+                                ("predicted_total", Value::Num(r.predicted_total)),
+                                ("ratio", Value::Num(r.ratio)),
+                                ("log_sigma", Value::Num(r.log_sigma)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(kind: &str, measured: f64, predicted: f64) -> TaskSample {
+        TaskSample { kind: kind.into(), label: "t".into(), measured, predicted }
+    }
+
+    #[test]
+    fn calibrate_groups_by_kind_and_computes_ratios() {
+        let rep = calibrate(&[
+            s("compute:matmul", 2.0, 1.0),
+            s("compute:matmul", 4.0, 2.0),
+            s("p2p", 1.0, 4.0),
+        ]);
+        assert_eq!(rep.rows.len(), 2);
+        let mm = rep.rows.iter().find(|r| r.kind == "compute:matmul").unwrap();
+        assert_eq!(mm.n, 2);
+        assert!((mm.ratio - 2.0).abs() < 1e-12);
+        // Both matmul samples have the same measured/predicted ratio.
+        assert!(mm.log_sigma < 1e-12);
+        let p2p = rep.rows.iter().find(|r| r.kind == "p2p").unwrap();
+        assert!((p2p.ratio - 0.25).abs() < 1e-12);
+        assert_eq!(rep.n_samples, 3);
+        assert!((rep.overall_ratio - 7.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let rep = calibrate(&[s("p2p", 1.0, 2.0)]);
+        let txt = rep.render();
+        assert!(txt.contains("p2p"));
+        let j = rep.to_json();
+        assert_eq!(j.get("n_samples").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("kinds").and_then(|v| v.as_arr()).map(|a| a.len()), Some(1));
+    }
+}

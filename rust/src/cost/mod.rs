@@ -29,6 +29,14 @@
 //! The analytic lower bound stays sound on any fabric by bounding from the
 //! optimistic side: comm at the fastest link (`nvlink_bw`), compute at the
 //! fastest device kind ([`Cluster::max_effective_flops`]).
+//!
+//! **Calibration** ([`calibrate`]): the CPU reference executor
+//! ([`crate::exec::reference`]) measures real per-task wall durations when
+//! it runs a plan; `cost::calibrate` aggregates measured-vs-analytic pairs
+//! into per-task-kind ratios and within-kind log-deviation, giving every
+//! simulated makespan an empirical error bar (`superscaler verify-exec`).
+
+pub mod calibrate;
 
 use crate::graph::{CollKind, Graph, TensorKind};
 use crate::plans::{PlanKind, PlanSpec};

@@ -1,0 +1,495 @@
+//! Differential plan-execution harness (`superscaler verify-exec`).
+//!
+//! SuperScaler's transformation phase is only useful if it is
+//! semantics-preserving: operator transformation + space-time scheduling +
+//! dependency preservation must compute the same function as the serial
+//! model. This module turns that claim into one executable property. For
+//! every planner family on 2–8 devices it builds the plan, runs it on the
+//! CPU reference executor ([`super::reference`]), and asserts elementwise
+//! equivalence of the observable training step — updated weights, summed
+//! gradients, and losses — against a single-device serial oracle, at
+//! ≤ 1e-4 relative error.
+//!
+//! Every run also feeds its measured per-task wall durations into
+//! [`crate::cost::calibrate`], so the same harness that proves correctness
+//! prices the analytic cost model's error bar.
+
+use std::collections::HashMap;
+
+use super::kernels;
+use super::reference::{self, ExecResult};
+use crate::cost::calibrate::{calibrate, CalibrationReport, TaskSample};
+use crate::cost::Cluster;
+use crate::graph::{Graph, OpKind, TensorKind};
+use crate::materialize::{materialize, CommMode, Plan, TaskKind};
+use crate::models::builder::ModelBuilder;
+use crate::models::Model;
+use crate::plans::{registry, PlanKind, PlanSpec, SchedName, SchedSpec, StageSpec};
+use crate::schedule::{validate, Schedule};
+use crate::trans::autograd;
+use crate::util::json::Value;
+
+/// Elementwise pass criterion: `|a - b| <= max(REL_TOL * |b|, ABS_TOL)`.
+pub const REL_TOL: f64 = 1e-4;
+const ABS_TOL: f64 = 1e-6;
+
+/// Planner families the equivalence matrix covers, in display order.
+pub const FAMILIES: [&str; 8] =
+    ["dp", "tp", "megatron", "gpipe", "zb", "coshard", "hetero", "dp-rvd"];
+
+/// All matrix families as owned strings (CLI default).
+pub fn default_families() -> Vec<String> {
+    FAMILIES.iter().map(|f| f.to_string()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// The probe model
+
+/// The differential probe: a 4-layer GPT-style model small enough to
+/// execute in milliseconds but wide enough to exercise every transformation
+/// axis (4 layers / 8 heads / shardable ff and vocab dims).
+pub fn tiny_model() -> Model {
+    let (batch, seq, hidden, heads, ff, vocab) = (8, 4, 32, 8, 128, 32);
+    let mut mb = ModelBuilder::new();
+    let mut layers: Vec<Vec<crate::graph::OpId>> = Vec::new();
+
+    let ids = mb.input("ids", &[batch, seq]);
+    let (mut x, emb) = mb.embedding("embed", ids, 0, batch, seq, vocab, hidden);
+    layers.push(vec![emb]);
+    for li in 0..4 {
+        let (y, ops) =
+            mb.transformer_layer(&format!("h{li}"), x, li + 1, batch, seq, hidden, heads, ff, None);
+        layers.push(ops);
+        x = y;
+    }
+    let (_, loss) = mb.loss("lmloss", x, 5, &[batch, seq, hidden]);
+    layers.push(vec![loss]);
+
+    Model {
+        graph: mb.g,
+        name: "tiny-gpt".to_string(),
+        layers,
+        emb_ops: Vec::new(),
+        tp_dim: mb.tp_dim,
+        coshard_dim: mb.coshard_dim,
+        global_batch: batch,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Family → spec matrix
+
+/// Resolve one (family, device-count) cell of the equivalence matrix to a
+/// registered planner name, a spec occupying exactly `n` devices, and the
+/// comm mode to materialize under. `None` when the family has no
+/// configuration at that device count (the matrix covers n ∈ {2, 4, 8}).
+pub fn family_case(family: &str, n: usize) -> Option<(&'static str, PlanSpec, CommMode)> {
+    let grid = |dp: usize, pp: usize, tp: usize, micro: usize, kind: PlanKind| PlanSpec {
+        dp,
+        pp,
+        tp,
+        micro,
+        ..PlanSpec::new(kind)
+    };
+    let case = match (family, n) {
+        ("dp", _) => ("dp", PlanSpec { dp: n, ..PlanSpec::new(PlanKind::Dp) }, CommMode::P2POnly),
+        // Same plan, but gradients synchronized through materialized
+        // all-reduce collectives instead of the generic P2P tier.
+        ("dp-rvd", _) => {
+            ("dp", PlanSpec { dp: n, ..PlanSpec::new(PlanKind::Dp) }, CommMode::IntraRvd)
+        }
+        ("tp", _) => ("tp", PlanSpec { tp: n, ..PlanSpec::new(PlanKind::Tp) }, CommMode::P2POnly),
+        ("megatron", 2) => ("megatron", grid(1, 2, 1, 2, PlanKind::Megatron), CommMode::P2POnly),
+        ("megatron", 4) => ("megatron", grid(1, 2, 2, 2, PlanKind::Megatron), CommMode::P2POnly),
+        ("megatron", 8) => ("megatron", grid(2, 2, 2, 2, PlanKind::Megatron), CommMode::P2POnly),
+        ("gpipe", 2) => ("gpipe", grid(1, 2, 1, 2, PlanKind::GPipe), CommMode::P2POnly),
+        ("gpipe", 4) => ("gpipe", grid(1, 4, 1, 2, PlanKind::GPipe), CommMode::P2POnly),
+        ("gpipe", 8) => ("gpipe", grid(1, 4, 2, 2, PlanKind::GPipe), CommMode::P2POnly),
+        ("zb", _) => {
+            let mut spec = match n {
+                2 => grid(1, 2, 1, 2, PlanKind::Megatron),
+                4 => grid(1, 4, 1, 4, PlanKind::Megatron),
+                8 => grid(1, 4, 2, 4, PlanKind::Megatron),
+                _ => return None,
+            };
+            spec.sched = Some(SchedSpec::Named(SchedName::ZeroBubble));
+            ("megatron", spec, CommMode::P2POnly)
+        }
+        ("coshard", _) => (
+            "coshard",
+            PlanSpec { dp: n, shards: 2, ..PlanSpec::new(PlanKind::Coshard) },
+            CommMode::P2POnly,
+        ),
+        ("hetero", 2) => {
+            ("hetero", PlanSpec::hetero(vec![StageSpec::tp(1); 2], 2), CommMode::P2POnly)
+        }
+        ("hetero", 4) => {
+            ("hetero", PlanSpec::hetero(vec![StageSpec::tp(2); 2], 2), CommMode::P2POnly)
+        }
+        ("hetero", 8) => {
+            ("hetero", PlanSpec::hetero(vec![StageSpec::tp(2); 4], 2), CommMode::P2POnly)
+        }
+        _ => return None,
+    };
+    if !matches!(n, 2 | 4 | 8) {
+        return None;
+    }
+    debug_assert_eq!(case.1.devices(), n, "matrix cell must occupy exactly n devices");
+    Some(case)
+}
+
+// ---------------------------------------------------------------------------
+// Serial oracle
+
+/// The single-device serial ground truth: every observable value of one
+/// training step (all pTensors of the autograd-completed serial graph),
+/// keyed by pTensor *name* so transformed plans can look values up across
+/// graph clones and replica renames.
+pub struct Oracle {
+    pub values: HashMap<String, Vec<f32>>,
+    pub samples: Vec<TaskSample>,
+}
+
+/// Run the serial model on one device and snapshot every pTensor.
+pub fn run_oracle(model: &Model) -> Result<Oracle, String> {
+    let mut g = model.graph.clone();
+    autograd::complete(&mut g);
+    let mut sched = Schedule::new();
+    sched.assign_all(&g.live_op_ids(), 0);
+    let vs = validate(&g, &sched).map_err(|e| format!("oracle schedule: {e:?}"))?;
+    let cluster = Cluster::v100(1);
+    let plan = materialize(&g, &vs, &cluster, CommMode::P2POnly);
+    let res = reference::execute(&g, &vs, &plan).map_err(|e| format!("oracle exec: {e}"))?;
+    let store = res.stores.get(&0).ok_or_else(|| "oracle produced no device-0 store".to_string())?;
+    let values = store
+        .iter()
+        .map(|(&pt, buf)| (g.ptensor(pt).name.clone(), buf.clone()))
+        .collect();
+    Ok(Oracle { values, samples: res.samples })
+}
+
+// ---------------------------------------------------------------------------
+// Case execution + comparison
+
+/// Build one matrix cell's plan and execute it on the reference executor.
+fn build_and_exec(
+    model: &Model,
+    planner: &str,
+    spec: &PlanSpec,
+    n: usize,
+    mode: CommMode,
+) -> Result<(Graph, Plan, ExecResult), String> {
+    let out = registry::build(planner, model, spec).map_err(|e| format!("build: {e}"))?;
+    let vs = validate(&out.graph, &out.schedule).map_err(|e| format!("validate: {e:?}"))?;
+    let cluster = Cluster::v100(n);
+    let plan = materialize(&out.graph, &vs, &cluster, mode);
+    let res = reference::execute(&out.graph, &vs, &plan).map_err(|e| format!("exec: {e}"))?;
+    Ok((out.graph, plan, res))
+}
+
+/// Strip replica suffixes (`@r<digits>`, possibly stacked) from a
+/// transformed pTensor name to recover the serial oracle's name.
+fn replica_base(name: &str) -> &str {
+    let mut base = name;
+    loop {
+        let Some(at) = base.rfind("@r") else { return base };
+        if base[at + 2..].chars().all(|c| c.is_ascii_digit()) && at + 2 < base.len() {
+            base = &base[..at];
+        } else {
+            return base;
+        }
+    }
+}
+
+/// Outcome of comparing one region of one executed tensor to the oracle.
+struct RegionDiff {
+    n: usize,
+    max_rel: f64,
+    ok: bool,
+}
+
+/// Compare the `region` of `pt` in device `dev`'s store against the
+/// oracle's serial value of the same tensor.
+fn compare_region(
+    g: &Graph,
+    res: &ExecResult,
+    oracle: &Oracle,
+    dev: usize,
+    pt: crate::graph::PTensorId,
+    region: &[(usize, usize)],
+) -> Result<RegionDiff, String> {
+    let p = g.ptensor(pt);
+    let store = res
+        .stores
+        .get(&dev)
+        .ok_or_else(|| format!("no store for device {dev}"))?;
+    let buf = store.get(&pt).ok_or_else(|| format!("device {dev} never held '{}'", p.name))?;
+    let base = replica_base(&p.name);
+    let want = oracle
+        .values
+        .get(base)
+        .ok_or_else(|| format!("oracle has no tensor named '{base}'"))?;
+    let got = kernels::gather(buf, &p.shape, region);
+    let exp = kernels::gather(want, &p.shape, region);
+    let mut max_rel = 0.0f64;
+    let mut ok = true;
+    for (a, b) in got.iter().zip(exp.iter()) {
+        let diff = (*a as f64 - *b as f64).abs();
+        let scale = (*b as f64).abs();
+        if diff > (REL_TOL * scale).max(ABS_TOL) {
+            ok = false;
+        }
+        max_rel = max_rel.max(diff / scale.max(ABS_TOL));
+    }
+    Ok(RegionDiff { n: got.len(), max_rel, ok })
+}
+
+/// One cell of the equivalence matrix.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub family: String,
+    pub label: String,
+    pub devices: usize,
+    pub comm: &'static str,
+    pub passed: bool,
+    /// Worst relative error over every compared element.
+    pub max_rel: f64,
+    /// Elements compared (0 would make the property vacuous → fail).
+    pub compared: usize,
+    pub error: Option<String>,
+}
+
+impl CaseResult {
+    fn failed(family: &str, label: String, devices: usize, comm: &'static str, err: String) -> Self {
+        CaseResult {
+            family: family.to_string(),
+            label,
+            devices,
+            comm,
+            passed: false,
+            max_rel: f64::INFINITY,
+            compared: 0,
+            error: Some(err),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("family", Value::Str(self.family.clone())),
+            ("label", Value::Str(self.label.clone())),
+            ("devices", Value::Num(self.devices as f64)),
+            ("comm", Value::Str(self.comm.to_string())),
+            ("passed", Value::Bool(self.passed)),
+            ("max_rel", Value::Num(self.max_rel)),
+            ("compared", Value::Num(self.compared as f64)),
+            (
+                "error",
+                self.error.as_ref().map(|e| Value::Str(e.clone())).unwrap_or(Value::Null),
+            ),
+        ])
+    }
+}
+
+/// Compare every observable of one executed plan against the oracle: the
+/// updated weight and summed gradient at each optimizer step, and the loss
+/// at each forward cross-entropy. These close over the whole step — a wrong
+/// activation, collective, or schedule shows up in one of them.
+fn compare_case(
+    g: &Graph,
+    plan: &Plan,
+    res: &ExecResult,
+    oracle: &Oracle,
+) -> Result<(bool, f64, usize), String> {
+    let mut compared = 0usize;
+    let mut max_rel = 0.0f64;
+    let mut passed = true;
+    for task in &plan.tasks {
+        let TaskKind::Compute { op, device } = task.kind else { continue };
+        let o = g.op(op);
+        // (vtensor, is it an observable of this op?) pairs to check.
+        let mut views: Vec<crate::graph::VTensorId> = Vec::new();
+        match o.kind {
+            OpKind::Optimizer => {
+                // outputs[0] = updated weight; inputs[0] = the fully
+                // synchronized gradient this device applied.
+                if let Some(&w) = o.outputs.first() {
+                    views.push(w);
+                }
+                if let Some(&dw) = o.inputs.first() {
+                    views.push(dw);
+                }
+            }
+            OpKind::CrossEntropy if o.is_forward => {
+                if let Some(&l) = o.outputs.first() {
+                    views.push(l);
+                }
+            }
+            _ => continue,
+        }
+        for v in views {
+            let vt = g.vtensor(v);
+            let p = g.ptensor(vt.ptensor);
+            let region = vt.mask.concrete(&p.shape);
+            let d = compare_region(g, res, oracle, device, vt.ptensor, &region)?;
+            compared += d.n;
+            max_rel = max_rel.max(d.max_rel);
+            if !d.ok {
+                passed = false;
+            }
+        }
+    }
+    if compared == 0 {
+        return Err("plan exposed no optimizer/loss observables to compare".to_string());
+    }
+    Ok((passed, max_rel, compared))
+}
+
+// ---------------------------------------------------------------------------
+// The matrix driver
+
+/// Full `verify-exec` outcome: the equivalence pass matrix plus the
+/// measured-vs-analytic calibration report over every executed task.
+pub struct DiffOutcome {
+    pub cases: Vec<CaseResult>,
+    pub calibration: CalibrationReport,
+    pub all_passed: bool,
+}
+
+impl DiffOutcome {
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("model", Value::Str("tiny-gpt".to_string())),
+            ("rel_tol", Value::Num(REL_TOL)),
+            ("all_passed", Value::Bool(self.all_passed)),
+            ("cases", Value::Arr(self.cases.iter().map(|c| c.to_json()).collect())),
+            ("calibration", self.calibration.to_json()),
+        ])
+    }
+}
+
+/// Run the differential matrix: every requested family × device count,
+/// each executed on the reference executor and compared elementwise to the
+/// serial oracle. Infallible per cell — a cell that cannot build or
+/// execute is reported as a failed [`CaseResult`], not an early return.
+pub fn run_matrix(devices: &[usize], families: &[String]) -> Result<DiffOutcome, String> {
+    let model = tiny_model();
+    let oracle = run_oracle(&model)?;
+    let mut samples: Vec<TaskSample> = oracle.samples.clone();
+    let mut cases = Vec::new();
+    for &n in devices {
+        for family in families {
+            let Some((planner, spec, mode)) = family_case(family, n) else {
+                cases.push(CaseResult::failed(
+                    family,
+                    format!("{family}@{n}"),
+                    n,
+                    "-",
+                    format!("no matrix cell for family '{family}' at {n} devices"),
+                ));
+                continue;
+            };
+            let comm = match mode {
+                CommMode::P2POnly => "p2p",
+                CommMode::IntraRvd => "intra-rvd",
+                CommMode::InterRvd => "inter-rvd",
+            };
+            let label = spec.label();
+            match build_and_exec(&model, planner, &spec, n, mode) {
+                Err(e) => cases.push(CaseResult::failed(family, label, n, comm, e)),
+                Ok((g, plan, res)) => {
+                    samples.extend(res.samples.iter().cloned());
+                    match compare_case(&g, &plan, &res, &oracle) {
+                        Err(e) => cases.push(CaseResult::failed(family, label, n, comm, e)),
+                        Ok((passed, max_rel, compared)) => cases.push(CaseResult {
+                            family: family.clone(),
+                            label,
+                            devices: n,
+                            comm,
+                            passed,
+                            max_rel,
+                            compared,
+                            error: None,
+                        }),
+                    }
+                }
+            }
+        }
+    }
+    let all_passed = !cases.is_empty() && cases.iter().all(|c| c.passed);
+    Ok(DiffOutcome { cases, calibration: calibrate(&samples), all_passed })
+}
+
+/// Render the pass matrix as a fixed-width table for the CLI.
+pub fn render_matrix(out: &DiffOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<10} {:>4} {:<28} {:<10} {:>10} {:>9} {:<6}\n",
+        "family", "dev", "spec", "comm", "compared", "max_rel", "status"
+    ));
+    for c in &out.cases {
+        let status = if c.passed { "pass" } else { "FAIL" };
+        s.push_str(&format!(
+            "{:<10} {:>4} {:<28} {:<10} {:>10} {:>9.2e} {:<6}\n",
+            c.family, c.devices, c.label, c.comm, c.compared, c.max_rel, status
+        ));
+        if let Some(e) = &c.error {
+            s.push_str(&format!("           ! {e}\n"));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_family_has_a_cell_at_each_matrix_width() {
+        for family in FAMILIES {
+            for n in [2usize, 4, 8] {
+                let (planner, spec, _) = family_case(family, n)
+                    .unwrap_or_else(|| panic!("no cell for {family}@{n}"));
+                assert_eq!(spec.devices(), n, "{family}@{n} must occupy {n} devices");
+                assert!(
+                    registry::find(planner).is_some(),
+                    "{family}@{n} resolves unregistered planner '{planner}'"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_family_and_odd_widths_have_no_cell() {
+        assert!(family_case("nope", 4).is_none());
+        assert!(family_case("dp", 3).is_none());
+        assert!(family_case("megatron", 16).is_none());
+    }
+
+    #[test]
+    fn replica_base_strips_suffixes() {
+        assert_eq!(replica_base("h0.fc1.w@r1"), "h0.fc1.w");
+        assert_eq!(replica_base("h0.fc1.w@r1@r2"), "h0.fc1.w");
+        assert_eq!(replica_base("h0.fc1.w"), "h0.fc1.w");
+        assert_eq!(replica_base("w@r"), "w@r");
+    }
+
+    #[test]
+    fn tiny_model_is_well_formed() {
+        let m = tiny_model();
+        assert_eq!(m.layers.len(), 6);
+        assert!(m.graph.live_op_ids().len() > 10);
+        assert!(m.graph.ptensors.iter().any(|p| p.name == "lmloss.loss"));
+    }
+
+    #[test]
+    fn oracle_runs_serially_and_snapshots_by_name() {
+        let m = tiny_model();
+        let o = run_oracle(&m).expect("oracle");
+        assert!(o.values.contains_key("lmloss.loss"));
+        assert!(o.values.contains_key("embed.table"));
+        let loss = &o.values["lmloss.loss"];
+        assert!(loss.iter().all(|v| v.is_finite()));
+        assert!(loss.iter().any(|v| *v != 0.0), "loss must be non-trivial");
+        assert!(!o.samples.is_empty());
+    }
+}

@@ -1,0 +1,612 @@
+//! Native f32 CPU kernels for the reference executor (the Rust mirror of
+//! `python/compile/kernels/{matmul,layernorm,attention}.py`).
+//!
+//! Every kernel operates on flat row-major buffers that the executor has
+//! already gathered from a pTensor store region, with the relevant dims
+//! passed explicitly. Accumulations run in f64 so that the *order* in which
+//! a plan materializes partial sums (micro-batches, tensor-parallel shards,
+//! all-reduce groups) perturbs the result far below the differential
+//! harness's 1e-4 relative tolerance.
+//!
+//! Shape inference for matmul is deliberately generic: the builder's three
+//! matmul signatures (`b s h, h n -> b s n`, `b s h, h a n -> b s a n` and
+//! `b s a d, a d h -> b s h`) all keep the contraction dims *trailing* in
+//! the data input and *leading* in the weight, so under row-major
+//! flattening each is an `[m,k] @ [k,n] -> [m,n]` product with
+//! `k = sqrt(|x|·|w| / |y|)`.
+
+// ---------------------------------------------------------------------------
+// Region gather/scatter
+// ---------------------------------------------------------------------------
+
+/// Number of elements in a concrete region (list of per-dim `[lo, hi)`).
+pub fn region_len(region: &[(usize, usize)]) -> usize {
+    region.iter().map(|&(lo, hi)| hi - lo).product()
+}
+
+/// Iterate the flat offsets of each contiguous row (innermost-dim run) of
+/// `region` inside a row-major tensor of `shape`, calling `f(base)` with the
+/// offset of the row's first element.
+fn for_each_row(shape: &[usize], region: &[(usize, usize)], mut f: impl FnMut(usize)) {
+    debug_assert_eq!(shape.len(), region.len());
+    if region.iter().any(|&(lo, hi)| lo >= hi) {
+        return;
+    }
+    let last = region.len() - 1;
+    let mut idx: Vec<usize> = region.iter().map(|r| r.0).collect();
+    loop {
+        let mut base = 0usize;
+        for d in 0..last {
+            base = base * shape[d] + idx[d];
+        }
+        base = base * shape[last] + region[last].0;
+        f(base);
+        // Advance the outer-dim odometer (the innermost dim is the row).
+        let mut d = last;
+        loop {
+            if d == 0 {
+                return;
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < region[d].1 {
+                break;
+            }
+            idx[d] = region[d].0;
+        }
+    }
+}
+
+/// Copy a region of `src` (shape `shape`) into a fresh contiguous buffer.
+pub fn gather(src: &[f32], shape: &[usize], region: &[(usize, usize)]) -> Vec<f32> {
+    let row = region.last().map(|&(lo, hi)| hi - lo).unwrap_or(0);
+    let mut out = Vec::with_capacity(region_len(region));
+    for_each_row(shape, region, |base| out.extend_from_slice(&src[base..base + row]));
+    out
+}
+
+/// Write `buf` (contiguous, `region_len` elements, scaled by `scale`) into
+/// the region of `dst`: `+=` when `accumulate` (value partials) else `=`.
+pub fn scatter(
+    dst: &mut [f32],
+    shape: &[usize],
+    region: &[(usize, usize)],
+    buf: &[f32],
+    accumulate: bool,
+    scale: f32,
+) {
+    let row = region.last().map(|&(lo, hi)| hi - lo).unwrap_or(0);
+    let mut at = 0usize;
+    for_each_row(shape, region, |base| {
+        let src = &buf[at..at + row];
+        let tgt = &mut dst[base..base + row];
+        if accumulate {
+            for (t, &s) in tgt.iter_mut().zip(src) {
+                *t += scale * s;
+            }
+        } else {
+            for (t, &s) in tgt.iter_mut().zip(src) {
+                *t = scale * s;
+            }
+        }
+        at += row;
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Matmul
+// ---------------------------------------------------------------------------
+
+/// Infer `(m, k, n)` for a flattened `[m,k] @ [k,n] -> [m,n]` product from
+/// the three buffer lengths (see module docs for why this is exact for all
+/// builder matmul signatures). `None` if the lengths are inconsistent.
+pub fn matmul_dims(x_len: usize, w_len: usize, y_len: usize) -> Option<(usize, usize, usize)> {
+    if x_len == 0 || w_len == 0 || y_len == 0 {
+        return None;
+    }
+    let prod = (x_len as u128) * (w_len as u128);
+    if prod % y_len as u128 != 0 {
+        return None;
+    }
+    let k2 = prod / y_len as u128;
+    let k = (k2 as f64).sqrt().round() as u128;
+    if k == 0 || k * k != k2 {
+        return None;
+    }
+    let k = k as usize;
+    if x_len % k != 0 || w_len % k != 0 {
+        return None;
+    }
+    let (m, n) = (x_len / k, w_len / k);
+    if m * n != y_len {
+        return None;
+    }
+    Some((m, k, n))
+}
+
+/// `y[m,n] = x[m,k] @ w[k,n]`.
+pub fn matmul_fwd(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for p in 0..k {
+                acc += x[i * k + p] as f64 * w[p * n + j] as f64;
+            }
+            y[i * n + j] = acc as f32;
+        }
+    }
+    y
+}
+
+/// `dx[m,k] = dy[m,n] @ w^T`.
+pub fn matmul_dx(dy: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut dx = vec![0f32; m * k];
+    for i in 0..m {
+        for p in 0..k {
+            let mut acc = 0f64;
+            for j in 0..n {
+                acc += dy[i * n + j] as f64 * w[p * n + j] as f64;
+            }
+            dx[i * k + p] = acc as f32;
+        }
+    }
+    dx
+}
+
+/// `dw[k,n] = x^T @ dy`.
+pub fn matmul_dw(dy: &[f32], x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut dw = vec![0f32; k * n];
+    for p in 0..k {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for i in 0..m {
+                acc += x[i * k + p] as f64 * dy[i * n + j] as f64;
+            }
+            dw[p * n + j] = acc as f32;
+        }
+    }
+    dw
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm (no affine params, matching the builder's layernorm op)
+// ---------------------------------------------------------------------------
+
+const LN_EPS: f64 = 1e-5;
+
+/// Normalize each row of `h` elements to zero mean / unit variance.
+pub fn layernorm_fwd(x: &[f32], h: usize) -> Vec<f32> {
+    let rows = x.len() / h;
+    let mut y = vec![0f32; x.len()];
+    for r in 0..rows {
+        let row = &x[r * h..(r + 1) * h];
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / h as f64;
+        let var = row.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / h as f64;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for c in 0..h {
+            y[r * h + c] = ((row[c] as f64 - mean) * inv) as f32;
+        }
+    }
+    y
+}
+
+/// No-affine layernorm backward:
+/// `dx = inv * (dy - mean(dy) - xhat * mean(dy * xhat))`.
+pub fn layernorm_dx(dy: &[f32], x: &[f32], h: usize) -> Vec<f32> {
+    let rows = x.len() / h;
+    let mut dx = vec![0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * h..(r + 1) * h];
+        let dyr = &dy[r * h..(r + 1) * h];
+        let mean = xr.iter().map(|&v| v as f64).sum::<f64>() / h as f64;
+        let var = xr.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / h as f64;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let xhat: Vec<f64> = xr.iter().map(|&v| (v as f64 - mean) * inv).collect();
+        let mdy = dyr.iter().map(|&v| v as f64).sum::<f64>() / h as f64;
+        let mdyx =
+            dyr.iter().zip(&xhat).map(|(&d, &xh)| d as f64 * xh).sum::<f64>() / h as f64;
+        for c in 0..h {
+            dx[r * h + c] = (inv * (dyr[c] as f64 - mdy - xhat[c] * mdyx)) as f32;
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise
+// ---------------------------------------------------------------------------
+
+const GELU_C: f64 = 0.7978845608028654; // sqrt(2/pi)
+const GELU_A: f64 = 0.044715;
+
+/// Tanh-approximated GELU.
+pub fn gelu_fwd(x: &[f32]) -> Vec<f32> {
+    x.iter()
+        .map(|&v| {
+            let v = v as f64;
+            (0.5 * v * (1.0 + (GELU_C * (v + GELU_A * v.powi(3))).tanh())) as f32
+        })
+        .collect()
+}
+
+/// `dx = dy * gelu'(x)` for the tanh approximation.
+pub fn gelu_dx(dy: &[f32], x: &[f32]) -> Vec<f32> {
+    dy.iter()
+        .zip(x)
+        .map(|(&d, &v)| {
+            let v = v as f64;
+            let u = GELU_C * (v + GELU_A * v.powi(3));
+            let t = u.tanh();
+            let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+            (d as f64 * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)) as f32
+        })
+        .collect()
+}
+
+/// Elementwise sum of equally-sized buffers (residual add).
+pub fn add_n(xs: &[&[f32]]) -> Vec<f32> {
+    let n = xs[0].len();
+    let mut y = vec![0f32; n];
+    for x in xs {
+        for (t, &s) in y.iter_mut().zip(x.iter()) {
+            *t += s;
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------------
+// Attention (fused composite, causal)
+// ---------------------------------------------------------------------------
+
+/// Causal multi-head attention over a packed `qkv[b,s,a,3d]` region,
+/// producing `out[b,s,a,d]`. `a` is the number of heads *in the region*
+/// (tensor parallelism slices heads before the kernel sees them).
+pub fn attention_fwd(qkv: &[f32], b: usize, s: usize, a: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; b * s * a * d];
+    let scale = 1.0 / (d as f64).sqrt();
+    let at = |bi: usize, si: usize, ai: usize, c: usize| ((bi * s + si) * a + ai) * 3 * d + c;
+    for bi in 0..b {
+        for ai in 0..a {
+            for qi in 0..s {
+                // scores over key positions <= qi (causal), max-subtracted softmax.
+                let mut scores = vec![0f64; qi + 1];
+                let mut maxs = f64::NEG_INFINITY;
+                for ki in 0..=qi {
+                    let mut acc = 0f64;
+                    for c in 0..d {
+                        acc += qkv[at(bi, qi, ai, c)] as f64 * qkv[at(bi, ki, ai, d + c)] as f64;
+                    }
+                    let v = acc * scale;
+                    scores[ki] = v;
+                    maxs = maxs.max(v);
+                }
+                let mut denom = 0f64;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    denom += *sc;
+                }
+                for c in 0..d {
+                    let mut acc = 0f64;
+                    for ki in 0..=qi {
+                        acc += scores[ki] / denom * qkv[at(bi, ki, ai, 2 * d + c)] as f64;
+                    }
+                    out[((bi * s + qi) * a + ai) * d + c] = acc as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Backward of [`attention_fwd`]: `dqkv[b,s,a,3d]` from `dy[b,s,a,d]`.
+pub fn attention_dqkv(dy: &[f32], qkv: &[f32], b: usize, s: usize, a: usize, d: usize) -> Vec<f32> {
+    let mut dqkv = vec![0f64; b * s * a * 3 * d];
+    let scale = 1.0 / (d as f64).sqrt();
+    let at = |bi: usize, si: usize, ai: usize, c: usize| ((bi * s + si) * a + ai) * 3 * d + c;
+    for bi in 0..b {
+        for ai in 0..a {
+            for qi in 0..s {
+                // Recompute the softmax row.
+                let mut p = vec![0f64; qi + 1];
+                let mut maxs = f64::NEG_INFINITY;
+                for ki in 0..=qi {
+                    let mut acc = 0f64;
+                    for c in 0..d {
+                        acc += qkv[at(bi, qi, ai, c)] as f64 * qkv[at(bi, ki, ai, d + c)] as f64;
+                    }
+                    p[ki] = acc * scale;
+                    maxs = maxs.max(p[ki]);
+                }
+                let mut denom = 0f64;
+                for v in p.iter_mut() {
+                    *v = (*v - maxs).exp();
+                    denom += *v;
+                }
+                for v in p.iter_mut() {
+                    *v /= denom;
+                }
+                let dyr: Vec<f64> = (0..d)
+                    .map(|c| dy[((bi * s + qi) * a + ai) * d + c] as f64)
+                    .collect();
+                // dv[ki] += p[ki] * dy ; dp[ki] = dy . v[ki]
+                let mut dp = vec![0f64; qi + 1];
+                for ki in 0..=qi {
+                    let mut acc = 0f64;
+                    for c in 0..d {
+                        dqkv[at(bi, ki, ai, 2 * d + c)] += p[ki] * dyr[c];
+                        acc += dyr[c] * qkv[at(bi, ki, ai, 2 * d + c)] as f64;
+                    }
+                    dp[ki] = acc;
+                }
+                // Softmax backward: ds = p * (dp - sum(p*dp)), then 1/sqrt(d).
+                let dot: f64 = p.iter().zip(&dp).map(|(&a, &b)| a * b).sum();
+                for ki in 0..=qi {
+                    let ds = p[ki] * (dp[ki] - dot) * scale;
+                    for c in 0..d {
+                        dqkv[at(bi, qi, ai, c)] += ds * qkv[at(bi, ki, ai, d + c)] as f64;
+                        dqkv[at(bi, ki, ai, d + c)] += ds * qkv[at(bi, qi, ai, c)] as f64;
+                    }
+                }
+            }
+        }
+    }
+    dqkv.into_iter().map(|v| v as f32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Embedding
+// ---------------------------------------------------------------------------
+
+/// Vocab-sharded embedding lookup: `ids` hold (float-encoded) row indices,
+/// reduced mod `vocab`; the kernel owns table rows `[v0, v1)` (the region's
+/// slice of the `[vocab, h]` table) and contributes zero rows for ids
+/// outside its shard — the value-partials then sum across shards.
+pub fn embed_fwd(ids: &[f32], table: &[f32], vocab: usize, v0: usize, v1: usize, h: usize) -> Vec<f32> {
+    let mut y = vec![0f32; ids.len() * h];
+    for (i, &idf) in ids.iter().enumerate() {
+        let id = (idf.max(0.0) as usize) % vocab;
+        if id >= v0 && id < v1 {
+            let row = (id - v0) * h;
+            y[i * h..(i + 1) * h].copy_from_slice(&table[row..row + h]);
+        }
+    }
+    y
+}
+
+/// Gradient of the table shard: `dtable[id - v0, :] += dy[i, :]`.
+pub fn embed_dtable(
+    dy: &[f32],
+    ids: &[f32],
+    vocab: usize,
+    v0: usize,
+    v1: usize,
+    h: usize,
+) -> Vec<f32> {
+    let mut dt = vec![0f32; (v1 - v0) * h];
+    for (i, &idf) in ids.iter().enumerate() {
+        let id = (idf.max(0.0) as usize) % vocab;
+        if id >= v0 && id < v1 {
+            let row = (id - v0) * h;
+            for c in 0..h {
+                dt[row + c] += dy[i * h + c];
+            }
+        }
+    }
+    dt
+}
+
+// ---------------------------------------------------------------------------
+// Cross-entropy head (single-input builder form: `b s h -> b`)
+// ---------------------------------------------------------------------------
+
+/// Per-sequence-position cross-entropy summed per batch row. The synthetic
+/// target of position `si` is class `si % h` (deterministic, so the serial
+/// oracle and every parallel plan agree without a label tensor).
+pub fn cross_entropy_fwd(x: &[f32], b: usize, s: usize, h: usize) -> Vec<f32> {
+    let mut loss = vec![0f32; b];
+    for bi in 0..b {
+        let mut acc = 0f64;
+        for si in 0..s {
+            let row = &x[(bi * s + si) * h..(bi * s + si + 1) * h];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let lse =
+                maxv + row.iter().map(|&v| ((v as f64) - maxv).exp()).sum::<f64>().ln();
+            acc += lse - row[si % h] as f64;
+        }
+        loss[bi] = acc as f32;
+    }
+    loss
+}
+
+/// `dx[bi,si,:] = dloss[bi] * (softmax(x[bi,si,:]) - onehot(si % h))`.
+pub fn cross_entropy_dx(dloss: &[f32], x: &[f32], b: usize, s: usize, h: usize) -> Vec<f32> {
+    let mut dx = vec![0f32; b * s * h];
+    for bi in 0..b {
+        for si in 0..s {
+            let row = &x[(bi * s + si) * h..(bi * s + si + 1) * h];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let exps: Vec<f64> = row.iter().map(|&v| ((v as f64) - maxv).exp()).collect();
+            let denom: f64 = exps.iter().sum();
+            let t = si % h;
+            for c in 0..h {
+                let soft = exps[c] / denom;
+                let onehot = if c == t { 1.0 } else { 0.0 };
+                dx[(bi * s + si) * h + c] = (dloss[bi] as f64 * (soft - onehot)) as f32;
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[f32], b: &[f32], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let rel = (x as f64 - y as f64).abs() / (y as f64).abs().max(1.0);
+            assert!(rel < tol, "elem {i}: {x} vs {y}");
+        }
+    }
+
+    /// Central-difference gradient of `f` w.r.t. `x`, contracted with `dy`.
+    fn fdiff(f: &dyn Fn(&[f32]) -> Vec<f32>, x: &[f32], dy: &[f32], eps: f32) -> Vec<f32> {
+        (0..x.len())
+            .map(|i| {
+                let mut xp = x.to_vec();
+                let mut xm = x.to_vec();
+                xp[i] += eps;
+                xm[i] -= eps;
+                let (yp, ym) = (f(&xp), f(&xm));
+                yp.iter()
+                    .zip(&ym)
+                    .zip(dy)
+                    .map(|((&p, &m), &d)| ((p - m) / (2.0 * eps)) as f64 * d as f64)
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+
+    fn seq(n: usize, scale: f32, shift: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37 % 19) as f32 - 9.0) * scale + shift).collect()
+    }
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let shape = [3, 4, 5];
+        let src: Vec<f32> = (0..60).map(|i| i as f32).collect();
+        let region = [(1, 3), (0, 4), (2, 5)];
+        let buf = gather(&src, &shape, &region);
+        assert_eq!(buf.len(), region_len(&region));
+        assert_eq!(buf[0], src[1 * 20 + 0 * 5 + 2]);
+        let mut dst = vec![0f32; 60];
+        scatter(&mut dst, &shape, &region, &buf, false, 1.0);
+        let back = gather(&dst, &shape, &region);
+        assert_eq!(back, buf);
+        // Accumulate with a scale adds on top.
+        scatter(&mut dst, &shape, &region, &buf, true, 0.5);
+        let acc = gather(&dst, &shape, &region);
+        for (a, b) in acc.iter().zip(&buf) {
+            assert!((a - 1.5 * b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_dims_inference_covers_builder_signatures() {
+        // linear: [2,3,8] @ [8,16] -> [2,3,16]
+        assert_eq!(matmul_dims(48, 128, 96), Some((6, 8, 16)));
+        // qkv: [2,3,8] @ [8,4,6] -> [2,3,4,6]
+        assert_eq!(matmul_dims(48, 192, 144), Some((6, 8, 24)));
+        // proj: [2,3,4,2] @ [4,2,8] -> [2,3,8]
+        assert_eq!(matmul_dims(48, 64, 48), Some((6, 8, 8)));
+        assert_eq!(matmul_dims(48, 128, 95), None);
+    }
+
+    #[test]
+    fn matmul_fwd_and_grads() {
+        let (m, k, n) = (3, 4, 2);
+        let x = seq(m * k, 0.1, 0.0);
+        let w = seq(k * n, 0.05, 0.01);
+        let y = matmul_fwd(&x, &w, m, k, n);
+        // Hand-check one element.
+        let mut y00 = 0.0;
+        for p in 0..k {
+            y00 += x[p] * w[p * n];
+        }
+        assert!((y[0] - y00).abs() < 1e-6);
+        let dy = seq(m * n, 0.2, 0.3);
+        let dx = matmul_dx(&dy, &w, m, k, n);
+        let dw = matmul_dw(&dy, &x, m, k, n);
+        let fx = |xv: &[f32]| matmul_fwd(xv, &w, m, k, n);
+        let fw = |wv: &[f32]| matmul_fwd(&x, wv, m, k, n);
+        close(&dx, &fdiff(&fx, &x, &dy, 1e-2), 1e-3);
+        close(&dw, &fdiff(&fw, &w, &dy, 1e-2), 1e-3);
+    }
+
+    #[test]
+    fn layernorm_normalizes_and_backward_matches_fdiff() {
+        let h = 8;
+        let x = seq(2 * h, 0.3, 0.5);
+        let y = layernorm_fwd(&x, h);
+        for r in 0..2 {
+            let row = &y[r * h..(r + 1) * h];
+            let mean: f32 = row.iter().sum::<f32>() / h as f32;
+            let var: f32 = row.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / h as f32;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+        let dy = seq(2 * h, 0.1, -0.2);
+        let dx = layernorm_dx(&dy, &x, h);
+        close(&dx, &fdiff(&|v| layernorm_fwd(v, h), &x, &dy, 1e-2), 2e-2);
+    }
+
+    #[test]
+    fn gelu_values_and_gradient() {
+        let x = vec![-2.0, -0.5, 0.0, 0.5, 2.0];
+        let y = gelu_fwd(&x);
+        assert!(y[2].abs() < 1e-7);
+        assert!((y[4] - 1.954).abs() < 1e-2); // gelu(2) ~ 1.9546
+        let dy = vec![1.0; 5];
+        let dx = gelu_dx(&dy, &x);
+        close(&dx, &fdiff(&|v| gelu_fwd(v), &x, &dy, 1e-3), 1e-2);
+    }
+
+    #[test]
+    fn attention_is_causal_and_backward_matches_fdiff() {
+        let (b, s, a, d) = (1, 4, 2, 3);
+        let qkv = seq(b * s * a * 3 * d, 0.15, 0.0);
+        let out = attention_fwd(&qkv, b, s, a, d);
+        // Causality: perturbing position 3's inputs must not move position 0.
+        let mut qkv2 = qkv.clone();
+        for ai in 0..a {
+            for c in 0..3 * d {
+                qkv2[((3 * a) + ai) * 3 * d + c] += 1.0;
+            }
+        }
+        let out2 = attention_fwd(&qkv2, b, s, a, d);
+        for c in 0..a * d {
+            assert_eq!(out[c], out2[c], "position 0 output moved");
+        }
+        let dy = seq(b * s * a * d, 0.2, 0.1);
+        let dq = attention_dqkv(&dy, &qkv, b, s, a, d);
+        close(&dq, &fdiff(&|v| attention_fwd(v, b, s, a, d), &qkv, &dy, 1e-2), 2e-2);
+    }
+
+    #[test]
+    fn embed_partials_tile_the_vocab() {
+        let (vocab, h) = (8, 3);
+        let ids = vec![0.0, 5.0, 13.0, 7.0]; // 13 % 8 = 5
+        let table = seq(vocab * h, 0.1, 0.0);
+        let full = embed_fwd(&ids, &table, vocab, 0, vocab, h);
+        // Two half-shards sum to the full lookup.
+        let lo = embed_fwd(&ids, &table[..4 * h], vocab, 0, 4, h);
+        let hi = embed_fwd(&ids, &table[4 * h..], vocab, 4, 8, h);
+        let sum = add_n(&[&lo, &hi]);
+        close(&sum, &full, 1e-7);
+        // Backward scatters dy into the owning rows.
+        let dy = seq(ids.len() * h, 0.2, 0.0);
+        let dt = embed_dtable(&dy, &ids, vocab, 0, vocab, h);
+        for c in 0..h {
+            // Row 5 receives ids[1] and ids[2].
+            assert!((dt[5 * h + c] - (dy[h + c] + dy[2 * h + c])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_backward_matches_fdiff() {
+        let (b, s, h) = (2, 3, 5);
+        let x = seq(b * s * h, 0.3, 0.0);
+        let loss = cross_entropy_fwd(&x, b, s, h);
+        assert!(loss.iter().all(|&l| l > 0.0), "CE losses are positive");
+        let dloss = vec![1.0, 0.5];
+        let dx = cross_entropy_dx(&dloss, &x, b, s, h);
+        close(
+            &dx,
+            &fdiff(&|v| cross_entropy_fwd(v, b, s, h), &x, &dloss, 1e-2),
+            2e-2,
+        );
+    }
+}

@@ -1,16 +1,29 @@
-//! Real executor: run a (data-parallel) plan with real numerics. Each
-//! simulated device is an OS thread owning a PJRT engine, the compiled
-//! `grad_step` artifact, its parameter replica and Adam state; the rust
-//! coordinator implements the collectives (all-reduce over host f32
-//! buffers, matching what materialization derived for the DP plan) and the
-//! optimizer update — Python never runs here.
+//! Real executors: run plans with real numerics instead of simulated
+//! durations. Two tiers share the [`collective`] machinery (host-f32
+//! all-reduce, generation barriers), one OS thread per simulated device:
 //!
-//! This is the end-to-end proof that the three layers compose: Pallas
-//! kernels (L1) inside the jax model (L2) AOT-lowered to HLO, loaded and
-//! driven by the rust coordinator (L3), training a real transformer on a
-//! synthetic corpus with a decreasing loss curve (EXPERIMENTS.md §E2E).
+//! - **PJRT data-parallel trainer** (this module's `train_dp`): each device
+//!   thread owns a PJRT engine with the compiled `grad_step` artifact and
+//!   its parameter replica; the end-to-end proof that Pallas kernels (L1)
+//!   inside the jax model (L2) AOT-lowered to HLO are drivable from the
+//!   rust coordinator (L3) with a decreasing loss curve (EXPERIMENTS.md
+//!   §E2E). Data-parallel only.
+//!
+//! - **CPU reference executor** ([`reference`] + [`kernels`]): a pure-Rust
+//!   interpreter for *any* materialized plan's task graph — compute tasks
+//!   run native f32 kernels against real tensors, P2P and collective tasks
+//!   move real payloads, the plan's per-device serial order and
+//!   cross-device dependencies are honored exactly. The differential
+//!   harness ([`diff`], `superscaler verify-exec`) uses it to prove every
+//!   planner family elementwise-equivalent to a single-device serial
+//!   oracle, and feeds the measured per-task durations to
+//!   [`crate::cost::calibrate`] so the analytic cost model gains an error
+//!   bar.
 
 pub mod collective;
+pub mod diff;
+pub mod kernels;
+pub mod reference;
 
 use crate::runtime::{Engine, Manifest};
 use crate::util::rng::Rng;

@@ -1,0 +1,992 @@
+//! CPU reference executor: actually *run* a materialized plan's task graph
+//! with real f32 tensors, one OS thread per simulated device.
+//!
+//! This is the ground-truth tier under the simulators: compute tasks are
+//! interpreted against full pTensor stores with the native kernels in
+//! [`super::kernels`], P2P transfers move staged payload buffers between
+//! device threads, and collective tasks run through the same
+//! [`AllReducer`] machinery the data-parallel trainer uses. The per-device
+//! serial order comes from the prepared [`TaskGraph`]'s global topological
+//! order, so cross-device dependencies are honored exactly as the
+//! simulators assume them.
+//!
+//! Numeric conventions (shared with the serial oracle in [`super::diff`]):
+//!
+//! - Every device materializes every pTensor at full size; stores are
+//!   initialized deterministically from a hash of the pTensor *name*
+//!   (weights small-uniform, inputs integer-valued, Adam moments zero,
+//!   grads zero except the loss grad which seeds the backward pass with
+//!   ones), so replicas agree across devices and across plans.
+//! - A value-split output view (`vsplit.parts > 1`) accumulates (`+=`)
+//!   into its region; a full view overwrites. Value partials produced by
+//!   *replicated* operators are the full value, not a share of it, so each
+//!   replica's gradient contribution is scaled by `1/r` (`r` = live
+//!   forward replicas of the same base op reading the pTensor) — the
+//!   "value-partials scaled by 1/n" semantics `trans` declares.
+//! - Weight reads outside the optimizer come from a frozen snapshot of the
+//!   initial values: plans legitimately order weight-gradient work before
+//!   or after the optimizer step (zero-bubble W slots), and within one
+//!   training step every consumer of a weight must see the same bytes.
+//! - P2P payloads are staged from the *producing task's own kernel
+//!   output* (not the accumulated store), so a receiver summing several
+//!   partial transfers never double-counts a co-located producer.
+//!
+//! Every executed task records its measured wall duration next to the
+//! analytic `cost::` prediction carried on the task; the pairs feed
+//! [`crate::cost::calibrate`].
+
+use crate::cost::calibrate::TaskSample;
+use crate::exec::collective::AllReducer;
+use crate::exec::kernels;
+use crate::exec::Adam;
+use crate::graph::{Graph, Op, OpId, OpKind, PTensorId, TensorKind};
+use crate::materialize::{Plan, TaskId, TaskKind};
+use crate::schedule::{DeviceId, ValidatedSchedule};
+use crate::sim::TaskGraph;
+use crate::trans::autograd::grad_name;
+use crate::util::pool::GenBarrier;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a plan cannot be executed by the reference tier.
+#[derive(Debug, Clone)]
+pub enum ExecError {
+    /// The plan uses a feature the reference executor does not interpret
+    /// (e.g. a non-all-reduce collective).
+    Unsupported { task: String, what: String },
+    /// The plan is internally inconsistent (cyclic, unresolvable regions).
+    BadPlan(String),
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Unsupported { task, what } => {
+                write!(f, "unsupported by reference executor: {what} (task {task})")
+            }
+            ExecError::BadPlan(why) => write!(f, "bad plan: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Result of executing a plan: the live per-device pTensor stores (full
+/// tensors, keyed by pTensor id), the measured task samples, and the wall
+/// time of the threaded run.
+pub struct ExecResult {
+    pub stores: HashMap<DeviceId, HashMap<PTensorId, Vec<f32>>>,
+    pub samples: Vec<TaskSample>,
+    pub wall: f64,
+    pub n_threads: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic store initialization
+// ---------------------------------------------------------------------------
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn name_seed(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Build the initial full-size store shared (by value) by every device and
+/// the serial oracle: keyed purely by pTensor *name* so transformed plans
+/// and the oracle agree.
+pub fn init_store(g: &Graph) -> HashMap<PTensorId, Vec<f32>> {
+    let mut store = HashMap::new();
+    for p in &g.ptensors {
+        let n = p.num_elements();
+        let seed = name_seed(&p.name);
+        let buf: Vec<f32> = match p.kind {
+            TensorKind::Weight => (0..n)
+                .map(|i| {
+                    let u = splitmix64(seed ^ i as u64) as f64 / (u64::MAX as f64 + 1.0);
+                    ((u - 0.5) * 0.2) as f32
+                })
+                .collect(),
+            TensorKind::Input => {
+                (0..n).map(|i| (splitmix64(seed ^ i as u64) % 1021) as f32).collect()
+            }
+            TensorKind::OptState => vec![0.0; n],
+            TensorKind::Activation | TensorKind::Gradient => {
+                if p.name.ends_with(".loss.grad") {
+                    // Seed dL/dL = 1: without it every gradient is zero and
+                    // the differential test is vacuous.
+                    vec![1.0; n]
+                } else {
+                    vec![0.0; n]
+                }
+            }
+        };
+        store.insert(p.id, buf);
+    }
+    store
+}
+
+// ---------------------------------------------------------------------------
+// Prepared actions
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct ReadSpec {
+    pt: PTensorId,
+    region: Vec<(usize, usize)>,
+    frozen: bool,
+}
+
+#[derive(Clone)]
+struct WriteSpec {
+    pt: PTensorId,
+    region: Vec<(usize, usize)>,
+    accumulate: bool,
+    /// Replica-partial scaling (1/r); applied to the kernel output before
+    /// it is scattered or staged.
+    scale: f32,
+}
+
+/// How a compute task's kernel is dispatched (fully resolved at prepare
+/// time so the device threads never consult the graph).
+#[derive(Clone)]
+enum ComputeKind {
+    MatmulFwd { m: usize, k: usize, n: usize },
+    /// `roles[i]`: which forward input write `i` is the gradient of
+    /// (0 = data operand -> dx, 1 = weight operand -> dw).
+    MatmulBwd { m: usize, k: usize, n: usize, roles: Vec<u8> },
+    LayerNormFwd { h: usize },
+    LayerNormBwd { h: usize },
+    GeluFwd,
+    GeluBwd,
+    AddFwd,
+    /// Writes are each a copy of dy (per-write scale applies on top).
+    AddBwd,
+    AttnFwd { b: usize, s: usize, a: usize, d: usize },
+    AttnBwd { b: usize, s: usize, a: usize, d: usize },
+    EmbedFwd { vocab: usize, v0: usize, v1: usize, h: usize },
+    EmbedBwd { vocab: usize, v0: usize, v1: usize, h: usize },
+    CeFwd { b: usize, s: usize, h: usize },
+    CeBwd { b: usize, s: usize, h: usize },
+    IdentityFwd,
+    IdentityBwd,
+    AdamStep,
+}
+
+enum Action {
+    Compute {
+        kind: ComputeKind,
+        reads: Vec<ReadSpec>,
+        writes: Vec<WriteSpec>,
+        tag: &'static str,
+    },
+    /// P2P executed by the receiver: take the staged payload, scatter it.
+    Recv { pt: PTensorId, region: Vec<(usize, usize)>, accumulate: bool },
+    /// All-reduce over `group` (deduped, sorted) of a store region.
+    AllReduce { pt: PTensorId, region: Vec<(usize, usize)>, group: Vec<DeviceId> },
+    /// Cross-iteration (weight / optimizer-state) comm: every participant
+    /// skips it — initial values are identical on all devices by
+    /// construction.
+    Noop,
+}
+
+/// Producer-side staging order: after the producing compute task `p2p`'s
+/// dep runs, slice `rel` out of its `write_idx`-th kernel output (shaped
+/// `wlens`) and deposit it in the transfer's slot.
+struct StageSpec {
+    p2p: TaskId,
+    write_idx: usize,
+    rel: Vec<(usize, usize)>,
+    wlens: Vec<usize>,
+}
+
+struct Prepared {
+    actions: Vec<Action>,
+    stage_after: Vec<Vec<StageSpec>>,
+    /// (device, its tasks in global-topo order) — one thread each.
+    device_tasks: Vec<(DeviceId, Vec<TaskId>)>,
+    pre_done: Vec<bool>,
+    reducers: Vec<Option<Arc<AllReducer>>>,
+    arrivals: Vec<AtomicUsize>,
+    shapes: Vec<Vec<usize>>,
+}
+
+fn unsupported(task: impl std::fmt::Display, what: impl Into<String>) -> ExecError {
+    ExecError::Unsupported { task: task.to_string(), what: what.into() }
+}
+
+/// Strip trailing `@r<digits>` replica suffixes from an op name.
+fn replica_base(name: &str) -> &str {
+    let mut s = name;
+    loop {
+        match s.rfind("@r") {
+            Some(i)
+                if i + 2 < s.len()
+                    && s.as_bytes()[i + 2..].iter().all(|b| b.is_ascii_digit()) =>
+            {
+                s = &s[..i];
+            }
+            _ => return s,
+        }
+    }
+}
+
+/// The forward op name a backward op was generated from (`{fwd}.bw` /
+/// `{fwd}.bw.w` after zero-bubble splitting).
+fn fwd_name_of(bwd: &str) -> &str {
+    bwd.strip_suffix(".bw")
+        .or_else(|| bwd.strip_suffix(".bw.w"))
+        .unwrap_or(bwd)
+}
+
+/// Number of live forward replicas of `base` reading `pt` — the divisor
+/// for replica-produced gradient partials.
+fn replica_count(g: &Graph, base: &str, pt: PTensorId) -> usize {
+    g.live_ops()
+        .filter(|o| {
+            o.is_forward
+                && !o.no_grad
+                && replica_base(&o.name) == base
+                && o.inputs.iter().any(|&v| g.vtensor(v).ptensor == pt)
+        })
+        .count()
+}
+
+fn tag_of(op: &Op) -> &'static str {
+    match &op.kind {
+        OpKind::Matmul => "compute:matmul",
+        OpKind::LayerNorm => "compute:layernorm",
+        OpKind::Attention => "compute:attention",
+        OpKind::Elementwise(n) if *n == "gelu" => "compute:gelu",
+        OpKind::Elementwise(n) if *n == "add" => "compute:add",
+        OpKind::Elementwise(_) => "compute:elementwise",
+        OpKind::Embed => "compute:embed",
+        OpKind::CrossEntropy => "compute:cross_entropy",
+        OpKind::Optimizer => "compute:optimizer",
+        OpKind::Identity => "compute:identity",
+        _ => "compute:other",
+    }
+}
+
+fn dim_lens(region: &[(usize, usize)]) -> Vec<usize> {
+    region.iter().map(|&(lo, hi)| hi - lo).collect()
+}
+
+fn full_dim(region: &[(usize, usize)], shape: &[usize], d: usize) -> bool {
+    region[d] == (0, shape[d])
+}
+
+/// Resolve one compute op into a kernel dispatch + read/write specs.
+fn resolve_compute(g: &Graph, op: &Op) -> Result<Action, ExecError> {
+    let reads: Vec<ReadSpec> = op
+        .inputs
+        .iter()
+        .map(|&v| {
+            let vt = g.vtensor(v);
+            let p = g.ptensor(vt.ptensor);
+            ReadSpec {
+                pt: p.id,
+                region: vt.mask.concrete(&p.shape),
+                frozen: p.kind == TensorKind::Weight,
+            }
+        })
+        .collect();
+    let mut writes: Vec<WriteSpec> = op
+        .outputs
+        .iter()
+        .map(|&v| {
+            let vt = g.vtensor(v);
+            let p = g.ptensor(vt.ptensor);
+            WriteSpec {
+                pt: p.id,
+                region: vt.mask.concrete(&p.shape),
+                accumulate: vt.mask.vsplit.parts > 1,
+                scale: 1.0,
+            }
+        })
+        .collect();
+    let name = &op.name;
+
+    if op.kind == OpKind::Optimizer {
+        if reads.len() < 4 || writes.is_empty() {
+            return Err(unsupported(name, "optimizer without [g,w,m,v] -> [w] form"));
+        }
+        // Write back the updated moments through the m/v input regions.
+        writes.push(reads[2].clone().into_write());
+        writes.push(reads[3].clone().into_write());
+        return Ok(Action::Compute {
+            kind: ComputeKind::AdamStep,
+            reads,
+            writes,
+            tag: tag_of(op),
+        });
+    }
+
+    let kind = if op.is_forward {
+        match &op.kind {
+            OpKind::Matmul => {
+                if reads.len() != 2 || writes.len() != 1 {
+                    return Err(unsupported(name, "matmul arity"));
+                }
+                let (x, w, y) = (
+                    kernels::region_len(&reads[0].region),
+                    kernels::region_len(&reads[1].region),
+                    kernels::region_len(&writes[0].region),
+                );
+                let (m, k, n) = kernels::matmul_dims(x, w, y)
+                    .ok_or_else(|| unsupported(name, "matmul region shapes"))?;
+                ComputeKind::MatmulFwd { m, k, n }
+            }
+            OpKind::LayerNorm => {
+                let p = g.ptensor(reads[0].pt);
+                let last = reads[0].region.len() - 1;
+                if !full_dim(&reads[0].region, &p.shape, last) {
+                    return Err(unsupported(name, "layernorm split on the norm dim"));
+                }
+                ComputeKind::LayerNormFwd { h: p.shape[last] }
+            }
+            OpKind::Elementwise(n) if *n == "gelu" => ComputeKind::GeluFwd,
+            OpKind::Elementwise(n) if *n == "add" => ComputeKind::AddFwd,
+            OpKind::Attention => {
+                let lens = dim_lens(&writes[0].region);
+                if lens.len() != 4 {
+                    return Err(unsupported(name, "attention region rank"));
+                }
+                let (b, s, a, d) = (lens[0], lens[1], lens[2], lens[3]);
+                if writes[0].region[1].0 != 0 {
+                    return Err(unsupported(name, "attention split on sequence dim"));
+                }
+                if kernels::region_len(&reads[0].region) != b * s * a * 3 * d {
+                    return Err(unsupported(name, "attention qkv region"));
+                }
+                ComputeKind::AttnFwd { b, s, a, d }
+            }
+            OpKind::Embed => {
+                if reads.len() != 2 {
+                    return Err(unsupported(name, "embed arity"));
+                }
+                let table = g.ptensor(reads[1].pt);
+                let (v0, v1) = reads[1].region[0];
+                if !full_dim(&reads[1].region, &table.shape, 1) {
+                    return Err(unsupported(name, "embed split on hidden dim"));
+                }
+                if reads[0].region[..] != writes[0].region[..2] {
+                    return Err(unsupported(name, "embed ids/out region mismatch"));
+                }
+                ComputeKind::EmbedFwd { vocab: table.shape[0], v0, v1, h: table.shape[1] }
+            }
+            OpKind::CrossEntropy => {
+                let p = g.ptensor(reads[0].pt);
+                if reads[0].region.len() != 3
+                    || !full_dim(&reads[0].region, &p.shape, 1)
+                    || !full_dim(&reads[0].region, &p.shape, 2)
+                {
+                    return Err(unsupported(name, "cross-entropy split beyond batch"));
+                }
+                let lens = dim_lens(&reads[0].region);
+                ComputeKind::CeFwd { b: lens[0], s: lens[1], h: lens[2] }
+            }
+            OpKind::Identity => ComputeKind::IdentityFwd,
+            other => return Err(unsupported(name, format!("forward op kind {other:?}"))),
+        }
+    } else {
+        // Backward op: inputs are [dy(s) of the forward outputs] ++ the
+        // stashed forward inputs (every forward kind here has one output).
+        match &op.kind {
+            OpKind::Matmul => {
+                if reads.len() != 3 {
+                    return Err(unsupported(name, "matmul backward arity"));
+                }
+                let (x, w, dy) = (
+                    kernels::region_len(&reads[1].region),
+                    kernels::region_len(&reads[2].region),
+                    kernels::region_len(&reads[0].region),
+                );
+                let (m, k, n) = kernels::matmul_dims(x, w, dy)
+                    .ok_or_else(|| unsupported(name, "matmul backward region shapes"))?;
+                let roles = writes
+                    .iter()
+                    .map(|wr| {
+                        let gname = &g.ptensor(wr.pt).name;
+                        if *gname == grad_name(&g.ptensor(reads[1].pt).name) {
+                            Ok(0u8)
+                        } else if *gname == grad_name(&g.ptensor(reads[2].pt).name) {
+                            Ok(1u8)
+                        } else {
+                            Err(unsupported(name, format!("unmatched grad output {gname}")))
+                        }
+                    })
+                    .collect::<Result<Vec<u8>, ExecError>>()?;
+                ComputeKind::MatmulBwd { m, k, n, roles }
+            }
+            OpKind::LayerNorm => {
+                let p = g.ptensor(reads[1].pt);
+                ComputeKind::LayerNormBwd { h: *p.shape.last().unwrap() }
+            }
+            OpKind::Elementwise(n) if *n == "gelu" => ComputeKind::GeluBwd,
+            OpKind::Elementwise(n) if *n == "add" => ComputeKind::AddBwd,
+            OpKind::Attention => {
+                let lens = dim_lens(&reads[0].region);
+                if lens.len() != 4 {
+                    return Err(unsupported(name, "attention backward region rank"));
+                }
+                ComputeKind::AttnBwd { b: lens[0], s: lens[1], a: lens[2], d: lens[3] }
+            }
+            OpKind::Embed => {
+                if reads.len() != 3 || writes.len() != 1 {
+                    return Err(unsupported(name, "embed backward arity"));
+                }
+                let dt = g.ptensor(writes[0].pt);
+                let (v0, v1) = writes[0].region[0];
+                ComputeKind::EmbedBwd { vocab: dt.shape[0], v0, v1, h: dt.shape[1] }
+            }
+            OpKind::CrossEntropy => {
+                let lens = dim_lens(&reads[1].region);
+                if lens.len() != 3 {
+                    return Err(unsupported(name, "cross-entropy backward region rank"));
+                }
+                ComputeKind::CeBwd { b: lens[0], s: lens[1], h: lens[2] }
+            }
+            OpKind::Identity => ComputeKind::IdentityBwd,
+            other => return Err(unsupported(name, format!("backward op kind {other:?}"))),
+        }
+    };
+
+    // Replica-partial scaling: a value-split gradient produced by a
+    // *replicated* forward op is the full gradient value — divide by the
+    // number of live replicas so the partials sum back to one copy.
+    if !op.is_forward {
+        let base = replica_base(fwd_name_of(name)).to_string();
+        for wr in writes.iter_mut() {
+            if !wr.accumulate {
+                continue;
+            }
+            // The grad pTensor "<x>.grad" mirrors forward-input pTensor <x>.
+            let gname = &g.ptensor(wr.pt).name;
+            let src = g
+                .ptensors
+                .iter()
+                .find(|p| *gname == grad_name(&p.name))
+                .map(|p| p.id);
+            if let Some(src_pt) = src {
+                let r = replica_count(g, &base, src_pt);
+                if r > 1 {
+                    wr.scale = 1.0 / r as f32;
+                }
+            }
+        }
+    }
+
+    Ok(Action::Compute { kind, reads, writes, tag: tag_of(op) })
+}
+
+impl ReadSpec {
+    fn into_write(self) -> WriteSpec {
+        WriteSpec { pt: self.pt, region: self.region, accumulate: false, scale: 1.0 }
+    }
+}
+
+/// Global topological position of every task (Kahn with a min-heap so the
+/// order is deterministic). Errors if the prepared graph is cyclic.
+fn topo_positions(tg: &TaskGraph) -> Result<Vec<usize>, ExecError> {
+    let n = tg.indeg.len();
+    let mut indeg = tg.indeg.clone();
+    let mut heap: BinaryHeap<Reverse<TaskId>> = indeg
+        .iter()
+        .enumerate()
+        .filter(|&(_, &d)| d == 0)
+        .map(|(i, _)| Reverse(i))
+        .collect();
+    let mut pos = vec![usize::MAX; n];
+    let mut k = 0usize;
+    while let Some(Reverse(t)) = heap.pop() {
+        pos[t] = k;
+        k += 1;
+        for &c in &tg.consumers[t] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                heap.push(Reverse(c));
+            }
+        }
+    }
+    if k != n {
+        return Err(ExecError::BadPlan("task graph is cyclic".into()));
+    }
+    Ok(pos)
+}
+
+fn prepare(g: &Graph, vs: &ValidatedSchedule, plan: &Plan, tg: &TaskGraph) -> Result<Prepared, ExecError> {
+    let n_tasks = plan.tasks.len();
+    let shapes: Vec<Vec<usize>> = g.ptensors.iter().map(|p| p.shape.clone()).collect();
+    let pos = topo_positions(tg)?;
+
+    // Pass 1: compute tasks.
+    let mut actions: Vec<Action> = Vec::with_capacity(n_tasks);
+    for task in &plan.tasks {
+        match &task.kind {
+            TaskKind::Compute { op, .. } => actions.push(resolve_compute(g, g.op(*op))?),
+            _ => actions.push(Action::Noop),
+        }
+    }
+
+    // Pass 2 (in topo order): resolve P2P / collective regions against the
+    // producing / consuming compute ops.
+    let mut order: Vec<TaskId> = (0..n_tasks).collect();
+    order.sort_by_key(|&t| pos[t]);
+    let mut stage_after: Vec<Vec<StageSpec>> = (0..n_tasks).map(|_| Vec::new()).collect();
+    let mut coll_region: HashMap<TaskId, Vec<(usize, usize)>> = HashMap::new();
+    let mut reducers: Vec<Option<Arc<AllReducer>>> = (0..n_tasks).map(|_| None).collect();
+    let mut arrivals: Vec<AtomicUsize> = (0..n_tasks).map(|_| AtomicUsize::new(0)).collect();
+
+    for &t in &order {
+        let task = &plan.tasks[t];
+        match &task.kind {
+            TaskKind::Compute { .. } => {}
+            TaskKind::P2P { to, bytes, ptensor, .. } => {
+                let p = g.ptensor(*ptensor);
+                if matches!(p.kind, TensorKind::Weight | TensorKind::OptState)
+                    || task.deps.is_empty()
+                {
+                    continue; // cross-iteration sync: Noop on every side.
+                }
+                let prod_task = task.deps[0];
+                let prod_op = match &plan.tasks[prod_task].kind {
+                    TaskKind::Compute { op, .. } => g.op(*op),
+                    _ => {
+                        return Err(unsupported(&task.label, "P2P from a non-compute task"))
+                    }
+                };
+                // Match the materializer's byte formula: the overlap of a
+                // producer output view with a consumer (on `to`) input view
+                // whose element count prices to exactly `bytes`.
+                let mut found: Option<(Vec<(usize, usize)>, bool, usize)> = None;
+                'outer: for (wi, &ov) in prod_op.outputs.iter().enumerate() {
+                    let pv = g.vtensor(ov);
+                    if pv.ptensor != *ptensor {
+                        continue;
+                    }
+                    let consumers: &[OpId] = vs
+                        .device_order
+                        .get(to)
+                        .map(|v| v.as_slice())
+                        .unwrap_or(&[]);
+                    for &c in consumers {
+                        for &iv in &g.op(c).inputs {
+                            let cv = g.vtensor(iv);
+                            if cv.ptensor != *ptensor {
+                                continue;
+                            }
+                            if let Some(m) = cv.mask.intersect(&pv.mask) {
+                                let nb = m.num_elements(&p.shape) as u64
+                                    * p.dtype.size_bytes() as u64;
+                                if nb == *bytes {
+                                    found = Some((
+                                        m.concrete(&p.shape),
+                                        pv.mask.vsplit.parts > 1,
+                                        wi,
+                                    ));
+                                    break 'outer;
+                                }
+                            }
+                        }
+                    }
+                }
+                let (region, accumulate, write_idx) = found.ok_or_else(|| {
+                    unsupported(&task.label, format!("unresolvable P2P region of {}", p.name))
+                })?;
+                // Producer-side staging slice, relative to the write region.
+                let wr_region = match &actions[prod_task] {
+                    Action::Compute { writes, .. } => writes[write_idx].region.clone(),
+                    _ => return Err(ExecError::BadPlan("P2P producer not compute".into())),
+                };
+                let rel: Vec<(usize, usize)> = region
+                    .iter()
+                    .zip(&wr_region)
+                    .map(|(&(lo, hi), &(wlo, _))| (lo - wlo, hi - wlo))
+                    .collect();
+                stage_after[prod_task].push(StageSpec {
+                    p2p: t,
+                    write_idx,
+                    rel,
+                    wlens: dim_lens(&wr_region),
+                });
+                actions[t] = Action::Recv { pt: *ptensor, region, accumulate };
+            }
+            TaskKind::Collective { kind, group, bytes: _, ptensor } => {
+                let p = g.ptensor(*ptensor);
+                if matches!(p.kind, TensorKind::Weight | TensorKind::OptState) {
+                    continue; // cross-iteration weight sync: Noop.
+                }
+                if *kind != crate::graph::CollKind::AllReduce {
+                    return Err(unsupported(
+                        &task.label,
+                        format!("collective kind {kind:?} (only AllReduce is interpreted)"),
+                    ));
+                }
+                // Region: bounding box of neighboring compute views on the
+                // pTensor (producers via deps, consumers via the task
+                // graph), inheriting from chained collectives.
+                let mut lo = vec![usize::MAX; p.shape.len()];
+                let mut hi = vec![0usize; p.shape.len()];
+                let mut any = false;
+                let mut absorb = |r: &[(usize, usize)]| {
+                    for (d, &(a, b)) in r.iter().enumerate() {
+                        lo[d] = lo[d].min(a);
+                        hi[d] = hi[d].max(b);
+                    }
+                    any = true;
+                };
+                let mut op_views = |op: &Op, outputs: bool| {
+                    let views = if outputs { &op.outputs } else { &op.inputs };
+                    let mut rs = Vec::new();
+                    for &v in views {
+                        let vt = g.vtensor(v);
+                        if vt.ptensor == *ptensor {
+                            rs.push(vt.mask.concrete(&p.shape));
+                        }
+                    }
+                    rs
+                };
+                for &d in &task.deps {
+                    match &plan.tasks[d].kind {
+                        TaskKind::Compute { op, .. } => {
+                            for r in op_views(g.op(*op), true) {
+                                absorb(&r);
+                            }
+                        }
+                        TaskKind::Collective { ptensor: dpt, .. } if dpt == ptensor => {
+                            if let Some(r) = coll_region.get(&d) {
+                                let r = r.clone();
+                                absorb(&r);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                for &c in &tg.consumers[t] {
+                    if let TaskKind::Compute { op, .. } = &plan.tasks[c].kind {
+                        for r in op_views(g.op(*op), false) {
+                            absorb(&r);
+                        }
+                    }
+                }
+                let region: Vec<(usize, usize)> = if any {
+                    lo.into_iter().zip(hi).collect()
+                } else {
+                    p.shape.iter().map(|&s| (0, s)).collect()
+                };
+                coll_region.insert(t, region.clone());
+                let mut members = group.clone();
+                members.sort_unstable();
+                members.dedup();
+                reducers[t] = Some(Arc::new(AllReducer::new(members.len())));
+                arrivals[t] = AtomicUsize::new(members.len());
+                actions[t] = Action::AllReduce { pt: *ptensor, region, group: members };
+            }
+        }
+    }
+
+    // Per-device task lists (in global topo order) + pre-done noops.
+    let mut by_dev: HashMap<DeviceId, Vec<TaskId>> = HashMap::new();
+    let mut pre_done = vec![false; n_tasks];
+    for &t in &order {
+        match (&actions[t], &plan.tasks[t].kind) {
+            (Action::Compute { .. }, TaskKind::Compute { device, .. }) => {
+                by_dev.entry(*device).or_default().push(t)
+            }
+            (Action::Recv { .. }, TaskKind::P2P { to, .. }) => {
+                by_dev.entry(*to).or_default().push(t)
+            }
+            (Action::AllReduce { group, .. }, _) => {
+                for &d in group {
+                    by_dev.entry(d).or_default().push(t);
+                }
+            }
+            _ => pre_done[t] = true,
+        }
+    }
+    let mut device_tasks: Vec<(DeviceId, Vec<TaskId>)> = by_dev.into_iter().collect();
+    device_tasks.sort_by_key(|(d, _)| *d);
+
+    Ok(Prepared { actions, stage_after, device_tasks, pre_done, reducers, arrivals, shapes })
+}
+
+// ---------------------------------------------------------------------------
+// Runtime
+// ---------------------------------------------------------------------------
+
+struct Shared<'a> {
+    plan: &'a Plan,
+    prep: &'a Prepared,
+    frozen: &'a HashMap<PTensorId, Vec<f32>>,
+    slots: Vec<Mutex<Option<Vec<f32>>>>,
+    done: Mutex<Vec<bool>>,
+    cv: Condvar,
+    start: Arc<GenBarrier>,
+}
+
+impl Shared<'_> {
+    fn wait_deps(&self, deps: &[TaskId]) {
+        let mut d = self.done.lock().unwrap();
+        while !deps.iter().all(|&t| d[t]) {
+            d = self.cv.wait(d).unwrap();
+        }
+    }
+
+    fn mark_done(&self, t: TaskId) {
+        let mut d = self.done.lock().unwrap();
+        d[t] = true;
+        drop(d);
+        self.cv.notify_all();
+    }
+}
+
+fn run_kernel(kind: &ComputeKind, bufs: Vec<Vec<f32>>, n_writes: usize) -> Vec<Vec<f32>> {
+    match kind {
+        ComputeKind::MatmulFwd { m, k, n } => {
+            vec![kernels::matmul_fwd(&bufs[0], &bufs[1], *m, *k, *n)]
+        }
+        ComputeKind::MatmulBwd { m, k, n, roles } => roles
+            .iter()
+            .map(|&r| {
+                if r == 0 {
+                    kernels::matmul_dx(&bufs[0], &bufs[2], *m, *k, *n)
+                } else {
+                    kernels::matmul_dw(&bufs[0], &bufs[1], *m, *k, *n)
+                }
+            })
+            .collect(),
+        ComputeKind::LayerNormFwd { h } => vec![kernels::layernorm_fwd(&bufs[0], *h)],
+        ComputeKind::LayerNormBwd { h } => {
+            vec![kernels::layernorm_dx(&bufs[0], &bufs[1], *h)]
+        }
+        ComputeKind::GeluFwd => vec![kernels::gelu_fwd(&bufs[0])],
+        ComputeKind::GeluBwd => vec![kernels::gelu_dx(&bufs[0], &bufs[1])],
+        ComputeKind::AddFwd => {
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            vec![kernels::add_n(&refs)]
+        }
+        ComputeKind::AddBwd => (0..n_writes).map(|_| bufs[0].clone()).collect(),
+        ComputeKind::AttnFwd { b, s, a, d } => {
+            vec![kernels::attention_fwd(&bufs[0], *b, *s, *a, *d)]
+        }
+        ComputeKind::AttnBwd { b, s, a, d } => {
+            vec![kernels::attention_dqkv(&bufs[0], &bufs[1], *b, *s, *a, *d)]
+        }
+        ComputeKind::EmbedFwd { vocab, v0, v1, h } => {
+            vec![kernels::embed_fwd(&bufs[0], &bufs[1], *vocab, *v0, *v1, *h)]
+        }
+        ComputeKind::EmbedBwd { vocab, v0, v1, h } => {
+            vec![kernels::embed_dtable(&bufs[0], &bufs[1], *vocab, *v0, *v1, *h)]
+        }
+        ComputeKind::CeFwd { b, s, h } => {
+            vec![kernels::cross_entropy_fwd(&bufs[0], *b, *s, *h)]
+        }
+        ComputeKind::CeBwd { b, s, h } => {
+            vec![kernels::cross_entropy_dx(&bufs[0], &bufs[1], *b, *s, *h)]
+        }
+        ComputeKind::IdentityFwd | ComputeKind::IdentityBwd => vec![bufs[0].clone()],
+        ComputeKind::AdamStep => {
+            let mut it = bufs.into_iter();
+            let gbuf = it.next().unwrap();
+            let mut w = it.next().unwrap();
+            let mut m = it.next().unwrap();
+            let mut v = it.next().unwrap();
+            Adam::default().update(1, &mut w, &gbuf, &mut m, &mut v);
+            vec![w, m, v]
+        }
+    }
+}
+
+fn run_device(
+    dev: DeviceId,
+    tasks: &[TaskId],
+    mut store: HashMap<PTensorId, Vec<f32>>,
+    sh: &Shared<'_>,
+) -> (HashMap<PTensorId, Vec<f32>>, Vec<TaskSample>) {
+    let prep = sh.prep;
+    let mut samples = Vec::new();
+    sh.start.wait();
+    for &t in tasks {
+        let task = &sh.plan.tasks[t];
+        sh.wait_deps(&task.deps);
+        let t0 = Instant::now();
+        match &prep.actions[t] {
+            Action::Compute { kind, reads, writes, tag } => {
+                let bufs: Vec<Vec<f32>> = reads
+                    .iter()
+                    .map(|r| {
+                        let src = if r.frozen { &sh.frozen[&r.pt] } else { &store[&r.pt] };
+                        kernels::gather(src, &prep.shapes[r.pt], &r.region)
+                    })
+                    .collect();
+                let mut outs = run_kernel(kind, bufs, writes.len());
+                for (wr, out) in writes.iter().zip(outs.iter_mut()) {
+                    if wr.scale != 1.0 {
+                        for v in out.iter_mut() {
+                            *v *= wr.scale;
+                        }
+                    }
+                    let dst = store.get_mut(&wr.pt).unwrap();
+                    kernels::scatter(dst, &prep.shapes[wr.pt], &wr.region, out, wr.accumulate, 1.0);
+                }
+                // Stage outgoing P2P payloads from this task's own
+                // (scaled) outputs before anyone can see it as done.
+                for sp in &prep.stage_after[t] {
+                    let payload = kernels::gather(&outs[sp.write_idx], &sp.wlens, &sp.rel);
+                    *sh.slots[sp.p2p].lock().unwrap() = Some(payload);
+                }
+                let secs = t0.elapsed().as_secs_f64();
+                samples.push(TaskSample {
+                    kind: tag.to_string(),
+                    label: task.label.to_string(),
+                    measured: secs,
+                    predicted: task.duration,
+                });
+                sh.mark_done(t);
+            }
+            Action::Recv { pt, region, accumulate } => {
+                let payload = sh.slots[t].lock().unwrap().take().expect("unstaged P2P");
+                let dst = store.get_mut(pt).unwrap();
+                kernels::scatter(dst, &prep.shapes[*pt], region, &payload, *accumulate, 1.0);
+                let secs = t0.elapsed().as_secs_f64();
+                samples.push(TaskSample {
+                    kind: "p2p".into(),
+                    label: task.label.to_string(),
+                    measured: secs,
+                    predicted: task.duration,
+                });
+                sh.mark_done(t);
+            }
+            Action::AllReduce { pt, region, group } => {
+                let rank = group.binary_search(&dev).expect("device not in its group");
+                let reducer = prep.reducers[t].as_ref().unwrap();
+                let mut buf = kernels::gather(&store[pt], &prep.shapes[*pt], region);
+                reducer.allreduce(rank, &mut buf);
+                let dst = store.get_mut(pt).unwrap();
+                kernels::scatter(dst, &prep.shapes[*pt], region, &buf, false, 1.0);
+                let secs = t0.elapsed().as_secs_f64();
+                if rank == 0 {
+                    samples.push(TaskSample {
+                        kind: "collective:allreduce".into(),
+                        label: task.label.to_string(),
+                        measured: secs,
+                        predicted: task.duration,
+                    });
+                }
+                if prep.arrivals[t].fetch_sub(1, Ordering::SeqCst) == 1 {
+                    sh.mark_done(t);
+                }
+            }
+            Action::Noop => {
+                sh.mark_done(t);
+            }
+        }
+    }
+    (store, samples)
+}
+
+/// Execute a materialized plan with real tensors. `g` must be the planner's
+/// output graph (autograd-completed), `vs` its validated schedule, `plan`
+/// its materialization.
+pub fn execute(g: &Graph, vs: &ValidatedSchedule, plan: &Plan) -> Result<ExecResult, ExecError> {
+    let tg = TaskGraph::prepare(vs, plan);
+    let prep = prepare(g, vs, plan, &tg)?;
+    let base_store = init_store(g);
+    let frozen: HashMap<PTensorId, Vec<f32>> = base_store
+        .iter()
+        .filter(|(&pt, _)| g.ptensor(pt).kind == TensorKind::Weight)
+        .map(|(&pt, v)| (pt, v.clone()))
+        .collect();
+
+    let n_threads = prep.device_tasks.len().max(1);
+    let shared = Shared {
+        plan,
+        prep: &prep,
+        frozen: &frozen,
+        slots: (0..plan.tasks.len()).map(|_| Mutex::new(None)).collect(),
+        done: Mutex::new(prep.pre_done.clone()),
+        cv: Condvar::new(),
+        start: GenBarrier::new(n_threads),
+    };
+
+    let t0 = Instant::now();
+    let results: Vec<(DeviceId, HashMap<PTensorId, Vec<f32>>, Vec<TaskSample>)> =
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (dev, tasks) in &prep.device_tasks {
+                let store = base_store.clone();
+                let sh = &shared;
+                handles.push(s.spawn(move || {
+                    let (store, samples) = run_device(*dev, tasks, store, sh);
+                    (*dev, store, samples)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("device thread panicked")).collect()
+        });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut stores = HashMap::new();
+    let mut samples = Vec::new();
+    for (dev, store, mut s) in results {
+        stores.insert(dev, store);
+        samples.append(&mut s);
+    }
+    Ok(ExecResult { stores, samples, wall, n_threads })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_base_strips_stacked_suffixes() {
+        assert_eq!(replica_base("h0.ln1"), "h0.ln1");
+        assert_eq!(replica_base("h0.ln1@r3"), "h0.ln1");
+        assert_eq!(replica_base("h0.ln1/b0@r1@r12"), "h0.ln1/b0");
+        assert_eq!(replica_base("h0.ln1@rx"), "h0.ln1@rx");
+    }
+
+    #[test]
+    fn fwd_name_strips_backward_suffixes() {
+        assert_eq!(fwd_name_of("h0.at.proj.bw"), "h0.at.proj");
+        assert_eq!(fwd_name_of("h0.at.proj.bw.w"), "h0.at.proj");
+        assert_eq!(fwd_name_of("h0.at.proj"), "h0.at.proj");
+    }
+
+    #[test]
+    fn init_store_is_name_keyed_and_seeds_loss_grad() {
+        use crate::models::builder::ModelBuilder;
+        let mut mb = ModelBuilder::new();
+        let x = mb.input("ids", &[2, 2]);
+        let (y, _) = mb.embedding("emb", x, 0, 2, 2, 8, 4);
+        let (_, _) = mb.loss("lmloss", y, 1, &[2, 2, 4]);
+        let store = init_store(&mb.g);
+        let by_name = |n: &str| {
+            let p = mb.g.ptensors.iter().find(|p| p.name == n).unwrap();
+            store[&p.id].clone()
+        };
+        let table = by_name("emb.table");
+        assert!(table.iter().any(|&v| v != 0.0));
+        assert!(table.iter().all(|&v| v.abs() <= 0.1 + 1e-6));
+        let ids = by_name("ids");
+        assert!(ids.iter().all(|&v| v >= 0.0 && v.fract() == 0.0));
+        assert!(by_name("lmloss.loss.grad").iter().all(|&v| v == 1.0));
+        assert!(by_name("emb.table.m").iter().all(|&v| v == 0.0));
+        // Same names -> same values on a rebuild (determinism).
+        let store2 = init_store(&mb.g);
+        assert_eq!(store[&0], store2[&0]);
+    }
+}

@@ -23,9 +23,15 @@
 //!   discrete-event engine with separate compute/communication streams per
 //!   device, fair-shared link contention and time-resolved memory
 //!   timelines, exportable as a Chrome trace for visual debugging;
-//! * **executed** ([`exec`]) with real numerics: each simulated device is a
-//!   thread running AOT-compiled JAX/Pallas artifacts through the PJRT CPU
-//!   client ([`runtime`]), with collectives implemented in Rust.
+//! * **executed** ([`exec`]) with real numerics: either through the PJRT
+//!   CPU client ([`runtime`]) running AOT-compiled JAX/Pallas artifacts
+//!   (data-parallel trainer), or on the pure-Rust CPU reference executor
+//!   ([`exec::reference`]) which interprets *any* materialized plan — one
+//!   thread per device, native f32 kernels, real P2P/collective payloads.
+//!   The differential harness ([`exec::diff`], `superscaler verify-exec`)
+//!   proves every planner family elementwise-equivalent to a single-device
+//!   serial oracle and calibrates the analytic cost model against measured
+//!   per-task durations ([`cost::calibrate`]).
 //!
 //! # Plans as data: `Planner` / `PlanSpec` / search
 //!

@@ -7,6 +7,7 @@
 //!                      [--fidelity list|des] [--trace out.json]
 //! superscaler rvd --from "R(1)V(2)D(1,2)" --to "R(2)V(1)D(2,1)" --gpus 4
 //! superscaler train --devices 4 --steps 100 [--artifacts artifacts]
+//! superscaler verify-exec [--devices 2,4,8] [--families dp,tp,...] [--json FILE]
 //! superscaler plans                      # list registered sPrograms
 //! ```
 //!
@@ -33,6 +34,7 @@ fn main() {
         "search" => search_cmd(&args),
         "rvd" => rvd_query(&args),
         "train" => train(&args),
+        "verify-exec" => verify_exec(&args),
         "plans" => list_plans(),
         _ => usage(),
     }
@@ -131,6 +133,17 @@ fn usage() {
            superscaler rvd      --from 'R(r)V(v)D(k1,k2)' --to '...' [--gpus N]\n\
                                 [--src-gpus N] [--dst-gpus N] [--mb MB]\n\
            superscaler train    [--devices N] [--steps N] [--lr F] [--artifacts DIR]\n\
+           superscaler verify-exec [--devices 2,4,8] [--families dp,tp,...]\n\
+                                [--json FILE]\n\
+                                  differential execution harness: run every\n\
+                                  planner family's plan on the CPU reference\n\
+                                  executor (one thread per simulated device,\n\
+                                  real f32 tensors) and assert elementwise\n\
+                                  equivalence against a single-device serial\n\
+                                  oracle; prints the pass matrix plus the\n\
+                                  measured-vs-analytic cost calibration\n\
+                                  table; --json writes BENCH_exec.json;\n\
+                                  exit 1 when any cell fails\n\
            superscaler plans"
     );
 }
@@ -579,6 +592,74 @@ fn write_bench_json(path: &str, report: &search::SearchReport) {
             std::process::exit(2);
         }
     }
+}
+
+/// `verify-exec`: the differential plan-execution harness. Runs every
+/// requested planner family × device count on the CPU reference executor,
+/// compares elementwise against the serial oracle, prints the pass matrix
+/// and the measured-vs-analytic calibration table, optionally writes
+/// `BENCH_exec.json`, and exits 1 when any cell fails.
+fn verify_exec(args: &Args) {
+    use superscaler::exec::diff;
+    use superscaler::util::json;
+
+    let devices: Vec<usize> = args
+        .str("devices", "2,4,8")
+        .split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.trim().parse::<usize>().unwrap_or_else(|_| {
+                eprintln!("--devices expects a comma list of integers, got '{t}'");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    let families: Vec<String> = match args.get("families") {
+        None => diff::default_families(),
+        Some(list) => list
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| t.trim().to_string())
+            .collect(),
+    };
+    if devices.is_empty() || families.is_empty() {
+        eprintln!("verify-exec needs at least one device count and one family");
+        std::process::exit(2);
+    }
+
+    println!(
+        "verify-exec: {} families x {:?} devices against the serial oracle (tol {:.0e} rel)",
+        families.len(),
+        devices,
+        diff::REL_TOL
+    );
+    let out = diff::run_matrix(&devices, &families).unwrap_or_else(|e| {
+        eprintln!("verify-exec: {e}");
+        std::process::exit(1);
+    });
+    println!("{}", diff::render_matrix(&out));
+    println!("cost calibration (measured CPU vs analytic V100 profile):");
+    println!("{}", out.calibration.render());
+
+    if let Some(path) = args.get("json") {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        match std::fs::write(path, json::to_string_pretty(&out.to_json()) + "\n") {
+            Ok(()) => println!("bench: wrote {path}"),
+            Err(e) => {
+                eprintln!("cannot write bench json {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let failed = out.cases.iter().filter(|c| !c.passed).count();
+    if failed > 0 {
+        eprintln!("verify-exec: {failed}/{} cells FAILED equivalence", out.cases.len());
+        std::process::exit(1);
+    }
+    println!("verify-exec: all {} cells match the serial oracle", out.cases.len());
 }
 
 /// The CI perf-trajectory gate: compare the search's best iteration time

@@ -669,6 +669,83 @@ mod tests {
     }
 
     #[test]
+    fn encode_decode_roundtrip_all_named_builders() {
+        // Every named builder, including multi-digit micro indices (k > 10)
+        // so the digit-run parser is exercised, not just single chars.
+        for (n_stages, k) in [(1, 1), (2, 2), (4, 8), (3, 12), (8, 16)] {
+            for name in [
+                SchedName::Sync,
+                SchedName::OneFOneB,
+                SchedName::Interlaced,
+                SchedName::ZeroBubble,
+                SchedName::VShape,
+            ] {
+                let spec = name.rows(n_stages, k);
+                let enc = spec.encode();
+                assert_eq!(
+                    ScheduleSpec::decode(&enc),
+                    Some(spec),
+                    "{} {n_stages}x{k}: {enc}",
+                    name.as_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_random_valid_explicit_rows_roundtrip_encode_decode() {
+        crate::util::prop::check("dsl-encode-roundtrip", 300, |g| {
+            let k = g.int(1, 14);
+            let n_stages = g.int(1, 5);
+            // Build each row by interleaving the per-micro f→b→(w?) chains
+            // at random: structurally valid by construction (no dups, every
+            // F/B present, B after its F, W after its B).
+            let rows: Vec<Vec<Slot>> = (0..n_stages)
+                .map(|_| {
+                    let mut progress = vec![0usize; k]; // 0=f next, 1=b next, 2=w next, 3=done
+                    let want_w: Vec<bool> = (0..k).map(|_| g.bool()).collect();
+                    let mut row = Vec::new();
+                    loop {
+                        let open: Vec<usize> = (0..k)
+                            .filter(|&m| progress[m] < if want_w[m] { 3 } else { 2 })
+                            .collect();
+                        if open.is_empty() {
+                            break;
+                        }
+                        let m = *g.rng.choose(&open);
+                        row.push(match progress[m] {
+                            0 => Slot::f(m),
+                            1 => Slot::b(m),
+                            _ => Slot::w(m),
+                        });
+                        progress[m] += 1;
+                    }
+                    row
+                })
+                .collect();
+            let spec = ScheduleSpec { rows };
+            // Per-row structural validity holds by construction; verify it
+            // for single-stage specs where the cross-stage replay is
+            // trivially satisfiable too.
+            if n_stages == 1 {
+                spec.check(k).map_err(|e| format!("constructed row rejected: {e}"))?;
+            }
+            let enc = spec.encode();
+            match ScheduleSpec::decode(&enc) {
+                Some(back) if back == spec => {}
+                Some(back) => return Err(format!("'{enc}' decoded to {back:?}")),
+                None => return Err(format!("'{enc}' failed to decode")),
+            }
+            // The sched{...} token wrapper round-trips the same rows.
+            let tok = SchedSpec::Explicit(spec.clone()).token();
+            match SchedSpec::parse_token(&tok) {
+                Some(SchedSpec::Explicit(back)) if back == spec => Ok(()),
+                other => Err(format!("token '{tok}' parsed to {other:?}")),
+            }
+        });
+    }
+
+    #[test]
     fn sched_tokens_roundtrip_named_and_explicit() {
         let cases = [
             SchedSpec::Named(SchedName::ZeroBubble),

@@ -136,7 +136,7 @@ fn score_lt(a: Score, b: Score) -> bool {
 struct ChainResult {
     start: Score,
     best: Score,
-    gap: f64,
+    gap: Option<f64>,
     iters: usize,
     accepted: usize,
     replayed: usize,
@@ -204,7 +204,7 @@ pub fn refine(
         if let Outcome::Ok(m) = &mut ranked[i].outcome {
             m.des_makespan = Some(r.best.1);
             m.des_oom = r.best.0;
-            m.gap = Some(r.gap);
+            m.gap = r.gap;
         }
         sum.refined += 1;
         sum.iters += r.iters;
@@ -219,9 +219,18 @@ pub fn refine(
     sum
 }
 
-fn gap_of(cluster: &Cluster, stats: &ModelStats, spec: &PlanSpec, makespan: f64) -> f64 {
-    let lb = cluster.plan_time_lower_bound(spec, stats).max(1e-12);
-    (makespan / lb - 1.0).max(0.0)
+/// Gap certificate from a makespan and an analytic lower bound. `None`
+/// when the bound is degenerate (zero, negative, or non-finite) — dividing
+/// by a vanishing bound would manufacture astronomically large "gaps" that
+/// sort refined candidates nonsensically; an absent certificate sorts as
+/// "unknown" instead and can never satisfy `gap_target`.
+fn gap_from_lb(makespan: f64, lb: f64) -> Option<f64> {
+    (lb.is_finite() && lb > 0.0 && makespan.is_finite())
+        .then(|| (makespan / lb - 1.0).max(0.0))
+}
+
+fn gap_of(cluster: &Cluster, stats: &ModelStats, spec: &PlanSpec, makespan: f64) -> Option<f64> {
+    gap_from_lb(makespan, cluster.plan_time_lower_bound(spec, stats))
 }
 
 fn metropolis(rng: &mut Rng, cur: Score, new: Score) -> bool {
@@ -261,7 +270,7 @@ fn run_chain(
     let hetero = spec.stages.is_some();
     let (mut iters, mut accepted, mut replayed, mut full_events) = (0usize, 0usize, 0usize, 0usize);
     for _ in 0..cfg.iters {
-        if best_gap <= cfg.gap_target {
+        if best_gap.map_or(false, |g| g <= cfg.gap_target) {
             break;
         }
         iters += 1;
@@ -757,10 +766,23 @@ mod tests {
         let b = run_chain(&model, &cluster, CommMode::InterRvd, &stats, &act, &cfg, &cand, 0)
             .expect("chain runs");
         assert_eq!(a.best.1.to_bits(), b.best.1.to_bits());
-        assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+        assert_eq!(a.gap.map(f64::to_bits), b.gap.map(f64::to_bits));
         assert_eq!(a.accepted, b.accepted);
         assert_eq!(a.replayed, b.replayed);
         assert!(a.best.1 <= a.start.1 || a.start.0, "best never regresses past the seed");
-        assert!(a.gap.is_finite());
+        assert!(a.gap.expect("gpt3@4 has a positive lower bound").is_finite());
+    }
+
+    #[test]
+    fn degenerate_lower_bounds_yield_no_gap_certificate() {
+        assert_eq!(gap_from_lb(1.0, 0.0), None);
+        assert_eq!(gap_from_lb(1.0, -1.0), None);
+        assert_eq!(gap_from_lb(1.0, f64::NAN), None);
+        assert_eq!(gap_from_lb(1.0, f64::INFINITY), None);
+        assert_eq!(gap_from_lb(f64::NAN, 1.0), None);
+        // Sound bounds still certify: makespan 1.5 over lb 1.0 is a 50% gap,
+        // and a makespan at the bound certifies optimality.
+        assert!((gap_from_lb(1.5, 1.0).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(gap_from_lb(0.5, 1.0), Some(0.0));
     }
 }

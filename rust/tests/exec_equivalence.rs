@@ -1,0 +1,63 @@
+//! Differential execution equivalence — the tier-1 slice of the
+//! `verify-exec` matrix. The full planner-family × {2,4,8}-device sweep
+//! runs in CI's `exec-equivalence` job; here a representative subset keeps
+//! the transformation stack's semantics-preservation property under the
+//! default `cargo test` run: execute each plan's task graph with real f32
+//! tensors on the CPU reference executor and compare elementwise against
+//! the single-device serial oracle.
+
+use superscaler::exec::diff;
+
+/// Run a subset of the matrix and assert every cell matches the oracle.
+fn assert_matrix_passes(devices: &[usize], families: &[&str]) {
+    let fams: Vec<String> = families.iter().map(|f| f.to_string()).collect();
+    let out = diff::run_matrix(devices, &fams).expect("matrix runs");
+    assert_eq!(out.cases.len(), devices.len() * families.len());
+    for c in &out.cases {
+        assert!(
+            c.passed,
+            "{}@{} ({}) diverged from the serial oracle: max_rel {:.3e}, {} elems, {:?}",
+            c.family, c.devices, c.label, c.max_rel, c.compared, c.error
+        );
+        assert!(c.compared > 0, "{}@{} compared nothing — vacuous", c.family, c.devices);
+        assert!(c.max_rel <= diff::REL_TOL, "{}@{}: {}", c.family, c.devices, c.max_rel);
+    }
+    assert!(out.all_passed);
+}
+
+#[test]
+fn dp_and_tp_match_serial_oracle_on_two_devices() {
+    assert_matrix_passes(&[2], &["dp", "tp", "dp-rvd"]);
+}
+
+#[test]
+fn pipeline_families_match_serial_oracle_on_two_devices() {
+    assert_matrix_passes(&[2], &["gpipe", "megatron", "zb"]);
+}
+
+#[test]
+fn coshard_and_hetero_match_serial_oracle_on_two_devices() {
+    assert_matrix_passes(&[2], &["coshard", "hetero"]);
+}
+
+#[test]
+fn four_device_grid_plans_match_serial_oracle() {
+    assert_matrix_passes(&[4], &["dp", "megatron"]);
+}
+
+#[test]
+fn matrix_reports_calibration_samples() {
+    let out = diff::run_matrix(&[2], &["dp".to_string()]).expect("matrix runs");
+    let cal = &out.calibration;
+    assert!(cal.n_samples > 0, "executed tasks must produce duration samples");
+    assert!(cal.rows.iter().any(|r| r.kind.starts_with("compute:")));
+    // Every row aggregates positive measured time and carries a ratio.
+    for r in &cal.rows {
+        assert!(r.n > 0);
+        assert!(r.measured_total >= 0.0);
+        assert!(r.ratio >= 0.0);
+    }
+    let j = out.to_json();
+    assert_eq!(j.get("all_passed").and_then(|v| v.as_bool()), Some(true));
+    assert!(j.get("calibration").and_then(|c| c.get("n_samples")).is_some());
+}

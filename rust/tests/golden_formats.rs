@@ -13,7 +13,8 @@ use superscaler::plans::{PlanKind, PlanSpec, SchedName, SchedSpec, StageSpec};
 use superscaler::schedule::ScheduleSpec;
 use superscaler::search::{Candidate, Fidelity, Metrics, Outcome, SearchReport};
 use superscaler::sim::TaskGraph;
-use superscaler::util::json;
+use superscaler::topo::{build_cluster, ClusterShapeError};
+use superscaler::util::{json, prop};
 
 /// A fully synthetic report with fixed values: one DES-rescored winner,
 /// one OOM grid plan, one build failure — every status path the table
@@ -163,6 +164,119 @@ fn sched_tokens_round_trip_through_report_labels() {
         assert_eq!(rendered_spec, &label, "spec column must carry the sched token verbatim");
         assert_eq!(PlanSpec::parse(rendered_spec).unwrap().sched, spec.sched);
     }
+}
+
+/// Combined-token label fuzz: the per-axis round-trips live next to the
+/// parser (`plans::spec`), but CSV consumers see labels that stack a
+/// `sched{...}` token on top of the topology-era hetero grammar — explicit
+/// per-stage layer counts (`l{n}`) and flag suffixes — in one string. Fuzz
+/// exactly those combined labels through `label() -> parse()`.
+#[test]
+fn prop_combined_sched_and_stage_layer_labels_round_trip() {
+    prop::check("combined-label-roundtrip", 300, |g| {
+        let pp = g.int(2, 6);
+        let micro = g.pow2(8).max(2);
+        let names = [
+            SchedName::Sync,
+            SchedName::OneFOneB,
+            SchedName::Interlaced,
+            SchedName::ZeroBubble,
+            SchedName::VShape,
+        ];
+        let sched = if g.bool() {
+            SchedSpec::Named(*g.rng.choose(&names))
+        } else {
+            SchedSpec::Explicit(g.rng.choose(&names).rows(pp, micro))
+        };
+        let spec = if g.bool() {
+            // Hetero: every stage carries an explicit `l{n}` layer count so
+            // the label exercises the topology-era stage grammar alongside
+            // the sched token.
+            let stages: Vec<StageSpec> = (0..pp)
+                .map(|_| {
+                    let mut st = if g.bool() {
+                        StageSpec::tp(g.pow2(4))
+                    } else {
+                        StageSpec::coshard(*g.rng.choose(&[2usize, 4]))
+                    };
+                    st.recompute = g.bool();
+                    st.offload = g.bool();
+                    st.layers = g.int(1, 7);
+                    st
+                })
+                .collect();
+            let mut s = PlanSpec::hetero_dp(g.pow2(4), stages, micro);
+            s.sched = Some(sched);
+            s
+        } else {
+            PlanSpec {
+                dp: g.pow2(4),
+                pp,
+                tp: g.pow2(4),
+                micro,
+                sched: Some(sched),
+                ..PlanSpec::new(PlanKind::Megatron)
+            }
+        };
+        let lbl = spec.label();
+        if !lbl.contains("sched{") {
+            return Err(format!("label '{lbl}' dropped the sched token"));
+        }
+        match PlanSpec::parse(&lbl) {
+            Ok(back) if back == spec => Ok(()),
+            Ok(back) => Err(format!("'{lbl}' parsed to {back:?}, wanted {spec:?}")),
+            Err(e) => Err(format!("'{lbl}' failed to parse: {e}")),
+        }
+    });
+}
+
+/// Device-mix cluster fuzz: random (gpus, servers, mix) shapes must either
+/// build a cluster whose device count matches, or fail with the typed
+/// `ClusterShapeError` the CLI renders — never panic. Aligned mixes always
+/// build; misaligned ones always yield the matching typed error.
+#[test]
+fn prop_device_mix_cluster_shapes_build_or_reject_typed() {
+    prop::check("device-mix-shapes", 300, |g| {
+        let kinds = ["v100", "a100", "h100"];
+        let gpus_per_server = *g.rng.choose(&[2usize, 4, 8]);
+        let n_servers = g.int(1, 5);
+        let gpus = gpus_per_server * n_servers;
+        // Assign each server row a kind; render the mix as kind:count runs.
+        let rows: Vec<&str> = (0..n_servers).map(|_| *g.rng.choose(&kinds)).collect();
+        let mut runs: Vec<(String, usize)> = Vec::new();
+        for k in &rows {
+            match runs.last_mut() {
+                Some((name, c)) if name == k => *c += gpus_per_server,
+                _ => runs.push((k.to_string(), gpus_per_server)),
+            }
+        }
+        let mix: String =
+            runs.iter().map(|(k, c)| format!("{k}:{c}")).collect::<Vec<_>>().join(",");
+        let c = build_cluster(gpus, Some(n_servers), "flat", Some(&mix))
+            .map_err(|e| format!("aligned mix '{mix}' at {gpus} gpus rejected: {e}"))?;
+        if c.num_gpus() != gpus {
+            return Err(format!("built {} devices, wanted {gpus}", c.num_gpus()));
+        }
+        // Perturbations hit the typed rejections, never a panic.
+        match build_cluster(gpus + gpus_per_server, Some(n_servers + 1), "flat", Some(&mix)) {
+            Err(ClusterShapeError::MixSumMismatch { .. }) => {}
+            other => return Err(format!("undersized mix: wanted MixSumMismatch, got {other:?}")),
+        }
+        if gpus_per_server > 1 {
+            let odd = format!("{}:{}", rows[0], gpus_per_server - 1);
+            match build_cluster(gpus, Some(n_servers), "flat", Some(&odd)) {
+                Err(ClusterShapeError::MixNotServerAligned { .. })
+                | Err(ClusterShapeError::MixSumMismatch { .. }) => {}
+                other => {
+                    return Err(format!("misaligned mix: wanted a typed error, got {other:?}"))
+                }
+            }
+        }
+        match build_cluster(gpus, Some(n_servers), "flat", Some("tpu:8")) {
+            Err(ClusterShapeError::BadDeviceMix(_)) => Ok(()),
+            other => Err(format!("unknown kind: wanted BadDeviceMix, got {other:?}")),
+        }
+    });
 }
 
 /// Tiny deterministic DES run: one compute task per server bridged by a
