@@ -259,6 +259,14 @@ impl Cluster {
         }
     }
 
+    /// Seconds to snapshot (or reload) `bytes` of device `d`'s state
+    /// to/from the host over its PCIe lane — the existing host-link cost
+    /// tier. The resilience layer ([`crate::fault`]) prices periodic
+    /// checkpoints and the restart reload phase with this.
+    pub fn checkpoint_time(&self, d: DeviceId, bytes: u64) -> f64 {
+        self.p2p_time(d, CPU_DEVICE, bytes)
+    }
+
     /// Bottleneck (bandwidth, latency) within a device group: IB if the
     /// group spans servers, NVLink otherwise. Inter-server collectives are
     /// constrained by whichever fabric hop is most shared by the group —

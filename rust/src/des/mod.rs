@@ -62,6 +62,42 @@
 //! the mutation cannot have perturbed and re-executes only the suffix —
 //! the incremental re-simulation that makes MCMC plan refinement
 //! ([`crate::search::refine`]) tractable.
+//!
+//! # Fault injection and recovery
+//!
+//! [`execute_faulted`] runs the same event loop under a resolved
+//! [`crate::fault::FaultPlan`]. A second, ordered queue of *control
+//! events* interleaves with task-finish events in global time order
+//! (control wins ties, so a kill at `t` aborts a task that would have
+//! finished at `t`). The control-event kinds:
+//!
+//! * **Kill / DeviceUp** — a device goes down; whatever occupies its
+//!   streams is aborted (a collective aborts for *every* participant,
+//!   like NCCL) and the elapsed work is counted as lost. The device
+//!   returns after `repair + checkpoint reload + replay` (replay covers
+//!   the time since the last checkpoint commit — the whole run so far if
+//!   checkpointing is off), and aborted tasks re-execute from scratch.
+//! * **LinkCut / LinkUp** — a fabric link goes down; every in-flight
+//!   transfer crossing it stalls (rate 0, route kept reserved — fat-tree
+//!   routes are unique, so there is nothing to reroute onto) and resumes
+//!   when all of its links are back. New transfers needing the link wait.
+//! * **SlowStart / SlowEnd** — a straggler window reprices the device's
+//!   in-flight and future compute by the degradation factor, through the
+//!   same remaining/rate mechanism transfers use.
+//! * **Ckpt / CkptDone** — a coordinated checkpoint freezes every stream
+//!   for the snapshot stall (slowest device's weights+optimizer transfer
+//!   to host, [`Cluster::checkpoint_time`]); the commit point becomes the
+//!   new replay origin for subsequent kills.
+//!
+//! The faulted run reports a [`FaultOutcome`] on
+//! [`DesReport::faults`]: lost work, checkpoint stall time, down time,
+//! longest recovery, and the event log for trace export. *Goodput* — the
+//! headline resilience metric ([`crate::fault::evaluate_resilience`]) —
+//! is the fault-free makespan divided by the faulted makespan: the
+//! fraction of faulted wall-clock spent on useful work. All fault state
+//! lives behind an `Option`, and with an empty fault plan the event loop
+//! takes the exact fault-free branches — no-fault timelines stay bitwise
+//! identical (pinned by the no-fault equivalence test).
 
 pub mod delta;
 pub mod trace;
@@ -108,6 +144,54 @@ pub struct DesReport {
     pub tflops_per_gpu: f64,
     pub comm_bytes: u64,
     pub oom: bool,
+    /// Fault-injection accounting — `Some` only for [`execute_faulted`]
+    /// runs (fault-free reports are unchanged).
+    pub faults: Option<FaultOutcome>,
+}
+
+/// What a faulted run lost and when: the resilience accounting
+/// [`crate::fault::evaluate_resilience`] turns into goodput/recovery
+/// metrics, plus the event log the Chrome-trace exporter renders as a
+/// fault lane.
+#[derive(Clone, Debug, Default)]
+pub struct FaultOutcome {
+    /// Seconds of in-flight work aborted by device kills.
+    pub lost_work: f64,
+    /// Seconds every stream spent frozen in checkpoint stalls.
+    pub ckpt_time: f64,
+    /// Longest single device outage (repair + reload + replay).
+    pub recovery_time: f64,
+    /// Summed device-seconds of downtime across all kills.
+    pub down_time: f64,
+    /// Device-kill events that fired (a rack loss counts each device).
+    pub n_kills: usize,
+    /// All fault events that fired (kills + outages + slowdowns).
+    pub n_faults: usize,
+    /// Chronological fault/checkpoint windows for trace export.
+    pub events: Vec<FaultTraceEvent>,
+}
+
+/// One fault or checkpoint window on the timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultTraceEvent {
+    pub at: f64,
+    pub until: f64,
+    /// The affected device; `None` for cluster-wide windows (link
+    /// outages, checkpoint freezes).
+    pub device: Option<DeviceId>,
+    pub kind: FaultTraceKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTraceKind {
+    /// Device down: kill through recovered.
+    Crash,
+    /// Link outage window.
+    LinkDown,
+    /// Straggler degradation window.
+    SlowStart,
+    /// Coordinated checkpoint freeze window.
+    Ckpt,
 }
 
 impl DesReport {
@@ -142,12 +226,95 @@ fn comm_stream(d: DeviceId) -> usize {
 
 /// An in-flight transfer's fair-sharing state. `remaining` is measured in
 /// *solo seconds* (the cost model's uncontended duration); contention
-/// scales the rate at which it drains, never the total work.
+/// scales the rate at which it drains, never the total work. The fault
+/// layer reuses the same mechanism for degraded compute (rate = straggler
+/// factor) and for stalled work (rate 0 while a link is cut or a
+/// checkpoint freeze is in force).
 #[derive(Clone, Debug)]
 struct Xfer {
     remaining: f64,
     rate: f64,
     last: f64,
+}
+
+/// A fault-injection control event (see the module doc). Ordered by the
+/// surrounding `(time bits, seq, Ctrl)` queue key; the payload indexes
+/// into [`FaultTables`] or names a slot / dense link directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Ctrl {
+    /// Kill event `i` of [`FaultTables::kills`] fires.
+    Kill(u32),
+    /// Device slot recovers.
+    DeviceUp(u32),
+    /// Outage `i` of [`FaultTables::outages`] begins.
+    LinkCut(u32),
+    /// Dense link comes back up.
+    LinkUp(u32),
+    /// Straggler window `i` of [`FaultTables::slows`] begins.
+    SlowStart(u32),
+    /// Straggler window on a device slot ends.
+    SlowEnd(u32),
+    /// Coordinated checkpoint begins (freezes every stream).
+    Ckpt,
+    /// Checkpoint commits; payload is the commit time's bits (the new
+    /// replay origin).
+    CkptDone(u64),
+}
+
+/// Static fault-injection tables, derived once from the resolved
+/// [`crate::fault::FaultPlan`] in [`Engine::with_faults`]: device kills
+/// mapped to stream slots, outages to dense link indices, plus the
+/// checkpoint cadence and per-slot snapshot costs.
+#[derive(Clone, Debug)]
+struct FaultTables {
+    /// `(at, victim slots, hardware repair secs)` per kill event.
+    kills: Vec<(f64, Vec<usize>, f64)>,
+    /// `(at, dense link, duration)` per link outage.
+    outages: Vec<(f64, usize, f64)>,
+    /// `(at, slot, factor, duration)` per straggler window.
+    slows: Vec<(f64, usize, f64, f64)>,
+    /// Checkpoint interval (0 = off).
+    ckpt_interval: f64,
+    /// Per-slot weights+optimizer snapshot seconds (the reload cost a
+    /// recovering device pays).
+    ckpt_secs: Vec<f64>,
+    /// The coordinated stall: max of `ckpt_secs`.
+    ckpt_stall: f64,
+}
+
+/// Mutable fault-injection state, carried inside [`EngineState`] so delta
+/// snapshots stay coherent. `None` on fault-free runs — every fault-path
+/// branch in the event loop is gated on it.
+#[derive(Clone, Debug)]
+struct FaultState {
+    /// Pending control events, ordered `(time bits, seq, kind)`.
+    ctrl: BTreeSet<(u64, u32, Ctrl)>,
+    ctrl_seq: u32,
+    /// Per-slot compute-rate multiplier (1.0 nominal).
+    degrade: Vec<f64>,
+    /// Per-slot recovery time; `NEG_INFINITY` = up.
+    down_until: Vec<f64>,
+    /// Per-dense-link outage end; `NEG_INFINITY` = up.
+    link_down: Vec<f64>,
+    /// Ready tasks blocked by a down device, cut link or freeze, keyed
+    /// `(is_compute, id)` like the stream waiter queues.
+    held: BTreeSet<(bool, TaskId)>,
+    /// Started tasks currently stalled at rate 0 (link cut / freeze).
+    paused: BTreeSet<TaskId>,
+    /// Checkpoint freeze in force until this time (`NEG_INFINITY` = none).
+    frozen_until: f64,
+    /// Last checkpoint commit — the replay origin for kills.
+    ckpt_last: f64,
+    outcome: FaultOutcome,
+}
+
+/// Inverse of [`dev_slot`]: slot 0 is the host, slot `s` is GPU `s - 1`.
+fn device_of_slot(s: usize) -> DeviceId {
+    if s == 0 {
+        CPU_DEVICE
+    } else {
+        s - 1
+    }
 }
 
 /// Every mutable value of one engine run — what the event loop reads and
@@ -184,6 +351,10 @@ pub(crate) struct EngineState {
     slot_stats: Vec<Option<DeviceStat>>,
     /// Finish events executed so far — the snapshot epoch coordinate.
     events: usize,
+    /// Fault-injection state; `None` on fault-free runs (every fault
+    /// branch in the loop is gated on it, keeping those runs bitwise
+    /// identical to the pre-fault engine).
+    faults: Option<FaultState>,
 }
 
 pub(crate) struct Engine<'a> {
@@ -199,6 +370,11 @@ pub(crate) struct Engine<'a> {
     links_of: Vec<Vec<usize>>,
     /// Device slots in use (`st.busy.len() / 2`).
     nslots: usize,
+    /// The [`LinkId`] → dense index registry behind `links_of`, kept so
+    /// fault-plan link outages can resolve to `link_active` slots.
+    link_index: BTreeMap<LinkId, usize>,
+    /// Static fault-injection tables; `None` on fault-free runs.
+    ftab: Option<FaultTables>,
     /// The snapshotable mutable state (see [`EngineState`]).
     st: EngineState,
 }
@@ -261,6 +437,8 @@ impl<'a> Engine<'a> {
             streams_of,
             links_of,
             nslots,
+            link_index,
+            ftab: None,
             st: EngineState {
                 indeg: tg.indeg.clone(),
                 start: vec![0.0; n],
@@ -277,8 +455,98 @@ impl<'a> Engine<'a> {
                 completed: 0,
                 slot_stats: vec![None; nslots],
                 events: 0,
+                faults: None,
             },
         }
+    }
+
+    /// [`Engine::new`] plus fault injection: lower the resolved
+    /// [`crate::fault::FaultPlan`] to dense tables (kills → stream slots,
+    /// outages → dense links; outages on links no task crosses are
+    /// dropped — there is nothing to stall) and seed the control-event
+    /// queue. Checkpoint reload costs come from the host-link tier
+    /// ([`Cluster::checkpoint_time`]) over each device's static
+    /// weights+optimizer bytes.
+    pub(crate) fn with_faults(
+        plan: &'a Plan,
+        cluster: &Cluster,
+        tg: &'a TaskGraph,
+        fp: &crate::fault::FaultPlan,
+    ) -> Engine<'a> {
+        let mut eng = Self::new(plan, cluster, tg);
+        let nslots = eng.nslots;
+        let mut ckpt_secs = vec![0.0f64; nslots];
+        for (&d, &bytes) in &plan.static_mem {
+            if d == CPU_DEVICE || dev_slot(d) >= nslots {
+                continue;
+            }
+            let grad = plan.static_grad_mem.get(&d).copied().unwrap_or(0);
+            ckpt_secs[dev_slot(d)] = cluster.checkpoint_time(d, bytes.saturating_sub(grad));
+        }
+        let ckpt_stall = ckpt_secs.iter().copied().fold(0.0, f64::max);
+        let kills: Vec<(f64, Vec<usize>, f64)> = fp
+            .kills
+            .iter()
+            .map(|k| {
+                let slots: Vec<usize> = k
+                    .devices
+                    .iter()
+                    .map(|&d| dev_slot(d))
+                    .filter(|&s| s > 0 && s < nslots)
+                    .collect();
+                (k.at, slots, k.repair)
+            })
+            .collect();
+        let outages: Vec<(f64, usize, f64)> = fp
+            .outages
+            .iter()
+            .filter_map(|o| eng.link_index.get(&o.link).map(|&l| (o.at, l, o.duration)))
+            .collect();
+        let slows: Vec<(f64, usize, f64, f64)> = fp
+            .slowdowns
+            .iter()
+            .map(|s| (s.at, dev_slot(s.device), s.factor, s.duration))
+            .filter(|&(_, slot, _, _)| slot > 0 && slot < nslots)
+            .collect();
+        let mut fs = FaultState {
+            ctrl: BTreeSet::new(),
+            ctrl_seq: 0,
+            degrade: vec![1.0; nslots],
+            down_until: vec![f64::NEG_INFINITY; nslots],
+            link_down: vec![f64::NEG_INFINITY; eng.st.link_active.len()],
+            held: BTreeSet::new(),
+            paused: BTreeSet::new(),
+            frozen_until: f64::NEG_INFINITY,
+            ckpt_last: 0.0,
+            outcome: FaultOutcome::default(),
+        };
+        let mut seeds: Vec<(f64, Ctrl)> = Vec::new();
+        for (i, k) in kills.iter().enumerate() {
+            seeds.push((k.0, Ctrl::Kill(i as u32)));
+        }
+        for (i, o) in outages.iter().enumerate() {
+            seeds.push((o.0, Ctrl::LinkCut(i as u32)));
+        }
+        for (i, s) in slows.iter().enumerate() {
+            seeds.push((s.0, Ctrl::SlowStart(i as u32)));
+        }
+        if fp.ckpt_interval > 0.0 {
+            seeds.push((fp.ckpt_interval, Ctrl::Ckpt));
+        }
+        for (at, c) in seeds {
+            fs.ctrl_seq += 1;
+            fs.ctrl.insert((at.to_bits(), fs.ctrl_seq, c));
+        }
+        eng.ftab = Some(FaultTables {
+            kills,
+            outages,
+            slows,
+            ckpt_interval: fp.ckpt_interval,
+            ckpt_secs,
+            ckpt_stall,
+        });
+        eng.st.faults = Some(fs);
+        eng
     }
 
     /// Dispatch the initial ready set (indegree-0 tasks) at time 0, in
@@ -295,18 +563,422 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Execute the next finish event, skipping stale re-pricings. Returns
-    /// false once the heap drains (the run is over).
+    /// Execute the next event, skipping stale re-pricings. Returns false
+    /// once the run is over. On fault-free runs this is a single heap pop;
+    /// with faults active the control queue is merged in, control events
+    /// winning time ties (a crash at `t` kills a task that would have
+    /// finished at exactly `t`).
     pub(crate) fn step(&mut self) -> bool {
-        while let Some(Reverse((time_bits, _, t, v))) = self.st.heap.pop() {
-            if v != self.st.version[t] || self.st.done[t] {
-                continue; // stale re-pricing
+        if self.ftab.is_none() {
+            while let Some(Reverse((time_bits, _, t, v))) = self.st.heap.pop() {
+                if v != self.st.version[t] || self.st.done[t] {
+                    continue; // stale re-pricing
+                }
+                let now = f64::from_bits(time_bits);
+                self.finish_task(t, now);
+                return true;
             }
-            let now = f64::from_bits(time_bits);
-            self.finish_task(t, now);
-            return true;
+            return false;
         }
-        false
+        loop {
+            // Faulted runs stop at task completion, not queue exhaustion:
+            // the periodic checkpoint event re-arms itself forever.
+            if self.st.completed == self.plan.tasks.len() {
+                return false;
+            }
+            let next_fin = self.peek_valid_finish();
+            let next_ctrl = self.st.faults.as_ref().and_then(|f| f.ctrl.first().copied());
+            match (next_ctrl, next_fin) {
+                (None, None) => return false,
+                (None, Some(_)) => {
+                    self.pop_finish();
+                    return true;
+                }
+                (Some((cb, _, _)), Some(fb)) if cb > fb => {
+                    self.pop_finish();
+                    return true;
+                }
+                (Some(c), _) => {
+                    self.st.faults.as_mut().expect("faults set").ctrl.remove(&c);
+                    self.run_ctrl(f64::from_bits(c.0), c.2);
+                }
+            }
+        }
+    }
+
+    /// Pop stale finish events off the heap top; return the time bits of
+    /// the first live one (left on the heap), if any.
+    fn peek_valid_finish(&mut self) -> Option<u64> {
+        while let Some(&Reverse((time_bits, _, t, v))) = self.st.heap.peek() {
+            if v != self.st.version[t] || self.st.done[t] {
+                self.st.heap.pop();
+                continue;
+            }
+            return Some(time_bits);
+        }
+        None
+    }
+
+    /// Execute the (already-validated) finish event at the heap top.
+    fn pop_finish(&mut self) {
+        let Reverse((time_bits, _, t, _)) =
+            self.st.heap.pop().expect("peek_valid_finish found an event");
+        let now = f64::from_bits(time_bits);
+        self.finish_task(t, now);
+    }
+
+    fn run_ctrl(&mut self, now: f64, c: Ctrl) {
+        match c {
+            Ctrl::Kill(i) => self.ctrl_kill(i as usize, now),
+            Ctrl::DeviceUp(s) => self.ctrl_device_up(s as usize, now),
+            Ctrl::LinkCut(i) => self.ctrl_link_cut(i as usize, now),
+            Ctrl::LinkUp(l) => self.ctrl_link_up(l as usize, now),
+            Ctrl::SlowStart(i) => self.ctrl_slow_start(i as usize, now),
+            Ctrl::SlowEnd(s) => self.ctrl_slow_end(s as usize, now),
+            Ctrl::Ckpt => self.ctrl_ckpt(now),
+            Ctrl::CkptDone(t0) => self.ctrl_ckpt_done(f64::from_bits(t0), now),
+        }
+    }
+
+    /// Fail the devices of kill event `i`: in-flight tasks on their
+    /// streams are aborted (their progress is lost work), the devices stay
+    /// down through repair + checkpoint reload + replay of everything
+    /// since the last checkpoint, and a [`Ctrl::DeviceUp`] marks the end.
+    fn ctrl_kill(&mut self, i: usize, now: f64) {
+        let (slots, repair) = {
+            let k = &self.ftab.as_ref().expect("ftab set").kills[i];
+            (k.1.clone(), k.2)
+        };
+        let ckpt_secs: Vec<f64> =
+            slots.iter().map(|&s| self.ftab.as_ref().expect("ftab set").ckpt_secs[s]).collect();
+        let mut downed: Vec<usize> = Vec::new();
+        {
+            let fs = self.st.faults.as_ref().expect("faults set");
+            for &s in &slots {
+                if !(now < fs.down_until[s]) {
+                    downed.push(s);
+                }
+            }
+        }
+        if downed.is_empty() {
+            return;
+        }
+        let mut victims: BTreeSet<TaskId> = BTreeSet::new();
+        let mut freed: BTreeSet<usize> = BTreeSet::new();
+        for (j, &s) in slots.iter().enumerate() {
+            if !downed.contains(&s) {
+                continue;
+            }
+            let up_at = {
+                let fs = self.st.faults.as_mut().expect("faults set");
+                let replay = (now - fs.ckpt_last).max(0.0);
+                let up_at = now + repair + ckpt_secs[j] + replay;
+                fs.down_until[s] = up_at;
+                fs.outcome.n_kills += 1;
+                fs.outcome.n_faults += 1;
+                fs.outcome.down_time += up_at - now;
+                fs.outcome.recovery_time = fs.outcome.recovery_time.max(up_at - now);
+                fs.outcome.events.push(FaultTraceEvent {
+                    at: now,
+                    until: up_at,
+                    device: Some(device_of_slot(s)),
+                    kind: FaultTraceKind::Crash,
+                });
+                up_at
+            };
+            self.push_ctrl(up_at, Ctrl::DeviceUp(s as u32));
+            for &stream in &[2 * s, 2 * s + 1] {
+                if let Some(u) = self.st.busy[stream] {
+                    victims.insert(u);
+                }
+                freed.insert(stream);
+            }
+        }
+        for u in victims {
+            let lost = (now - self.st.start[u]).max(0.0);
+            self.st.started[u] = false;
+            self.st.version[u] += 1;
+            for &stream in &self.streams_of[u] {
+                self.st.busy[stream] = None;
+                freed.insert(stream);
+            }
+            if self.st.xfers[u].take().is_some() {
+                for &l in &self.links_of[u] {
+                    self.st.link_active[l].remove(&u);
+                }
+                self.reprice_sharers(u, now);
+            }
+            let key = (!self.plan.tasks[u].is_comm(), u);
+            let fs = self.st.faults.as_mut().expect("faults set");
+            fs.paused.remove(&u);
+            fs.held.insert(key);
+            fs.outcome.lost_work += lost;
+        }
+        // Waiters parked on the freed streams would sleep forever without a
+        // finish event to wake them — re-dispatch (they will be re-held if
+        // their own devices are the ones down).
+        let mut cands: BTreeSet<(bool, TaskId)> = BTreeSet::new();
+        for s in freed {
+            cands.extend(std::mem::take(&mut self.st.waiters[s]));
+        }
+        for (_, c) in cands {
+            if !self.st.done[c] && !self.st.started[c] {
+                self.try_start(c, now);
+            }
+        }
+    }
+
+    fn ctrl_device_up(&mut self, slot: usize, now: f64) {
+        self.st.faults.as_mut().expect("faults set").down_until[slot] = f64::NEG_INFINITY;
+        self.drain_held(now);
+    }
+
+    /// Cut dense link `i`'s [`LinkId`]: in-flight transfers crossing it
+    /// freeze (rate 0) until the matching [`Ctrl::LinkUp`].
+    fn ctrl_link_cut(&mut self, i: usize, now: f64) {
+        let (l, dur) = {
+            let o = &self.ftab.as_ref().expect("ftab set").outages[i];
+            (o.1, o.2)
+        };
+        let until = now + dur;
+        {
+            let fs = self.st.faults.as_mut().expect("faults set");
+            fs.link_down[l] = fs.link_down[l].max(until);
+            fs.outcome.n_faults += 1;
+            fs.outcome.events.push(FaultTraceEvent {
+                at: now,
+                until,
+                device: None,
+                kind: FaultTraceKind::LinkDown,
+            });
+        }
+        self.push_ctrl(until, Ctrl::LinkUp(l as u32));
+        let active: Vec<TaskId> = self.st.link_active[l].iter().copied().collect();
+        for u in active {
+            let already = self.st.faults.as_ref().expect("faults set").paused.contains(&u);
+            if !already {
+                self.pause_task(u, now);
+            }
+        }
+    }
+
+    fn ctrl_link_up(&mut self, l: usize, now: f64) {
+        self.st.faults.as_mut().expect("faults set").link_down[l] = f64::NEG_INFINITY;
+        let active: Vec<TaskId> = self.st.link_active[l].iter().copied().collect();
+        for u in active {
+            let resumable = {
+                let fs = self.st.faults.as_ref().expect("faults set");
+                fs.paused.contains(&u)
+                    && now >= fs.frozen_until
+                    && self.links_of[u].iter().all(|&l2| now >= fs.link_down[l2])
+            };
+            if resumable {
+                self.resume_task(u, now);
+            }
+        }
+        self.drain_held(now);
+    }
+
+    /// Start straggler window `i`: the device's compute runs at `factor`
+    /// speed until the matching [`Ctrl::SlowEnd`]. Overlapping windows on
+    /// one device are last-writer-wins (the end event restores 1.0).
+    fn ctrl_slow_start(&mut self, i: usize, now: f64) {
+        let (slot, factor, dur) = {
+            let s = &self.ftab.as_ref().expect("ftab set").slows[i];
+            (s.1, s.2, s.3)
+        };
+        let until = now + dur;
+        {
+            let fs = self.st.faults.as_mut().expect("faults set");
+            fs.degrade[slot] = factor;
+            fs.outcome.n_faults += 1;
+            fs.outcome.events.push(FaultTraceEvent {
+                at: now,
+                until,
+                device: Some(device_of_slot(slot)),
+                kind: FaultTraceKind::SlowStart,
+            });
+        }
+        self.push_ctrl(until, Ctrl::SlowEnd(slot as u32));
+        self.reprice_compute(slot, now);
+    }
+
+    fn ctrl_slow_end(&mut self, slot: usize, now: f64) {
+        self.st.faults.as_mut().expect("faults set").degrade[slot] = 1.0;
+        self.reprice_compute(slot, now);
+    }
+
+    /// Take a global checkpoint: every in-flight task pauses for the
+    /// stall (the widest device's host-link writeback), after which
+    /// `ckpt_last` commits to the checkpoint *start* time and the next
+    /// periodic checkpoint is armed.
+    fn ctrl_ckpt(&mut self, now: f64) {
+        let (stall, interval) = {
+            let ft = self.ftab.as_ref().expect("ftab set");
+            (ft.ckpt_stall, ft.ckpt_interval)
+        };
+        if interval <= 0.0 {
+            return;
+        }
+        if stall <= 0.0 {
+            // Nothing resident to write back — a free checkpoint.
+            self.st.faults.as_mut().expect("faults set").ckpt_last = now;
+            self.push_ctrl(now + interval, Ctrl::Ckpt);
+            return;
+        }
+        let until = now + stall;
+        {
+            let fs = self.st.faults.as_mut().expect("faults set");
+            fs.frozen_until = until;
+            fs.outcome.ckpt_time += stall;
+            fs.outcome.events.push(FaultTraceEvent {
+                at: now,
+                until,
+                device: None,
+                kind: FaultTraceKind::Ckpt,
+            });
+        }
+        self.push_ctrl(until, Ctrl::CkptDone(now.to_bits()));
+        self.push_ctrl(until + interval, Ctrl::Ckpt);
+        let mut inflight: BTreeSet<TaskId> = BTreeSet::new();
+        for s in 0..self.st.busy.len() {
+            if let Some(u) = self.st.busy[s] {
+                inflight.insert(u);
+            }
+        }
+        for u in inflight {
+            let already = self.st.faults.as_ref().expect("faults set").paused.contains(&u);
+            if !already {
+                self.pause_task(u, now);
+            }
+        }
+    }
+
+    fn ctrl_ckpt_done(&mut self, t0: f64, now: f64) {
+        {
+            let fs = self.st.faults.as_mut().expect("faults set");
+            fs.frozen_until = f64::NEG_INFINITY;
+            fs.ckpt_last = t0;
+        }
+        let paused: Vec<TaskId> = {
+            let fs = self.st.faults.as_ref().expect("faults set");
+            fs.paused.iter().copied().collect()
+        };
+        for u in paused {
+            let links_up = {
+                let fs = self.st.faults.as_ref().expect("faults set");
+                self.links_of[u].iter().all(|&l| now >= fs.link_down[l])
+            };
+            if links_up {
+                self.resume_task(u, now);
+            }
+        }
+        self.drain_held(now);
+    }
+
+    fn push_ctrl(&mut self, time: f64, c: Ctrl) {
+        let fs = self.st.faults.as_mut().expect("faults set");
+        fs.ctrl_seq += 1;
+        fs.ctrl.insert((time.to_bits(), fs.ctrl_seq, c));
+    }
+
+    /// Re-dispatch every task held back by a down device / cut link /
+    /// checkpoint freeze; still-blocked ones re-insert themselves.
+    fn drain_held(&mut self, now: f64) {
+        let held = std::mem::take(&mut self.st.faults.as_mut().expect("faults set").held);
+        for (_, t) in held {
+            if !self.st.done[t] && !self.st.started[t] {
+                self.try_start(t, now);
+            }
+        }
+    }
+
+    /// Freeze in-flight task `u` at `now`: drain its progress into an
+    /// [`Xfer`] (creating one for compute tasks) and set rate 0 so no
+    /// finish event fires until [`Engine::resume_task`].
+    fn pause_task(&mut self, u: TaskId, now: f64) {
+        {
+            let fs = self.st.faults.as_mut().expect("faults set");
+            if !fs.paused.insert(u) {
+                return;
+            }
+        }
+        match self.st.xfers[u].as_mut() {
+            Some(x) => {
+                x.remaining -= (now - x.last) * x.rate;
+                x.remaining = x.remaining.max(0.0);
+                x.last = now;
+                x.rate = 0.0;
+            }
+            None => {
+                let dur = self.plan.tasks[u].duration;
+                let elapsed = (now - self.st.start[u]).max(0.0);
+                self.st.xfers[u] =
+                    Some(Xfer { remaining: (dur - elapsed).max(0.0), rate: 0.0, last: now });
+            }
+        }
+        self.st.version[u] += 1; // invalidate the pending finish event
+    }
+
+    fn resume_task(&mut self, u: TaskId, now: f64) {
+        let rate = if self.links_of[u].is_empty() { self.degrade_rate(u) } else { self.rate_of(u) };
+        let remaining = {
+            let x = self.st.xfers[u].as_mut().expect("paused task has drained state");
+            x.last = now;
+            x.rate = rate;
+            x.remaining
+        };
+        self.st.version[u] += 1;
+        self.push_finish(now + remaining / rate, u);
+        self.st.faults.as_mut().expect("faults set").paused.remove(&u);
+    }
+
+    /// Re-price the compute task running on `slot` (if any) after its
+    /// device's degradation factor changed.
+    fn reprice_compute(&mut self, slot: usize, now: f64) {
+        let Some(u) = self.st.busy[2 * slot] else { return };
+        if !self.links_of[u].is_empty() {
+            return; // link-crossing transfer: degradation targets compute
+        }
+        if self.st.faults.as_ref().expect("faults set").paused.contains(&u) {
+            return; // resume path re-reads the degradation factor
+        }
+        let rate = self.degrade_rate(u);
+        match self.st.xfers[u].as_mut() {
+            Some(x) => {
+                x.remaining -= (now - x.last) * x.rate;
+                x.remaining = x.remaining.max(0.0);
+                x.last = now;
+                if rate == x.rate {
+                    return;
+                }
+                x.rate = rate;
+            }
+            None => {
+                if rate == 1.0 {
+                    return;
+                }
+                let dur = self.plan.tasks[u].duration;
+                let elapsed = (now - self.st.start[u]).max(0.0);
+                self.st.xfers[u] = Some(Xfer { remaining: (dur - elapsed).max(0.0), rate, last: now });
+            }
+        }
+        let remaining = self.st.xfers[u].as_ref().expect("just set").remaining;
+        self.st.version[u] += 1;
+        self.push_finish(now + remaining / rate, u);
+    }
+
+    /// Compute-speed multiplier for task `u`: the slowest degradation
+    /// factor among its devices (1.0 when faults are off).
+    fn degrade_rate(&self, u: TaskId) -> f64 {
+        let Some(fs) = self.st.faults.as_ref() else { return 1.0 };
+        let mut rate: f64 = 1.0;
+        for &d in &self.devices[u] {
+            if d != CPU_DEVICE {
+                rate = rate.min(fs.degrade[dev_slot(d)]);
+            }
+        }
+        rate
     }
 
     pub(crate) fn run(&mut self) {
@@ -341,6 +1013,9 @@ impl<'a> Engine<'a> {
         for u in affected {
             let new_rate = self.rate_of(u);
             let x = self.st.xfers[u].as_mut().expect("active transfer has state");
+            if x.rate == 0.0 {
+                continue; // paused by a fault — resume_task re-prices it
+            }
             if new_rate == x.rate {
                 continue;
             }
@@ -359,6 +1034,21 @@ impl<'a> Engine<'a> {
     fn try_start(&mut self, t: TaskId, now: f64) -> bool {
         if self.st.started[t] {
             return true;
+        }
+        if self.st.faults.is_some() {
+            let barred = {
+                let fs = self.st.faults.as_ref().expect("faults set");
+                now < fs.frozen_until
+                    || self.devices[t]
+                        .iter()
+                        .any(|&d| d != CPU_DEVICE && now < fs.down_until[dev_slot(d)])
+                    || self.links_of[t].iter().any(|&l| now < fs.link_down[l])
+            };
+            if barred {
+                let key = (!self.plan.tasks[t].is_comm(), t);
+                self.st.faults.as_mut().expect("faults set").held.insert(key);
+                return false;
+            }
         }
         let blocked: Vec<usize> = self.streams_of[t]
             .iter()
@@ -380,8 +1070,16 @@ impl<'a> Engine<'a> {
         let dur = self.plan.tasks[t].duration;
         self.st.version[t] += 1;
         if self.links_of[t].is_empty() {
-            // Compute, or link-free local communication: fixed duration.
-            self.push_finish(now + dur, t);
+            // Compute, or link-free local communication: fixed duration
+            // (stretched on straggler devices via an [`Xfer`] so later
+            // degradation changes can re-price mid-flight).
+            let rate = self.degrade_rate(t);
+            if rate < 1.0 {
+                self.st.xfers[t] = Some(Xfer { remaining: dur, rate, last: now });
+                self.push_finish(now + dur / rate, t);
+            } else {
+                self.push_finish(now + dur, t);
+            }
         } else {
             for &l in &self.links_of[t] {
                 self.st.link_active[l].insert(t);
@@ -541,6 +1239,7 @@ impl<'a> Engine<'a> {
             },
             comm_bytes: plan.comm_bytes,
             oom,
+            faults: None,
         }
     }
 }
@@ -552,6 +1251,26 @@ pub fn execute(g: &Graph, plan: &Plan, cluster: &Cluster, tg: &TaskGraph) -> Des
     eng.seed();
     eng.run();
     eng.finalize(g, cluster)
+}
+
+/// [`execute`] under a resolved fault plan: crashes, outages, stragglers
+/// and periodic checkpoints are interleaved with the plan's own events,
+/// and the report carries the [`FaultOutcome`] accounting. With an empty
+/// plan ([`crate::fault::FaultPlan::default`]) the timeline is bitwise
+/// identical to [`execute`]'s.
+pub fn execute_faulted(
+    g: &Graph,
+    plan: &Plan,
+    cluster: &Cluster,
+    tg: &TaskGraph,
+    fp: &crate::fault::FaultPlan,
+) -> DesReport {
+    let mut eng = Engine::with_faults(plan, cluster, tg, fp);
+    eng.seed();
+    eng.run();
+    let mut rep = eng.finalize(g, cluster);
+    rep.faults = eng.st.faults.take().map(|f| f.outcome);
+    rep
 }
 
 /// Discrete-event execution of one iteration of `plan`, sharing the list
@@ -715,5 +1434,110 @@ mod tests {
         let r = execute(&dummy_graph(2), &plan, &c, &tg);
         assert!((r.spans[0].finish - 3.0).abs() < 1e-9, "t0 finish {}", r.spans[0].finish);
         assert!((r.spans[2].finish - 4.0).abs() < 1e-9, "t2 finish {}", r.spans[2].finish);
+    }
+
+    // ---- fault injection ----
+
+    use crate::fault::{FaultPlan, KillEvent, OutageEvent, SlowEvent};
+
+    #[test]
+    fn crash_restarts_the_task_after_repair_and_replay() {
+        // Compute of 1s on device 0; crash at 0.5 with 0.1s repair, no
+        // checkpoints. Replay = time since t=0 (the implicit last
+        // checkpoint) = 0.5, so the device is back at 0.5+0.1+0.5 = 1.1
+        // and the task restarts from scratch: makespan 2.1.
+        let c = Cluster::v100(8);
+        let mut plan = Plan::default();
+        plan.tasks.push(compute_task(0, 0, 1.0, vec![]));
+        let tg = TaskGraph::of_plan(&plan);
+        let fp = FaultPlan {
+            kills: vec![KillEvent { at: 0.5, devices: vec![0], repair: 0.1 }],
+            ..Default::default()
+        };
+        let r = execute_faulted(&dummy_graph(1), &plan, &c, &tg, &fp);
+        assert!((r.makespan - 2.1).abs() < 1e-9, "makespan {}", r.makespan);
+        let f = r.faults.expect("faulted run reports an outcome");
+        assert_eq!(f.n_kills, 1);
+        assert!((f.lost_work - 0.5).abs() < 1e-9, "lost_work {}", f.lost_work);
+        assert!((f.recovery_time - 0.6).abs() < 1e-9, "recovery {}", f.recovery_time);
+        assert_eq!(f.events.len(), 1);
+        assert_eq!(f.events[0].kind, FaultTraceKind::Crash);
+    }
+
+    #[test]
+    fn straggler_stretches_compute_by_the_slow_factor() {
+        // 1s compute; device 0 runs at 0.5x from t=0.2. 0.2s done at full
+        // speed, the remaining 0.8 at half rate: finish at 0.2+1.6 = 1.8.
+        let c = Cluster::v100(8);
+        let mut plan = Plan::default();
+        plan.tasks.push(compute_task(0, 0, 1.0, vec![]));
+        let tg = TaskGraph::of_plan(&plan);
+        let fp = FaultPlan {
+            slowdowns: vec![SlowEvent { at: 0.2, device: 0, factor: 0.5, duration: 2.0 }],
+            ..Default::default()
+        };
+        let r = execute_faulted(&dummy_graph(1), &plan, &c, &tg, &fp);
+        assert!((r.makespan - 1.8).abs() < 1e-9, "makespan {}", r.makespan);
+        let f = r.faults.expect("outcome");
+        assert_eq!((f.n_kills, f.n_faults), (0, 1));
+    }
+
+    #[test]
+    fn link_outage_stalls_the_transfer_for_its_duration() {
+        // Cross-server transfer of duration d; its source NIC goes dark
+        // over [0.25d, 0.75d]. Progress freezes for 0.5d: finish at 1.5d.
+        let c = Cluster::v100(16);
+        let d = c.p2p_time(0, 8, 1 << 20);
+        let mut plan = Plan::default();
+        plan.tasks.push(p2p_task(0, 0, 8, d, vec![]));
+        let tg = TaskGraph::of_plan(&plan);
+        let fp = FaultPlan {
+            outages: vec![OutageEvent { at: 0.25 * d, link: LinkId::Nic(0), duration: 0.5 * d }],
+            ..Default::default()
+        };
+        let r = execute_faulted(&Graph::new(), &plan, &c, &tg, &fp);
+        assert!((r.makespan - 1.5 * d).abs() < 1e-9 * d, "makespan {} want {}", r.makespan, 1.5 * d);
+    }
+
+    #[test]
+    fn periodic_checkpoint_freezes_and_charges_the_stall() {
+        // 1s compute on device 0 holding 1 MiB of static state; one
+        // checkpoint fires at 0.6 and stalls everything for the host
+        // writeback time s: makespan 1.0 + s, ckpt_time == s.
+        let c = Cluster::v100(8);
+        let mut plan = Plan::default();
+        plan.tasks.push(compute_task(0, 0, 1.0, vec![]));
+        plan.static_mem.insert(0, 1 << 20);
+        let s = c.checkpoint_time(0, 1 << 20);
+        assert!(s > 0.0);
+        let tg = TaskGraph::of_plan(&plan);
+        let fp = FaultPlan { ckpt_interval: 0.6, ..Default::default() };
+        let r = execute_faulted(&dummy_graph(1), &plan, &c, &tg, &fp);
+        assert!((r.makespan - (1.0 + s)).abs() < 1e-9, "makespan {} want {}", r.makespan, 1.0 + s);
+        let f = r.faults.expect("outcome");
+        assert!((f.ckpt_time - s).abs() < 1e-12, "ckpt_time {} want {}", f.ckpt_time, s);
+        assert_eq!(f.events.len(), 1);
+        assert_eq!(f.events[0].kind, FaultTraceKind::Ckpt);
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bitwise_identical_to_the_plain_engine() {
+        // The staggered-contention plan exercises fair-share repricing;
+        // an empty fault plan must reproduce its timeline bit for bit.
+        let c = Cluster::v100(16);
+        let mut plan = Plan::default();
+        plan.tasks.push(p2p_task(0, 0, 8, 2.0, vec![]));
+        plan.tasks.push(compute_task(1, 2, 1.0, vec![]));
+        plan.tasks.push(p2p_task(2, 1, 9, 2.0, vec![1]));
+        let tg = TaskGraph::of_plan(&plan);
+        let base = execute(&dummy_graph(2), &plan, &c, &tg);
+        let faulted = execute_faulted(&dummy_graph(2), &plan, &c, &tg, &FaultPlan::default());
+        assert_eq!(base.makespan.to_bits(), faulted.makespan.to_bits());
+        for (a, b) in base.spans.iter().zip(faulted.spans.iter()) {
+            assert_eq!(a.start.to_bits(), b.start.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+        let f = faulted.faults.expect("outcome present even when empty");
+        assert_eq!((f.n_kills, f.n_faults, f.events.len()), (0, 0, 0));
     }
 }

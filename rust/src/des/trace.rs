@@ -6,8 +6,14 @@
 //! device, thread 0 = compute stream, thread 1 = communication stream,
 //! complete (`ph: "X"`) events per task span, and a `resident bytes`
 //! counter track per device carrying the time-resolved memory profile.
+//!
+//! Faulted runs ([`crate::des::execute_faulted`]) add a synthetic
+//! `faults` process (pid [`FAULT_PID`]) with one span per injected
+//! event — crash/repair windows, link outages, straggler windows,
+//! checkpoint stalls — plus an instant marker at each recovery point.
+//! Fault-free reports emit byte-identical traces to the pre-fault format.
 
-use super::DesReport;
+use super::{DesReport, FaultTraceKind};
 use crate::materialize::Plan;
 use crate::schedule::{DeviceId, CPU_DEVICE};
 use crate::util::json::{self, Value};
@@ -21,6 +27,9 @@ fn pid_of(d: DeviceId) -> usize {
         d + 1
     }
 }
+
+/// Trace pid of the synthetic fault lane — far above any device pid.
+pub const FAULT_PID: usize = 9999;
 
 fn device_name(d: DeviceId) -> String {
     if d == CPU_DEVICE {
@@ -68,6 +77,49 @@ pub fn chrome_trace(report: &DesReport, plan: &Plan) -> String {
                 ("pid", pid_of(d).into()),
                 ("tid", tid.into()),
             ]));
+        }
+    }
+    // Fault lane: one span per injected event, an instant at each
+    // recovery point. Absent entirely on fault-free reports, keeping
+    // their traces byte-identical to the pre-fault format.
+    if let Some(f) = &report.faults {
+        if !f.events.is_empty() {
+            events.push(Value::obj([
+                ("name", "process_name".into()),
+                ("ph", "M".into()),
+                ("pid", FAULT_PID.into()),
+                ("args", Value::obj([("name", "faults".into())])),
+            ]));
+            for ev in &f.events {
+                let (name, cat) = match ev.kind {
+                    FaultTraceKind::Crash => ("crash", "fault"),
+                    FaultTraceKind::LinkDown => ("link down", "fault"),
+                    FaultTraceKind::SlowStart => ("straggler", "fault"),
+                    FaultTraceKind::Ckpt => ("checkpoint", "ckpt"),
+                };
+                let label = match ev.device {
+                    Some(d) => format!("{name}: {}", device_name(d)),
+                    None => name.to_string(),
+                };
+                events.push(Value::obj([
+                    ("name", Value::Str(label)),
+                    ("cat", cat.into()),
+                    ("ph", "X".into()),
+                    ("ts", (ev.at * us).into()),
+                    ("dur", ((ev.until - ev.at) * us).into()),
+                    ("pid", FAULT_PID.into()),
+                    ("tid", 0usize.into()),
+                ]));
+                events.push(Value::obj([
+                    ("name", "recovered".into()),
+                    ("cat", cat.into()),
+                    ("ph", "i".into()),
+                    ("ts", (ev.until * us).into()),
+                    ("pid", FAULT_PID.into()),
+                    ("tid", 0usize.into()),
+                    ("s", "p".into()),
+                ]));
+            }
         }
     }
     // Per-device resident-memory counter track.

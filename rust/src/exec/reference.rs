@@ -47,9 +47,15 @@ use crate::trans::autograd::grad_name;
 use crate::util::pool::GenBarrier;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// How long a device thread may sit on the dependency condvar before the
+/// run is declared wedged. Generous: real reference-tier tasks finish in
+/// milliseconds, so half a minute of no progress is a scheduling bug
+/// (missing producer, cross-device cycle), not a slow kernel.
+pub const DEADLOCK_TIMEOUT_SECS: f64 = 30.0;
 
 /// Why a plan cannot be executed by the reference tier.
 #[derive(Debug, Clone)]
@@ -59,6 +65,11 @@ pub enum ExecError {
     Unsupported { task: String, what: String },
     /// The plan is internally inconsistent (cyclic, unresolvable regions).
     BadPlan(String),
+    /// A device thread waited past [`DEADLOCK_TIMEOUT_SECS`] for a
+    /// dependency that never completed. Names the stuck device and task so
+    /// the wedge is diagnosable from the error alone — previously this
+    /// hung `verify-exec` forever on the condvar.
+    DeadlockSuspected { device: DeviceId, task: String },
 }
 
 impl std::fmt::Display for ExecError {
@@ -68,6 +79,11 @@ impl std::fmt::Display for ExecError {
                 write!(f, "unsupported by reference executor: {what} (task {task})")
             }
             ExecError::BadPlan(why) => write!(f, "bad plan: {why}"),
+            ExecError::DeadlockSuspected { device, task } => write!(
+                f,
+                "suspected deadlock: device {device} made no progress for {DEADLOCK_TIMEOUT_SECS}s \
+                 waiting on dependencies of task {task}"
+            ),
         }
     }
 }
@@ -735,14 +751,50 @@ struct Shared<'a> {
     done: Mutex<Vec<bool>>,
     cv: Condvar,
     start: Arc<GenBarrier>,
+    /// Set by the first thread that times out (or errors): every other
+    /// thread still parked on the condvar bails out on its next wake
+    /// instead of waiting for dependencies that will never arrive.
+    abort: AtomicBool,
+}
+
+/// The timeout-guarded dependency wait, factored free of [`Shared`]'s
+/// borrowed plan state so the timeout path is unit-testable. `Err(())`
+/// means no progress for `timeout` seconds (or a peer aborted first);
+/// the caller attaches device/task identity.
+fn wait_until_done(
+    done: &Mutex<Vec<bool>>,
+    cv: &Condvar,
+    abort: &AtomicBool,
+    deps: &[TaskId],
+    timeout: f64,
+) -> Result<(), ()> {
+    let mut d = done.lock().unwrap();
+    let t0 = Instant::now();
+    while !deps.iter().all(|&t| d[t]) {
+        if abort.load(Ordering::SeqCst) {
+            return Err(());
+        }
+        // Chunked waits so a lost notification cannot wedge the thread
+        // past the deadline either.
+        let (guard, _) = cv.wait_timeout(d, Duration::from_millis(50)).unwrap();
+        d = guard;
+        if t0.elapsed().as_secs_f64() > timeout {
+            abort.store(true, Ordering::SeqCst);
+            cv.notify_all();
+            return Err(());
+        }
+    }
+    Ok(())
 }
 
 impl Shared<'_> {
-    fn wait_deps(&self, deps: &[TaskId]) {
-        let mut d = self.done.lock().unwrap();
-        while !deps.iter().all(|&t| d[t]) {
-            d = self.cv.wait(d).unwrap();
-        }
+    fn wait_deps(&self, dev: DeviceId, t: TaskId) -> Result<(), ExecError> {
+        let task = &self.plan.tasks[t];
+        wait_until_done(&self.done, &self.cv, &self.abort, &task.deps, DEADLOCK_TIMEOUT_SECS)
+            .map_err(|()| ExecError::DeadlockSuspected {
+                device: dev,
+                task: task.label.to_string(),
+            })
     }
 
     fn mark_done(&self, t: TaskId) {
@@ -815,13 +867,18 @@ fn run_device(
     tasks: &[TaskId],
     mut store: HashMap<PTensorId, Vec<f32>>,
     sh: &Shared<'_>,
-) -> (HashMap<PTensorId, Vec<f32>>, Vec<TaskSample>) {
+) -> Result<(HashMap<PTensorId, Vec<f32>>, Vec<TaskSample>), ExecError> {
     let prep = sh.prep;
     let mut samples = Vec::new();
     sh.start.wait();
     for &t in tasks {
         let task = &sh.plan.tasks[t];
-        sh.wait_deps(&task.deps);
+        sh.wait_deps(dev, t)?;
+        // A peer may have declared the run wedged while we were runnable;
+        // entering a collective now would park us on its barrier forever.
+        if sh.abort.load(Ordering::SeqCst) {
+            return Err(ExecError::DeadlockSuspected { device: dev, task: task.label.to_string() });
+        }
         let t0 = Instant::now();
         match &prep.actions[t] {
             Action::Compute { kind, reads, writes, tag } => {
@@ -895,7 +952,7 @@ fn run_device(
             }
         }
     }
-    (store, samples)
+    Ok((store, samples))
 }
 
 /// Execute a materialized plan with real tensors. `g` must be the planner's
@@ -920,18 +977,19 @@ pub fn execute(g: &Graph, vs: &ValidatedSchedule, plan: &Plan) -> Result<ExecRes
         done: Mutex::new(prep.pre_done.clone()),
         cv: Condvar::new(),
         start: GenBarrier::new(n_threads),
+        abort: AtomicBool::new(false),
     };
 
     let t0 = Instant::now();
-    let results: Vec<(DeviceId, HashMap<PTensorId, Vec<f32>>, Vec<TaskSample>)> =
+    let results: Vec<Result<(DeviceId, HashMap<PTensorId, Vec<f32>>, Vec<TaskSample>), ExecError>> =
         std::thread::scope(|s| {
             let mut handles = Vec::new();
             for (dev, tasks) in &prep.device_tasks {
                 let store = base_store.clone();
                 let sh = &shared;
                 handles.push(s.spawn(move || {
-                    let (store, samples) = run_device(*dev, tasks, store, sh);
-                    (*dev, store, samples)
+                    let (store, samples) = run_device(*dev, tasks, store, sh)?;
+                    Ok((*dev, store, samples))
                 }));
             }
             handles.into_iter().map(|h| h.join().expect("device thread panicked")).collect()
@@ -940,9 +998,22 @@ pub fn execute(g: &Graph, vs: &ValidatedSchedule, plan: &Plan) -> Result<ExecRes
 
     let mut stores = HashMap::new();
     let mut samples = Vec::new();
-    for (dev, store, mut s) in results {
-        stores.insert(dev, store);
-        samples.append(&mut s);
+    // Threads are joined in device order, so the surfaced error is
+    // deterministic even when several threads bail out of the same wedge.
+    let mut first_err: Option<ExecError> = None;
+    for r in results {
+        match r {
+            Ok((dev, store, mut s)) => {
+                stores.insert(dev, store);
+                samples.append(&mut s);
+            }
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
     }
     Ok(ExecResult { stores, samples, wall, n_threads })
 }
@@ -988,5 +1059,39 @@ mod tests {
         // Same names -> same values on a rebuild (determinism).
         let store2 = init_store(&mb.g);
         assert_eq!(store[&0], store2[&0]);
+    }
+
+    #[test]
+    fn dep_wait_times_out_instead_of_hanging() {
+        let done = Mutex::new(vec![false]);
+        let cv = Condvar::new();
+        let abort = AtomicBool::new(false);
+        // Dependency 0 never completes: the wait must give up after the
+        // (tiny, test-sized) deadline rather than block forever.
+        let t0 = Instant::now();
+        assert!(wait_until_done(&done, &cv, &abort, &[0], 0.05).is_err());
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "returned promptly");
+        assert!(abort.load(Ordering::SeqCst), "timeout raises the abort flag for peers");
+    }
+
+    #[test]
+    fn dep_wait_returns_ok_when_deps_are_done() {
+        let done = Mutex::new(vec![true, false]);
+        let cv = Condvar::new();
+        let abort = AtomicBool::new(false);
+        assert!(wait_until_done(&done, &cv, &abort, &[0], 0.05).is_ok());
+        assert!(wait_until_done(&done, &cv, &abort, &[], 0.05).is_ok());
+        assert!(!abort.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn dep_wait_bails_out_when_a_peer_aborted() {
+        let done = Mutex::new(vec![false]);
+        let cv = Condvar::new();
+        let abort = AtomicBool::new(true);
+        let t0 = Instant::now();
+        // Deadline is generous; the pre-set abort flag must win immediately.
+        assert!(wait_until_done(&done, &cv, &abort, &[0], 30.0).is_err());
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "peer abort short-circuits the wait");
     }
 }

@@ -1,0 +1,639 @@
+//! Fault-domain-aware resilience: seeded fault traces, checkpoint/restart
+//! goodput modeling, and rack-spreading placement.
+//!
+//! The DES ([`crate::des`]) scores plans under a fault-free cluster; this
+//! module makes *survival* a scoring axis. A [`FaultSpec`] is a
+//! deterministic, seeded fault trace — device crashes, whole-server or
+//! whole-rack losses, rack-uplink outages, transient stragglers — either
+//! parsed from a `--faults` CLI token or sampled from per-device-kind MTBF
+//! ([`FaultSpec::sample`]). [`FaultSpec::resolve`] validates the trace
+//! against a concrete [`Cluster`] and lowers it to a [`FaultPlan`] of
+//! device-kill / link-outage / slowdown events the DES engine injects
+//! ([`crate::des::execute_faulted`]).
+//!
+//! # Trace grammar (`--faults`)
+//!
+//! Comma-separated events, each `kind:target@time[+duration]` (seconds;
+//! duration defaults to [`DEFAULT_DURATION`]):
+//!
+//! * `crash:d3@0.5+0.2` — device 3 fails at t=0.5, hardware repair 0.2 s
+//! * `server:1@0.5+0.2` — every device of server 1 fails
+//! * `rack:1@1.0+0.2` — every device in fat-tree rack 1 fails
+//! * `uplink:0@0.5+0.1` — rack 0's spine uplink is cut for 0.1 s
+//! * `slow:d2x0.5@0.2+0.3` — device 2 runs at 0.5× rate from t=0.2 for 0.3 s
+//!
+//! # Failure and recovery model
+//!
+//! A killed device aborts its in-flight compute *and* every communication
+//! task it participates in (collectives abort cluster-wide, like NCCL);
+//! aborted work is lost and re-executes from scratch once the device
+//! returns. The device is down for `repair + reload + replay`: the
+//! hardware repair from the trace, reloading the last checkpoint over the
+//! host link (priced by [`Cluster::checkpoint_time`], i.e. the existing
+//! PCIe cost tier), and replaying the work since the last checkpoint
+//! (`now - last_commit`; with checkpointing off the replay spans the whole
+//! run so far). A cut link stalls every transfer crossing it — routes are
+//! deterministic ([`crate::topo::Topology::route`]), and a fat-tree has a
+//! single uplink per rack, so "reroute or stall" resolves to *stall*: the
+//! transfer holds its route and resumes at the cut's end. A straggler
+//! reprices the device's in-flight and future compute by the degradation
+//! factor for the event's duration.
+//!
+//! # Checkpointing
+//!
+//! With a checkpoint interval `I > 0` the engine takes a coordinated
+//! snapshot every `I` seconds of progress: all streams freeze for the
+//! *stall* (the slowest device's weights+optimizer transfer to host,
+//! [`Cluster::checkpoint_time`]), then the commit point becomes the new
+//! replay origin. [`CkptPolicy::Auto`] picks the interval by Young's
+//! approximation `sqrt(2 · stall · MTBF)` when an MTBF is known, else a
+//! quarter of the fault-free makespan, clamped to `[max(makespan/16,
+//! stall), makespan]`.
+//!
+//! # Goodput
+//!
+//! `goodput = fault-free makespan / faulted makespan` (≤ 1): the fraction
+//! of wall-clock the faulted run spends on *useful* work — everything
+//! else is lost re-execution, checkpoint stalls, repair idle time and
+//! stalled transfers. [`evaluate_resilience`] runs the engine twice (base,
+//! then faulted) and reports goodput, time-to-recover and the loss
+//! breakdown ([`ResilienceReport`]).
+//!
+//! [`placement::rack_spread_map`] closes the placement loop: it re-maps a
+//! plan's contiguous dp-replica device blocks onto whole racks so a single
+//! rack loss degrades as few replicas as possible.
+
+pub mod placement;
+
+use crate::cost::{Cluster, LinkId};
+use crate::des::{self, DesReport};
+use crate::graph::Graph;
+use crate::materialize::Plan;
+use crate::schedule::{DeviceId, CPU_DEVICE};
+use crate::sim::TaskGraph;
+use crate::util::rng::Rng;
+
+/// Fault duration (seconds) when a trace token omits `+<duration>`.
+pub const DEFAULT_DURATION: f64 = 0.05;
+
+/// What fails, before resolution against a concrete cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// One device crashes and restarts from the last checkpoint.
+    Crash { device: DeviceId },
+    /// Every device of one server crashes.
+    Server { server: usize },
+    /// Every device in one fat-tree rack crashes (rack power loss).
+    Rack { rack: usize },
+    /// A rack's spine uplink is cut; cross-rack transfers through it stall.
+    Uplink { rack: usize },
+    /// A device runs at `factor` (in `(0, 1]`) of its nominal compute rate.
+    Slow { device: DeviceId, factor: f64 },
+}
+
+/// One event of a fault trace: `kind` happens at `at` and lasts `duration`
+/// (hardware-repair time for crashes, outage length for links, degradation
+/// window for stragglers).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub duration: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault trace: the cluster-independent description, parsed
+/// from `--faults` or sampled from MTBF. [`FaultSpec::resolve`] lowers it
+/// to a [`FaultPlan`] against a concrete cluster.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub events: Vec<FaultEvent>,
+}
+
+/// Typed rejection of a fault trace: unparsable tokens and targets the
+/// cluster does not have.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultError {
+    /// A `--faults` token failed to parse.
+    Parse { token: String, why: String },
+    /// A trace names a device the cluster does not have.
+    DeviceOutOfRange { device: DeviceId, gpus: usize },
+    /// A trace names a server the cluster does not have.
+    ServerOutOfRange { server: usize, servers: usize },
+    /// A trace names a rack the topology does not have (flat and rail
+    /// fabrics have no racks; fat-trees have `n_servers / k`).
+    RackUnavailable { rack: usize, racks: usize, topology: String },
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultError::Parse { token, why } => {
+                write!(f, "bad fault token '{token}': {why}")
+            }
+            FaultError::DeviceOutOfRange { device, gpus } => {
+                write!(f, "fault targets device {device} but the cluster has {gpus} GPUs")
+            }
+            FaultError::ServerOutOfRange { server, servers } => {
+                write!(f, "fault targets server {server} but the cluster has {servers} servers")
+            }
+            FaultError::RackUnavailable { rack, racks, topology } => write!(
+                f,
+                "fault targets rack {rack} but topology '{topology}' has {racks} rack(s) \
+                 (rack/uplink faults need fat-tree:K)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+fn parse_dev(s: &str) -> Option<DeviceId> {
+    s.strip_prefix('d')?.parse().ok()
+}
+
+impl FaultSpec {
+    /// Parse a `--faults` trace token (see the module doc for the grammar).
+    pub fn parse(s: &str) -> Result<FaultSpec, FaultError> {
+        let mut events = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            events.push(Self::parse_token(tok)?);
+        }
+        Ok(FaultSpec { events })
+    }
+
+    fn parse_token(tok: &str) -> Result<FaultEvent, FaultError> {
+        let err = |why: &str| FaultError::Parse { token: tok.to_string(), why: why.to_string() };
+        let (head, when) = tok.split_once('@').ok_or_else(|| err("missing '@<time>'"))?;
+        let (at_s, dur_s) = match when.split_once('+') {
+            Some((a, d)) => (a, Some(d)),
+            None => (when, None),
+        };
+        let at: f64 = at_s.parse().map_err(|_| err("unparsable time"))?;
+        if !at.is_finite() || at < 0.0 {
+            return Err(err("time must be finite and >= 0"));
+        }
+        let duration = match dur_s {
+            Some(d) => {
+                let d: f64 = d.parse().map_err(|_| err("unparsable duration"))?;
+                if !d.is_finite() || d <= 0.0 {
+                    return Err(err("duration must be finite and > 0"));
+                }
+                d
+            }
+            None => DEFAULT_DURATION,
+        };
+        let (kind_s, arg) = head.split_once(':').ok_or_else(|| err("missing ':<target>'"))?;
+        let kind = match kind_s {
+            "crash" => FaultKind::Crash {
+                device: parse_dev(arg).ok_or_else(|| err("crash wants a d<N> device"))?,
+            },
+            "server" => FaultKind::Server {
+                server: arg.parse().map_err(|_| err("server wants an index"))?,
+            },
+            "rack" => {
+                FaultKind::Rack { rack: arg.parse().map_err(|_| err("rack wants an index"))? }
+            }
+            "uplink" => {
+                FaultKind::Uplink { rack: arg.parse().map_err(|_| err("uplink wants an index"))? }
+            }
+            "slow" => {
+                let (dev_s, fac_s) =
+                    arg.split_once('x').ok_or_else(|| err("slow wants d<N>x<factor>"))?;
+                let device = parse_dev(dev_s).ok_or_else(|| err("slow wants a d<N> device"))?;
+                let factor: f64 = fac_s.parse().map_err(|_| err("unparsable factor"))?;
+                if !factor.is_finite() || factor <= 0.0 || factor > 1.0 {
+                    return Err(err("factor must be in (0, 1]"));
+                }
+                FaultKind::Slow { device, factor }
+            }
+            _ => return Err(err("unknown kind (crash/server/rack/uplink/slow)")),
+        };
+        Ok(FaultEvent { at, duration, kind })
+    }
+
+    /// Sample a seeded fault trace over `[0, horizon)` from a per-device
+    /// exponential failure process. `mtbf` is the mean time between
+    /// failures of a baseline (V100) device; sturdier generations scale it
+    /// up (A100 1.5×, H100 2×). Per-device generators are seeded from
+    /// `seed`, so the trace is deterministic and independent of iteration
+    /// order; 25% of arrivals are transient stragglers (0.5× for 10% of
+    /// the horizon), the rest crashes (repair 5% of the horizon).
+    pub fn sample(cluster: &Cluster, mtbf: f64, horizon: f64, seed: u64) -> FaultSpec {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        if !(mtbf > 0.0) || !(horizon > 0.0) {
+            return FaultSpec { events };
+        }
+        for d in 0..cluster.num_gpus() {
+            let rel = if cluster.server_kind.is_empty() {
+                1.0
+            } else {
+                match cluster.server_kind[cluster.server_of(d)].name.as_str() {
+                    "h100" => 2.0,
+                    "a100" => 1.5,
+                    _ => 1.0,
+                }
+            };
+            let dev_mtbf = mtbf * rel;
+            let mut rng = Rng::new(seed.wrapping_add(d as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut t = 0.0f64;
+            loop {
+                t += -(1.0 - rng.f64()).ln() * dev_mtbf;
+                if !(t < horizon) {
+                    break;
+                }
+                let (kind, duration) = if rng.f64() < 0.25 {
+                    (FaultKind::Slow { device: d, factor: 0.5 }, 0.1 * horizon)
+                } else {
+                    (FaultKind::Crash { device: d }, 0.05 * horizon)
+                };
+                events.push(FaultEvent { at: t, duration, kind });
+            }
+        }
+        // Stable chronological order keeps the trace readable and the
+        // resolved plan independent of the device loop above.
+        events.sort_by_key(|e| e.at.to_bits());
+        FaultSpec { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Validate the trace against a concrete cluster and lower it to the
+    /// DES-facing [`FaultPlan`]: rack/server targets expand to device
+    /// lists, uplink targets to [`LinkId::Up`] outages.
+    pub fn resolve(&self, cluster: &Cluster) -> Result<FaultPlan, FaultError> {
+        let gpus = cluster.num_gpus();
+        let gps = cluster.gpus_per_server;
+        let mut plan = FaultPlan::default();
+        for e in &self.events {
+            match e.kind {
+                FaultKind::Crash { device } => {
+                    if device >= gpus {
+                        return Err(FaultError::DeviceOutOfRange { device, gpus });
+                    }
+                    plan.kills.push(KillEvent { at: e.at, devices: vec![device], repair: e.duration });
+                }
+                FaultKind::Server { server } => {
+                    if server >= cluster.n_servers {
+                        return Err(FaultError::ServerOutOfRange {
+                            server,
+                            servers: cluster.n_servers,
+                        });
+                    }
+                    plan.kills.push(KillEvent {
+                        at: e.at,
+                        devices: (server * gps..(server + 1) * gps).collect(),
+                        repair: e.duration,
+                    });
+                }
+                FaultKind::Rack { rack } => {
+                    let range = cluster.topo.rack_devices(rack).ok_or_else(|| {
+                        FaultError::RackUnavailable {
+                            rack,
+                            racks: cluster.topo.n_racks(),
+                            topology: cluster.topo.label(),
+                        }
+                    })?;
+                    plan.kills.push(KillEvent {
+                        at: e.at,
+                        devices: range.collect(),
+                        repair: e.duration,
+                    });
+                }
+                FaultKind::Uplink { rack } => {
+                    if cluster.topo.rack_devices(rack).is_none() {
+                        return Err(FaultError::RackUnavailable {
+                            rack,
+                            racks: cluster.topo.n_racks(),
+                            topology: cluster.topo.label(),
+                        });
+                    }
+                    plan.outages.push(OutageEvent {
+                        at: e.at,
+                        link: LinkId::Up(rack),
+                        duration: e.duration,
+                    });
+                }
+                FaultKind::Slow { device, factor } => {
+                    if device >= gpus {
+                        return Err(FaultError::DeviceOutOfRange { device, gpus });
+                    }
+                    plan.slowdowns.push(SlowEvent {
+                        at: e.at,
+                        device,
+                        factor,
+                        duration: e.duration,
+                    });
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// A device-kill event resolved against a cluster: `devices` all fail at
+/// `at` and need `repair` seconds of hardware repair before the
+/// checkpoint-reload + replay phases of recovery begin.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KillEvent {
+    pub at: f64,
+    pub devices: Vec<DeviceId>,
+    pub repair: f64,
+}
+
+/// A link outage: every transfer whose route crosses `link` stalls for
+/// `duration` (fat-tree routes are unique, so there is nothing to reroute
+/// onto — see the module doc).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutageEvent {
+    pub at: f64,
+    pub link: LinkId,
+    pub duration: f64,
+}
+
+/// A transient straggler: `device` computes at `factor`× its nominal rate
+/// during the window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlowEvent {
+    pub at: f64,
+    pub device: DeviceId,
+    pub factor: f64,
+    pub duration: f64,
+}
+
+/// The DES-facing fault schedule: resolved kill/outage/slowdown events plus
+/// the checkpoint cadence (`ckpt_interval` of 0 disables checkpointing).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub kills: Vec<KillEvent>,
+    pub outages: Vec<OutageEvent>,
+    pub slowdowns: Vec<SlowEvent>,
+    pub ckpt_interval: f64,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing: no faults and no checkpoints.
+    /// The engine's no-fault equivalence guarantee (bitwise-identical
+    /// timelines) holds exactly for this case.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+            && self.outages.is_empty()
+            && self.slowdowns.is_empty()
+            && self.ckpt_interval <= 0.0
+    }
+}
+
+/// When (and whether) the engine takes coordinated checkpoints.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CkptPolicy {
+    /// No checkpoints: a crash replays the whole run so far.
+    Off,
+    /// Pick the interval from the checkpoint stall and MTBF (Young's
+    /// approximation; see [`auto_interval`]).
+    Auto,
+    /// A fixed interval in seconds.
+    Every(f64),
+}
+
+impl CkptPolicy {
+    /// Parse a `--ckpt-interval` argument: `off`, `auto`, or seconds.
+    pub fn parse(s: &str) -> Option<CkptPolicy> {
+        match s {
+            "off" => Some(CkptPolicy::Off),
+            "auto" => Some(CkptPolicy::Auto),
+            _ => {
+                let v: f64 = s.parse().ok()?;
+                (v.is_finite() && v > 0.0).then_some(CkptPolicy::Every(v))
+            }
+        }
+    }
+}
+
+/// How the search scores resilience: an explicit trace, or an MTBF to
+/// sample one from, plus the checkpoint policy and whether the
+/// rack-spreading placement pass runs.
+#[derive(Clone, Debug)]
+pub struct ResilienceConfig {
+    /// An explicit fault trace (`--faults`). Takes precedence over `mtbf`.
+    pub trace: Option<FaultSpec>,
+    /// Baseline-device MTBF in seconds (`--mtbf`): a trace is sampled per
+    /// candidate over its fault-free makespan.
+    pub mtbf: Option<f64>,
+    /// Seed for MTBF sampling (`--fault-seed`).
+    pub seed: u64,
+    /// Checkpoint cadence (`--ckpt-interval`).
+    pub ckpt: CkptPolicy,
+    /// Spread dp replicas across racks before scoring (`--no-rack-spread`
+    /// disables).
+    pub spread: bool,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig { trace: None, mtbf: None, seed: 1, ckpt: CkptPolicy::Auto, spread: true }
+    }
+}
+
+/// Resilience verdict of one plan under one fault trace.
+#[derive(Clone, Debug)]
+pub struct ResilienceReport {
+    /// Useful-work fraction: fault-free makespan / faulted makespan (≤ 1).
+    pub goodput: f64,
+    pub base_makespan: f64,
+    pub faulted_makespan: f64,
+    /// Longest single outage-to-recovered window (repair + reload + replay).
+    pub recovery_time: f64,
+    /// Seconds of in-flight work aborted by kills.
+    pub lost_work: f64,
+    /// Seconds spent frozen in checkpoint stalls.
+    pub ckpt_time: f64,
+    /// Device-kill events that fired.
+    pub n_kills: usize,
+    /// All fault events that fired (kills + outages + slowdowns).
+    pub n_faults: usize,
+    /// The checkpoint interval the run used (0 = off).
+    pub ckpt_interval: f64,
+}
+
+/// The coordinated-checkpoint stall: the slowest device's weights+optimizer
+/// snapshot to host, priced by the existing PCIe cost tier
+/// ([`Cluster::checkpoint_time`]). Every stream freezes for this long per
+/// checkpoint, and a recovering device pays it again as the reload phase.
+pub fn checkpoint_stall(plan: &Plan, cluster: &Cluster) -> f64 {
+    plan.static_mem
+        .iter()
+        .filter(|(&d, _)| d != CPU_DEVICE)
+        .map(|(&d, &bytes)| {
+            let grad = plan.static_grad_mem.get(&d).copied().unwrap_or(0);
+            cluster.checkpoint_time(d, bytes.saturating_sub(grad))
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Checkpoint interval for [`CkptPolicy::Auto`]: Young's approximation
+/// `sqrt(2 · stall · MTBF)` when an MTBF is known and the stall is
+/// positive, else a quarter of the fault-free makespan; clamped to
+/// `[max(makespan/16, stall), makespan]` so checkpoints neither dominate
+/// the timeline nor never fire.
+pub fn auto_interval(base_makespan: f64, stall: f64, mtbf: Option<f64>) -> f64 {
+    if !(base_makespan > 0.0) {
+        return 0.0;
+    }
+    let raw = match mtbf {
+        Some(m) if m > 0.0 && stall > 0.0 => (2.0 * stall * m).sqrt(),
+        _ => base_makespan / 4.0,
+    };
+    raw.clamp((base_makespan / 16.0).max(stall), base_makespan)
+}
+
+/// Score one prepared plan's resilience: run the DES fault-free for the
+/// base makespan, derive the fault trace (explicit, or MTBF-sampled over
+/// that horizon) and checkpoint interval, run the DES again under the
+/// [`FaultPlan`], and report goodput / recovery / loss breakdown plus the
+/// faulted [`DesReport`] (whose `faults` field carries the event log for
+/// trace export).
+pub fn evaluate_resilience(
+    g: &Graph,
+    plan: &Plan,
+    cluster: &Cluster,
+    tg: &TaskGraph,
+    cfg: &ResilienceConfig,
+) -> Result<(ResilienceReport, DesReport), FaultError> {
+    let base = des::execute(g, plan, cluster, tg);
+    let spec = match (&cfg.trace, cfg.mtbf) {
+        (Some(t), _) => t.clone(),
+        (None, Some(m)) => FaultSpec::sample(cluster, m, base.makespan, cfg.seed),
+        (None, None) => FaultSpec::default(),
+    };
+    let mut fp = spec.resolve(cluster)?;
+    let stall = checkpoint_stall(plan, cluster);
+    fp.ckpt_interval = match cfg.ckpt {
+        CkptPolicy::Off => 0.0,
+        CkptPolicy::Every(s) => s.max(0.0),
+        CkptPolicy::Auto => auto_interval(base.makespan, stall, cfg.mtbf),
+    };
+    let faulted = des::execute_faulted(g, plan, cluster, tg, &fp);
+    let out = faulted.faults.clone().unwrap_or_default();
+    let goodput = if faulted.makespan > 0.0 { (base.makespan / faulted.makespan).min(1.0) } else { 1.0 };
+    let report = ResilienceReport {
+        goodput,
+        base_makespan: base.makespan,
+        faulted_makespan: faulted.makespan,
+        recovery_time: out.recovery_time,
+        lost_work: out.lost_work,
+        ckpt_time: out.ckpt_time,
+        n_kills: out.n_kills,
+        n_faults: out.n_faults,
+        ckpt_interval: fp.ckpt_interval,
+    };
+    Ok((report, faulted))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::build_cluster;
+
+    #[test]
+    fn parse_accepts_the_grammar() {
+        let spec = FaultSpec::parse("crash:d3@0.5+0.2, server:1@0.5, rack:1@1.0+0.2").unwrap();
+        assert_eq!(spec.events.len(), 3);
+        assert_eq!(
+            spec.events[0],
+            FaultEvent { at: 0.5, duration: 0.2, kind: FaultKind::Crash { device: 3 } }
+        );
+        assert_eq!(spec.events[1].duration, DEFAULT_DURATION);
+        let spec = FaultSpec::parse("uplink:0@0.5+0.1,slow:d2x0.5@0.2+0.3").unwrap();
+        assert_eq!(spec.events[1].kind, FaultKind::Slow { device: 2, factor: 0.5 });
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_tokens() {
+        for bad in [
+            "crash:d3",          // no time
+            "crash:3@0.5",       // device without the d prefix
+            "crash:d3@-1.0",     // negative time
+            "crash:d3@0.5+0",    // non-positive duration
+            "slow:d2@0.1",       // slow without a factor
+            "slow:d2x1.5@0.1",   // factor > 1
+            "slow:d2x0@0.1",     // factor 0
+            "meteor:d2@0.1",     // unknown kind
+            "rack:x@0.1",        // unparsable index
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn resolve_validates_targets_against_the_cluster() {
+        let flat = build_cluster(8, None, "flat", None).unwrap();
+        let tree = build_cluster(16, Some(4), "fat-tree:2", None).unwrap();
+        assert!(matches!(
+            FaultSpec::parse("crash:d9@0.1").unwrap().resolve(&flat).unwrap_err(),
+            FaultError::DeviceOutOfRange { device: 9, gpus: 8 }
+        ));
+        assert!(matches!(
+            FaultSpec::parse("server:4@0.1").unwrap().resolve(&tree).unwrap_err(),
+            FaultError::ServerOutOfRange { server: 4, servers: 4 }
+        ));
+        // Rack faults need a fat-tree.
+        assert!(matches!(
+            FaultSpec::parse("rack:0@0.1").unwrap().resolve(&flat).unwrap_err(),
+            FaultError::RackUnavailable { racks: 1, .. }
+        ));
+        assert!(matches!(
+            FaultSpec::parse("uplink:2@0.1").unwrap().resolve(&tree).unwrap_err(),
+            FaultError::RackUnavailable { rack: 2, racks: 2, .. }
+        ));
+        // Rack 1 of 4 servers x 4 GPUs with k=2 covers devices 8..16.
+        let fp = FaultSpec::parse("rack:1@0.1+0.2").unwrap().resolve(&tree).unwrap();
+        assert_eq!(fp.kills.len(), 1);
+        assert_eq!(fp.kills[0].devices, (8..16).collect::<Vec<_>>());
+        // Server 1 covers devices 4..8.
+        let fp = FaultSpec::parse("server:1@0.1").unwrap().resolve(&tree).unwrap();
+        assert_eq!(fp.kills[0].devices, vec![4, 5, 6, 7]);
+        // Uplink resolves to the rack's spine link.
+        let fp = FaultSpec::parse("uplink:1@0.1").unwrap().resolve(&tree).unwrap();
+        assert_eq!(fp.outages[0].link, LinkId::Up(1));
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_respects_the_horizon() {
+        let c = build_cluster(16, None, "flat", None).unwrap();
+        let a = FaultSpec::sample(&c, 0.5, 1.0, 7);
+        let b = FaultSpec::sample(&c, 0.5, 1.0, 7);
+        assert_eq!(a, b, "same seed must sample the same trace");
+        assert!(!a.is_empty(), "MTBF 0.5 over a 1 s horizon on 16 devices must fire");
+        assert!(a.events.iter().all(|e| e.at < 1.0));
+        assert!(a.events.windows(2).all(|w| w[0].at <= w[1].at), "chronological");
+        let c2 = FaultSpec::sample(&c, 0.5, 1.0, 8);
+        assert_ne!(a, c2, "different seeds must differ");
+        // Sampled traces always resolve (devices come from the cluster).
+        a.resolve(&c).unwrap();
+    }
+
+    #[test]
+    fn auto_interval_follows_young_and_clamps() {
+        // Known MTBF + stall: Young's sqrt(2 * stall * mtbf), inside clamp.
+        let i = auto_interval(10.0, 0.8, Some(4.0));
+        assert!((i - (2.0f64 * 0.8 * 4.0).sqrt()).abs() < 1e-12);
+        // No MTBF: a quarter of the makespan.
+        assert!((auto_interval(8.0, 0.1, None) - 2.0).abs() < 1e-12);
+        // Clamp floor: never below the stall itself.
+        assert!(auto_interval(1.0, 0.9, Some(0.001)) >= 0.9);
+        // Clamp ceiling: never above the makespan.
+        assert!(auto_interval(1.0, 0.5, Some(1e9)) <= 1.0);
+        assert_eq!(auto_interval(0.0, 0.5, None), 0.0);
+    }
+
+    #[test]
+    fn ckpt_policy_parses() {
+        assert_eq!(CkptPolicy::parse("off"), Some(CkptPolicy::Off));
+        assert_eq!(CkptPolicy::parse("auto"), Some(CkptPolicy::Auto));
+        assert_eq!(CkptPolicy::parse("0.25"), Some(CkptPolicy::Every(0.25)));
+        assert_eq!(CkptPolicy::parse("-1"), None);
+        assert_eq!(CkptPolicy::parse("soon"), None);
+    }
+}

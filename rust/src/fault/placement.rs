@@ -1,0 +1,140 @@
+//! Fault-domain-aware placement: spread dp replicas across racks.
+//!
+//! Planners assign dp replicas to *contiguous* device blocks (replica `r`
+//! of width `w` owns logical devices `r·w .. (r+1)·w`), which ignores rack
+//! boundaries: on a fat-tree a replica can straddle two racks, so a single
+//! rack loss degrades every replica it touches. With equal-width replicas
+//! filling the whole cluster no permutation can lower the *maximum*
+//! replicas-per-rack (pigeonhole), so the honest objective is containment:
+//! **maximize the number of replicas whose devices all sit in one rack**,
+//! minimizing how many replicas a rack's blast radius can reach.
+//! [`rack_spread_map`] packs replicas whole-rack-first — each replica
+//! draws from the rack with the most free devices — which provably beats
+//! contiguous packing whenever the replica width does not divide the rack
+//! capacity (e.g. dp=4 × width-6 replicas over three 8-device racks:
+//! greedy contains 3 replicas, contiguous only 2).
+
+use crate::cost::Cluster;
+use crate::schedule::DeviceId;
+use std::collections::VecDeque;
+
+/// Permutation mapping a plan's *logical* device ids onto physical devices
+/// so each dp replica's block lands on as few racks as possible. Returns
+/// `None` when spreading cannot help: dp < 2, a single (or no) rack, a
+/// replica width that does not tile the cluster, or a greedy result equal
+/// to the identity (contiguous packing was already optimal). The result is
+/// always a bijection on `0..cluster.num_gpus()`; apply it with
+/// [`crate::schedule::Schedule::remap_devices`].
+pub fn rack_spread_map(dp: usize, cluster: &Cluster) -> Option<Vec<DeviceId>> {
+    let n = cluster.num_gpus();
+    let racks = cluster.topo.n_racks();
+    if dp < 2 || racks < 2 || n == 0 || n % dp != 0 {
+        return None;
+    }
+    let w = n / dp;
+    let mut free: Vec<VecDeque<DeviceId>> =
+        (0..racks).map(|r| cluster.topo.rack_devices(r).expect("rack in range").collect()).collect();
+    let mut map = vec![0usize; n];
+    for rep in 0..dp {
+        let mut need = w;
+        while need > 0 {
+            // The rack with the most free devices, ties to the lowest index
+            // (deterministic: plain loops, no hash iteration).
+            let (mut best, mut best_len) = (0usize, 0usize);
+            for (i, q) in free.iter().enumerate() {
+                if q.len() > best_len {
+                    best = i;
+                    best_len = q.len();
+                }
+            }
+            if best_len == 0 {
+                return None; // unreachable: rack capacities sum to n
+            }
+            let take = best_len.min(need);
+            for j in 0..take {
+                map[rep * w + (w - need) + j] = free[best].pop_front().expect("non-empty rack");
+            }
+            need -= take;
+        }
+    }
+    if map.iter().enumerate().all(|(i, &d)| i == d) {
+        None
+    } else {
+        Some(map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::build_cluster;
+    use std::collections::BTreeSet;
+
+    /// Racks each replica's devices land on, under `map` (identity when
+    /// `map` is `None`).
+    fn racks_per_replica(
+        dp: usize,
+        c: &Cluster,
+        map: Option<&Vec<DeviceId>>,
+    ) -> Vec<BTreeSet<usize>> {
+        let n = c.num_gpus();
+        let w = n / dp;
+        (0..dp)
+            .map(|rep| {
+                (rep * w..(rep + 1) * w)
+                    .map(|logical| {
+                        let phys = map.map_or(logical, |m| m[logical]);
+                        c.topo.rack_of(c.server_of(phys))
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn greedy_contains_more_replicas_than_contiguous() {
+        // 24 GPUs as 6 servers x 4, k=2 => three 8-device racks; dp=4 means
+        // width-6 replicas that do not divide the rack capacity.
+        let c = build_cluster(24, Some(6), "fat-tree:2", None).unwrap();
+        let map = rack_spread_map(4, &c).expect("spreading must help here");
+        // Bijection on 0..24.
+        let mut seen: Vec<DeviceId> = map.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..24).collect::<Vec<_>>());
+        let contained = |sets: &[BTreeSet<usize>]| sets.iter().filter(|s| s.len() == 1).count();
+        let greedy = racks_per_replica(4, &c, Some(&map));
+        let contiguous = racks_per_replica(4, &c, None);
+        assert_eq!(contained(&contiguous), 2, "contiguous packing straddles two replicas");
+        assert_eq!(contained(&greedy), 3, "greedy must contain three of four replicas");
+    }
+
+    #[test]
+    fn dividing_shapes_spread_one_replica_per_rack_group() {
+        // 16 GPUs, 4 servers x 4, k=2 => two racks; dp=2 width-8 replicas
+        // tile the racks exactly: contiguous is already optimal, so the
+        // greedy result equals the identity and the pass declines.
+        let c = build_cluster(16, Some(4), "fat-tree:2", None).unwrap();
+        assert_eq!(rack_spread_map(2, &c), None);
+    }
+
+    #[test]
+    fn declines_when_spreading_cannot_help() {
+        let flat = build_cluster(16, None, "flat", None).unwrap();
+        assert_eq!(rack_spread_map(4, &flat), None, "no racks on a flat fabric");
+        let tree = build_cluster(16, Some(4), "fat-tree:2", None).unwrap();
+        assert_eq!(rack_spread_map(1, &tree), None, "dp=1 has nothing to spread");
+        assert_eq!(rack_spread_map(3, &tree), None, "width must tile the cluster");
+    }
+
+    #[test]
+    fn map_is_always_a_bijection() {
+        for (gpus, servers, k, dp) in [(24usize, 6usize, 2usize, 2usize), (24, 6, 3, 4), (32, 8, 2, 8)] {
+            let c = build_cluster(gpus, Some(servers), &format!("fat-tree:{k}"), None).unwrap();
+            if let Some(map) = rack_spread_map(dp, &c) {
+                let mut seen = map.clone();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..gpus).collect::<Vec<_>>(), "{gpus}/{servers}/{k}/{dp}");
+            }
+        }
+    }
+}

@@ -65,6 +65,7 @@
 pub mod cost;
 pub mod des;
 pub mod exec;
+pub mod fault;
 pub mod graph;
 pub mod materialize;
 pub mod models;
@@ -89,6 +90,7 @@ pub use schedule::Schedule;
 /// re-export; the defining modules stay the source of truth.
 pub mod prelude {
     pub use crate::cost::Cluster;
+    pub use crate::fault::{CkptPolicy, FaultSpec, ResilienceConfig};
     pub use crate::graph::Graph;
     pub use crate::materialize::CommMode;
     pub use crate::models::Model;

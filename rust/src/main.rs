@@ -68,6 +68,9 @@ fn usage() {
                                 [--bench-json FILE] [--schedule NAME|sched{{...}}]\n\
                                 [--servers N] [--topology flat|fat-tree:K|rail:R]\n\
                                 [--device-mix kind:count,...]\n\
+                                [--faults TRACE] [--mtbf SECS] [--fault-seed S]\n\
+                                [--ckpt-interval off|auto|SECS] [--no-rack-spread]\n\
+                                [--fault-baseline FILE]\n\
                                 [refine flags — see REFINE below]\n\
                                   --topology models the cluster fabric: flat\n\
                                   (one NIC/server, legacy), fat-tree:K (K\n\
@@ -115,6 +118,23 @@ fn usage() {
                                   it planners contribute their own schedule\n\
                                   points (megatron emits each pipelined grid\n\
                                   under 1F1B and zero-bubble).\n\
+                                  --faults injects a deterministic seeded fault\n\
+                                  trace (comma tokens kind:target@time[+dur]:\n\
+                                  crash:dN, server:N, rack:N, uplink:N,\n\
+                                  slow:dNxF) into a DES re-run of the top\n\
+                                  candidates; --mtbf samples a trace instead\n\
+                                  (exponential per device, --fault-seed).\n\
+                                  Checkpoint/restart is modeled over the host\n\
+                                  links: --ckpt-interval auto picks Young's\n\
+                                  interval from the stall and MTBF. The head\n\
+                                  re-ranks by goodput-adjusted time and the\n\
+                                  table gains goodput/recover columns. Racks\n\
+                                  are failure domains: dp replicas are spread\n\
+                                  rack-by-rack first (--no-rack-spread keeps\n\
+                                  the contiguous placement). --fault-baseline\n\
+                                  gates the winner's goodput against a\n\
+                                  committed floor (exit 3 on breach,\n\
+                                  bootstrap/refresh like --baseline).\n\
            REFINE (superscaler search flag group):\n\
              --refine            run the seeded MCMC/hill-climbing tier over\n\
                                  the top grid candidates (stage-boundary\n\
@@ -251,6 +271,52 @@ impl RefineOpts {
     }
 }
 
+/// The resilience CLI flag group (`--faults`, `--mtbf`, `--fault-seed`,
+/// `--ckpt-interval`, `--no-rack-spread`): `None` unless a fault source
+/// (explicit trace or MTBF) was given, so fault-free searches stay
+/// byte-identical to earlier releases. An explicit trace is validated
+/// against the cluster up front — a rack fault on a flat topology (or an
+/// out-of-range device) exits 2 with the typed error instead of failing
+/// silently per candidate.
+fn resilience_opts(args: &Args, cluster: &Cluster) -> Option<superscaler::fault::ResilienceConfig> {
+    use superscaler::fault::{CkptPolicy, FaultSpec, ResilienceConfig};
+    let trace = args.get("faults").map(|s| {
+        let spec = FaultSpec::parse(s).unwrap_or_else(|e| {
+            eprintln!("invalid --faults trace: {e}");
+            std::process::exit(2);
+        });
+        if let Err(e) = spec.resolve(cluster) {
+            eprintln!("--faults trace does not fit this cluster: {e}");
+            std::process::exit(2);
+        }
+        spec
+    });
+    let mtbf = args.get("mtbf").map(|s| {
+        let v = s.parse::<f64>().ok().filter(|&v| v.is_finite() && v > 0.0).unwrap_or_else(|| {
+            eprintln!("--mtbf expects positive seconds, got '{s}'");
+            std::process::exit(2);
+        });
+        v
+    });
+    if trace.is_none() && mtbf.is_none() {
+        return None;
+    }
+    let ckpt = match args.get("ckpt-interval") {
+        None => CkptPolicy::Auto,
+        Some(s) => CkptPolicy::parse(s).unwrap_or_else(|| {
+            eprintln!("--ckpt-interval expects off, auto or positive seconds, got '{s}'");
+            std::process::exit(2);
+        }),
+    };
+    Some(ResilienceConfig {
+        trace,
+        mtbf,
+        seed: args.usize("fault-seed", 1) as u64,
+        ckpt,
+        spread: !args.has("no-rack-spread"),
+    })
+}
+
 /// The planner's canonical spec for this GPU count, overridden by whatever
 /// degree flags the user passed.
 fn spec_from_args(planner: &dyn Planner, args: &Args, gpus: usize) -> PlanSpec {
@@ -384,6 +450,7 @@ fn search_cmd(args: &Args) {
         .des_top(args.usize("des-top", 8))
         .refine(refine_opts.config())
         .schedule(schedule(args))
+        .resilience(resilience_opts(args, &cluster))
         .build();
     // One model build per search run: the engine borrows it for every
     // candidate evaluation, the DES re-rank and the winner's trace replay.
@@ -464,11 +531,33 @@ fn search_cmd(args: &Args) {
                     fmt_bytes(m.peak_mem)
                 ),
             }
+            if let Some(res) = &report.resilience {
+                println!(
+                    "resilience: goodput {:.1}% (fault-free {} -> faulted {}), recovery {}, \
+                     lost work {}, ckpt stall {} @ interval {}, {} kills / {} faults",
+                    100.0 * res.goodput,
+                    fmt_secs(res.base_makespan),
+                    fmt_secs(res.faulted_makespan),
+                    fmt_secs(res.recovery_time),
+                    fmt_secs(res.lost_work),
+                    fmt_secs(res.ckpt_time),
+                    if res.ckpt_interval > 0.0 {
+                        fmt_secs(res.ckpt_interval)
+                    } else {
+                        "off".to_string()
+                    },
+                    res.n_kills,
+                    res.n_faults
+                );
+            }
             if let Some(path) = args.get("trace") {
                 trace_best(path, best, &model, args, &cluster);
             }
             if let Some(path) = args.get("baseline") {
                 baseline_gate(path, &report, args);
+            }
+            if let Some(path) = args.get("fault-baseline") {
+                fault_gate(path, &report, args);
             }
         }
         None => {
@@ -576,6 +665,37 @@ fn write_bench_json(path: &str, report: &search::SearchReport) {
                 .and_then(|r| r.best_gap)
                 .map(Value::from)
                 .unwrap_or(Value::Null),
+        ),
+        // Resilience trajectory (null on fault-free runs): the fault-smoke
+        // job accumulates goodput / recovery alongside the perf numbers.
+        ("resilience_scored", report.resilience_scored.into()),
+        (
+            "goodput",
+            report.resilience.as_ref().map(|r| Value::from(r.goodput)).unwrap_or(Value::Null),
+        ),
+        (
+            "faulted_makespan",
+            report
+                .resilience
+                .as_ref()
+                .map(|r| Value::from(r.faulted_makespan))
+                .unwrap_or(Value::Null),
+        ),
+        (
+            "recovery_secs",
+            report.resilience.as_ref().map(|r| Value::from(r.recovery_time)).unwrap_or(Value::Null),
+        ),
+        (
+            "lost_work_secs",
+            report.resilience.as_ref().map(|r| Value::from(r.lost_work)).unwrap_or(Value::Null),
+        ),
+        (
+            "ckpt_overhead_secs",
+            report.resilience.as_ref().map(|r| Value::from(r.ckpt_time)).unwrap_or(Value::Null),
+        ),
+        (
+            "n_kills",
+            report.resilience.as_ref().map(|r| Value::from(r.n_kills)).unwrap_or(Value::Null),
         ),
     ]);
     if let Some(dir) = std::path::Path::new(path).parent() {
@@ -792,6 +912,84 @@ fn baseline_gate(path: &str, report: &search::SearchReport, args: &Args) {
                 fmt_secs(report.wall_secs),
                 fmt_secs(ceil)
             );
+        }
+    }
+}
+
+/// The CI resilience gate (`--fault-baseline`): the winner's goodput under
+/// the seeded fault trace must stay at or above the committed
+/// `min_goodput` floor — exit 3 on breach, same convention as the perf
+/// gates. A missing baseline bootstraps the file with a floor at 90% of
+/// the measured goodput (headroom for simulator noise across plan churn);
+/// `--write-baseline` refreshes it.
+fn fault_gate(path: &str, report: &search::SearchReport, args: &Args) {
+    use superscaler::util::json::{self, Value};
+    let Some(res) = &report.resilience else {
+        eprintln!(
+            "FAULT GATE FAILED: --fault-baseline needs a fault-scored winner \
+             (pass --faults or --mtbf)"
+        );
+        std::process::exit(3);
+    };
+    let current = Value::obj([
+        ("model", report.model.clone().into()),
+        ("gpus", report.gpus.into()),
+        ("topology", report.topology.clone().into()),
+        ("goodput", res.goodput.into()),
+        ("min_goodput", (res.goodput * 0.9).into()),
+        ("recovery_secs", res.recovery_time.into()),
+        ("ckpt_interval", res.ckpt_interval.into()),
+        ("n_kills", res.n_kills.into()),
+        ("n_faults", res.n_faults.into()),
+    ]);
+    let write = |reason: &str| {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        match std::fs::write(path, json::to_string_pretty(&current) + "\n") {
+            Ok(()) => println!(
+                "fault baseline {reason}: wrote {path} (goodput {:.1}%, floor {:.1}%)",
+                100.0 * res.goodput,
+                90.0 * res.goodput
+            ),
+            Err(e) => {
+                eprintln!("cannot write fault baseline {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let floor = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| json::parse(&s).ok())
+        .and_then(|v| v.get("min_goodput").and_then(|b| b.as_f64()))
+        .filter(|&b| b > 0.0);
+    match floor {
+        None => write("bootstrap"),
+        Some(min) => {
+            if res.goodput < min {
+                if !args.has("write-baseline") {
+                    eprintln!(
+                        "FAULT GATE FAILED: goodput {:.1}% under the committed floor {:.1}%",
+                        100.0 * res.goodput,
+                        100.0 * min
+                    );
+                    std::process::exit(3);
+                }
+                println!(
+                    "fault gate: goodput {:.1}% below floor {:.1}% accepted by --write-baseline",
+                    100.0 * res.goodput,
+                    100.0 * min
+                );
+            } else {
+                println!(
+                    "fault gate ok: goodput {:.1}% >= floor {:.1}%",
+                    100.0 * res.goodput,
+                    100.0 * min
+                );
+            }
+            if args.has("write-baseline") {
+                write("refresh");
+            }
         }
     }
 }

@@ -94,6 +94,18 @@ impl Schedule {
         d.sort_unstable();
         d
     }
+
+    /// Rewrite every GPU assignment through `f` (the host stays put) —
+    /// the hook for placement passes like
+    /// [`crate::fault::placement::rack_spread_map`], which permute a
+    /// plan's logical device blocks onto physical fault domains.
+    pub fn remap_devices(&mut self, f: impl Fn(DeviceId) -> DeviceId) {
+        for d in self.assign.values_mut() {
+            if *d != CPU_DEVICE {
+                *d = f(*d);
+            }
+        }
+    }
 }
 
 /// Validation failure modes surfaced to the sProgram author.

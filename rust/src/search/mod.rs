@@ -174,6 +174,16 @@ pub struct SearchConfig {
     /// [`SearchReport::excluded`]) and duplicates collapse. `None` lets
     /// every planner contribute its own schedule points.
     pub schedule: Option<SchedSpec>,
+    /// Score the ranking head's resilience under seeded faults
+    /// (`--faults` / `--mtbf`): each top candidate is re-run under the
+    /// fault trace with checkpoint/restart modeled, [`Metrics`] gains
+    /// goodput/recovery columns, and the head re-sorts by
+    /// goodput-adjusted iteration time. With
+    /// [`crate::fault::ResilienceConfig::spread`] set, dp replicas are
+    /// re-placed rack-by-rack before evaluation so a rack loss fells one
+    /// replica instead of all of them. `None` (the default) leaves the
+    /// search byte-identical to a fault-unaware run.
+    pub resilience: Option<crate::fault::ResilienceConfig>,
 }
 
 impl Default for SearchConfig {
@@ -189,6 +199,7 @@ impl Default for SearchConfig {
             des_top: 8,
             refine: None,
             schedule: None,
+            resilience: None,
         }
     }
 }
@@ -267,6 +278,12 @@ impl SearchConfigBuilder {
     /// See [`SearchConfig::schedule`].
     pub fn schedule(mut self, schedule: Option<SchedSpec>) -> Self {
         self.cfg.schedule = schedule;
+        self
+    }
+
+    /// See [`SearchConfig::resilience`].
+    pub fn resilience(mut self, resilience: Option<crate::fault::ResilienceConfig>) -> Self {
+        self.cfg.resilience = resilience;
         self
     }
 
@@ -514,6 +531,13 @@ pub struct Metrics {
     /// `des_makespan / lower_bound - 1`, clamped at 0. `Some` only for
     /// candidates the refinement tier scored.
     pub gap: Option<f64>,
+    /// Useful-work fraction under the configured fault trace (fault-free
+    /// makespan / faulted makespan, ≤ 1). `Some` only for candidates the
+    /// resilience tier scored ([`SearchConfig::resilience`]).
+    pub goodput: Option<f64>,
+    /// Worst single outage-to-recovered window under the trace, seconds
+    /// (repair + checkpoint reload + replay). `Some` with `goodput`.
+    pub recovery: Option<f64>,
 }
 
 /// What happened to one candidate.
@@ -524,6 +548,11 @@ pub enum Outcome {
     BuildError(String),
     /// Schedule validation found a deadlock / missing producer.
     ScheduleError(String),
+    /// The evaluation pipeline panicked; the payload is the panic message.
+    /// Caught per candidate ([`std::panic::catch_unwind`]) so one buggy
+    /// planner yields a typed error row instead of poisoning the pool and
+    /// killing the whole search.
+    Panicked(String),
 }
 
 /// One evaluated point of the search grid.
@@ -589,6 +618,12 @@ pub struct SearchReport {
     pub refined: usize,
     /// Aggregate refinement accounting (`None` without the refine tier).
     pub refine: Option<RefineSummary>,
+    /// Candidates the resilience tier re-ran under the fault trace (0
+    /// without [`SearchConfig::resilience`]).
+    pub resilience_scored: usize,
+    /// Resilience breakdown of the winning candidate (`None` without the
+    /// resilience tier, or when no valid candidate survived it).
+    pub resilience: Option<crate::fault::ResilienceReport>,
     /// Wall-clock search time, seconds.
     pub wall_secs: f64,
 }
@@ -649,15 +684,15 @@ impl SearchReport {
             ),
             &[
                 "#", "plan", "spec", "iteration", "DES", "TFLOPS", "comm", "peak mem", "bubble%",
-                "gap", "status",
+                "gap", "goodput", "recover", "status",
             ],
         );
         let n = if top == 0 { self.ranked.len() } else { top };
-        // Failed rows share one shape (seven dash columns + a status); build
+        // Failed rows share one shape (nine dash columns + a status); build
         // each row's strings once instead of per-arm duplicates.
         let err_row = |t: &mut Table, rank: String, c: &Candidate, status: String| {
             let mut row = vec![rank, c.planner.to_string(), c.spec.label()];
-            row.extend(std::iter::repeat_with(|| "-".to_string()).take(7));
+            row.extend(std::iter::repeat_with(|| "-".to_string()).take(9));
             row.push(status);
             t.row(row);
         };
@@ -675,6 +710,10 @@ impl SearchReport {
                     fmt_bytes(m.peak_mem),
                     format!("{:.0}%", 100.0 * m.bubble_frac),
                     m.gap.map(|g| format!("{:.1}%", 100.0 * g)).unwrap_or_else(|| "-".to_string()),
+                    m.goodput
+                        .map(|g| format!("{:.0}%", 100.0 * g))
+                        .unwrap_or_else(|| "-".to_string()),
+                    m.recovery.map(fmt_secs).unwrap_or_else(|| "-".to_string()),
                     if m.oom {
                         "OOM".to_string()
                     } else if m.des_oom {
@@ -685,6 +724,7 @@ impl SearchReport {
                 ]),
                 Outcome::BuildError(e) => err_row(&mut t, rank, c, format!("invalid: {e}")),
                 Outcome::ScheduleError(e) => err_row(&mut t, rank, c, format!("deadlock: {e}")),
+                Outcome::Panicked(e) => err_row(&mut t, rank, c, format!("panicked: {e}")),
             }
         }
         t
@@ -769,12 +809,56 @@ fn sort_des_head(head: &mut [Candidate]) {
     });
 }
 
+/// Fault-domain-aware placement pass: when the candidate's contiguous dp
+/// replicas straddle rack boundaries and a rack-aligned re-placement
+/// exists, remap the schedule so each replica sits inside one rack — a
+/// rack loss then fells one replica instead of several. No-op (and
+/// bitwise neutral) when spreading cannot help; see
+/// [`crate::fault::placement::rack_spread_map`].
+fn apply_rack_spread(schedule: &mut schedule::Schedule, spec: &PlanSpec, cluster: &Cluster) {
+    if let Some(map) = crate::fault::placement::rack_spread_map(spec.dp.max(1), cluster) {
+        schedule.remap_devices(|d| map[d]);
+    }
+}
+
+/// [`evaluate_inner`] behind a per-candidate panic boundary: a panicking
+/// planner (or any downstream pipeline bug) becomes a typed
+/// [`Outcome::Panicked`] row instead of unwinding into the worker pool
+/// and aborting the whole search.
 fn evaluate(
     model: &Model,
     planner: &'static dyn Planner,
     spec: &PlanSpec,
     cluster: &Cluster,
     comm: CommMode,
+    spread: bool,
+    cache: Option<&ArtifactCache>,
+) -> Candidate {
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        evaluate_inner(model, planner, spec, cluster, comm, spread, cache)
+    }));
+    caught.unwrap_or_else(|payload| {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        Candidate {
+            planner: planner.name(),
+            spec: spec.clone(),
+            plan_name: String::new(),
+            outcome: Outcome::Panicked(msg),
+        }
+    })
+}
+
+fn evaluate_inner(
+    model: &Model,
+    planner: &'static dyn Planner,
+    spec: &PlanSpec,
+    cluster: &Cluster,
+    comm: CommMode,
+    spread: bool,
     cache: Option<&ArtifactCache>,
 ) -> Candidate {
     // One spec clone up front, moved into whichever outcome arm fires.
@@ -787,7 +871,10 @@ fn evaluate(
             outcome: Outcome::BuildError(e.to_string()),
         },
         Ok(out) => {
-            let PlanOutput { graph, schedule, name } = out;
+            let PlanOutput { graph, mut schedule, name } = out;
+            if spread {
+                apply_rack_spread(&mut schedule, &spec, cluster);
+            }
             match schedule::validate(&graph, &schedule) {
                 Err(e) => Candidate {
                     planner: planner.name(),
@@ -810,6 +897,8 @@ fn evaluate(
                         bubble_frac: bubble / r.makespan.max(1e-12),
                         oom: r.oom,
                         gap: None,
+                        goodput: None,
+                        recovery: None,
                     };
                     // Valid non-OOM candidates may reach the DES re-rank
                     // head: hand the artifacts to the bounded cache instead
@@ -897,9 +986,10 @@ pub fn search(model: &Model, cluster: &Cluster, cfg: &SearchConfig) -> SearchRep
     // re-rank will consume it.
     let cache =
         if cfg.fidelity == Fidelity::Des { Some(ArtifactCache::new(cfg.des_top)) } else { None };
+    let spread = cfg.resilience.as_ref().map(|r| r.spread).unwrap_or(false);
     let eval_at = |i: usize| -> Candidate {
         let (_, p, spec) = &cands[i];
-        evaluate(model, *p, spec, cluster, comm, cache.as_ref())
+        evaluate(model, *p, spec, cluster, comm, spread, cache.as_ref())
     };
 
     let seed_len = if cfg.prune { PRUNE_SEED.min(cands.len()) } else { cands.len() };
@@ -979,6 +1069,68 @@ pub fn search(model: &Model, cluster: &Cluster, cfg: &SearchConfig) -> SearchRep
         refined = s.refined;
         refine_summary = Some(s);
     }
+    // ---- resilience tier: fault-trace scoring of the ranking head ----
+    // Each top valid candidate is rebuilt (with the same rack-spreading
+    // pass evaluation used) and re-run through the DES twice — fault-free
+    // for the base makespan, then under the resolved fault trace with
+    // checkpoint/restart modeled — and the head re-sorts by
+    // goodput-adjusted iteration time, so a plan that loses less work to
+    // the same faults outranks a marginally faster but fragile one.
+    let mut resilience_scored = 0usize;
+    let mut resilience_best: Option<crate::fault::ResilienceReport> = None;
+    if let Some(rcfg) = &cfg.resilience {
+        let k = ranked
+            .iter()
+            .take(cfg.des_top.max(1))
+            .take_while(|c| c.rank_class() == 0)
+            .count();
+        let res_of = |i: usize| -> Option<crate::fault::ResilienceReport> {
+            let c = &ranked[i];
+            let planner = registry::find(c.planner)?;
+            let out = planner.build(model, &c.spec).ok()?;
+            let PlanOutput { graph, mut schedule, name: _ } = out;
+            if rcfg.spread {
+                apply_rack_spread(&mut schedule, &c.spec, cluster);
+            }
+            let vs = schedule::validate(&graph, &schedule).ok()?;
+            let plan = materialize::materialize(&graph, &vs, cluster, comm);
+            let tg = sim::TaskGraph::prepare(&vs, &plan);
+            crate::fault::evaluate_resilience(&graph, &plan, cluster, &tg, rcfg)
+                .ok()
+                .map(|(rep, _)| rep)
+        };
+        let scores = pool::par_map(k, workers, &res_of);
+        let mut reports: Vec<Option<crate::fault::ResilienceReport>> = scores;
+        for (i, s) in reports.iter().enumerate() {
+            if let Outcome::Ok(m) = &mut ranked[i].outcome {
+                m.goodput = s.as_ref().map(|r| r.goodput);
+                m.recovery = s.as_ref().map(|r| r.recovery_time);
+                resilience_scored += s.is_some() as usize;
+            }
+        }
+        // Goodput-adjusted re-sort of the scored head: effective time =
+        // best-fidelity makespan / goodput (unscored rows keep goodput 1).
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| {
+            let key = |i: usize| {
+                let m = ranked[i].metrics();
+                let t = m
+                    .map(|m| m.des_makespan.unwrap_or(m.makespan))
+                    .unwrap_or(f64::INFINITY);
+                let g = m.and_then(|m| m.goodput).unwrap_or(1.0).max(1e-9);
+                (m.map(|m| m.des_oom).unwrap_or(true), t / g)
+            };
+            let (ka, kb) = (key(a), key(b));
+            ka.0.cmp(&kb.0)
+                .then_with(|| ka.1.partial_cmp(&kb.1).unwrap_or(std::cmp::Ordering::Equal))
+                .then_with(|| ranked[a].plan_name.cmp(&ranked[b].plan_name))
+        });
+        let head: Vec<Candidate> = order.iter().map(|&i| ranked[i].clone()).collect();
+        let head_reports: Vec<Option<crate::fault::ResilienceReport>> =
+            order.iter().map(|&i| reports[i].take()).collect();
+        ranked[..k].clone_from_slice(&head);
+        resilience_best = head_reports.into_iter().next().flatten();
+    }
     SearchReport {
         model: model_name,
         gpus: cluster.num_gpus(),
@@ -993,6 +1145,8 @@ pub fn search(model: &Model, cluster: &Cluster, cfg: &SearchConfig) -> SearchRep
         des_rescored,
         refined,
         refine: refine_summary,
+        resilience_scored,
+        resilience: resilience_best,
         wall_secs: t0.elapsed().as_secs_f64(),
     }
 }
@@ -1077,6 +1231,74 @@ mod tests {
             feasibility(&bad, &model, &cluster),
             Err(Infeasible::ScheduleUnsupported { .. })
         ));
+    }
+
+    struct PanickingPlanner;
+
+    impl Planner for PanickingPlanner {
+        fn kind(&self) -> PlanKind {
+            PlanKind::Dp
+        }
+        fn name(&self) -> &'static str {
+            "panicker"
+        }
+        fn description(&self) -> &'static str {
+            "test stub whose build always panics"
+        }
+        fn applicable(&self, _: &Model) -> bool {
+            true
+        }
+        fn default_spec(&self, _: usize, _: usize) -> PlanSpec {
+            PlanSpec::new(PlanKind::Dp)
+        }
+        fn candidates(&self, _: &Model, _: &Cluster) -> Vec<PlanSpec> {
+            Vec::new()
+        }
+        fn build(&self, _: &Model, _: &PlanSpec) -> crate::plans::PlanResult {
+            panic!("synthetic planner failure")
+        }
+    }
+
+    #[test]
+    fn evaluation_catches_a_panicking_planner() {
+        static PLANNER: PanickingPlanner = PanickingPlanner;
+        let model = models::gpt3(0, 8, 256);
+        let cluster = Cluster::v100(8);
+        let spec = PlanSpec { dp: 8, ..PlanSpec::new(PlanKind::Dp) };
+        let c = evaluate(&model, &PLANNER, &spec, &cluster, CommMode::InterRvd, false, None);
+        match &c.outcome {
+            Outcome::Panicked(msg) => {
+                assert!(msg.contains("synthetic planner failure"), "payload kept: {msg}")
+            }
+            other => panic!("expected Outcome::Panicked, got {other:?}"),
+        }
+        // The typed row renders instead of killing the table.
+        assert_eq!(c.rank_class(), 2);
+    }
+
+    #[test]
+    fn resilience_tier_scores_the_head_and_reports_goodput() {
+        let model = models::gpt3(0, 16, 256);
+        let cluster = Cluster::v100(4);
+        let rc = crate::fault::ResilienceConfig {
+            trace: Some(crate::fault::FaultSpec::parse("crash:d0@0.001").unwrap()),
+            ..Default::default()
+        };
+        let cfg = SearchConfig::builder()
+            .workers(2)
+            .hetero(false)
+            .des_top(2)
+            .resilience(Some(rc))
+            .build();
+        let report = search(&model, &cluster, &cfg);
+        assert!(report.resilience_scored > 0, "head must be fault-scored");
+        let best = report.best().expect("valid candidate");
+        let m = best.metrics().unwrap();
+        let g = m.goodput.expect("winner carries goodput");
+        assert!(g > 0.0 && g <= 1.0, "goodput {g}");
+        assert!(m.recovery.is_some());
+        let res = report.resilience.expect("winner's resilience breakdown kept");
+        assert!(res.faulted_makespan >= res.base_makespan);
     }
 
     #[test]

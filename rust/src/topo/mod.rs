@@ -199,6 +199,27 @@ impl Topology {
         }
     }
 
+    /// Number of racks: `n_servers / k` on fat-trees, 1 everywhere else
+    /// (the whole fabric is one failure domain without rack switches).
+    pub fn n_racks(&self) -> usize {
+        match self.kind {
+            TopoKind::FatTree { k } => self.n_servers / k,
+            _ => 1,
+        }
+    }
+
+    /// The device range of fat-tree rack `r` — its blast radius as a
+    /// failure domain. `None` outside fat-trees or for out-of-range racks.
+    pub fn rack_devices(&self, r: usize) -> Option<std::ops::Range<DeviceId>> {
+        match self.kind {
+            TopoKind::FatTree { k } => {
+                let per_rack = k * self.gpus_per_server;
+                (r < self.n_racks()).then(|| r * per_rack..(r + 1) * per_rack)
+            }
+            _ => None,
+        }
+    }
+
     /// Rail index of a device (0 outside rail fabrics).
     pub fn rail_of(&self, d: DeviceId) -> usize {
         match self.kind {

@@ -1,0 +1,161 @@
+//! Fault-injection acceptance tests: the no-fault path is bitwise
+//! identical to the plain DES on a real plan, a seeded fault trace scores
+//! identically regardless of worker count, and rack-scoped faults on a
+//! fat-tree take out exactly the rack's devices (blast radius).
+
+use superscaler::cost::{Cluster, LinkId};
+use superscaler::des;
+use superscaler::fault::{FaultPlan, FaultSpec, ResilienceConfig};
+use superscaler::materialize::{materialize, CommMode};
+use superscaler::models;
+use superscaler::plans::{megatron, PipeOrder};
+use superscaler::schedule::validate;
+use superscaler::search::{self, Outcome, SearchConfig};
+use superscaler::sim::TaskGraph;
+use superscaler::topo::Topology;
+
+/// `n_servers × gps` V100 cluster on a `fat-tree:k` fabric.
+fn fat_tree_cluster(n_servers: usize, gps: usize, k: usize) -> Cluster {
+    let mut c = Cluster::with_shape(n_servers, gps);
+    c.topo = Topology::parse(&format!("fat-tree:{k}"), n_servers, gps).unwrap();
+    c
+}
+
+#[test]
+fn empty_fault_plan_is_bitwise_identical_on_a_real_pipeline() {
+    let out = megatron(&models::gpt3(0, 8, 256), 1, 4, 1, 8, PipeOrder::OneFOneB).unwrap();
+    let c = Cluster::v100(4);
+    let vs = validate(&out.graph, &out.schedule).unwrap();
+    let plan = materialize(&out.graph, &vs, &c, CommMode::InterRvd);
+    let base = des::simulate(&out.graph, &vs, &plan, &c);
+    let tg = TaskGraph::prepare(&vs, &plan);
+    let faulted = des::execute_faulted(&out.graph, &plan, &c, &tg, &FaultPlan::default());
+    assert_eq!(
+        faulted.makespan.to_bits(),
+        base.makespan.to_bits(),
+        "empty fault plan must not perturb the timeline: {} vs {}",
+        faulted.makespan,
+        base.makespan
+    );
+    assert_eq!(faulted.spans.len(), base.spans.len());
+    for (a, b) in faulted.spans.iter().zip(&base.spans) {
+        assert_eq!(a.task, b.task);
+        assert_eq!(a.start.to_bits(), b.start.to_bits(), "task {} start drifted", a.task);
+        assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "task {} finish drifted", a.task);
+    }
+    let f = faulted.faults.expect("faulted entry point carries the outcome");
+    assert_eq!(f.n_kills, 0);
+    assert_eq!(f.n_faults, 0);
+    assert_eq!(f.lost_work, 0.0);
+    assert_eq!(f.ckpt_time, 0.0);
+}
+
+/// The seeded-trace determinism acceptance: the same search under the same
+/// fault trace produces bitwise-identical rankings and resilience scores
+/// whether evaluated on 1 worker or 4.
+#[test]
+fn seeded_fault_trace_scores_identically_across_worker_counts() {
+    let model = models::gpt3(0, 16, 256);
+    let cluster = Cluster::v100(4);
+    let trace = "crash:d1@0.002+0.001,slow:d0x0.5@0.001+0.004";
+    let run = |workers: usize| {
+        let rc = ResilienceConfig {
+            trace: Some(FaultSpec::parse(trace).unwrap()),
+            ..Default::default()
+        };
+        let cfg = SearchConfig::builder()
+            .workers(workers)
+            .hetero(false)
+            .des_top(2)
+            .resilience(Some(rc))
+            .build();
+        search::search(&model, &cluster, &cfg)
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.resilience_scored, b.resilience_scored);
+    assert_eq!(a.ranked.len(), b.ranked.len());
+    for (ca, cb) in a.ranked.iter().zip(&b.ranked) {
+        assert_eq!(ca.spec.label(), cb.spec.label(), "ranking order diverged");
+        match (&ca.outcome, &cb.outcome) {
+            (Outcome::Ok(ma), Outcome::Ok(mb)) => {
+                assert_eq!(ma.makespan.to_bits(), mb.makespan.to_bits());
+                assert_eq!(
+                    ma.des_makespan.map(f64::to_bits),
+                    mb.des_makespan.map(f64::to_bits),
+                    "{}: DES makespan diverged",
+                    ca.spec.label()
+                );
+                assert_eq!(
+                    ma.goodput.map(f64::to_bits),
+                    mb.goodput.map(f64::to_bits),
+                    "{}: goodput diverged across worker counts",
+                    ca.spec.label()
+                );
+                assert_eq!(ma.recovery.map(f64::to_bits), mb.recovery.map(f64::to_bits));
+            }
+            (oa, ob) => assert_eq!(
+                std::mem::discriminant(oa),
+                std::mem::discriminant(ob),
+                "outcome kind diverged for {}",
+                ca.spec.label()
+            ),
+        }
+    }
+    let (ra, rb) = (a.resilience.expect("winner scored"), b.resilience.expect("winner scored"));
+    assert_eq!(ra.goodput.to_bits(), rb.goodput.to_bits());
+    assert_eq!(ra.faulted_makespan.to_bits(), rb.faulted_makespan.to_bits());
+    assert_eq!(ra.recovery_time.to_bits(), rb.recovery_time.to_bits());
+}
+
+/// Rack-loss blast radius: on `fat-tree:2` with 4 servers × 4 GPUs,
+/// rack 0 spans servers 0–1, so `rack:0` must kill exactly devices 0..8
+/// and an `uplink:0` outage must target that rack's uplink — nothing more.
+#[test]
+fn rack_loss_blast_radius_covers_exactly_the_rack_on_fat_tree() {
+    let c = fat_tree_cluster(4, 4, 2);
+    let plan = FaultSpec::parse("rack:0@0.1+0.05").unwrap().resolve(&c).unwrap();
+    assert_eq!(plan.kills.len(), 1);
+    assert_eq!(plan.kills[0].devices, (0..8).collect::<Vec<_>>());
+    assert_eq!(plan.kills[0].repair, 0.05);
+    assert!(plan.outages.is_empty() && plan.slowdowns.is_empty());
+
+    let plan = FaultSpec::parse("rack:1@0.1").unwrap().resolve(&c).unwrap();
+    assert_eq!(plan.kills[0].devices, (8..16).collect::<Vec<_>>());
+
+    let plan = FaultSpec::parse("uplink:0@0.2+0.1").unwrap().resolve(&c).unwrap();
+    assert!(plan.kills.is_empty());
+    assert_eq!(plan.outages.len(), 1);
+    assert_eq!(plan.outages[0].link, LinkId::Up(0));
+
+    // Flat fabrics have no racks: the same trace is a typed error there.
+    let flat = Cluster::v100(16);
+    assert!(FaultSpec::parse("rack:0@0.1").unwrap().resolve(&flat).is_err());
+}
+
+/// Losing a whole rack is strictly worse than losing one device of it:
+/// the DES blast radius scales with the fault domain.
+#[test]
+fn rack_loss_hurts_more_than_a_single_device_loss() {
+    let c = fat_tree_cluster(2, 2, 1);
+    let out = megatron(&models::gpt3(0, 4, 256), 2, 1, 1, 2, PipeOrder::OneFOneB).unwrap();
+    let vs = validate(&out.graph, &out.schedule).unwrap();
+    let plan = materialize(&out.graph, &vs, &c, CommMode::InterRvd);
+    let tg = TaskGraph::prepare(&vs, &plan);
+    let base = des::simulate(&out.graph, &vs, &plan, &c);
+    let mid = base.makespan * 0.5;
+    let one = FaultSpec::parse(&format!("crash:d0@{mid}+0.001")).unwrap().resolve(&c).unwrap();
+    let rack = FaultSpec::parse(&format!("rack:0@{mid}+0.001")).unwrap().resolve(&c).unwrap();
+    let r_one = des::execute_faulted(&out.graph, &plan, &c, &tg, &one);
+    let r_rack = des::execute_faulted(&out.graph, &plan, &c, &tg, &rack);
+    assert!(r_one.makespan > base.makespan, "a mid-run crash must cost time");
+    assert!(
+        r_rack.makespan >= r_one.makespan,
+        "rack loss ({}) cannot be cheaper than one device ({})",
+        r_rack.makespan,
+        r_one.makespan
+    );
+    let (fo, fr) = (r_one.faults.unwrap(), r_rack.faults.unwrap());
+    assert_eq!(fo.n_kills, 1);
+    assert_eq!(fr.n_kills, 2, "rack 0 holds two devices");
+}

@@ -34,6 +34,8 @@ fn synthetic_report() -> SearchReport {
             bubble_frac: 0.25,
             oom: false,
             gap: Some(0.04),
+            goodput: Some(0.92),
+            recovery: Some(1.5),
         }),
     };
     let oom = Candidate {
@@ -50,6 +52,8 @@ fn synthetic_report() -> SearchReport {
             bubble_frac: 0.5,
             oom: true,
             gap: None,
+            goodput: None,
+            recovery: None,
         }),
     };
     let failed = Candidate {
@@ -72,6 +76,8 @@ fn synthetic_report() -> SearchReport {
         des_rescored: 1,
         refined: 1,
         refine: None,
+        resilience_scored: 1,
+        resilience: None,
         wall_secs: 1.5,
     }
 }
@@ -105,12 +111,13 @@ fn search_report_render_keeps_column_set() {
     let rendered = synthetic_report().to_table(0).render();
     let cols = [
         "#", "plan", "spec", "iteration", "DES", "TFLOPS", "comm", "peak mem", "bubble%", "gap",
-        "status",
+        "goodput", "recover", "status",
     ];
     for col in cols {
         assert!(rendered.contains(col), "missing column '{col}' in:\n{rendered}");
     }
     assert!(rendered.contains("52.500 ms") && rendered.contains("50.000 ms"));
+    assert!(rendered.contains("92%"), "winner's goodput column renders");
     assert!(rendered.contains("OOM"));
     assert!(rendered.contains("invalid: stage 0 conflicts"));
 }
@@ -155,6 +162,8 @@ fn sched_tokens_round_trip_through_report_labels() {
                     bubble_frac: 0.1,
                     oom: false,
                     gap: None,
+                    goodput: None,
+                    recovery: None,
                 }),
             }],
             ..synthetic_report()
